@@ -1,0 +1,59 @@
+//! Figure 1 regeneration bench: CoCoA vs CoCoA+ to a fixed duality gap on
+//! the covtype analogue (K=4) and rcv1 analogue (K=8), reporting the
+//! paper's two x-axes — communicated vectors and simulated elapsed time —
+//! plus the wall-clock of regenerating each curve.
+
+use cocoa::data::partition::random_balanced;
+use cocoa::prelude::*;
+use cocoa::util::bench::{black_box, Bench};
+
+fn run_curve(data: &Dataset, k: usize, lambda: f64, plus: bool, rounds: usize) -> History {
+    let part = random_balanced(data.n(), k, 42);
+    let problem = Problem::new(data.clone(), Loss::Hinge, lambda);
+    let solver = SolverSpec::SdcaEpochs { epochs: 1.0 };
+    let cfg = if plus {
+        CocoaConfig::cocoa_plus(k, Loss::Hinge, lambda, solver)
+    } else {
+        CocoaConfig::cocoa(k, Loss::Hinge, lambda, solver)
+    }
+    .with_rounds(rounds)
+    .with_gap_tol(1e-3);
+    Trainer::new(problem, part, cfg).run()
+}
+
+fn main() {
+    let mut b = Bench::new("fig1").with_samples(3);
+    let target = 1e-2;
+    println!("Figure 1 — gap ≤ {target:.0e}: vectors & simulated seconds\n");
+    println!(
+        "{:<10} {:>3} {:>8} {:>8} | {:>11} {:>11} | {:>10} {:>10}",
+        "dataset", "K", "λ", "method", "vectors", "sim t(s)", "", ""
+    );
+    for (ds, k) in [("covtype", 4usize), ("rcv1", 8)] {
+        let data = cocoa::data::synth::paper_dataset(ds, 500.0, 42);
+        for lambda in [1e-3, 1e-4] {
+            for plus in [true, false] {
+                let label = format!("{ds}_k{k}_l{lambda:.0e}_{}", if plus { "plus" } else { "avg" });
+                let mut hit: Option<(usize, f64, usize)> = None;
+                b.run(&label, || {
+                    let h = run_curve(&data, k, lambda, plus, 150);
+                    hit = h.time_to_gap(target);
+                    black_box(h.final_gap())
+                });
+                let (vecs, t) = hit
+                    .map(|(_, t, v)| (v.to_string(), format!("{t:.3}")))
+                    .unwrap_or(("-".into(), "-".into()));
+                println!(
+                    "{:<10} {:>3} {:>8.0e} {:>8} | {:>11} {:>11} |",
+                    ds,
+                    k,
+                    lambda,
+                    if plus { "CoCoA+" } else { "CoCoA" },
+                    vecs,
+                    t
+                );
+            }
+        }
+    }
+    b.report();
+}

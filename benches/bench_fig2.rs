@@ -1,0 +1,68 @@
+//! Figure 2 regeneration bench: strong scaling — simulated time to an
+//! ε_D-accurate dual solution vs K for CoCoA+, CoCoA, and mini-batch SGD
+//! on the epsilon analogue, with wall-clock per curve.
+
+use cocoa::baselines::minibatch_sgd::{MiniBatchSgd, MiniBatchSgdConfig};
+use cocoa::baselines::serial_sdca;
+use cocoa::data::partition::random_balanced;
+use cocoa::prelude::*;
+use cocoa::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig2").with_samples(3);
+    let data = cocoa::data::synth::paper_dataset("epsilon", 500.0, 42);
+    let n = data.n();
+    let lambda = 1e-3;
+    let eps_d = 1e-3;
+    let problem = Problem::new(data.clone(), Loss::Hinge, lambda);
+    let d_star = serial_sdca::estimate_d_star(&problem, 42);
+    println!("Figure 2 — time to D* − D(α) ≤ {eps_d:.0e} (D* ≈ {d_star:.6})\n");
+    println!("{:>4} {:>14} {:>14} {:>14}", "K", "CoCoA+ t(s)", "CoCoA t(s)", "mb-SGD t(s)");
+
+    for k in [2usize, 4, 8, 16] {
+        let mut row = [f64::NAN; 3];
+        for (mi, plus) in [(0usize, true), (1, false)] {
+            b.run(&format!("k{k}_{}", if plus { "plus" } else { "avg" }), || {
+                let part = random_balanced(n, k, 42);
+                let problem = Problem::new(data.clone(), Loss::Hinge, lambda);
+                let solver = SolverSpec::SdcaEpochs { epochs: 1.0 };
+                let cfg = if plus {
+                    CocoaConfig::cocoa_plus(k, Loss::Hinge, lambda, solver)
+                } else {
+                    CocoaConfig::cocoa(k, Loss::Hinge, lambda, solver)
+                }
+                .with_rounds(300)
+                .with_gap_tol(0.0);
+                let mut tr = Trainer::new(problem, part, cfg);
+                let mut cum = 0.0;
+                row[mi] = f64::NAN;
+                for _ in 0..300 {
+                    cum += tr.round() + tr.cfg.comm.round_time(tr.problem.d());
+                    if d_star - tr.problem.dual_value(&tr.alpha, &tr.w) <= eps_d {
+                        row[mi] = cum;
+                        break;
+                    }
+                }
+                black_box(cum)
+            });
+        }
+        b.run(&format!("k{k}_sgd"), || {
+            let part = random_balanced(n, k, 42);
+            let problem = Problem::new(data.clone(), Loss::Hinge, lambda);
+            let mut cfg = MiniBatchSgdConfig::new(k);
+            cfg.max_rounds = 4000;
+            cfg.gap_every = 25;
+            cfg.gap_tol = eps_d;
+            let mut sgd = MiniBatchSgd::new(problem, part, cfg);
+            let h = sgd.run(Some(d_star));
+            row[2] = h
+                .time_to_gap(eps_d)
+                .map(|(_, t, _)| t)
+                .unwrap_or(f64::NAN);
+            black_box(h.final_gap())
+        });
+        let f = |v: f64| if v.is_nan() { "-".into() } else { format!("{v:.3}") };
+        println!("{:>4} {:>14} {:>14} {:>14}", k, f(row[0]), f(row[1]), f(row[2]));
+    }
+    b.report();
+}

@@ -1,0 +1,52 @@
+//! Figure 3 regeneration bench: the σ' sweep at γ=1, K=8 on the rcv1
+//! analogue — convergence speed and the divergence frontier, with the
+//! wall-clock of regenerating each σ' curve.
+
+use cocoa::coordinator::StopReason;
+use cocoa::data::partition::random_balanced;
+use cocoa::prelude::*;
+use cocoa::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig3").with_samples(3);
+    let k = 8usize;
+    let lambda = 1e-3;
+    let data = cocoa::data::synth::paper_dataset("rcv1", 500.0, 42);
+    let n = data.n();
+    println!("Figure 3 — σ' sweep at γ=1, K={k} (safe bound σ'=K)\n");
+    println!("{:>6} {:>12} {:>10} {:>10}", "σ'", "final gap", "rounds", "status");
+
+    for sp in [1.0, 2.0, 4.0, 6.0, 8.0] {
+        let mut summary = (f64::NAN, 0usize, "?");
+        b.run(&format!("sigma_prime_{sp}"), || {
+            let part = random_balanced(n, k, 42);
+            let problem = Problem::new(data.clone(), Loss::Hinge, lambda);
+            let cfg = CocoaConfig::cocoa_plus(
+                k,
+                Loss::Hinge,
+                lambda,
+                SolverSpec::SdcaEpochs { epochs: 1.0 },
+            )
+            .with_sigma_prime(sp)
+            .with_rounds(100)
+            .with_gap_tol(1e-4);
+            let mut tr = Trainer::new(problem, part, cfg);
+            let h = tr.run();
+            summary = (
+                h.final_gap(),
+                h.rounds_run(),
+                match h.stop {
+                    StopReason::Diverged => "DIVERGED",
+                    StopReason::GapReached => "converged",
+                    _ => "budget",
+                },
+            );
+            black_box(h.final_gap())
+        });
+        println!(
+            "{:>6} {:>12.4e} {:>10} {:>10}",
+            sp, summary.0, summary.1, summary.2
+        );
+    }
+    b.report();
+}

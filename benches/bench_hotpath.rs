@@ -1,0 +1,92 @@
+//! Hot-path micro-benchmarks: the quantities the §Perf optimization pass
+//! tracks. Run with `cargo bench --offline` (BENCH_SAMPLES/BENCH_WARMUP
+//! env vars shrink/grow the work).
+
+use cocoa::data::partition::random_balanced;
+use cocoa::data::synth::{generate, SynthConfig};
+use cocoa::linalg::{dense, power_iter};
+use cocoa::objective::Problem;
+use cocoa::prelude::*;
+use cocoa::solver::sdca::SdcaSolver;
+use cocoa::solver::{LocalSolveCtx, LocalSolver};
+use cocoa::subproblem::{LocalBlock, SubproblemSpec};
+use cocoa::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("hotpath");
+
+    // ---- dense kernels -------------------------------------------------
+    let x: Vec<f64> = (0..4096).map(|i| (i as f64 * 0.37).sin()).collect();
+    let y: Vec<f64> = (0..4096).map(|i| (i as f64 * 0.11).cos()).collect();
+    b.run("dense_dot_4096", || black_box(dense::dot(&x, &y)));
+    let mut acc = vec![0.0; 4096];
+    b.run("dense_axpy_4096", || {
+        dense::axpy(0.5, &x, &mut acc);
+        black_box(acc[0])
+    });
+
+    // ---- sparse SDCA epoch (the paper's inner loop) ----------------------
+    for (name, n, d, density) in [
+        ("sdca_epoch_dense_n2048_d128", 2048usize, 128usize, 1.0),
+        ("sdca_epoch_sparse_n8192_d1024", 8192, 1024, 0.01),
+    ] {
+        let data = generate(&SynthConfig::new("b", n, d).density(density).seed(1));
+        let rows: Vec<usize> = (0..n / 4).collect();
+        let block = LocalBlock::from_partition(&data, &rows);
+        let spec = SubproblemSpec {
+            loss: Loss::Hinge,
+            lambda: 1e-3,
+            n_global: n,
+            sigma_prime: 4.0,
+            k: 4,
+        };
+        let w = vec![0.0; d];
+        let alpha = vec![0.0; block.n_local()];
+        let mut solver = SdcaSolver::new(block.n_local(), 7);
+        let ctx = LocalSolveCtx {
+            block: &block,
+            spec: &spec,
+            w: &w,
+            alpha_local: &alpha,
+        };
+        let nnz_per_epoch = block.x.nnz() as f64;
+        let r = b.run(name, || black_box(solver.solve(&ctx).steps));
+        let secs = r.min().as_secs_f64();
+        println!(
+            "  {name}: {:.1} Mnnz/s effective",
+            2.0 * nnz_per_epoch / secs / 1e6 // dot + axpy touch nnz each
+        );
+    }
+
+    // ---- duality gap & objective ----------------------------------------
+    let data = generate(&SynthConfig::new("b", 8192, 512).density(0.05).seed(2));
+    let problem = Problem::new(data, Loss::Hinge, 1e-3);
+    let alpha: Vec<f64> = (0..problem.n())
+        .map(|i| problem.data.y[i] * ((i % 100) as f64 / 100.0))
+        .collect();
+    b.run("duality_gap_n8192_d512", || {
+        black_box(problem.duality_gap(&alpha))
+    });
+
+    // ---- power iteration (Table 1 machinery) ----------------------------
+    let data = generate(&SynthConfig::new("b", 4096, 256).density(0.05).seed(3));
+    b.run("power_iter_n4096_d256", || {
+        black_box(power_iter::spectral_norm_sq(&data.x, 100, 1e-9, 1).sigma)
+    });
+
+    // ---- one full coordinator round (K=8, parallel) ----------------------
+    let data = generate(&SynthConfig::new("b", 8192, 256).density(0.1).seed(4));
+    let part = random_balanced(8192, 8, 1);
+    let cfg = CocoaConfig::cocoa_plus(
+        8,
+        Loss::Hinge,
+        1e-3,
+        SolverSpec::SdcaEpochs { epochs: 1.0 },
+    )
+    .with_rounds(1);
+    let problem = Problem::new(data, Loss::Hinge, 1e-3);
+    let mut trainer = Trainer::new(problem, part, cfg);
+    b.run("coordinator_round_k8_n8192", || black_box(trainer.round()));
+
+    b.report();
+}

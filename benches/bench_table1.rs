@@ -1,0 +1,32 @@
+//! Table 1 regeneration bench: computes the (n²/K)/σ rows end-to-end
+//! (partition + power iteration per block) and prints them in the paper's
+//! layout, timing the whole pipeline per dataset/K.
+
+use cocoa::data::partition::random_balanced;
+use cocoa::subproblem::sigma::partition_sigma;
+use cocoa::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("table1").with_samples(3);
+    println!("Table 1 — ratio (n²/K)/σ  (paper: 10–42, slowly decaying in K)\n");
+    println!("{:<10} {:>6} {:>10} {:>14}", "dataset", "K", "ratio", "σ");
+
+    for ds in ["news", "real-sim", "rcv1", "covtype"] {
+        let data = cocoa::data::synth::paper_dataset(ds, 500.0, 42);
+        let n = data.n();
+        for k in [16usize, 64, 256] {
+            if k > n / 2 {
+                continue;
+            }
+            let mut last = (0.0, 0.0);
+            b.run(&format!("sigma_{ds}_k{k}"), || {
+                let part = random_balanced(n, k, 42);
+                let ps = partition_sigma(&data, &part, 42);
+                last = (ps.table1_ratio(n), ps.sigma_sum);
+                black_box(ps.sigma_sum)
+            });
+            println!("{:<10} {:>6} {:>10.3} {:>14.1}", ds, k, last.0, last.1);
+        }
+    }
+    b.report();
+}

@@ -1,0 +1,76 @@
+//! The paper's headline experiment in miniature: *adding* (CoCoA+, γ=1,
+//! σ'=K) versus *averaging* (CoCoA, γ=1/K, σ'=1) as K grows, at identical
+//! local work per round.
+//!
+//!     cargo run --release --example adding_vs_averaging
+
+use cocoa::prelude::*;
+use cocoa::report::ascii_plot::{render, PlotCfg, Series};
+
+fn rounds_to_gap(plus: bool, k: usize, data: &Dataset, lambda: f64, tol: f64) -> Option<usize> {
+    let partition = cocoa::data::partition::random_balanced(data.n(), k, 7);
+    let problem = Problem::new(data.clone(), Loss::Hinge, lambda);
+    let solver = SolverSpec::SdcaEpochs { epochs: 1.0 };
+    let cfg = if plus {
+        CocoaConfig::cocoa_plus(k, Loss::Hinge, lambda, solver)
+    } else {
+        CocoaConfig::cocoa(k, Loss::Hinge, lambda, solver)
+    }
+    .with_rounds(400)
+    .with_gap_tol(tol);
+    let mut trainer = Trainer::new(problem, partition, cfg);
+    let hist = trainer.run();
+    hist.time_to_gap(tol).map(|(round, _, _)| round + 1)
+}
+
+fn main() {
+    let data = cocoa::data::synth::generate(
+        &cocoa::data::synth::SynthConfig::new("scaling", 2_048, 64)
+            .density(0.3)
+            .seed(3),
+    );
+    let lambda = 1e-3;
+    let tol = 1e-3;
+    let ks = [2usize, 4, 8, 16, 32];
+
+    println!("rounds to duality gap ≤ {tol:e} (1 local epoch/round):\n");
+    println!("{:>4} {:>14} {:>14} {:>8}", "K", "adding (γ=1)", "avg (γ=1/K)", "ratio");
+    let mut xs = Vec::new();
+    let (mut add_r, mut avg_r) = (Vec::new(), Vec::new());
+    for &k in &ks {
+        let add = rounds_to_gap(true, k, &data, lambda, tol);
+        let avg = rounds_to_gap(false, k, &data, lambda, tol);
+        let ratio = match (add, avg) {
+            (Some(a), Some(b)) => format!("{:.1}x", b as f64 / a as f64),
+            _ => "-".into(),
+        };
+        println!(
+            "{:>4} {:>14} {:>14} {:>8}",
+            k,
+            add.map(|r| r.to_string()).unwrap_or("-".into()),
+            avg.map(|r| r.to_string()).unwrap_or("-".into()),
+            ratio
+        );
+        xs.push(k as f64);
+        add_r.push(add.map(|r| r as f64).unwrap_or(f64::NAN));
+        avg_r.push(avg.map(|r| r as f64).unwrap_or(f64::NAN));
+    }
+
+    let chart = render(
+        "rounds-to-ε vs K (log-log): flat = strong scaling",
+        &[
+            Series::new("adding (CoCoA+)", xs.clone(), add_r.clone(), '+'),
+            Series::new("averaging (CoCoA)", xs, avg_r.clone(), 'o'),
+        ],
+        &PlotCfg::default(),
+    );
+    println!("\n{chart}");
+    println!("Corollary 9: averaging needs O(K) more rounds; adding is K-independent.");
+
+    // sanity: at the largest K that both finished, adding must win
+    if let (Some(&a), Some(&b)) = (add_r.last(), avg_r.last()) {
+        if a.is_finite() && b.is_finite() {
+            assert!(a <= b, "adding ({a}) should need ≤ rounds than averaging ({b})");
+        }
+    }
+}

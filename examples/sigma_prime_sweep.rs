@@ -1,0 +1,66 @@
+//! Figure-3-style σ' sweep: with additive aggregation (γ=1) on K=8
+//! workers, how does the subproblem parameter σ' trade off speed against
+//! safety? The safe bound σ' = γK always converges; smaller σ' is faster
+//! until — below σ'_min (Eq. 11) — the iteration diverges.
+//!
+//!     cargo run --release --example sigma_prime_sweep
+
+use cocoa::coordinator::StopReason;
+use cocoa::prelude::*;
+
+fn main() {
+    let k = 8usize;
+    let lambda = 1e-3;
+    let data = cocoa::data::synth::generate(
+        &cocoa::data::synth::SynthConfig::new("sweep", 2_000, 128)
+            .density(0.1)
+            .nonneg(true)
+            .seed(11),
+    );
+    let partition = cocoa::data::partition::random_balanced(data.n(), k, 11);
+
+    // Where does the theory say the floor is? σ'_min per Eq. (11) is data-
+    // dependent; report the spectral diagnostics so the sweep can be read
+    // against them.
+    let ps = cocoa::subproblem::sigma::partition_sigma(&data, &partition, 11);
+    println!(
+        "partition diagnostics: σ_max={:.2} σ=Σσ_k·n_k={:.1} (safe σ'=γK={k})\n",
+        ps.sigma_max(),
+        ps.sigma_sum
+    );
+
+    println!(
+        "{:>6} {:>12} {:>12} {:>10}",
+        "σ'", "final gap", "rounds run", "status"
+    );
+    for sp in [0.5, 1.0, 2.0, 3.0, 4.0, 6.0, 8.0] {
+        let problem = Problem::new(data.clone(), Loss::Hinge, lambda);
+        let cfg = CocoaConfig::cocoa_plus(
+            k,
+            Loss::Hinge,
+            lambda,
+            SolverSpec::SdcaEpochs { epochs: 1.0 },
+        )
+        .with_sigma_prime(sp)
+        .with_rounds(80)
+        .with_gap_tol(1e-4);
+        let mut trainer = Trainer::new(problem, partition.clone(), cfg);
+        let hist = trainer.run();
+        let status = match hist.stop {
+            StopReason::Diverged => "DIVERGED",
+            StopReason::GapReached => "converged",
+            _ => "budget",
+        };
+        println!(
+            "{:>6} {:>12.4e} {:>12} {:>10}",
+            sp,
+            hist.final_gap(),
+            hist.rounds_run(),
+            status
+        );
+    }
+    println!(
+        "\nReading: σ' slightly below K is fastest; far below σ'_min the\n\
+         updates over-shoot and the gap blows up — exactly Figure 3."
+    );
+}

@@ -1,0 +1,169 @@
+"""AOT compilation: lower the L2 graphs to HLO *text* + a manifest.
+
+Usage (from python/): ``python -m compile.aot --out-dir ../artifacts``
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla_extension 0.5.1
+behind the Rust `xla` crate rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+The manifest (artifacts/manifest.json) records, per artifact: logical name,
+file, kind, loss, the monomorphic shapes, and the positional input/output
+signature the Rust runtime packs literals against. Python runs exactly once
+(`make artifacts`); nothing here is on the request path.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model  # noqa: E402
+
+# Default artifact shape set. m: padded rows per worker block; d: features;
+# h: inner SDCA steps per round; n: padded global rows for the gap graph.
+DEFAULT_SHAPES = {
+    "m": 256,
+    "d": 64,
+    "h": 512,
+    "n": 1024,
+}
+
+F64 = jnp.float64
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple, however many outputs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_local_sdca(m: int, d: int, h: int):
+    args = (
+        spec((m, d), F64),   # x
+        spec((m,), F64),     # y
+        spec((m,), F64),     # alpha
+        spec((d,), F64),     # w
+        spec((m,), F64),     # qi
+        spec((h,), I32),     # indices
+        spec((2,), F64),     # scalars [lambda*n, sigma']
+    )
+    lowered = jax.jit(model.local_sdca).lower(*args)
+    inputs = [
+        {"name": "x", "shape": [m, d], "dtype": "f64"},
+        {"name": "y", "shape": [m], "dtype": "f64"},
+        {"name": "alpha", "shape": [m], "dtype": "f64"},
+        {"name": "w", "shape": [d], "dtype": "f64"},
+        {"name": "qi", "shape": [m], "dtype": "f64"},
+        {"name": "indices", "shape": [h], "dtype": "i32"},
+        {"name": "scalars", "shape": [2], "dtype": "f64"},
+    ]
+    outputs = [
+        {"name": "delta_alpha", "shape": [m], "dtype": "f64"},
+        {"name": "delta_w", "shape": [d], "dtype": "f64"},
+    ]
+    return lowered, inputs, outputs
+
+
+def lower_duality_gap(n: int, d: int):
+    args = (
+        spec((n, d), F64),   # x
+        spec((n,), F64),     # y
+        spec((n,), F64),     # alpha
+        spec((n,), F64),     # mask
+        spec((1,), F64),     # lam
+    )
+    lowered = jax.jit(model.duality_gap).lower(*args)
+    inputs = [
+        {"name": "x", "shape": [n, d], "dtype": "f64"},
+        {"name": "y", "shape": [n], "dtype": "f64"},
+        {"name": "alpha", "shape": [n], "dtype": "f64"},
+        {"name": "mask", "shape": [n], "dtype": "f64"},
+        {"name": "lam", "shape": [1], "dtype": "f64"},
+    ]
+    outputs = [
+        {"name": "primal", "shape": [], "dtype": "f64"},
+        {"name": "dual", "shape": [], "dtype": "f64"},
+        {"name": "gap", "shape": [], "dtype": "f64"},
+        {"name": "w", "shape": [d], "dtype": "f64"},
+    ]
+    return lowered, inputs, outputs
+
+
+def build(out_dir: str, shapes=None) -> dict:
+    shapes = {**DEFAULT_SHAPES, **(shapes or {})}
+    m, d, h, n = shapes["m"], shapes["d"], shapes["h"], shapes["n"]
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+
+    jobs = [
+        (
+            f"local_sdca_hinge_m{m}_d{d}_h{h}",
+            "local_sdca",
+            lower_local_sdca(m, d, h),
+            {"m": m, "d": d, "h": h},
+        ),
+        (
+            f"duality_gap_hinge_n{n}_d{d}",
+            "duality_gap",
+            lower_duality_gap(n, d),
+            {"n": n, "d": d},
+        ),
+    ]
+    for name, kind, (lowered, inputs, outputs), dims in jobs:
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "kind": kind,
+                "loss": "hinge",
+                "file": fname,
+                "dims": dims,
+                "inputs": inputs,
+                "outputs": outputs,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {"version": 1, "dtype": "f64", "entries": entries}
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(entries)} artifacts)")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--m", type=int, default=DEFAULT_SHAPES["m"])
+    ap.add_argument("--d", type=int, default=DEFAULT_SHAPES["d"])
+    ap.add_argument("--h", type=int, default=DEFAULT_SHAPES["h"])
+    ap.add_argument("--n", type=int, default=DEFAULT_SHAPES["n"])
+    args = ap.parse_args()
+    build(args.out_dir, {"m": args.m, "d": args.d, "h": args.h, "n": args.n})
+
+
+if __name__ == "__main__":
+    main()

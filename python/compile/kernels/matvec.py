@@ -1,0 +1,89 @@
+"""L1 Pallas kernels: row-tiled matvec X @ w and transpose-matvec X^T u.
+
+These are the duality-gap graph's compute. The BlockSpec tiling is the
+TPU-minded schedule: row tiles of X stream HBM -> VMEM while w (resp. the
+d-length accumulator) stays VMEM-resident; on a real TPU the dot is an MXU
+contraction per tile. interpret=True everywhere (the CPU PJRT plugin
+cannot execute Mosaic custom-calls), so these lower to plain HLO — the
+structure, not the wallclock, is what carries to hardware (see
+DESIGN.md "Hardware adaptation").
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile height: chosen so a (BM, d) f64 tile for the shipped artifact
+# shapes (d <= 512) stays well under ~16 MiB of VMEM. See EXPERIMENTS.md
+# #Perf for the footprint table.
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _matvec_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = x_ref[...] @ w_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def matvec(x, w, *, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """margins = X @ w via a row-tiled Pallas kernel.
+
+    X: (m, d), w: (d,) -> (m,). Rows are tiled in blocks of `block_rows`;
+    Pallas masks the ragged final block automatically.
+    """
+    m, d = x.shape
+    bm = min(block_rows, m)
+    grid = (pl.cdiv(m, bm),)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def _matvec_t_kernel(m, bm, x_ref, u_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # The final block may be ragged: Pallas pads out-of-range rows with
+    # unspecified values (NaN in interpret mode), which an accumulating
+    # kernel must not ingest — NaN·0 is still NaN, so mask both operands.
+    rows = i * bm + jax.lax.iota(jnp.int32, bm)
+    valid = rows < m
+    u = jnp.where(valid, u_ref[...], 0.0)
+    xb = jnp.where(valid[:, None], x_ref[...], 0.0)
+    o_ref[...] += xb.T @ u
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def matvec_t(x, u, *, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """X^T @ u via row-tiled accumulation.
+
+    X: (m, d), u: (m,) -> (d,). The output block is revisited by every grid
+    step (index_map constant), giving a sequential accumulate — the
+    standard Pallas reduction idiom.
+    """
+    m, d = x.shape
+    bm = min(block_rows, m)
+    grid = (pl.cdiv(m, bm),)
+    return pl.pallas_call(
+        functools.partial(_matvec_t_kernel, m, bm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        interpret=True,
+    )(x, u)

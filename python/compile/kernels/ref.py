@@ -1,0 +1,84 @@
+"""Pure-numpy reference oracles for the Pallas kernels (L1 correctness
+anchors). Everything here is written as plainly as possible — explicit
+Python loops where that is the clearest spec — and is what pytest pins the
+kernels against.
+
+The SDCA reference mirrors rust/src/solver/sdca.rs step for step: the
+trajectory-identity tests across all three implementations (numpy oracle,
+Pallas kernel, native Rust) consume the same coordinate index sequence.
+"""
+
+import numpy as np
+
+
+def ref_matvec(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """margins = X @ w."""
+    return x @ w
+
+
+def ref_matvec_t(x: np.ndarray, u: np.ndarray) -> np.ndarray:
+    """Xᵀ @ u."""
+    return x.T @ u
+
+
+def hinge_coordinate_delta(alpha: float, y: float, xv: float, coef: float) -> float:
+    """Closed-form maximizer of -l*(-(a+d)) - d*xv - coef/2 d^2 for hinge.
+
+    Mirrors rust/src/loss/hinge.rs::coordinate_delta.
+    """
+    b = y * alpha
+    b_unc = b + (1.0 - y * xv) / coef
+    b_new = min(max(b_unc, 0.0), 1.0)
+    return y * b_new - alpha
+
+
+def ref_local_sdca(x, y, alpha, w, qi, indices, lam_n, sigma_prime):
+    """LOCALSDCA (Algorithm 2) on the padded local block; hinge loss.
+
+    Args:
+      x: (m, d) local rows (zero rows = padding).
+      y: (m,) labels (+/-1; value irrelevant on pad rows).
+      alpha: (m,) current local duals.
+      w: (d,) shared primal vector.
+      qi: (m,) row squared norms (0 on pad rows).
+      indices: (h,) int coordinate sequence.
+      lam_n: scalar lambda * n_global.
+      sigma_prime: scalar sigma'.
+
+    Returns (delta_alpha (m,), delta_w (d,)).
+    """
+    x = np.asarray(x, dtype=np.float64)
+    m, d = x.shape
+    v = np.array(w, dtype=np.float64, copy=True)
+    delta = np.zeros(m, dtype=np.float64)
+    v_scale = sigma_prime / lam_n
+    for i in np.asarray(indices, dtype=np.int64):
+        q = float(qi[i])
+        if q == 0.0:
+            continue
+        xv = float(x[i] @ v)
+        coef = sigma_prime * q / lam_n
+        dlt = hinge_coordinate_delta(float(alpha[i] + delta[i]), float(y[i]), xv, coef)
+        if dlt != 0.0:
+            delta[i] += dlt
+            v += v_scale * dlt * x[i]
+    delta_w = (v - np.asarray(w, dtype=np.float64)) / sigma_prime
+    return delta, delta_w
+
+
+def ref_duality_gap(x, y, alpha, mask, lam):
+    """Hinge-SVM primal/dual/gap certificates on a padded block.
+
+    w(alpha) = X^T alpha / (lam * n_eff) with n_eff = mask.sum().
+    Returns (primal, dual, gap, w).
+    """
+    x = np.asarray(x, dtype=np.float64)
+    mask = np.asarray(mask, dtype=np.float64)
+    n_eff = mask.sum()
+    w = (x.T @ (alpha * mask)) / (lam * n_eff)
+    margins = x @ w
+    losses = np.maximum(0.0, 1.0 - y * margins) * mask
+    wsq = float(w @ w)
+    primal = losses.sum() / n_eff + 0.5 * lam * wsq
+    dual = float((y * alpha * mask).sum()) / n_eff - 0.5 * lam * wsq
+    return primal, dual, primal - dual, w

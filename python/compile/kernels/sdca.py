@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: the LOCALSDCA block sweep (Algorithm 2) — the paper's
+compute hot-spot, executed entirely out of a VMEM-resident local block.
+
+One kernel invocation performs H sequential dual coordinate-ascent steps
+over the worker's (m, d) data block for the hinge loss:
+
+    for h in range(H):
+        i     = indices[h]                       # Rust-supplied sequence
+        xv    = x[i] . v                         # VMEM dot
+        coef  = sigma' * ||x_i||^2 / (lambda n)
+        b_new = clip(y_i(alpha_i+delta_i) + (1 - y_i xv)/coef, 0, 1)
+        delta_i += y_i b_new - (alpha_i+delta_i)
+        v += (sigma'/(lambda n)) * delta_step * x[i]
+
+The coordinate sequence is an *input* (int32[H]) so the Rust coordinator
+owns all randomness and the native / XLA trajectories are bit-comparable.
+
+TPU adaptation note: the step recurrence is sequential (v depends on the
+previous step), so unlike the matvec kernels there is no grid to tile —
+the win on hardware is holding x, v, delta in VMEM for the whole sweep.
+The ragged/padded rows (q_i = 0) are skipped by predication, not control
+flow. interpret=True for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sdca_kernel(x_ref, y_ref, alpha_ref, w_ref, qi_ref, idx_ref, scal_ref,
+                 dalpha_ref, v_ref):
+    lam_n = scal_ref[0]
+    sigma_p = scal_ref[1]
+    h = idx_ref.shape[0]
+    d = x_ref.shape[1]
+    v_scale = sigma_p / lam_n
+
+    # v starts at the shared w; delta at zero.
+    v_ref[...] = w_ref[...]
+    dalpha_ref[...] = jnp.zeros_like(dalpha_ref)
+
+    def body(step, _):
+        i = idx_ref[step]
+        xi = pl.load(x_ref, (i, pl.dslice(0, d)))
+        q = qi_ref[i]
+        yi = y_ref[i]
+        a_cur = alpha_ref[i] + dalpha_ref[i]
+        xv = jnp.dot(xi, v_ref[...])
+        # guard padded rows (q == 0) without branching
+        coef = jnp.where(q > 0.0, sigma_p * q / lam_n, 1.0)
+        b = yi * a_cur
+        b_new = jnp.clip(b + (1.0 - yi * xv) / coef, 0.0, 1.0)
+        delta = jnp.where(q > 0.0, yi * b_new - a_cur, 0.0)
+        pl.store(dalpha_ref, (i,), dalpha_ref[i] + delta)
+        v_ref[...] = v_ref[...] + (v_scale * delta) * xi
+        return 0
+
+    jax.lax.fori_loop(0, h, body, 0)
+
+
+@jax.jit
+def sdca_block(x, y, alpha, w, qi, indices, scalars):
+    """Run H hinge-SDCA steps on a local block.
+
+    Args:
+      x: (m, d) local rows (zero rows = padding).
+      y: (m,) labels.
+      alpha: (m,) current local duals.
+      w: (d,) shared primal vector.
+      qi: (m,) squared row norms (0 marks padding).
+      indices: (h,) int32 coordinate sequence.
+      scalars: (2,) [lambda*n_global, sigma'].
+
+    Returns:
+      delta_alpha: (m,)
+      v: (d,) final local primal image w + (sigma'/(lambda n)) X^T delta.
+    """
+    m, d = x.shape
+    return pl.pallas_call(
+        _sdca_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), x.dtype),
+            jax.ShapeDtypeStruct((d,), x.dtype),
+        ],
+        interpret=True,
+    )(x, y, alpha, w, qi, indices, scalars)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sdca_local_update(x, y, alpha, w, qi, indices, scalars):
+    """L2-facing wrapper: returns (delta_alpha, delta_w) where
+    delta_w = X^T delta_alpha/(lambda n) = (v - w)/sigma' (the identity the
+    Rust solver uses too)."""
+    delta_alpha, v = sdca_block(x, y, alpha, w, qi, indices, scalars)
+    delta_w = (v - w) / scalars[1]
+    return delta_alpha, delta_w

@@ -1,0 +1,66 @@
+"""L2 — the JAX compute graphs AOT-compiled for the Rust coordinator.
+
+Two graphs, both calling the L1 Pallas kernels:
+
+* ``local_sdca``  — one worker's LOCALSDCA round on its padded local block
+  (kernel: ``kernels.sdca``). This is what each worker executes per outer
+  round in the XLA-backed configuration.
+* ``duality_gap`` — the primal/dual/gap certificates of the global padded
+  problem for the hinge SVM (kernels: ``kernels.matvec``). The leader runs
+  this on its evaluation cadence.
+
+Shapes are fixed at AOT time (PJRT executables are monomorphic); the Rust
+side zero-pads blocks to the compiled (m, d) and marks padding with
+q_i = 0 / mask = 0. Everything is f64 so native-Rust and XLA trajectories
+agree to float-ulp levels (checked by tests on both sides).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matvec as matvec_kernels
+from compile.kernels import sdca as sdca_kernels
+
+
+def local_sdca(x, y, alpha, w, qi, indices, scalars):
+    """One CoCoA+ local round: H hinge-SDCA steps on the local block.
+
+    Args:
+      x: (m, d) padded local rows.
+      y: (m,) labels.
+      alpha: (m,) local duals.
+      w: (d,) shared primal vector.
+      qi: (m,) squared row norms, 0 on padding.
+      indices: (h,) int32 coordinate sequence (Rust-generated).
+      scalars: (2,) [lambda * n_global, sigma'].
+
+    Returns (delta_alpha (m,), delta_w (d,)).
+    """
+    return sdca_kernels.sdca_local_update(x, y, alpha, w, qi, indices, scalars)
+
+
+def duality_gap(x, y, alpha, mask, lam):
+    """Hinge-SVM certificates on the (padded) global problem.
+
+    w(alpha) = X^T(alpha*mask)/(lam*n_eff) is recomputed from alpha so the
+    certificate is self-contained (no drift from an incrementally
+    maintained w can hide in it).
+
+    Args:
+      x: (n, d) padded data.
+      y: (n,) labels.
+      alpha: (n,) dual iterate.
+      mask: (n,) 1.0 for real rows, 0.0 for padding.
+      lam: (1,) regularization parameter.
+
+    Returns (primal, dual, gap, w) — scalars plus the mapped primal vector.
+    """
+    lam = lam[0]
+    n_eff = jnp.sum(mask)
+    w = matvec_kernels.matvec_t(x, alpha * mask) / (lam * n_eff)
+    margins = matvec_kernels.matvec(x, w)
+    losses = jnp.maximum(0.0, 1.0 - y * margins) * mask
+    wsq = jnp.dot(w, w)
+    primal = jnp.sum(losses) / n_eff + 0.5 * lam * wsq
+    dual = jnp.sum(y * alpha * mask) / n_eff - 0.5 * lam * wsq
+    return primal, dual, primal - dual, w

@@ -1,0 +1,30 @@
+"""Shared pytest fixtures. x64 must be flipped before jax initializes."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+def make_block(rng, m, d, n_pad=0, seed_offset=0):
+    """A padded local block: (x, y, alpha, w, qi) with `n_pad` zero rows."""
+    r = np.random.default_rng(1234 + seed_offset)
+    x = r.normal(size=(m, d))
+    # normalize rows to <= 1 like the paper
+    norms = np.linalg.norm(x, axis=1, keepdims=True)
+    x = x / np.maximum(norms, 1e-12)
+    if n_pad:
+        x[m - n_pad:] = 0.0
+    y = np.sign(r.normal(size=m))
+    y[y == 0] = 1.0
+    alpha = np.zeros(m)
+    w = r.normal(size=d) * 0.1
+    qi = (x * x).sum(axis=1)
+    return x, y, alpha, w, qi

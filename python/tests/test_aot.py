@@ -1,0 +1,84 @@
+"""AOT pipeline invariants: the lowered HLO text parses, mentions no
+Mosaic custom-calls (interpret=True requirement), and the manifest
+signature matches what the lowering actually produced."""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import aot
+
+SMALL = {"m": 16, "d": 8, "h": 32, "n": 64}
+
+
+@pytest.fixture(scope="module")
+def built():
+    with tempfile.TemporaryDirectory() as td:
+        manifest = aot.build(td, SMALL)
+        texts = {}
+        for e in manifest["entries"]:
+            with open(os.path.join(td, e["file"])) as f:
+                texts[e["name"]] = f.read()
+        yield manifest, texts
+
+
+def test_manifest_structure(built):
+    manifest, _ = built
+    assert manifest["version"] == 1
+    assert manifest["dtype"] == "f64"
+    kinds = {e["kind"] for e in manifest["entries"]}
+    assert kinds == {"local_sdca", "duality_gap"}
+    for e in manifest["entries"]:
+        assert e["loss"] == "hinge"
+        assert e["file"].endswith(".hlo.txt")
+        assert len(e["sha256"]) == 64
+
+
+def test_hlo_text_is_parseable_hlo(built):
+    _, texts = built
+    for name, text in texts.items():
+        assert "HloModule" in text, f"{name} does not look like HLO text"
+        assert "ENTRY" in text
+        # interpret=True must not leave TPU custom calls behind
+        assert "tpu_custom_call" not in text, f"{name} contains Mosaic custom-call"
+        assert "mosaic" not in text.lower()
+
+
+def test_parameter_counts_match_manifest(built):
+    manifest, texts = built
+    for e in manifest["entries"]:
+        text = texts[e["name"]]
+        # every declared input appears as a parameter in the entry computation
+        n_params = text.count("parameter(")
+        assert n_params >= len(e["inputs"]), (
+            f"{e['name']}: {n_params} parameters < {len(e['inputs'])} declared"
+        )
+
+
+def test_shapes_recorded(built):
+    manifest, _ = built
+    by_kind = {e["kind"]: e for e in manifest["entries"]}
+    sdca = by_kind["local_sdca"]
+    assert sdca["dims"] == {"m": SMALL["m"], "d": SMALL["d"], "h": SMALL["h"]}
+    assert sdca["inputs"][0]["shape"] == [SMALL["m"], SMALL["d"]]
+    assert sdca["inputs"][5]["dtype"] == "i32"
+    gap = by_kind["duality_gap"]
+    assert gap["dims"] == {"n": SMALL["n"], "d": SMALL["d"]}
+    assert gap["outputs"][0]["shape"] == []
+
+
+def test_build_is_deterministic():
+    with tempfile.TemporaryDirectory() as t1, tempfile.TemporaryDirectory() as t2:
+        m1 = aot.build(t1, SMALL)
+        m2 = aot.build(t2, SMALL)
+        h1 = [e["sha256"] for e in m1["entries"]]
+        h2 = [e["sha256"] for e in m2["entries"]]
+        assert h1 == h2
+
+
+def test_manifest_json_roundtrip(built):
+    manifest, _ = built
+    text = json.dumps(manifest)
+    assert json.loads(text) == manifest

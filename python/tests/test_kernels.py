@@ -1,0 +1,154 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-numpy oracle in
+kernels/ref.py, swept over shapes, paddings, and parameter ranges
+(hand-rolled hypothesis-style grids — no hypothesis offline)."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import matvec, ref, sdca
+from tests.conftest import make_block
+
+
+# ---------------------------------------------------------------- matvec
+
+@pytest.mark.parametrize("m,d", [(1, 1), (3, 7), (16, 16), (100, 33),
+                                 (128, 64), (130, 5), (257, 96)])
+def test_matvec_matches_ref(rng, m, d):
+    x = rng.normal(size=(m, d))
+    w = rng.normal(size=d)
+    got = np.asarray(matvec.matvec(x, w))
+    want = ref.ref_matvec(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("m,d", [(1, 1), (3, 7), (16, 16), (100, 33),
+                                 (128, 64), (130, 5), (257, 96)])
+def test_matvec_t_matches_ref(rng, m, d):
+    x = rng.normal(size=(m, d))
+    u = rng.normal(size=m)
+    got = np.asarray(matvec.matvec_t(x, u))
+    want = ref.ref_matvec_t(x, u)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("block_rows", [1, 8, 64, 1024])
+def test_matvec_block_size_invariance(rng, block_rows):
+    x = rng.normal(size=(70, 12))
+    w = rng.normal(size=12)
+    got = np.asarray(matvec.matvec(x, w, block_rows=block_rows))
+    np.testing.assert_allclose(got, ref.ref_matvec(x, w), rtol=1e-12)
+
+
+@pytest.mark.parametrize("block_rows", [1, 8, 64, 1024])
+def test_matvec_t_block_size_invariance(rng, block_rows):
+    x = rng.normal(size=(70, 12))
+    u = rng.normal(size=70)
+    got = np.asarray(matvec.matvec_t(x, u, block_rows=block_rows))
+    np.testing.assert_allclose(got, ref.ref_matvec_t(x, u), rtol=1e-12)
+
+
+def test_matvec_f32_dtype(rng):
+    x = rng.normal(size=(33, 9)).astype(np.float32)
+    w = rng.normal(size=9).astype(np.float32)
+    got = np.asarray(matvec.matvec(x, w))
+    assert got.dtype == np.float32
+    np.testing.assert_allclose(got, ref.ref_matvec(x, w), rtol=1e-5)
+
+
+def test_matvec_zero_matrix():
+    x = np.zeros((10, 4))
+    w = np.ones(4)
+    np.testing.assert_array_equal(np.asarray(matvec.matvec(x, w)), np.zeros(10))
+
+
+# ---------------------------------------------------------------- sdca
+
+@pytest.mark.parametrize("m,d,h", [(4, 3, 10), (32, 8, 100), (64, 16, 300),
+                                   (100, 7, 500)])
+def test_sdca_matches_ref(m, d, h):
+    x, y, alpha, w, qi = make_block(None, m, d, seed_offset=m)
+    r = np.random.default_rng(m * 7 + 1)
+    idx = r.integers(0, m, size=h).astype(np.int32)
+    lam_n, sp = 0.05 * m, 4.0
+    scal = np.array([lam_n, sp])
+    da, dw = sdca.sdca_local_update(x, y, alpha, w, qi, idx, scal)
+    rda, rdw = ref.ref_local_sdca(x, y, alpha, w, qi, idx, lam_n, sp)
+    np.testing.assert_allclose(np.asarray(da), rda, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(dw), rdw, atol=1e-12)
+
+
+def test_sdca_with_padding_rows():
+    m, d, h = 40, 8, 200
+    x, y, alpha, w, qi = make_block(None, m, d, n_pad=10, seed_offset=3)
+    r = np.random.default_rng(5)
+    idx = r.integers(0, m, size=h).astype(np.int32)  # may hit pad rows
+    scal = np.array([0.1 * m, 2.0])
+    da, dw = sdca.sdca_local_update(x, y, alpha, w, qi, idx, scal)
+    rda, rdw = ref.ref_local_sdca(x, y, alpha, w, qi, idx, scal[0], scal[1])
+    np.testing.assert_allclose(np.asarray(da), rda, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(dw), rdw, atol=1e-12)
+    # pad rows never move
+    assert np.all(np.asarray(da)[-10:] == 0.0)
+
+
+@pytest.mark.parametrize("sp", [1.0, 2.0, 8.0])
+@pytest.mark.parametrize("lam", [1e-1, 1e-3])
+def test_sdca_parameter_sweep(sp, lam):
+    m, d, h = 24, 6, 120
+    x, y, alpha, w, qi = make_block(None, m, d, seed_offset=11)
+    idx = np.random.default_rng(9).integers(0, m, size=h).astype(np.int32)
+    scal = np.array([lam * m, sp])
+    da, dw = sdca.sdca_local_update(x, y, alpha, w, qi, idx, scal)
+    rda, rdw = ref.ref_local_sdca(x, y, alpha, w, qi, idx, scal[0], scal[1])
+    np.testing.assert_allclose(np.asarray(da), rda, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(dw), rdw, atol=1e-12)
+
+
+def test_sdca_dual_feasibility():
+    """After any number of steps, y*(alpha+delta) stays in [0,1] (hinge box)."""
+    m, d, h = 30, 5, 400
+    x, y, alpha, w, qi = make_block(None, m, d, seed_offset=21)
+    # start from a nonzero feasible alpha
+    r = np.random.default_rng(2)
+    alpha = y * r.uniform(0, 1, size=m)
+    idx = r.integers(0, m, size=h).astype(np.int32)
+    scal = np.array([0.02 * m, 3.0])
+    da, _ = sdca.sdca_local_update(x, y, alpha, w, qi, idx, scal)
+    b = y * (alpha + np.asarray(da))
+    assert np.all(b >= -1e-12) and np.all(b <= 1 + 1e-12)
+
+
+def test_sdca_nonzero_start_matches_ref():
+    m, d, h = 26, 9, 150
+    x, y, _, w, qi = make_block(None, m, d, seed_offset=31)
+    r = np.random.default_rng(7)
+    alpha = y * r.uniform(0, 1, size=m)
+    idx = r.integers(0, m, size=h).astype(np.int32)
+    scal = np.array([0.05 * m, 2.5])
+    da, dw = sdca.sdca_local_update(x, y, alpha, w, qi, idx, scal)
+    rda, rdw = ref.ref_local_sdca(x, y, alpha, w, qi, idx, scal[0], scal[1])
+    np.testing.assert_allclose(np.asarray(da), rda, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(dw), rdw, atol=1e-12)
+
+
+def test_sdca_deterministic():
+    m, d, h = 20, 4, 60
+    x, y, alpha, w, qi = make_block(None, m, d, seed_offset=41)
+    idx = np.random.default_rng(3).integers(0, m, size=h).astype(np.int32)
+    scal = np.array([0.1 * m, 2.0])
+    a1, w1 = sdca.sdca_local_update(x, y, alpha, w, qi, idx, scal)
+    a2, w2 = sdca.sdca_local_update(x, y, alpha, w, qi, idx, scal)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+
+
+def test_sdca_delta_w_identity():
+    """delta_w must equal X^T delta_alpha/(lambda n) exactly."""
+    m, d, h = 22, 6, 90
+    x, y, alpha, w, qi = make_block(None, m, d, seed_offset=51)
+    idx = np.random.default_rng(4).integers(0, m, size=h).astype(np.int32)
+    lam_n = 0.07 * m
+    scal = np.array([lam_n, 5.0])
+    da, dw = sdca.sdca_local_update(x, y, alpha, w, qi, idx, scal)
+    want = x.T @ np.asarray(da) / lam_n
+    np.testing.assert_allclose(np.asarray(dw), want, atol=1e-12)

@@ -1,0 +1,108 @@
+"""L2 graph correctness: duality_gap vs the numpy oracle; semantic
+properties of the certificates (weak duality, optimality at the SDCA fixed
+point); local_sdca improves the padded-global dual objective."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from tests.conftest import make_block
+
+
+def gap_inputs(n, d, n_pad=0, seed=0, alpha_mode="zero"):
+    x, y, _, _, qi = make_block(None, n, d, n_pad=n_pad, seed_offset=seed)
+    mask = np.ones(n)
+    if n_pad:
+        mask[n - n_pad:] = 0.0
+    r = np.random.default_rng(seed + 100)
+    if alpha_mode == "zero":
+        alpha = np.zeros(n)
+    else:
+        alpha = y * r.uniform(0, 1, size=n) * mask
+    return x, y, alpha, mask, qi
+
+
+@pytest.mark.parametrize("n,d", [(16, 4), (100, 16), (256, 64)])
+def test_duality_gap_matches_ref(n, d):
+    x, y, alpha, mask, _ = gap_inputs(n, d, seed=n, alpha_mode="rand")
+    lam = np.array([1e-2])
+    p, dv, g, w = model.duality_gap(x, y, alpha, mask, lam)
+    rp, rd, rg, rw = ref.ref_duality_gap(x, y, alpha, mask, lam[0])
+    np.testing.assert_allclose(float(p), rp, rtol=1e-12)
+    np.testing.assert_allclose(float(dv), rd, rtol=1e-12)
+    np.testing.assert_allclose(float(g), rg, rtol=1e-10, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(w), rw, atol=1e-12)
+
+
+def test_weak_duality_nonneg_gap():
+    for seed in range(5):
+        x, y, alpha, mask, _ = gap_inputs(60, 8, seed=seed, alpha_mode="rand")
+        lam = np.array([np.random.default_rng(seed).uniform(1e-4, 1e-1)])
+        _, _, g, _ = model.duality_gap(x, y, alpha, mask, lam)
+        assert float(g) >= -1e-12
+
+
+def test_gap_with_padding_matches_unpadded():
+    """Padding rows (mask=0, zero features, alpha=0) must not change the
+    certificates of the embedded real problem."""
+    n, d, pad = 50, 6, 14
+    x, y, alpha, mask, _ = gap_inputs(n, d, seed=7, alpha_mode="rand")
+    lam = np.array([5e-3])
+    p0, d0, g0, w0 = model.duality_gap(x, y, alpha, mask, lam)
+
+    xp = np.vstack([x, np.zeros((pad, d))])
+    yp = np.concatenate([y, np.ones(pad)])
+    ap = np.concatenate([alpha, np.zeros(pad)])
+    mp = np.concatenate([mask, np.zeros(pad)])
+    p1, d1, g1, w1 = model.duality_gap(xp, yp, ap, mp, lam)
+    np.testing.assert_allclose(float(p0), float(p1), rtol=1e-12)
+    np.testing.assert_allclose(float(d0), float(d1), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(w0), np.asarray(w1), atol=1e-14)
+
+
+def test_gap_at_zero_alpha_bounded_by_one():
+    """Paper Eq. (5)/Lemma 17: at alpha=0, P(0)-D(0) = (1/n) sum l_i(0) <= 1."""
+    x, y, alpha, mask, _ = gap_inputs(80, 10, seed=3, alpha_mode="zero")
+    lam = np.array([1e-3])
+    _, _, g, _ = model.duality_gap(x, y, alpha, mask, lam)
+    assert 0.0 <= float(g) <= 1.0 + 1e-12
+
+
+def test_local_sdca_improves_global_dual():
+    """Running the L2 local round on the whole data (K=1, sigma'=1) must
+    increase D(alpha) = dual objective of the padded problem."""
+    n, d, h = 64, 8, 600
+    x, y, alpha, mask, qi = gap_inputs(n, d, seed=9, alpha_mode="zero")
+    lam = 1e-2
+    lam_arr = np.array([lam])
+    w = np.zeros(d)
+    _, d_before, _, _ = model.duality_gap(x, y, alpha, mask, lam_arr)
+    idx = np.random.default_rng(11).integers(0, n, size=h).astype(np.int32)
+    scal = np.array([lam * n, 1.0])
+    da, dw = model.local_sdca(x, y, alpha, w, qi, idx, scal)
+    alpha2 = alpha + np.asarray(da)
+    _, d_after, _, _ = model.duality_gap(x, y, alpha2, mask, lam_arr)
+    assert float(d_after) > float(d_before)
+
+
+def test_local_sdca_many_rounds_shrinks_gap():
+    """A miniature single-worker CoCoA loop entirely through the L2 graphs:
+    gap must fall by orders of magnitude."""
+    n, d, h = 48, 6, 300
+    x, y, alpha, mask, qi = gap_inputs(n, d, seed=13, alpha_mode="zero")
+    lam = 5e-2
+    lam_arr = np.array([lam])
+    w = np.zeros(d)
+    r = np.random.default_rng(17)
+    _, _, g0, _ = model.duality_gap(x, y, alpha, mask, lam_arr)
+    for _ in range(12):
+        idx = r.integers(0, n, size=h).astype(np.int32)
+        scal = np.array([lam * n, 1.0])
+        da, dw = model.local_sdca(x, y, alpha, w, qi, idx, scal)
+        alpha = alpha + np.asarray(da)
+        w = w + np.asarray(dw)
+    _, _, g1, w_cert = model.duality_gap(x, y, alpha, mask, lam_arr)
+    assert float(g1) < float(g0) * 1e-2, f"gap {float(g0)} -> {float(g1)}"
+    # maintained w must agree with the certificate's recomputed w
+    np.testing.assert_allclose(w, np.asarray(w_cert), atol=1e-9)

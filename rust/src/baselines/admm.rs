@@ -1,0 +1,311 @@
+//! Consensus ADMM for distributed SVM training (Forero, Cano & Giannakis
+//! 2010; Boyd et al. 2011) — the alternating-direction baseline of §6.
+//!
+//! Splitting: min Σ_k f_k(w_k) + (λ/2)‖z‖²  s.t. w_k = z  ∀k, where
+//! f_k(w) = (1/n) Σ_{i∈P_k} ℓ_i(x_iᵀw). Scaled-dual iterations:
+//!
+//!   w_k ← argmin f_k(w) + (ρ/2)‖w − z + u_k‖²      (inexact, local)
+//!   z   ← ρ Σ_k (w_k + u_k) / (λ + Kρ)
+//!   u_k ← u_k + w_k − z
+//!
+//! The w-update is solved inexactly by subgradient descent on the
+//! ρ-strongly-convex augmented local objective — mirroring the paper's
+//! point that ADMM-style methods need nontrivial subproblem work per
+//! round and carry a ρ whose tuning is "often unclear", in contrast to
+//! CoCoA+'s tune-free safe σ'. Communication per round matches CoCoA
+//! (one d-vector per worker up, one broadcast down).
+
+use crate::coordinator::comm::CommModel;
+use crate::coordinator::history::{History, RoundRecord, StopReason};
+use crate::data::Partition;
+use crate::linalg::dense;
+use crate::objective::Problem;
+use crate::subproblem::LocalBlock;
+use crate::util::rng::Pcg32;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct AdmmConfig {
+    pub k: usize,
+    /// Augmented-Lagrangian penalty ρ.
+    pub rho: f64,
+    /// Inexact local subgradient steps per round.
+    pub local_iters: usize,
+    pub max_rounds: usize,
+    /// Stop when primal suboptimality vs `p_star` (if given to run) ≤ tol.
+    pub tol: f64,
+    pub gap_every: usize,
+    pub seed: u64,
+    pub comm: CommModel,
+}
+
+impl AdmmConfig {
+    pub fn new(k: usize) -> AdmmConfig {
+        AdmmConfig {
+            k,
+            rho: 1.0,
+            local_iters: 50,
+            max_rounds: 500,
+            tol: 1e-3,
+            gap_every: 5,
+            seed: 42,
+            comm: CommModel::ec2_like(),
+        }
+    }
+}
+
+pub struct Admm {
+    pub cfg: AdmmConfig,
+    pub problem: Problem,
+    blocks: Vec<LocalBlock>,
+    /// Local models w_k.
+    pub w_local: Vec<Vec<f64>>,
+    /// Scaled duals u_k.
+    pub u: Vec<Vec<f64>>,
+    /// Consensus iterate z.
+    pub z: Vec<f64>,
+    rngs: Vec<Pcg32>,
+}
+
+impl Admm {
+    pub fn new(problem: Problem, partition: Partition, cfg: AdmmConfig) -> Admm {
+        assert_eq!(partition.k(), cfg.k);
+        assert_eq!(partition.n, problem.n());
+        assert!(cfg.rho > 0.0, "ρ must be positive");
+        let blocks = LocalBlock::split(&problem.data, &partition);
+        let d = problem.d();
+        let rngs = (0..cfg.k)
+            .map(|k| Pcg32::new(cfg.seed, 5000 + k as u64))
+            .collect();
+        Admm {
+            cfg: cfg.clone(),
+            problem,
+            blocks,
+            w_local: vec![vec![0.0; d]; cfg.k],
+            u: vec![vec![0.0; d]; cfg.k],
+            z: vec![0.0; d],
+            rngs,
+        }
+    }
+
+    /// Inexact w_k update: subgradient descent on
+    /// f_k(w) + (ρ/2)‖w − c‖², c = z − u_k (ρ-strongly convex → 1/(ρt) steps).
+    fn local_w_update(&mut self, kid: usize) {
+        let block = &self.blocks[kid];
+        let n = self.problem.n() as f64;
+        let loss = self.problem.loss;
+        let rho = self.cfg.rho;
+        let d = self.problem.d();
+        let nk = block.n_local();
+        let mut c = vec![0.0; d];
+        dense::sub(&self.z, &self.u[kid], &mut c);
+        let w = &mut self.w_local[kid];
+        // warm start from the previous w_k
+        for t in 1..=self.cfg.local_iters {
+            let eta = 1.0 / (rho * (t as f64 + 5.0));
+            // stochastic subgradient of f_k on a sampled point (scaled by
+            // n_k/n to match f_k's 1/n normalization), plus the prox term.
+            let i = self.rngs[kid].gen_range(nk);
+            let z_i = block.x.row_dot(i, w);
+            let g = loss.subgradient(z_i, block.y[i]) * (nk as f64 / n);
+            // w ← w − η(g·x_i + ρ(w − c))
+            let shrink = 1.0 - eta * rho;
+            for j in 0..d {
+                w[j] = shrink * w[j] + eta * rho * c[j];
+            }
+            if g != 0.0 {
+                block.x.row_axpy(i, -eta * g, w);
+            }
+        }
+    }
+
+    /// One ADMM round; returns max worker compute seconds.
+    pub fn round(&mut self) -> f64 {
+        let k = self.cfg.k;
+        let d = self.problem.d();
+        let rho = self.cfg.rho;
+        let lambda = self.problem.lambda;
+
+        let mut max_compute = 0.0f64;
+        for kid in 0..k {
+            let t0 = Instant::now();
+            self.local_w_update(kid);
+            max_compute = max_compute.max(t0.elapsed().as_secs_f64());
+        }
+        // z-update (leader)
+        let mut acc = vec![0.0; d];
+        for kid in 0..k {
+            for j in 0..d {
+                acc[j] += self.w_local[kid][j] + self.u[kid][j];
+            }
+        }
+        let scale = rho / (lambda + k as f64 * rho);
+        for j in 0..d {
+            self.z[j] = scale * acc[j];
+        }
+        // u-update
+        for kid in 0..k {
+            for j in 0..d {
+                self.u[kid][j] += self.w_local[kid][j] - self.z[j];
+            }
+        }
+        max_compute
+    }
+
+    /// Primal residual ‖w_k − z‖ aggregated (consensus violation).
+    pub fn consensus_residual(&self) -> f64 {
+        self.w_local
+            .iter()
+            .map(|w| dense::distance(w, &self.z))
+            .fold(0.0f64, f64::max)
+    }
+
+    /// Run, reporting primal values of the consensus iterate (ADMM has no
+    /// dual certificate in this form — the paper's §6 point about
+    /// primal-only baselines).
+    pub fn run(&mut self, p_star: Option<f64>) -> History {
+        let mut hist = History::new(&format!(
+            "admm(K={},rho={},iters={})",
+            self.cfg.k, self.cfg.rho, self.cfg.local_iters
+        ));
+        let mut cum_compute = 0.0;
+        let mut cum_sim = 0.0;
+        let mut vectors = 0usize;
+        for t in 0..self.cfg.max_rounds {
+            let c = self.round();
+            cum_compute += c;
+            cum_sim += c + self.cfg.comm.round_time(self.problem.d());
+            vectors += self.cfg.comm.round_vectors(self.cfg.k);
+            if t % self.cfg.gap_every == 0 || t + 1 == self.cfg.max_rounds {
+                let primal = self.problem.primal_value(&self.z);
+                let gap = p_star.map(|ps| primal - ps).unwrap_or(primal);
+                hist.push(RoundRecord {
+                    round: t,
+                    comm_vectors: vectors,
+                    sim_time_s: cum_sim,
+                    compute_s: cum_compute,
+                    primal,
+                    dual: f64::NEG_INFINITY,
+                    gap,
+                });
+                if !primal.is_finite() {
+                    hist.stop = StopReason::Diverged;
+                    return hist;
+                }
+                if p_star.is_some() && gap <= self.cfg.tol {
+                    hist.stop = StopReason::GapReached;
+                    return hist;
+                }
+            }
+        }
+        hist.stop = StopReason::MaxRounds;
+        hist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::serial_sdca;
+    use crate::data::partition::random_balanced;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::loss::Loss;
+
+    fn setup(k: usize, rho: f64) -> Admm {
+        let data = generate(&SynthConfig::new("admm", 150, 10).seed(3));
+        let p = Problem::new(data, Loss::Hinge, 1e-2);
+        let part = random_balanced(150, k, 7);
+        let mut cfg = AdmmConfig::new(k);
+        cfg.rho = rho;
+        Admm::new(p, part, cfg)
+    }
+
+    #[test]
+    fn consensus_residual_shrinks() {
+        // With stochastic local solves the residual settles into a small
+        // noise ball rather than decaying monotonically: compare the first
+        // round's violation against the settled level, with slack.
+        let mut a = setup(4, 1.0);
+        a.round();
+        let early = a.consensus_residual();
+        for _ in 0..120 {
+            a.round();
+        }
+        let late = a.consensus_residual();
+        assert!(
+            late < early * 1.5,
+            "consensus violation grew: {early} → {late}"
+        );
+        assert!(late < 0.2, "consensus not approximately reached: {late}");
+    }
+
+    #[test]
+    fn primal_approaches_optimum() {
+        let mut a = setup(3, 1.0);
+        let p_star = serial_sdca::solve(&a.problem, &Default::default()).certs.primal;
+        let p0 = a.problem.primal_value(&a.z);
+        for _ in 0..300 {
+            a.round();
+        }
+        let p_end = a.problem.primal_value(&a.z);
+        assert!(p_end < p0, "no progress: {p0} → {p_end}");
+        let sub0 = p0 - p_star;
+        let sub_end = p_end - p_star;
+        assert!(
+            sub_end < sub0 * 0.2,
+            "ADMM should close most of the suboptimality: {sub0} → {sub_end}"
+        );
+    }
+
+    #[test]
+    fn cocoa_plus_beats_admm_per_round_budget() {
+        // The §6 comparison: at an equal communication budget, CoCoA+'s
+        // certificate-driven progress dominates ADMM's.
+        use crate::coordinator::{CocoaConfig, SolverSpec, Trainer};
+        let data = generate(&SynthConfig::new("vs", 150, 10).seed(5));
+        let p_star = {
+            let p = Problem::new(data.clone(), Loss::Hinge, 1e-2);
+            serial_sdca::solve(&p, &Default::default()).certs.primal
+        };
+        let part = random_balanced(150, 4, 9);
+        let rounds = 25;
+
+        let mut admm = Admm::new(
+            Problem::new(data.clone(), Loss::Hinge, 1e-2),
+            part.clone(),
+            AdmmConfig::new(4),
+        );
+        for _ in 0..rounds {
+            admm.round();
+        }
+        let admm_sub = admm.problem.primal_value(&admm.z) - p_star;
+
+        let cfg = CocoaConfig::cocoa_plus(
+            4,
+            Loss::Hinge,
+            1e-2,
+            SolverSpec::SdcaEpochs { epochs: 1.0 },
+        )
+        .with_rounds(rounds)
+        .with_gap_tol(0.0)
+        .with_parallel(false);
+        let mut t = Trainer::new(Problem::new(data, Loss::Hinge, 1e-2), part, cfg);
+        t.run();
+        let cocoa_sub = t.problem.primal_value(&t.w) - p_star;
+        assert!(
+            cocoa_sub <= admm_sub + 1e-9,
+            "CoCoA+ subopt {cocoa_sub} should beat ADMM {admm_sub} at {rounds} rounds"
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_rho_rejected() {
+        let data = generate(&SynthConfig::new("t", 20, 4).seed(1));
+        let p = Problem::new(data, Loss::Hinge, 0.1);
+        let part = random_balanced(20, 2, 1);
+        let mut cfg = AdmmConfig::new(2);
+        cfg.rho = 0.0;
+        Admm::new(p, part, cfg);
+    }
+}

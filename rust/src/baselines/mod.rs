@@ -1,0 +1,10 @@
+//! Competing methods from the paper's evaluation and related-work
+//! discussion (§6): distributed mini-batch SGD (Fig. 2's third curve),
+//! mini-batch SDCA, one-shot averaging, and the serial SDCA reference
+//! used to estimate optima, plus consensus-ADMM (Forero et al. 2010).
+
+pub mod admm;
+pub mod minibatch_sdca;
+pub mod minibatch_sgd;
+pub mod one_shot;
+pub mod serial_sdca;

@@ -1,0 +1,126 @@
+//! Communication accounting and the simulated cluster time model.
+//!
+//! The paper reports (i) the number of communicated vectors and (ii)
+//! elapsed wall-clock on a Spark/EC2 cluster. We execute all workers on
+//! one host, so the *communication* share of each round is simulated with
+//! a simple star-topology model calibrated to EC2-class hardware, while
+//! the *compute* share is the measured max over workers (the slowest
+//! worker gates the round, exactly as in a synchronous cluster):
+//!
+//!   t_round = max_k(compute_k) + 2·(latency + d·8B / bandwidth)
+//!
+//! (one gather of Δw_k and one broadcast of the new w per round; transfers
+//! to/from K workers overlap, latency does not). Vector counting follows
+//! the paper: one vector per worker per round (Fig. 1's x-axis).
+
+/// Network model for the simulated cluster.
+#[derive(Clone, Copy, Debug)]
+pub struct CommModel {
+    /// One-way latency per round trip component, seconds.
+    pub latency_s: f64,
+    /// Effective per-link bandwidth, bytes/second.
+    pub bandwidth_bps: f64,
+    /// If false, report zero simulated comm time (pure compute curves).
+    pub enabled: bool,
+}
+
+impl CommModel {
+    /// EC2 m3.large-era constants: ~0.5 ms latency, ~1 Gbit/s effective.
+    pub fn ec2_like() -> CommModel {
+        CommModel {
+            latency_s: 5e-4,
+            bandwidth_bps: 125e6,
+            enabled: true,
+        }
+    }
+
+    /// A slower network (e.g. cross-rack): stresses communication
+    /// efficiency, widening the CoCoA+ vs mini-batch gap.
+    pub fn slow_network() -> CommModel {
+        CommModel {
+            latency_s: 5e-3,
+            bandwidth_bps: 12.5e6,
+            enabled: true,
+        }
+    }
+
+    pub fn disabled() -> CommModel {
+        CommModel {
+            latency_s: 0.0,
+            bandwidth_bps: 1.0,
+            enabled: false,
+        }
+    }
+
+    /// Simulated communication seconds for one synchronous round that
+    /// moves one d-dimensional f64 vector up (reduce) and one down
+    /// (broadcast).
+    pub fn round_time(&self, d: usize) -> f64 {
+        if !self.enabled {
+            return 0.0;
+        }
+        let bytes = (d * 8) as f64;
+        2.0 * (self.latency_s + bytes / self.bandwidth_bps)
+    }
+
+    /// Vectors communicated in one round: one per worker (paper's count).
+    pub fn round_vectors(&self, k: usize) -> usize {
+        k
+    }
+}
+
+/// Running totals the coordinator keeps.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommStats {
+    pub rounds: usize,
+    pub vectors: usize,
+    pub bytes: usize,
+    pub sim_comm_s: f64,
+}
+
+impl CommStats {
+    pub fn record_round(&mut self, model: &CommModel, d: usize, k: usize) {
+        self.rounds += 1;
+        self.vectors += model.round_vectors(k);
+        self.bytes += k * d * 8;
+        self.sim_comm_s += model.round_time(d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_time_scales_with_d() {
+        let m = CommModel::ec2_like();
+        let t_small = m.round_time(100);
+        let t_big = m.round_time(1_000_000);
+        assert!(t_big > t_small);
+        // latency floor
+        assert!(t_small >= 2.0 * m.latency_s);
+    }
+
+    #[test]
+    fn disabled_model_is_free() {
+        let m = CommModel::disabled();
+        assert_eq!(m.round_time(1_000_000), 0.0);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let m = CommModel::ec2_like();
+        let mut s = CommStats::default();
+        s.record_round(&m, 1000, 8);
+        s.record_round(&m, 1000, 8);
+        assert_eq!(s.rounds, 2);
+        assert_eq!(s.vectors, 16);
+        assert_eq!(s.bytes, 2 * 8 * 1000 * 8);
+        assert!((s.sim_comm_s - 2.0 * m.round_time(1000)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slow_network_slower() {
+        assert!(CommModel::slow_network().round_time(10_000) > CommModel::ec2_like().round_time(10_000));
+    }
+}

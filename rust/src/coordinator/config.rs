@@ -1,0 +1,227 @@
+//! Run configuration for the CoCoA/CoCoA+ framework (Algorithm 1), with
+//! the paper's named presets.
+
+use crate::coordinator::comm::CommModel;
+use crate::loss::Loss;
+use crate::subproblem::sigma::safe_sigma_prime;
+
+/// How local updates are combined across workers (Eq. 14).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Aggregation {
+    /// γ = 1/K — conservative averaging; with σ'=1 this is original CoCoA.
+    Average,
+    /// γ = 1 — additive aggregation; the CoCoA+ regime.
+    Add,
+    /// Any γ ∈ (0, 1].
+    Gamma(f64),
+}
+
+impl Aggregation {
+    pub fn gamma(&self, k: usize) -> f64 {
+        match *self {
+            Aggregation::Average => 1.0 / k as f64,
+            Aggregation::Add => 1.0,
+            Aggregation::Gamma(g) => g,
+        }
+    }
+}
+
+/// Which local solver each worker runs.
+#[derive(Clone, Debug)]
+pub enum SolverSpec {
+    /// LOCALSDCA with a fixed number of inner iterations H.
+    Sdca { h: usize },
+    /// LOCALSDCA with H = epochs·n_k.
+    SdcaEpochs { epochs: f64 },
+    /// Cyclic coordinate descent, `epochs` sweeps.
+    Cyclic { epochs: usize, shuffle: bool },
+    /// Damped synchronous Jacobi updates.
+    Jacobi { sweeps: usize, beta: f64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct CocoaConfig {
+    /// Number of workers K.
+    pub k: usize,
+    /// Aggregation parameter γ.
+    pub aggregation: Aggregation,
+    /// Subproblem parameter σ'. `None` → the safe bound γK (Lemma 4).
+    pub sigma_prime: Option<f64>,
+    pub loss: Loss,
+    pub lambda: f64,
+    pub solver: SolverSpec,
+    /// Stop after this many outer rounds.
+    pub max_rounds: usize,
+    /// Stop when the duality gap falls below this.
+    pub gap_tol: f64,
+    /// Evaluate certificates every `gap_every` rounds (they cost a full
+    /// pass over the data).
+    pub gap_every: usize,
+    /// Abort and flag divergence when the gap exceeds this (unsafe σ'
+    /// configurations in Fig. 3 really do diverge).
+    pub divergence_gap: f64,
+    /// Run workers on OS threads (true) or sequentially in-process (false;
+    /// required by local solvers that are not Send, e.g. the PJRT-backed
+    /// one, and useful for exact determinism).
+    pub parallel: bool,
+    pub seed: u64,
+    /// Simulated cluster network for the paper's elapsed-time axes.
+    pub comm: CommModel,
+}
+
+impl CocoaConfig {
+    /// CoCoA+ with the safe σ' = γK (the paper's recommended default).
+    pub fn cocoa_plus(k: usize, loss: Loss, lambda: f64, solver: SolverSpec) -> CocoaConfig {
+        CocoaConfig {
+            k,
+            aggregation: Aggregation::Add,
+            sigma_prime: None,
+            loss,
+            lambda,
+            solver,
+            max_rounds: 200,
+            gap_tol: 1e-4,
+            gap_every: 1,
+            divergence_gap: 1e6,
+            parallel: true,
+            seed: 42,
+            comm: CommModel::ec2_like(),
+        }
+    }
+
+    /// Original CoCoA (Jaggi et al. 2014): γ = 1/K, σ' = 1 (Remark 12).
+    pub fn cocoa(k: usize, loss: Loss, lambda: f64, solver: SolverSpec) -> CocoaConfig {
+        CocoaConfig {
+            aggregation: Aggregation::Average,
+            sigma_prime: Some(1.0),
+            ..CocoaConfig::cocoa_plus(k, loss, lambda, solver)
+        }
+    }
+
+    /// DisDCA-p (Yang 2013) = CoCoA+ with SDCA, σ'=K, γ=1 (Lemma 18).
+    pub fn disdca_p(k: usize, loss: Loss, lambda: f64, h: usize) -> CocoaConfig {
+        CocoaConfig::cocoa_plus(k, loss, lambda, SolverSpec::Sdca { h })
+    }
+
+    /// Effective γ.
+    pub fn gamma(&self) -> f64 {
+        self.aggregation.gamma(self.k)
+    }
+
+    /// Effective σ' (explicit or the safe bound γK).
+    pub fn effective_sigma_prime(&self) -> f64 {
+        self.sigma_prime
+            .unwrap_or_else(|| safe_sigma_prime(self.gamma(), self.k))
+    }
+
+    pub fn with_sigma_prime(mut self, sp: f64) -> Self {
+        self.sigma_prime = Some(sp);
+        self
+    }
+
+    pub fn with_rounds(mut self, r: usize) -> Self {
+        self.max_rounds = r;
+        self
+    }
+
+    pub fn with_gap_tol(mut self, tol: f64) -> Self {
+        self.gap_tol = tol;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_parallel(mut self, parallel: bool) -> Self {
+        self.parallel = parallel;
+        self
+    }
+
+    pub fn with_gap_every(mut self, every: usize) -> Self {
+        self.gap_every = every.max(1);
+        self
+    }
+
+    /// Sanity-check the configuration against the theory's ranges.
+    pub fn validate(&self) -> Result<(), String> {
+        let g = self.gamma();
+        if !(g > 0.0 && g <= 1.0) {
+            return Err(format!("γ = {g} outside (0, 1]"));
+        }
+        if self.lambda <= 0.0 {
+            return Err(format!("λ = {} must be positive", self.lambda));
+        }
+        let sp = self.effective_sigma_prime();
+        if sp <= 0.0 {
+            return Err(format!("σ' = {sp} must be positive"));
+        }
+        if self.k == 0 {
+            return Err("K must be ≥ 1".into());
+        }
+        let safe = safe_sigma_prime(g, self.k);
+        if sp < safe - 1e-12 {
+            // Not an error (Fig. 3 explores this), but it voids the theory.
+            crate::log_warn!(
+                "σ' = {sp} below the safe bound γK = {safe}: convergence no longer guaranteed"
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper() {
+        let plus = CocoaConfig::cocoa_plus(8, Loss::Hinge, 1e-4, SolverSpec::Sdca { h: 100 });
+        assert_eq!(plus.gamma(), 1.0);
+        assert_eq!(plus.effective_sigma_prime(), 8.0);
+
+        let orig = CocoaConfig::cocoa(8, Loss::Hinge, 1e-4, SolverSpec::Sdca { h: 100 });
+        assert_eq!(orig.gamma(), 0.125);
+        assert_eq!(orig.effective_sigma_prime(), 1.0);
+    }
+
+    #[test]
+    fn averaging_safe_bound_is_one() {
+        // Lemma 4 for γ=1/K gives σ' = 1 — exactly the original CoCoA.
+        let cfg = CocoaConfig {
+            sigma_prime: None,
+            ..CocoaConfig::cocoa(4, Loss::Hinge, 0.1, SolverSpec::SdcaEpochs { epochs: 1.0 })
+        };
+        assert_eq!(cfg.effective_sigma_prime(), 1.0);
+    }
+
+    #[test]
+    fn validation() {
+        let ok = CocoaConfig::cocoa_plus(4, Loss::Hinge, 0.1, SolverSpec::Sdca { h: 10 });
+        assert!(ok.validate().is_ok());
+        let bad = CocoaConfig {
+            lambda: -1.0,
+            ..ok.clone()
+        };
+        assert!(bad.validate().is_err());
+        let bad_gamma = CocoaConfig {
+            aggregation: Aggregation::Gamma(1.5),
+            ..ok
+        };
+        assert!(bad_gamma.validate().is_err());
+    }
+
+    #[test]
+    fn builder_chain() {
+        let cfg = CocoaConfig::cocoa_plus(2, Loss::Hinge, 0.1, SolverSpec::Sdca { h: 5 })
+            .with_sigma_prime(3.0)
+            .with_rounds(7)
+            .with_gap_tol(1e-6)
+            .with_seed(9)
+            .with_gap_every(3);
+        assert_eq!(cfg.effective_sigma_prime(), 3.0);
+        assert_eq!(cfg.max_rounds, 7);
+        assert_eq!(cfg.gap_every, 3);
+    }
+}

@@ -1,0 +1,201 @@
+//! Per-round training history: the raw series behind every figure.
+
+use crate::util::json::{jarr, jnum, jobj, jstr, Json};
+
+/// One evaluated round (certificates are computed every `gap_every`
+/// rounds, so records may be sparser than rounds).
+#[derive(Clone, Copy, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Cumulative communicated vectors (paper's Fig. 1 x-axis).
+    pub comm_vectors: usize,
+    /// Cumulative simulated cluster time: measured max-worker compute +
+    /// modeled network (paper's elapsed-time x-axis).
+    pub sim_time_s: f64,
+    /// Cumulative measured local-compute seconds (max over workers/round).
+    pub compute_s: f64,
+    pub primal: f64,
+    pub dual: f64,
+    pub gap: f64,
+}
+
+/// Why a run stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    GapReached,
+    MaxRounds,
+    Diverged,
+    DualStalled,
+}
+
+#[derive(Clone, Debug)]
+pub struct History {
+    pub label: String,
+    pub records: Vec<RoundRecord>,
+    pub stop: StopReason,
+}
+
+impl History {
+    pub fn new(label: &str) -> History {
+        History {
+            label: label.to_string(),
+            records: Vec::new(),
+            stop: StopReason::MaxRounds,
+        }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    pub fn final_gap(&self) -> f64 {
+        self.records.last().map(|r| r.gap).unwrap_or(f64::INFINITY)
+    }
+
+    pub fn final_dual(&self) -> f64 {
+        self.records
+            .last()
+            .map(|r| r.dual)
+            .unwrap_or(f64::NEG_INFINITY)
+    }
+
+    pub fn best_dual(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.dual)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn rounds_run(&self) -> usize {
+        self.records.last().map(|r| r.round + 1).unwrap_or(0)
+    }
+
+    /// First record index where gap ≤ tol, with its simulated time and
+    /// communicated-vector count. None if never reached.
+    pub fn time_to_gap(&self, tol: f64) -> Option<(usize, f64, usize)> {
+        self.records
+            .iter()
+            .find(|r| r.gap <= tol)
+            .map(|r| (r.round, r.sim_time_s, r.comm_vectors))
+    }
+
+    /// First simulated time where the dual suboptimality D(α*)−D(α) ≤ tol,
+    /// given an externally estimated optimum (Fig. 2's y-axis needs this).
+    pub fn time_to_dual_subopt(&self, d_star: f64, tol: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| d_star - r.dual <= tol)
+            .map(|r| r.sim_time_s)
+    }
+
+    pub fn diverged(&self) -> bool {
+        self.stop == StopReason::Diverged
+    }
+
+    /// CSV rows: round,comm_vectors,sim_time_s,compute_s,primal,dual,gap.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("round,comm_vectors,sim_time_s,compute_s,primal,dual,gap\n");
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{},{:.6},{:.6},{:.10},{:.10},{:.10}\n",
+                r.round, r.comm_vectors, r.sim_time_s, r.compute_s, r.primal, r.dual, r.gap
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("label", jstr(&self.label)),
+            (
+                "stop",
+                jstr(match self.stop {
+                    StopReason::GapReached => "gap_reached",
+                    StopReason::MaxRounds => "max_rounds",
+                    StopReason::Diverged => "diverged",
+                    StopReason::DualStalled => "dual_stalled",
+                }),
+            ),
+            (
+                "records",
+                jarr(
+                    self.records
+                        .iter()
+                        .map(|r| {
+                            jobj(vec![
+                                ("round", jnum(r.round as f64)),
+                                ("comm_vectors", jnum(r.comm_vectors as f64)),
+                                ("sim_time_s", jnum(r.sim_time_s)),
+                                ("compute_s", jnum(r.compute_s)),
+                                ("primal", jnum(r.primal)),
+                                ("dual", jnum(r.dual)),
+                                ("gap", jnum(r.gap)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, gap: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            comm_vectors: round * 4,
+            sim_time_s: round as f64 * 0.1,
+            compute_s: round as f64 * 0.05,
+            primal: 1.0,
+            dual: 1.0 - gap,
+            gap,
+        }
+    }
+
+    #[test]
+    fn time_to_gap_finds_first_crossing() {
+        let mut h = History::new("t");
+        h.push(rec(0, 0.5));
+        h.push(rec(1, 0.05));
+        h.push(rec(2, 0.01));
+        let (round, t, vecs) = h.time_to_gap(0.1).unwrap();
+        assert_eq!(round, 1);
+        assert!((t - 0.1).abs() < 1e-12);
+        assert_eq!(vecs, 4);
+        assert!(h.time_to_gap(1e-9).is_none());
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut h = History::new("t");
+        h.push(rec(0, 0.5));
+        let csv = h.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("round,"));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut h = History::new("series");
+        h.push(rec(0, 0.5));
+        h.stop = StopReason::GapReached;
+        let j = h.to_json();
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("label").unwrap().as_str(), Some("series"));
+        assert_eq!(parsed.get("stop").unwrap().as_str(), Some("gap_reached"));
+        assert_eq!(parsed.get("records").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn dual_suboptimality_lookup() {
+        let mut h = History::new("t");
+        h.push(rec(0, 0.5));
+        h.push(rec(1, 0.05));
+        // d_star = 1.0 (gap vs dual=1-gap): subopt ≤ 0.1 first at round 1
+        let t = h.time_to_dual_subopt(1.0, 0.1).unwrap();
+        assert!((t - 0.1).abs() < 1e-12);
+    }
+}

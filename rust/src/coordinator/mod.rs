@@ -1,0 +1,380 @@
+//! The CoCoA+ framework — Algorithm 1 of the paper.
+//!
+//! Per outer round t:
+//!   1. broadcast the shared primal vector w to all K workers;
+//!   2. each worker k computes a Θ-approximate solution Δα_[k] of its
+//!      local subproblem G_k^{σ'} (any [`LocalSolver`]);
+//!   3. each worker applies α_[k] ← α_[k] + γ·Δα_[k] locally;
+//!   4. the leader reduces w ← w + γ·Σ_k Δw_k, Δw_k = A Δα_[k]/(λn).
+//!
+//! γ = 1/K + σ' = 1 recovers original CoCoA (Remark 12); γ = 1 + σ' = K is
+//! the paper's CoCoA+ "adding" regime with K-independent rates
+//! (Corollaries 9/11). The trainer maintains the exact invariant
+//! w = Aα/(λn) across rounds (checked in debug builds and by tests) and
+//! evaluates primal-dual certificates on a configurable cadence.
+
+pub mod checkpoint;
+pub mod comm;
+pub mod config;
+pub mod history;
+pub mod worker;
+
+pub use config::{Aggregation, CocoaConfig, SolverSpec};
+pub use history::{History, RoundRecord, StopReason};
+
+use crate::data::Partition;
+use crate::linalg::dense;
+use crate::objective::Problem;
+use crate::solver::{
+    cyclic_cd::CyclicCdSolver, jacobi::JacobiSolver, sdca::SdcaSolver, LocalSolver,
+};
+use crate::subproblem::{LocalBlock, SubproblemSpec};
+use comm::CommStats;
+use worker::Worker;
+
+/// Build a solver instance from a [`SolverSpec`] for a worker with n_k
+/// local points.
+pub fn make_solver(spec: &SolverSpec, n_local: usize, seed: u64) -> Box<dyn LocalSolver> {
+    match *spec {
+        SolverSpec::Sdca { h } => Box::new(SdcaSolver::new(h, seed)),
+        SolverSpec::SdcaEpochs { epochs } => {
+            Box::new(SdcaSolver::with_epochs(epochs, n_local, seed))
+        }
+        SolverSpec::Cyclic { epochs, shuffle } => {
+            Box::new(CyclicCdSolver::new(epochs, shuffle, seed))
+        }
+        SolverSpec::Jacobi { sweeps, beta } => Box::new(JacobiSolver::new(sweeps, beta)),
+    }
+}
+
+/// The distributed trainer (leader + K workers).
+pub struct Trainer {
+    pub cfg: CocoaConfig,
+    pub problem: Problem,
+    pub partition: Partition,
+    pub workers: Vec<Worker>,
+    /// Global dual iterate α ∈ R^n.
+    pub alpha: Vec<f64>,
+    /// Shared primal vector w = Aα/(λn) ∈ R^d.
+    pub w: Vec<f64>,
+    spec: SubproblemSpec,
+    comm_stats: CommStats,
+}
+
+impl Trainer {
+    /// Build with solvers constructed from `cfg.solver`.
+    pub fn new(problem: Problem, partition: Partition, cfg: CocoaConfig) -> Trainer {
+        let solvers: Vec<Box<dyn LocalSolver>> = partition
+            .parts
+            .iter()
+            .enumerate()
+            .map(|(k, rows)| {
+                make_solver(
+                    &cfg.solver,
+                    rows.len(),
+                    Worker::round_seed(cfg.seed, 0, k),
+                )
+            })
+            .collect();
+        Trainer::with_solvers(problem, partition, cfg, solvers)
+    }
+
+    /// Build with caller-supplied local solvers (e.g. the PJRT-backed one).
+    pub fn with_solvers(
+        problem: Problem,
+        partition: Partition,
+        cfg: CocoaConfig,
+        solvers: Vec<Box<dyn LocalSolver>>,
+    ) -> Trainer {
+        cfg.validate().expect("invalid CocoaConfig");
+        assert_eq!(partition.k(), cfg.k, "partition K != config K");
+        assert_eq!(partition.n, problem.n(), "partition n != problem n");
+        assert_eq!(solvers.len(), cfg.k, "need one solver per worker");
+        assert!(
+            partition.is_exact_cover(),
+            "partition must exactly cover [n]"
+        );
+        let blocks = LocalBlock::split(&problem.data, &partition);
+        let workers: Vec<Worker> = blocks
+            .into_iter()
+            .zip(solvers)
+            .enumerate()
+            .map(|(k, (block, solver))| Worker::new(k, block, solver))
+            .collect();
+        let spec = SubproblemSpec {
+            loss: cfg.loss,
+            lambda: cfg.lambda,
+            n_global: problem.n(),
+            sigma_prime: cfg.effective_sigma_prime(),
+            k: cfg.k,
+        };
+        let n = problem.n();
+        let d = problem.d();
+        Trainer {
+            cfg,
+            problem,
+            partition,
+            workers,
+            alpha: vec![0.0; n],
+            w: vec![0.0; d],
+            spec,
+            comm_stats: CommStats::default(),
+        }
+    }
+
+    pub fn spec(&self) -> &SubproblemSpec {
+        &self.spec
+    }
+
+    pub fn comm_stats(&self) -> &CommStats {
+        &self.comm_stats
+    }
+
+    /// One synchronous outer round. Returns the measured max-worker compute
+    /// seconds (the quantity that gates a synchronous cluster round).
+    pub fn round(&mut self) -> f64 {
+        let gamma = self.cfg.gamma();
+        let w_snapshot = &self.w;
+        let spec = &self.spec;
+
+        // --- fan out: local solves ------------------------------------
+        let results: Vec<worker::WorkerResult> = if self.cfg.parallel {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .workers
+                    .iter_mut()
+                    .map(|wk| scope.spawn(move || wk.round(w_snapshot, spec)))
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+            })
+        } else {
+            self.workers
+                .iter_mut()
+                .map(|wk| wk.round(w_snapshot, spec))
+                .collect()
+        };
+
+        let max_compute = results
+            .iter()
+            .map(|r| r.compute_s)
+            .fold(0.0f64, f64::max);
+
+        // --- reduce (Eq. 14) -------------------------------------------
+        for res in &results {
+            let wk = &mut self.workers[res.id];
+            wk.apply(gamma, &res.update.delta_alpha);
+            // scatter to the global dual vector
+            for (li, &gi) in wk.block.global_idx.iter().enumerate() {
+                self.alpha[gi] += gamma * res.update.delta_alpha[li];
+            }
+            dense::axpy(gamma, &res.update.delta_w, &mut self.w);
+        }
+        self.comm_stats
+            .record_round(&self.cfg.comm, self.problem.d(), self.cfg.k);
+        max_compute
+    }
+
+    /// Recompute w from α and report the max deviation from the maintained
+    /// w (the coordinator's central invariant; ~0 up to float error).
+    pub fn primal_consistency_error(&self) -> f64 {
+        let mut w_ref = vec![0.0; self.problem.d()];
+        self.problem.primal_from_dual(&self.alpha, &mut w_ref);
+        w_ref
+            .iter()
+            .zip(&self.w)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max)
+    }
+
+    /// Run until the gap tolerance, divergence, or the round budget.
+    pub fn run(&mut self) -> History {
+        let label = format!(
+            "{}(K={},γ={},σ'={},{})",
+            if self.cfg.gamma() >= 1.0 { "cocoa+" } else { "cocoa" },
+            self.cfg.k,
+            self.cfg.gamma(),
+            self.spec.sigma_prime,
+            self.workers
+                .first()
+                .map(|w| w.solver.name())
+                .unwrap_or_default(),
+        );
+        let mut hist = History::new(&label);
+        let mut cum_compute = 0.0f64;
+        let mut cum_sim = 0.0f64;
+
+        for t in 0..self.cfg.max_rounds {
+            let max_compute = self.round();
+            cum_compute += max_compute;
+            cum_sim += max_compute + self.cfg.comm.round_time(self.problem.d());
+
+            if t % self.cfg.gap_every == 0 || t + 1 == self.cfg.max_rounds {
+                let certs = self.problem.certificates(&self.alpha, &self.w);
+                hist.push(RoundRecord {
+                    round: t,
+                    comm_vectors: self.comm_stats.vectors,
+                    sim_time_s: cum_sim,
+                    compute_s: cum_compute,
+                    primal: certs.primal,
+                    dual: certs.dual,
+                    gap: certs.gap,
+                });
+                crate::log_debug!(
+                    "round {t}: P={:.6e} D={:.6e} gap={:.6e}",
+                    certs.primal,
+                    certs.dual,
+                    certs.gap
+                );
+                if !certs.gap.is_finite() || certs.gap > self.cfg.divergence_gap {
+                    hist.stop = StopReason::Diverged;
+                    crate::log_warn!("{label}: diverged at round {t} (gap={})", certs.gap);
+                    return hist;
+                }
+                if certs.gap <= self.cfg.gap_tol {
+                    hist.stop = StopReason::GapReached;
+                    return hist;
+                }
+            }
+        }
+        hist.stop = StopReason::MaxRounds;
+        hist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::random_balanced;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::loss::Loss;
+
+    fn problem(n: usize, d: usize, lambda: f64, loss: Loss) -> Problem {
+        let data = generate(&SynthConfig::new("t", n, d).seed(31));
+        Problem::new(data, loss, lambda)
+    }
+
+    fn trainer(k: usize, cfg_fn: impl Fn(CocoaConfig) -> CocoaConfig) -> Trainer {
+        let p = problem(80, 10, 0.05, Loss::Hinge);
+        let part = random_balanced(80, k, 5);
+        let cfg = cfg_fn(CocoaConfig::cocoa_plus(
+            k,
+            Loss::Hinge,
+            0.05,
+            SolverSpec::SdcaEpochs { epochs: 1.0 },
+        ))
+        .with_parallel(false);
+        Trainer::new(p, part, cfg)
+    }
+
+    #[test]
+    fn invariant_w_equals_a_alpha() {
+        let mut t = trainer(4, |c| c.with_rounds(5));
+        for _ in 0..5 {
+            t.round();
+        }
+        assert!(
+            t.primal_consistency_error() < 1e-9,
+            "w drifted from Aα/(λn): {}",
+            t.primal_consistency_error()
+        );
+    }
+
+    #[test]
+    fn dual_monotone_under_safe_sigma() {
+        // Lemma 3 + exact coordinate maximization ⇒ D never decreases with
+        // the safe σ' = γK.
+        let mut t = trainer(4, |c| c.with_rounds(15));
+        let mut prev = f64::NEG_INFINITY;
+        for _ in 0..15 {
+            t.round();
+            let d = t.problem.dual_value(&t.alpha, &t.w);
+            assert!(d >= prev - 1e-10, "dual decreased: {d} < {prev}");
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn run_reaches_gap_on_easy_problem() {
+        let mut t = trainer(2, |c| c.with_rounds(300).with_gap_tol(1e-3));
+        let hist = t.run();
+        assert_eq!(hist.stop, StopReason::GapReached, "final gap {}", hist.final_gap());
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let mk = |parallel: bool| {
+            let p = problem(60, 8, 0.05, Loss::Hinge);
+            let part = random_balanced(60, 3, 5);
+            let cfg = CocoaConfig::cocoa_plus(
+                3,
+                Loss::Hinge,
+                0.05,
+                SolverSpec::Sdca { h: 40 },
+            )
+            .with_rounds(6)
+            .with_parallel(parallel);
+            let mut t = Trainer::new(p, part, cfg);
+            t.run();
+            (t.alpha, t.w)
+        };
+        let (a_seq, w_seq) = mk(false);
+        let (a_par, w_par) = mk(true);
+        assert_eq!(a_seq, a_par, "parallel execution changed the trajectory");
+        assert_eq!(w_seq, w_par);
+    }
+
+    #[test]
+    fn averaging_preset_converges_slower_per_round() {
+        // CoCoA (γ=1/K) gains less per round than CoCoA+ (γ=1) at equal
+        // local work — the paper's core claim, in miniature.
+        let gap_after = |plus: bool| {
+            let p = problem(120, 10, 0.01, Loss::Hinge);
+            let part = random_balanced(120, 8, 5);
+            let cfg = if plus {
+                CocoaConfig::cocoa_plus(8, Loss::Hinge, 0.01, SolverSpec::SdcaEpochs { epochs: 1.0 })
+            } else {
+                CocoaConfig::cocoa(8, Loss::Hinge, 0.01, SolverSpec::SdcaEpochs { epochs: 1.0 })
+            }
+            .with_rounds(10)
+            .with_parallel(false);
+            let mut t = Trainer::new(p, part, cfg);
+            t.run().final_gap()
+        };
+        let plus = gap_after(true);
+        let avg = gap_after(false);
+        assert!(
+            plus < avg,
+            "CoCoA+ ({plus}) should beat CoCoA ({avg}) after equal rounds"
+        );
+    }
+
+    #[test]
+    fn unsafe_sigma_prime_can_diverge_or_stall() {
+        // Fig. 3: σ' well below safe (e.g. σ'=1 with γ=1, K=8) breaks the
+        // guarantee. We only assert it is *worse* than safe, since tiny
+        // problems may not blow up spectacularly.
+        let run_with = |sp: f64| {
+            let p = problem(120, 10, 0.001, Loss::Hinge);
+            let part = random_balanced(120, 8, 5);
+            let cfg = CocoaConfig::cocoa_plus(
+                8,
+                Loss::Hinge,
+                0.001,
+                SolverSpec::SdcaEpochs { epochs: 2.0 },
+            )
+            .with_sigma_prime(sp)
+            .with_rounds(25)
+            .with_parallel(false);
+            let mut t = Trainer::new(p, part, cfg);
+            let h = t.run();
+            (h.final_gap(), h.diverged())
+        };
+        let (gap_safe, div_safe) = run_with(8.0);
+        let (gap_unsafe, div_unsafe) = run_with(0.5);
+        assert!(!div_safe);
+        assert!(
+            div_unsafe || gap_unsafe > gap_safe,
+            "unsafe σ' should diverge or trail safe: {gap_unsafe} vs {gap_safe}"
+        );
+    }
+}

@@ -1,0 +1,127 @@
+//! Labeled dataset container used everywhere in the library.
+
+use crate::linalg::CsrMatrix;
+
+/// A binary-classification / regression dataset: CSR feature rows plus one
+/// label per row. For classification, labels are ±1 (paper: binary hinge
+/// SVM); for regression (square loss) labels are real-valued.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: CsrMatrix,
+    pub y: Vec<f64>,
+    /// Precomputed ‖x_i‖² (the SDCA step denominator).
+    pub row_norms_sq: Vec<f64>,
+    /// Human-readable name (used by reports).
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new(name: &str, x: CsrMatrix, y: Vec<f64>) -> Dataset {
+        assert_eq!(x.rows, y.len(), "rows ({}) != labels ({})", x.rows, y.len());
+        let row_norms_sq = x.row_norms_sq();
+        Dataset {
+            x,
+            y,
+            row_norms_sq,
+            name: name.to_string(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols
+    }
+
+    pub fn density(&self) -> f64 {
+        self.x.density()
+    }
+
+    /// Normalize all rows to unit L2 norm (the paper's ‖x_i‖ ≤ 1 setup) and
+    /// refresh the cached norms.
+    pub fn normalize_rows(&mut self) {
+        self.x.normalize_rows();
+        self.row_norms_sq = self.x.row_norms_sq();
+    }
+
+    /// Restrict to a subset of rows (order preserved).
+    pub fn select(&self, rows: &[usize]) -> Dataset {
+        let x = self.x.select_rows(rows);
+        let y = rows.iter().map(|&r| self.y[r]).collect();
+        Dataset::new(&self.name, x, y)
+    }
+
+    /// Max ‖x_i‖² over the dataset (the paper's r_max).
+    pub fn r_max(&self) -> f64 {
+        self.row_norms_sq.iter().fold(0.0f64, |m, &v| m.max(v))
+    }
+
+    /// Fraction of positive labels (classification sanity checks).
+    pub fn positive_fraction(&self) -> f64 {
+        if self.y.is_empty() {
+            return 0.0;
+        }
+        self.y.iter().filter(|&&v| v > 0.0).count() as f64 / self.y.len() as f64
+    }
+
+    /// 0/1 error of a linear classifier w on this dataset.
+    pub fn classification_error(&self, w: &[f64]) -> f64 {
+        if self.n() == 0 {
+            return 0.0;
+        }
+        let mut wrong = 0usize;
+        for i in 0..self.n() {
+            let margin = self.y[i] * self.x.row_dot(i, w);
+            if margin <= 0.0 {
+                wrong += 1;
+            }
+        }
+        wrong as f64 / self.n() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let x = CsrMatrix::from_dense(4, 2, &[1.0, 0.0, 0.0, 1.0, -1.0, 0.0, 0.0, -1.0]);
+        Dataset::new("tiny", x, vec![1.0, 1.0, -1.0, -1.0])
+    }
+
+    #[test]
+    fn basic_stats() {
+        let d = tiny();
+        assert_eq!(d.n(), 4);
+        assert_eq!(d.d(), 2);
+        assert_eq!(d.r_max(), 1.0);
+        assert_eq!(d.positive_fraction(), 0.5);
+    }
+
+    #[test]
+    fn classification_error_perfect_and_flipped() {
+        let d = tiny();
+        // w = (1,1) separates this data perfectly.
+        assert_eq!(d.classification_error(&[1.0, 1.0]), 0.0);
+        assert_eq!(d.classification_error(&[-1.0, -1.0]), 1.0);
+        // zero margin counts as error
+        assert_eq!(d.classification_error(&[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn select_preserves_labels() {
+        let d = tiny();
+        let s = d.select(&[2, 0]);
+        assert_eq!(s.y, vec![-1.0, 1.0]);
+        assert_eq!(s.n(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_labels_panic() {
+        let x = CsrMatrix::from_dense(2, 1, &[1.0, 2.0]);
+        Dataset::new("bad", x, vec![1.0]);
+    }
+}

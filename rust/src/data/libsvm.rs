@@ -1,0 +1,171 @@
+//! LibSVM / SVMlight format parser and writer.
+//!
+//! Format per line: `<label> <index>:<value> <index>:<value> ...` with
+//! 1-based feature indices and optional `# comment` suffixes. This is the
+//! format the paper's datasets (covtype, rcv1, news20, real-sim, epsilon)
+//! ship in, so real corpora drop into every experiment unchanged via
+//! `--data path.svm`.
+
+use crate::data::dataset::Dataset;
+use crate::linalg::CsrMatrix;
+use std::io::Write;
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum LibsvmError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+}
+
+/// Parse LibSVM text. `expected_dim`: pass Some(d) to force the feature
+/// dimension (indices beyond it error); None infers d from the max index.
+pub fn parse_str(text: &str, expected_dim: Option<usize>) -> Result<Dataset, LibsvmError> {
+    let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut labels: Vec<f64> = Vec::new();
+    let mut max_col = 0usize;
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label_tok = parts.next().ok_or_else(|| LibsvmError::Parse {
+            line: lineno + 1,
+            msg: "empty line after comment strip".into(),
+        })?;
+        let label: f64 = label_tok.parse().map_err(|e| LibsvmError::Parse {
+            line: lineno + 1,
+            msg: format!("bad label {label_tok:?}: {e}"),
+        })?;
+        let mut row = Vec::new();
+        for tok in parts {
+            let (idx_s, val_s) = tok.split_once(':').ok_or_else(|| LibsvmError::Parse {
+                line: lineno + 1,
+                msg: format!("expected index:value, got {tok:?}"),
+            })?;
+            let idx: usize = idx_s.parse().map_err(|e| LibsvmError::Parse {
+                line: lineno + 1,
+                msg: format!("bad index {idx_s:?}: {e}"),
+            })?;
+            if idx == 0 {
+                return Err(LibsvmError::Parse {
+                    line: lineno + 1,
+                    msg: "libsvm indices are 1-based; found 0".into(),
+                });
+            }
+            let val: f64 = val_s.parse().map_err(|e| LibsvmError::Parse {
+                line: lineno + 1,
+                msg: format!("bad value {val_s:?}: {e}"),
+            })?;
+            let col = idx - 1;
+            if let Some(d) = expected_dim {
+                if col >= d {
+                    return Err(LibsvmError::Parse {
+                        line: lineno + 1,
+                        msg: format!("index {idx} exceeds declared dimension {d}"),
+                    });
+                }
+            }
+            max_col = max_col.max(col);
+            row.push((col, val));
+        }
+        rows.push(row);
+        labels.push(label);
+    }
+
+    let d = expected_dim.unwrap_or(if rows.is_empty() { 0 } else { max_col + 1 });
+    let x = CsrMatrix::from_rows(d, &rows);
+    Ok(Dataset::new("libsvm", x, labels))
+}
+
+/// Load from a file path.
+pub fn load(path: &Path, expected_dim: Option<usize>) -> Result<Dataset, LibsvmError> {
+    let text = std::fs::read_to_string(path)?;
+    let mut ds = parse_str(&text, expected_dim)?;
+    ds.name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "libsvm".to_string());
+    Ok(ds)
+}
+
+/// Write a dataset in LibSVM format.
+pub fn save(ds: &Dataset, path: &Path) -> Result<(), LibsvmError> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for i in 0..ds.n() {
+        write!(f, "{}", format_num(ds.y[i]))?;
+        let (idx, vals) = ds.x.row(i);
+        for (j, &c) in idx.iter().enumerate() {
+            write!(f, " {}:{}", c as usize + 1, format_num(vals[j]))?;
+        }
+        writeln!(f)?;
+    }
+    Ok(())
+}
+
+fn format_num(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic() {
+        let txt = "+1 1:0.5 3:2\n-1 2:1.5\n";
+        let ds = parse_str(txt, None).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+        assert_eq!(ds.x.row(0).0, &[0, 2]);
+        assert_eq!(ds.x.row(1).1, &[1.5]);
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let txt = "# header\n\n1 1:1 # trailing\n";
+        let ds = parse_str(txt, None).unwrap();
+        assert_eq!(ds.n(), 1);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        assert!(parse_str("1 0:1\n", None).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_tokens() {
+        assert!(parse_str("1 nocolon\n", None).is_err());
+        assert!(parse_str("abc 1:1\n", None).is_err());
+        assert!(parse_str("1 1:xyz\n", None).is_err());
+    }
+
+    #[test]
+    fn dimension_enforcement() {
+        assert!(parse_str("1 5:1\n", Some(3)).is_err());
+        let ds = parse_str("1 2:1\n", Some(10)).unwrap();
+        assert_eq!(ds.d(), 10);
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let dir = std::env::temp_dir().join("cocoa_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.svm");
+        let txt = "1 1:0.25 4:-3\n-1 2:7\n";
+        let ds = parse_str(txt, None).unwrap();
+        save(&ds, &path).unwrap();
+        let back = load(&path, None).unwrap();
+        assert_eq!(back.y, ds.y);
+        assert_eq!(back.x, ds.x);
+        std::fs::remove_file(&path).ok();
+    }
+}

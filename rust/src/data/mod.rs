@@ -1,0 +1,11 @@
+//! Dataset substrate: container, synthetic generators (paper analogues),
+//! LibSVM parsing, and partitioners.
+
+pub mod dataset;
+pub mod libsvm;
+pub mod partition;
+pub mod scale;
+pub mod synth;
+
+pub use dataset::Dataset;
+pub use partition::Partition;

@@ -1,0 +1,192 @@
+//! Data partitioning across the K workers.
+//!
+//! The paper's theory assumes a fixed partition {P_k} of [n] (Section 3);
+//! the constants σ_k — and hence how safe a given σ' is — depend on how the
+//! partition interacts with the data. We provide:
+//!  * `random_balanced`  — the standard shuffled equal split (the paper's
+//!    setup; balanced n_k = n/K up to remainder),
+//!  * `contiguous`       — order-preserving block split (models un-shuffled
+//!    ingestion; often adversarial for correlated data),
+//!  * `by_label`         — pathological split grouping one class per worker
+//!    (used in tests to stress σ'-safety).
+
+use crate::util::rng::Pcg32;
+
+/// A partition of row indices 0..n into K disjoint parts.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub parts: Vec<Vec<usize>>,
+    pub n: usize,
+}
+
+impl Partition {
+    pub fn k(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Part sizes n_k.
+    pub fn sizes(&self) -> Vec<usize> {
+        self.parts.iter().map(|p| p.len()).collect()
+    }
+
+    /// max_k n_k.
+    pub fn max_size(&self) -> usize {
+        self.sizes().into_iter().max().unwrap_or(0)
+    }
+
+    /// True if all parts have equal size (the balanced assumption of
+    /// Corollaries 9/11 and the DisDCA-p equivalence).
+    pub fn is_balanced(&self) -> bool {
+        let s = self.sizes();
+        s.iter().all(|&v| v == s[0])
+    }
+
+    /// Verify the partition is an exact cover of 0..n (used by tests and
+    /// debug assertions in the coordinator).
+    pub fn is_exact_cover(&self) -> bool {
+        let mut seen = vec![false; self.n];
+        let mut count = 0usize;
+        for part in &self.parts {
+            for &i in part {
+                if i >= self.n || seen[i] {
+                    return false;
+                }
+                seen[i] = true;
+                count += 1;
+            }
+        }
+        count == self.n
+    }
+
+    /// Map from row index to owning worker.
+    pub fn owner_of(&self) -> Vec<usize> {
+        let mut owner = vec![usize::MAX; self.n];
+        for (k, part) in self.parts.iter().enumerate() {
+            for &i in part {
+                owner[i] = k;
+            }
+        }
+        owner
+    }
+}
+
+/// Shuffled equal split (sizes differ by at most 1).
+pub fn random_balanced(n: usize, k: usize, seed: u64) -> Partition {
+    assert!(k >= 1 && k <= n, "need 1 <= K ({k}) <= n ({n})");
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Pcg32::new(seed, 23);
+    rng.shuffle(&mut idx);
+    let base = n / k;
+    let extra = n % k;
+    let mut parts = Vec::with_capacity(k);
+    let mut pos = 0;
+    for j in 0..k {
+        let sz = base + usize::from(j < extra);
+        parts.push(idx[pos..pos + sz].to_vec());
+        pos += sz;
+    }
+    Partition { parts, n }
+}
+
+/// Order-preserving contiguous block split.
+pub fn contiguous(n: usize, k: usize) -> Partition {
+    assert!(k >= 1 && k <= n, "need 1 <= K ({k}) <= n ({n})");
+    let base = n / k;
+    let extra = n % k;
+    let mut parts = Vec::with_capacity(k);
+    let mut pos = 0;
+    for j in 0..k {
+        let sz = base + usize::from(j < extra);
+        parts.push((pos..pos + sz).collect());
+        pos += sz;
+    }
+    Partition { parts, n }
+}
+
+/// Group rows by sign of the label, then split each group round-robin so
+/// workers see maximally homogeneous labels. Pathological for averaging.
+pub fn by_label(labels: &[f64], k: usize) -> Partition {
+    let n = labels.len();
+    assert!(k >= 1 && k <= n);
+    let mut pos_rows: Vec<usize> = (0..n).filter(|&i| labels[i] > 0.0).collect();
+    let mut neg_rows: Vec<usize> = (0..n).filter(|&i| labels[i] <= 0.0).collect();
+    let mut ordered = Vec::with_capacity(n);
+    ordered.append(&mut pos_rows);
+    ordered.append(&mut neg_rows);
+    let base = n / k;
+    let extra = n % k;
+    let mut parts = Vec::with_capacity(k);
+    let mut pos = 0;
+    for j in 0..k {
+        let sz = base + usize::from(j < extra);
+        parts.push(ordered[pos..pos + sz].to_vec());
+        pos += sz;
+    }
+    Partition { parts, n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_balanced_is_exact_cover() {
+        let p = random_balanced(103, 8, 5);
+        assert_eq!(p.k(), 8);
+        assert!(p.is_exact_cover());
+        let sizes = p.sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 103);
+        assert!(sizes.iter().all(|&s| s == 12 || s == 13));
+    }
+
+    #[test]
+    fn divisible_split_is_balanced() {
+        let p = random_balanced(64, 8, 1);
+        assert!(p.is_balanced());
+        assert!(p.sizes().iter().all(|&s| s == 8));
+    }
+
+    #[test]
+    fn contiguous_preserves_order() {
+        let p = contiguous(10, 3);
+        assert_eq!(p.parts[0], vec![0, 1, 2, 3]);
+        assert_eq!(p.parts[1], vec![4, 5, 6]);
+        assert_eq!(p.parts[2], vec![7, 8, 9]);
+        assert!(p.is_exact_cover());
+    }
+
+    #[test]
+    fn by_label_groups_classes() {
+        let labels = vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0];
+        let p = by_label(&labels, 2);
+        assert!(p.is_exact_cover());
+        // first worker gets all positives
+        assert!(p.parts[0].iter().all(|&i| labels[i] > 0.0));
+    }
+
+    #[test]
+    fn owner_map_consistent() {
+        let p = random_balanced(20, 4, 9);
+        let owner = p.owner_of();
+        for (k, part) in p.parts.iter().enumerate() {
+            for &i in part {
+                assert_eq!(owner[i], k);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = random_balanced(50, 5, 3);
+        let b = random_balanced(50, 5, 3);
+        assert_eq!(a.parts, b.parts);
+        let c = random_balanced(50, 5, 4);
+        assert_ne!(a.parts, c.parts);
+    }
+
+    #[test]
+    #[should_panic]
+    fn more_workers_than_points_panics() {
+        random_balanced(3, 5, 0);
+    }
+}

@@ -1,0 +1,138 @@
+//! Feature preprocessing and train/test splitting.
+//!
+//! The paper assumes ‖x_i‖ ≤ 1 (Remark 7 and all corollaries build on
+//! it); `Dataset::normalize_rows` handles that. This module adds the rest
+//! of a practical ingestion pipeline: per-feature standardization (for
+//! dense data), max-abs column scaling (sparsity-preserving, the standard
+//! choice for tf-idf-like corpora), and seeded splits.
+
+use crate::data::dataset::Dataset;
+use crate::util::rng::Pcg32;
+
+/// Per-column scaling x_ij ← x_ij / max_i |x_ij| — keeps sparsity, bounds
+/// every feature in [−1, 1]. Columns that are entirely zero are left
+/// untouched. Returns the scale factors.
+pub fn max_abs_scale(data: &mut Dataset) -> Vec<f64> {
+    let d = data.d();
+    let mut maxes = vec![0.0f64; d];
+    for &c in &data.x.indices {
+        let _ = c;
+    }
+    for (j, &c) in data.x.indices.iter().enumerate() {
+        maxes[c as usize] = maxes[c as usize].max(data.x.values[j].abs());
+    }
+    for (j, &c) in data.x.indices.clone().iter().enumerate() {
+        let m = maxes[c as usize];
+        if m > 0.0 {
+            data.x.values[j] /= m;
+        }
+    }
+    data.row_norms_sq = data.x.row_norms_sq();
+    maxes
+}
+
+/// Per-column mean/std (computed over *all* entries including implicit
+/// zeros). Standardizing destroys sparsity, so this densifies — intended
+/// for low-dimensional dense data (covtype-style).
+pub fn standardize(data: &Dataset) -> Dataset {
+    let (n, d) = (data.n(), data.d());
+    assert!(n > 1, "standardize needs n > 1");
+    let dense = data.x.to_dense();
+    let mut mean = vec![0.0f64; d];
+    for i in 0..n {
+        for j in 0..d {
+            mean[j] += dense[i * d + j];
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f64;
+    }
+    let mut var = vec![0.0f64; d];
+    for i in 0..n {
+        for j in 0..d {
+            let c = dense[i * d + j] - mean[j];
+            var[j] += c * c;
+        }
+    }
+    let std: Vec<f64> = var
+        .iter()
+        .map(|v| (v / (n - 1) as f64).sqrt())
+        .collect();
+    let mut out = vec![0.0f64; n * d];
+    for i in 0..n {
+        for j in 0..d {
+            out[i * d + j] = if std[j] > 0.0 {
+                (dense[i * d + j] - mean[j]) / std[j]
+            } else {
+                0.0
+            };
+        }
+    }
+    Dataset::new(
+        &data.name,
+        crate::linalg::CsrMatrix::from_dense(n, d, &out),
+        data.y.clone(),
+    )
+}
+
+/// Seeded shuffled split into (train, test) with `test_fraction` of rows
+/// in the test set.
+pub fn train_test_split(data: &Dataset, test_fraction: f64, seed: u64) -> (Dataset, Dataset) {
+    assert!((0.0..1.0).contains(&test_fraction));
+    let n = data.n();
+    let mut idx: Vec<usize> = (0..n).collect();
+    Pcg32::new(seed, 41).shuffle(&mut idx);
+    let n_test = ((n as f64) * test_fraction).round() as usize;
+    let (test_idx, train_idx) = idx.split_at(n_test);
+    (data.select(train_idx), data.select(test_idx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+
+    #[test]
+    fn max_abs_bounds_features() {
+        let mut d = generate(&SynthConfig::new("t", 60, 10).density(0.4).seed(1));
+        // un-normalize a bit
+        for v in d.x.values.iter_mut() {
+            *v *= 7.5;
+        }
+        max_abs_scale(&mut d);
+        for &v in &d.x.values {
+            assert!(v.abs() <= 1.0 + 1e-12);
+        }
+        // sparsity preserved
+        assert!(d.density() < 0.6);
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let d = generate(&SynthConfig::new("t", 200, 6).seed(2));
+        let s = standardize(&d);
+        let dense = s.x.to_dense();
+        for j in 0..6 {
+            let mean: f64 = (0..200).map(|i| dense[i * 6 + j]).sum::<f64>() / 200.0;
+            let var: f64 = (0..200)
+                .map(|i| (dense[i * 6 + j] - mean).powi(2))
+                .sum::<f64>()
+                / 199.0;
+            assert!(mean.abs() < 1e-10, "col {j} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-8, "col {j} var {var}");
+        }
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let d = generate(&SynthConfig::new("t", 100, 5).seed(3));
+        let (train, test) = train_test_split(&d, 0.25, 9);
+        assert_eq!(train.n(), 75);
+        assert_eq!(test.n(), 25);
+        // deterministic
+        let (train2, _) = train_test_split(&d, 0.25, 9);
+        assert_eq!(train.y, train2.y);
+        let (train3, _) = train_test_split(&d, 0.25, 10);
+        assert_ne!(train.y, train3.y);
+    }
+}

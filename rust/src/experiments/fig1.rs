@@ -1,0 +1,216 @@
+//! Figure 1: duality gap vs #communicated vectors and vs elapsed time,
+//! CoCoA (γ=1/K, σ'=1) against CoCoA+ (γ=1, σ'=γK), on the covtype
+//! analogue (K=4) and the rcv1 analogue (K=8), swept over
+//! λ ∈ {1e-4, 1e-5, 1e-6} and three local-work levels H.
+//!
+//! The paper's H ∈ {1e4, 1e5, 1e6} on n ≈ 5·10⁵ corresponds to roughly
+//! {0.1, 1, 10} local epochs; we sweep the epoch-equivalents so the
+//! compute/communication ratio matches at any --scale. Reproduction
+//! targets: CoCoA+ reaches any fixed gap with fewer communicated vectors
+//! *and* less simulated time in every (λ, H) cell, with the margin growing
+//! for larger λ and smaller H.
+
+use crate::coordinator::{CocoaConfig, SolverSpec, Trainer};
+use crate::data::partition::random_balanced;
+use crate::experiments::ExpContext;
+use crate::loss::Loss;
+use crate::objective::Problem;
+use crate::report::ascii_plot::{render, PlotCfg, Series};
+use crate::report::{self};
+
+struct Cell {
+    dataset: String,
+    k: usize,
+    lambda: f64,
+    epochs: f64,
+    plus_vectors: Option<f64>,
+    avg_vectors: Option<f64>,
+    plus_time: Option<f64>,
+    avg_time: Option<f64>,
+}
+
+pub fn run(ctx: &ExpContext) -> String {
+    let mut out = String::new();
+    // λ is quoted at the paper's full dataset size; the scale-invariant
+    // quantity is λ·n, so at --scale s the equivalent λ is λ_paper·s.
+    // (Strong convexity of the *problem* is λn-determined.)
+    let lam_scale = ctx.scale.max(1.0);
+    let (lambdas, epoch_grid, rounds): (Vec<f64>, Vec<f64>, usize) = if ctx.quick {
+        (vec![1e-4 * lam_scale], vec![1.0], 60)
+    } else {
+        (
+            vec![1e-4 * lam_scale, 1e-5 * lam_scale, 1e-6 * lam_scale],
+            vec![0.1, 1.0, 10.0],
+            200,
+        )
+    };
+    let datasets: Vec<(&str, usize)> = if ctx.quick {
+        vec![("covtype", 4)]
+    } else {
+        vec![("covtype", 4), ("rcv1", 8)]
+    };
+
+    // Gap level whose first crossing we compare (relative to the gap at 0,
+    // which is ≤ 1 for hinge).
+    let target_gap = 1e-2;
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut all_csv: Vec<Vec<f64>> = Vec::new();
+
+    for (ds_name, k) in &datasets {
+        let data = ctx.dataset(ds_name);
+        let n = data.n();
+        for &lambda in &lambdas {
+            for &epochs in &epoch_grid {
+                let mut histories = Vec::new();
+                for plus in [true, false] {
+                    let part = random_balanced(n, *k, ctx.seed);
+                    let problem = Problem::new(data.clone(), Loss::Hinge, lambda);
+                    let solver = SolverSpec::SdcaEpochs { epochs };
+                    let cfg = if plus {
+                        CocoaConfig::cocoa_plus(*k, Loss::Hinge, lambda, solver)
+                    } else {
+                        CocoaConfig::cocoa(*k, Loss::Hinge, lambda, solver)
+                    }
+                    .with_rounds(rounds)
+                    .with_gap_tol(target_gap * 1e-2)
+                    .with_seed(ctx.seed)
+                    .with_parallel(true);
+                    let mut trainer = Trainer::new(problem, part, cfg);
+                    let hist = trainer.run();
+                    // CSV: method, lambda, epochs, round, vectors, time, gap
+                    for r in &hist.records {
+                        all_csv.push(vec![
+                            if plus { 1.0 } else { 0.0 },
+                            lambda,
+                            epochs,
+                            r.round as f64,
+                            r.comm_vectors as f64,
+                            r.sim_time_s,
+                            r.gap,
+                        ]);
+                    }
+                    histories.push((plus, hist));
+                }
+
+                let find = |plus: bool| {
+                    histories
+                        .iter()
+                        .find(|(p, _)| *p == plus)
+                        .and_then(|(_, h)| h.time_to_gap(target_gap))
+                };
+                let plus_hit = find(true);
+                let avg_hit = find(false);
+                cells.push(Cell {
+                    dataset: ds_name.to_string(),
+                    k: *k,
+                    lambda,
+                    epochs,
+                    plus_vectors: plus_hit.map(|(_, _, v)| v as f64),
+                    avg_vectors: avg_hit.map(|(_, _, v)| v as f64),
+                    plus_time: plus_hit.map(|(_, t, _)| t),
+                    avg_time: avg_hit.map(|(_, t, _)| t),
+                });
+
+                // One ASCII chart per cell (gap vs vectors, log-log).
+                let series: Vec<Series> = histories
+                    .iter()
+                    .map(|(plus, h)| {
+                        Series::new(
+                            if *plus { "CoCoA+" } else { "CoCoA" },
+                            h.records.iter().map(|r| r.comm_vectors as f64).collect(),
+                            h.records.iter().map(|r| r.gap).collect(),
+                            if *plus { '+' } else { 'o' },
+                        )
+                    })
+                    .collect();
+                let chart = render(
+                    &format!(
+                        "fig1 {ds_name} K={k} λ={lambda:.0e} H={epochs}·n_k  (gap vs vectors)"
+                    ),
+                    &series,
+                    &PlotCfg::default(),
+                );
+                out.push_str(&chart);
+                out.push('\n');
+            }
+        }
+    }
+
+    // Summary table of first crossings.
+    out.push_str(&format!(
+        "\nfirst crossing of gap ≤ {target_gap:.0e}:\n{:<9} {:>3} {:>8} {:>6} | {:>12} {:>12} | {:>11} {:>11}\n",
+        "dataset", "K", "λ", "H·n_k", "vecs CoCoA+", "vecs CoCoA", "t+ (s)", "t (s)"
+    ));
+    let mut wins = 0usize;
+    let mut decided = 0usize;
+    for c in &cells {
+        let fmt_opt = |v: Option<f64>| match v {
+            Some(x) => format!("{x:.2}"),
+            None => "-".to_string(),
+        };
+        out.push_str(&format!(
+            "{:<9} {:>3} {:>8.0e} {:>6} | {:>12} {:>12} | {:>11} {:>11}\n",
+            c.dataset,
+            c.k,
+            c.lambda,
+            c.epochs,
+            fmt_opt(c.plus_vectors),
+            fmt_opt(c.avg_vectors),
+            fmt_opt(c.plus_time),
+            fmt_opt(c.avg_time),
+        ));
+        match (c.plus_vectors, c.avg_vectors) {
+            (Some(p), Some(a)) => {
+                decided += 1;
+                if p <= a {
+                    wins += 1;
+                }
+            }
+            (Some(_), None) => {
+                decided += 1;
+                wins += 1; // CoCoA never got there at all
+            }
+            _ => {}
+        }
+    }
+    out.push_str(&format!(
+        "CoCoA+ first-or-only to target in {wins}/{decided} decided cells \
+         (paper: all cells)\n"
+    ));
+
+    let csv = report::csv::to_csv(
+        &["is_plus", "lambda", "epochs", "round", "vectors", "sim_time_s", "gap"],
+        &all_csv,
+    );
+    if let Ok(p) = report::write_result("fig1.csv", &csv) {
+        out.push_str(&format!("[csv: {}]\n", p.display()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_fig1_cocoa_plus_wins() {
+        let ctx = ExpContext {
+            scale: 3000.0,
+            quick: true,
+            seed: 3,
+        };
+        let out = run(&ctx);
+        assert!(out.contains("first crossing"));
+        // the decided-cells summary line must show a strict majority for +
+        let line = out
+            .lines()
+            .find(|l| l.contains("decided cells"))
+            .expect("summary line");
+        // parse "in W/D decided"
+        let frag = line.split("in ").nth(1).unwrap();
+        let mut it = frag.split(['/', ' ']);
+        let w: usize = it.next().unwrap().parse().unwrap();
+        let d: usize = it.next().unwrap().parse().unwrap();
+        assert!(d > 0 && w * 2 >= d, "CoCoA+ won only {w}/{d}:\n{out}");
+    }
+}

@@ -1,0 +1,164 @@
+//! Corollaries 9/11 rate check (a beyond-the-figures extension): measure
+//! the number of outer rounds to a fixed dual suboptimality as K grows,
+//! for averaging (γ=1/K, σ'=1) vs adding (γ=1, σ'=K), on both a
+//! non-smooth (hinge, Cor. 9) and a smooth (smoothed hinge, Cor. 11) loss.
+//!
+//! Theory predicts T ∝ K for averaging and T independent of K for adding
+//! (worst case). Measured rounds are reported next to the prediction, and
+//! the measured local quality Θ (solver/theta.rs) is shown so the
+//! constants can be sanity-checked against the bounds.
+
+use crate::baselines::serial_sdca;
+use crate::coordinator::{CocoaConfig, SolverSpec, Trainer};
+use crate::data::partition::random_balanced;
+use crate::experiments::ExpContext;
+use crate::loss::Loss;
+use crate::objective::Problem;
+use crate::report;
+use crate::solver::theta::estimate_theta;
+use crate::solver::LocalSolveCtx;
+use crate::subproblem::{LocalBlock, SubproblemSpec};
+
+pub fn run(ctx: &ExpContext) -> String {
+    let mut out = String::new();
+    let ks: Vec<usize> = if ctx.quick {
+        vec![2, 8]
+    } else {
+        vec![2, 4, 8, 16]
+    };
+    let lambda = 1e-2;
+    let eps_d = 1e-3;
+    let max_rounds = if ctx.quick { 150 } else { 600 };
+    let losses = [
+        ("hinge (Cor. 9, non-smooth)", Loss::Hinge),
+        (
+            "smoothed hinge (Cor. 11, smooth)",
+            Loss::SmoothedHinge { mu: 0.5 },
+        ),
+    ];
+    let data = ctx.dataset("covtype");
+    let n = data.n();
+    let mut csv_rows: Vec<Vec<f64>> = Vec::new();
+
+    for (label, loss) in losses {
+        let problem = Problem::new(data.clone(), loss, lambda);
+        let d_star = serial_sdca::estimate_d_star(&problem, ctx.seed);
+        out.push_str(&format!("\n{label}: n={n} λ={lambda} ε_D={eps_d} D*≈{d_star:.6}\n"));
+        out.push_str(&format!(
+            "{:>4} {:>14} {:>14} {:>8} {:>8}\n",
+            "K", "rounds (add)", "rounds (avg)", "Θ(add)", "Θ(avg)"
+        ));
+        for &k in &ks {
+            let rounds_for = |plus: bool| -> Option<usize> {
+                let part = random_balanced(n, k, ctx.seed);
+                let problem = Problem::new(data.clone(), loss, lambda);
+                let solver = SolverSpec::SdcaEpochs { epochs: 1.0 };
+                let cfg = if plus {
+                    CocoaConfig::cocoa_plus(k, loss, lambda, solver)
+                } else {
+                    CocoaConfig::cocoa(k, loss, lambda, solver)
+                }
+                .with_rounds(max_rounds)
+                .with_seed(ctx.seed)
+                .with_parallel(true);
+                let mut trainer = Trainer::new(problem, part, cfg);
+                for t in 0..max_rounds {
+                    trainer.round();
+                    let dual = trainer.problem.dual_value(&trainer.alpha, &trainer.w);
+                    if d_star - dual <= eps_d {
+                        return Some(t + 1);
+                    }
+                }
+                None
+            };
+            // Θ of a 1-epoch SDCA pass on the first block of each regime.
+            let theta_for = |sigma_prime: f64| -> f64 {
+                let part = random_balanced(n, k, ctx.seed);
+                let block = LocalBlock::from_partition(&data, &part.parts[0]);
+                let spec = SubproblemSpec {
+                    loss,
+                    lambda,
+                    n_global: n,
+                    sigma_prime,
+                    k,
+                };
+                let w = vec![0.0; data.d()];
+                let alpha = vec![0.0; block.n_local()];
+                let ctx2 = LocalSolveCtx {
+                    block: &block,
+                    spec: &spec,
+                    w: &w,
+                    alpha_local: &alpha,
+                };
+                let mut s =
+                    crate::solver::sdca::SdcaSolver::new(block.n_local(), ctx.seed);
+                estimate_theta(&mut s, &ctx2, 40, ctx.seed).theta
+            };
+            let r_add = rounds_for(true);
+            let r_avg = rounds_for(false);
+            let th_add = theta_for(k as f64);
+            let th_avg = theta_for(1.0);
+            let fmt = |v: Option<usize>| v.map(|r| r.to_string()).unwrap_or("-".into());
+            out.push_str(&format!(
+                "{:>4} {:>14} {:>14} {:>8.3} {:>8.3}\n",
+                k,
+                fmt(r_add),
+                fmt(r_avg),
+                th_add,
+                th_avg
+            ));
+            csv_rows.push(vec![
+                if loss.smoothness_mu().is_some() { 1.0 } else { 0.0 },
+                k as f64,
+                r_add.map(|r| r as f64).unwrap_or(f64::NAN),
+                r_avg.map(|r| r as f64).unwrap_or(f64::NAN),
+                th_add,
+                th_avg,
+            ]);
+        }
+        // Shape check: adding's rounds should grow much slower than K.
+        let rows: Vec<&Vec<f64>> = csv_rows
+            .iter()
+            .filter(|r| {
+                (r[0] > 0.5) == loss.smoothness_mu().is_some() && r[2].is_finite() && r[3].is_finite()
+            })
+            .collect();
+        if rows.len() >= 2 {
+            let first = rows[0];
+            let last = rows[rows.len() - 1];
+            let k_growth = last[1] / first[1];
+            let add_growth = last[2] / first[2];
+            let avg_growth = last[3] / first[3];
+            out.push_str(&format!(
+                "K grew {k_growth:.0}×: rounds(add) grew {add_growth:.2}×, rounds(avg) grew {avg_growth:.2}× \
+                 (theory: ~1× vs ~{k_growth:.0}×)\n"
+            ));
+        }
+    }
+
+    let csv = report::csv::to_csv(
+        &["is_smooth", "k", "rounds_add", "rounds_avg", "theta_add", "theta_avg"],
+        &csv_rows,
+    );
+    if let Ok(p) = report::write_result("rates.csv", &csv) {
+        out.push_str(&format!("[csv: {}]\n", p.display()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_rates_runs() {
+        let ctx = ExpContext {
+            scale: 4000.0,
+            quick: true,
+            seed: 9,
+        };
+        let out = run(&ctx);
+        assert!(out.contains("Cor. 9"));
+        assert!(out.contains("rounds (add)"));
+    }
+}

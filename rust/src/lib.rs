@@ -1,0 +1,55 @@
+//! # cocoa — Adding vs. Averaging in Distributed Primal-Dual Optimization
+//!
+//! A production-grade reproduction of **CoCoA+** (Ma, Smith, Jaggi, Jordan,
+//! Richtárik, Takáč — ICML 2015): a communication-efficient framework for
+//! distributed regularized empirical-loss minimization in which per-round
+//! local updates are **added** (γ = 1, σ' = K) rather than conservatively
+//! **averaged** (γ = 1/K, σ' = 1 — the original CoCoA), yielding outer
+//! iteration counts independent of the number of machines K.
+//!
+//! Architecture (three layers, Python never on the request path):
+//! * **L3** — this crate: the coordinator (Algorithm 1), local solvers,
+//!   baselines, datasets, experiment harness;
+//! * **L2** — `python/compile/model.py`: the local SDCA epoch and
+//!   duality-gap graphs in JAX, AOT-lowered to HLO text;
+//! * **L1** — `python/compile/kernels/`: Pallas kernels for the SDCA block
+//!   sweep and the tiled matvecs, called from L2.
+//! The [`runtime`] module loads the AOT artifacts via PJRT so the same
+//! [`solver::LocalSolver`] interface runs native-Rust or XLA compute.
+//!
+//! Quickstart:
+//! ```no_run
+//! use cocoa::prelude::*;
+//! let data = cocoa::data::synth::generate(
+//!     &cocoa::data::synth::SynthConfig::new("demo", 1000, 50).seed(1));
+//! let part = cocoa::data::partition::random_balanced(1000, 8, 1);
+//! let problem = Problem::new(data, Loss::Hinge, 1e-3);
+//! let cfg = CocoaConfig::cocoa_plus(8, Loss::Hinge, 1e-3,
+//!     SolverSpec::SdcaEpochs { epochs: 1.0 });
+//! let mut trainer = Trainer::new(problem, part, cfg);
+//! let history = trainer.run();
+//! println!("final duality gap: {:.3e}", history.final_gap());
+//! ```
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod loss;
+pub mod objective;
+pub mod report;
+pub mod runtime;
+pub mod solver;
+pub mod subproblem;
+pub mod testing;
+pub mod util;
+
+/// The most common imports in one place.
+pub mod prelude {
+    pub use crate::coordinator::{Aggregation, CocoaConfig, History, SolverSpec, Trainer};
+    pub use crate::data::{Dataset, Partition};
+    pub use crate::loss::Loss;
+    pub use crate::objective::Problem;
+    pub use crate::solver::LocalSolver;
+}

@@ -1,0 +1,148 @@
+//! Dense vector operations on `&[f64]` / `Vec<f64>`.
+//!
+//! These are the primitives on the coordinator's hot path: the shared
+//! primal vector `w ∈ R^d` and the per-worker updates `Δw_k` are dense even
+//! when the data matrix is sparse. Everything is written allocation-free
+//! over slices so callers control buffer reuse.
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: gives the autovectorizer independent
+    // chains and keeps numerics stable enough for our use.
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut tail = 0.0;
+    for i in chunks * 4..n {
+        tail += a[i] * b[i];
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * *xi;
+    }
+}
+
+/// `x *= alpha`.
+#[inline]
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn norm_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm(x: &[f64]) -> f64 {
+    norm_sq(x).sqrt()
+}
+
+/// Elementwise `out = a + b`.
+pub fn add(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] + b[i];
+    }
+}
+
+/// Elementwise `out = a - b`.
+pub fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// Set all entries to zero (buffer reuse helper).
+#[inline]
+pub fn zero(x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi = 0.0;
+    }
+}
+
+/// Max |x_i|.
+pub fn max_abs(x: &[f64]) -> f64 {
+    x.iter().fold(0.0f64, |m, &v| m.max(v.abs()))
+}
+
+/// L2 distance between two vectors.
+pub fn distance(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f64> = (0..13).map(|i| i as f64 * 0.5).collect();
+        let b: Vec<f64> = (0..13).map(|i| (13 - i) as f64).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-12);
+    }
+
+    #[test]
+    fn axpy_scale_norm() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![1.0, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![3.0, 5.0, 7.0]);
+        scale(0.5, &mut y);
+        assert_eq!(y, vec![1.5, 2.5, 3.5]);
+        assert!((norm_sq(&x) - 14.0).abs() < 1e-12);
+        assert!((norm(&x) - 14.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_sub_distance() {
+        let a = vec![1.0, 2.0];
+        let b = vec![3.0, 5.0];
+        let mut out = vec![0.0; 2];
+        add(&a, &b, &mut out);
+        assert_eq!(out, vec![4.0, 7.0]);
+        sub(&b, &a, &mut out);
+        assert_eq!(out, vec![2.0, 3.0]);
+        assert!((distance(&a, &b) - 13.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_vectors() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(norm(&[]), 0.0);
+        assert_eq!(max_abs(&[]), 0.0);
+    }
+
+    #[test]
+    fn max_abs_finds_negative_peak() {
+        assert_eq!(max_abs(&[1.0, -5.0, 3.0]), 5.0);
+    }
+}

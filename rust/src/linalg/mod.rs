@@ -1,0 +1,9 @@
+//! Linear-algebra substrate: dense vector kernels, CSR sparse matrices,
+//! and power iteration for the paper's partition constants σ_k.
+
+pub mod dense;
+pub mod power_iter;
+pub mod sparse;
+
+pub use power_iter::{sigma_k, spectral_norm_sq};
+pub use sparse::CsrMatrix;

@@ -1,0 +1,137 @@
+//! Power iteration for the partition difficulty constants of the paper.
+//!
+//! `σ_k := max_α ‖A α_[k]‖² / ‖α_[k]‖²` (Eq. 19) is the largest eigenvalue
+//! of `A_k A_kᵀ` (equivalently of the Gram matrix `A_kᵀ A_k`), where `A_k`
+//! holds worker k's datapoints as columns — i.e. the squared spectral norm
+//! of the local data block. Table 1 reports `(n²/K)/σ` with
+//! `σ = Σ_k σ_k n_k` (Eq. 18); we regenerate it with this module.
+//!
+//! We iterate `v ← normalize(Aᵀ(A v))` on the *feature-space* operator
+//! `A_k A_kᵀ ∈ R^{d×d}` applied implicitly through the CSR rows, so cost per
+//! sweep is O(nnz) and no d×d matrix is ever formed.
+
+use crate::linalg::{dense, sparse::CsrMatrix};
+use crate::util::rng::Pcg32;
+
+/// Result of a spectral norm estimate.
+#[derive(Clone, Copy, Debug)]
+pub struct SpectralEstimate {
+    /// λ_max(AᵀA) = ‖A‖₂² (the paper's σ_k for a partition block).
+    pub sigma: f64,
+    /// Iterations actually used.
+    pub iters: usize,
+    /// Relative change of the eigenvalue estimate at the last step.
+    pub rel_residual: f64,
+}
+
+/// Estimate `‖X‖₂²` for a CSR block `X` (rows = datapoints) by power
+/// iteration on `XᵀX` (d×d, applied implicitly).
+pub fn spectral_norm_sq(x: &CsrMatrix, max_iters: usize, tol: f64, seed: u64) -> SpectralEstimate {
+    if x.rows == 0 || x.nnz() == 0 {
+        return SpectralEstimate {
+            sigma: 0.0,
+            iters: 0,
+            rel_residual: 0.0,
+        };
+    }
+    let d = x.cols;
+    let mut rng = Pcg32::seeded(seed);
+    let mut v: Vec<f64> = (0..d).map(|_| rng.gaussian()).collect();
+    let nrm = dense::norm(&v);
+    dense::scale(1.0 / nrm, &mut v);
+
+    let mut xv = vec![0.0; x.rows];
+    let mut xtxv = vec![0.0; d];
+    let mut lambda_prev = 0.0f64;
+    let mut rel = f64::INFINITY;
+    let mut used = 0;
+    for it in 0..max_iters {
+        used = it + 1;
+        x.matvec(&v, &mut xv);
+        x.matvec_t(&xv, &mut xtxv);
+        // Rayleigh quotient with unit v: λ = vᵀ XᵀX v = ‖Xv‖².
+        let lambda = dense::norm_sq(&xv);
+        let nrm = dense::norm(&xtxv);
+        if nrm == 0.0 {
+            // v in the null space — restart from a fresh random vector.
+            v = (0..d).map(|_| rng.gaussian()).collect();
+            let n2 = dense::norm(&v);
+            dense::scale(1.0 / n2, &mut v);
+            continue;
+        }
+        for i in 0..d {
+            v[i] = xtxv[i] / nrm;
+        }
+        rel = if lambda > 0.0 {
+            ((lambda - lambda_prev) / lambda).abs()
+        } else {
+            0.0
+        };
+        lambda_prev = lambda;
+        if rel < tol && it > 2 {
+            break;
+        }
+    }
+    SpectralEstimate {
+        sigma: lambda_prev,
+        iters: used,
+        rel_residual: rel,
+    }
+}
+
+/// Convenience wrapper with library defaults.
+pub fn sigma_k(block: &CsrMatrix, seed: u64) -> f64 {
+    spectral_norm_sq(block, 300, 1e-9, seed).sigma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_2x2() {
+        // X = [[3, 0], [0, 1]] → XᵀX has eigenvalues 9 and 1.
+        let x = CsrMatrix::from_dense(2, 2, &[3.0, 0.0, 0.0, 1.0]);
+        let est = spectral_norm_sq(&x, 200, 1e-12, 1);
+        assert!((est.sigma - 9.0).abs() < 1e-6, "{}", est.sigma);
+    }
+
+    #[test]
+    fn rank_one_matrix() {
+        // X = u vᵀ with u=[1,2], v=[1,1,1]: ‖X‖₂² = ‖u‖²‖v‖² = 5*3 = 15.
+        let x = CsrMatrix::from_dense(2, 3, &[1.0, 1.0, 1.0, 2.0, 2.0, 2.0]);
+        let est = spectral_norm_sq(&x, 200, 1e-12, 2);
+        assert!((est.sigma - 15.0).abs() < 1e-6, "{}", est.sigma);
+    }
+
+    #[test]
+    fn sigma_bounded_by_frobenius_and_row_norm() {
+        // For any X: max_i ‖x_i‖² ≤ ‖X‖₂² ≤ ‖X‖_F².
+        let mut rng = Pcg32::seeded(3);
+        let data: Vec<f64> = (0..20 * 6).map(|_| rng.gaussian()).collect();
+        let x = CsrMatrix::from_dense(20, 6, &data);
+        let sig = sigma_k(&x, 4);
+        let fro: f64 = x.values.iter().map(|v| v * v).sum();
+        let max_row = x.row_norms_sq().into_iter().fold(0.0f64, f64::max);
+        assert!(sig <= fro + 1e-9, "sigma {sig} > fro {fro}");
+        assert!(sig >= max_row - 1e-9, "sigma {sig} < max row {max_row}");
+    }
+
+    #[test]
+    fn empty_block() {
+        let x = CsrMatrix::from_rows(4, &[]);
+        assert_eq!(sigma_k(&x, 0), 0.0);
+    }
+
+    #[test]
+    fn normalized_rows_sigma_le_rows() {
+        // Remark 7: if ‖x_i‖ ≤ 1 then σ_k ≤ n_k.
+        let mut rng = Pcg32::seeded(5);
+        let data: Vec<f64> = (0..30 * 8).map(|_| rng.gaussian()).collect();
+        let mut x = CsrMatrix::from_dense(30, 8, &data);
+        x.normalize_rows();
+        let sig = sigma_k(&x, 6);
+        assert!(sig <= 30.0 + 1e-9, "{sig}");
+        assert!(sig >= 1.0 - 1e-6); // at least one unit row
+    }
+}

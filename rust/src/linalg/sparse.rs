@@ -1,0 +1,344 @@
+//! Compressed sparse row (CSR) matrix, the storage for the data matrix
+//! `A = [x_1 … x_n]` (rows are datapoints, `n × d`).
+//!
+//! The SDCA hot loop needs exactly two sparse primitives per coordinate
+//! step — `row_dot` (x_iᵀv) and `row_axpy` (v += c·x_i) — plus precomputed
+//! row norms `‖x_i‖²`. Everything else (matvec, transpose-matvec, slicing a
+//! partition into its own local matrix) supports the coordinator and the
+//! spectral σ_k computations.
+
+use crate::linalg::dense;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    /// Number of rows (datapoints).
+    pub rows: usize,
+    /// Number of columns (features).
+    pub cols: usize,
+    /// Row offsets, length rows+1.
+    pub indptr: Vec<usize>,
+    /// Column indices, length nnz.
+    pub indices: Vec<u32>,
+    /// Values, length nnz.
+    pub values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from per-row (column, value) lists. Columns within a row may be
+    /// unsorted; duplicates are summed.
+    pub fn from_rows(cols: usize, rows: &[Vec<(usize, f64)>]) -> CsrMatrix {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for row in rows {
+            let mut entries: Vec<(usize, f64)> = row.clone();
+            entries.sort_by_key(|&(c, _)| c);
+            let mut merged: Vec<(usize, f64)> = Vec::with_capacity(entries.len());
+            for (c, v) in entries {
+                assert!(c < cols, "column {c} out of bounds ({cols})");
+                match merged.last_mut() {
+                    Some((lc, lv)) if *lc == c => *lv += v,
+                    _ => merged.push((c, v)),
+                }
+            }
+            for (c, v) in merged {
+                if v != 0.0 {
+                    indices.push(c as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        CsrMatrix {
+            rows: rows.len(),
+            cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Build from a dense row-major matrix (used in tests and the XLA path).
+    pub fn from_dense(rows: usize, cols: usize, data: &[f64]) -> CsrMatrix {
+        assert_eq!(data.len(), rows * cols);
+        let row_lists: Vec<Vec<(usize, f64)>> = (0..rows)
+            .map(|r| {
+                (0..cols)
+                    .filter_map(|c| {
+                        let v = data[r * cols + c];
+                        (v != 0.0).then_some((c, v))
+                    })
+                    .collect()
+            })
+            .collect();
+        CsrMatrix::from_rows(cols, &row_lists)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fraction of nonzero entries.
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+        }
+    }
+
+    /// (indices, values) of row i.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Number of nonzeros in row i.
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    /// x_iᵀ v for dense v.
+    ///
+    /// Hot path of every SDCA step. The `zip` removes the bounds checks on
+    /// the CSR arrays; the gather `v[c]` is checked once against `v.len()`
+    /// via the debug assert + unsafe read (columns are validated against
+    /// `cols` at construction, so `c < cols == v.len()`).
+    #[inline]
+    pub fn row_dot(&self, i: usize, v: &[f64]) -> f64 {
+        debug_assert_eq!(v.len(), self.cols);
+        let (idx, vals) = self.row(i);
+        // Fully dense row ⇒ indices are exactly 0..cols (sorted, deduped
+        // at construction): use the contiguous SIMD-friendly dot.
+        if idx.len() == self.cols {
+            return dense::dot(vals, v);
+        }
+        let (mut s0, mut s1) = (0.0, 0.0);
+        let mut it = idx.chunks_exact(2).zip(vals.chunks_exact(2));
+        for (c2, v2) in &mut it {
+            // SAFETY: all indices < self.cols = v.len() (checked on build).
+            unsafe {
+                s0 += v2[0] * *v.get_unchecked(c2[0] as usize);
+                s1 += v2[1] * *v.get_unchecked(c2[1] as usize);
+            }
+        }
+        if idx.len() % 2 == 1 {
+            let j = idx.len() - 1;
+            unsafe {
+                s0 += vals[j] * *v.get_unchecked(idx[j] as usize);
+            }
+        }
+        s0 + s1
+    }
+
+    /// v += c * x_i for dense v (same safety argument as `row_dot`).
+    #[inline]
+    pub fn row_axpy(&self, i: usize, c: f64, v: &mut [f64]) {
+        debug_assert_eq!(v.len(), self.cols);
+        let (idx, vals) = self.row(i);
+        if idx.len() == self.cols {
+            return dense::axpy(c, vals, v);
+        }
+        for (&col, &val) in idx.iter().zip(vals.iter()) {
+            // SAFETY: all indices < self.cols = v.len() (checked on build).
+            unsafe {
+                *v.get_unchecked_mut(col as usize) += c * val;
+            }
+        }
+    }
+
+    /// ‖x_i‖² for every row.
+    pub fn row_norms_sq(&self) -> Vec<f64> {
+        (0..self.rows)
+            .map(|i| {
+                let (_, vals) = self.row(i);
+                dense::norm_sq(vals)
+            })
+            .collect()
+    }
+
+    /// out = A v  (matvec over rows; out length = rows).
+    pub fn matvec(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for i in 0..self.rows {
+            out[i] = self.row_dot(i, v);
+        }
+    }
+
+    /// out = Aᵀ u  (transpose matvec; out length = cols).
+    pub fn matvec_t(&self, u: &[f64], out: &mut [f64]) {
+        assert_eq!(u.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        dense::zero(out);
+        for i in 0..self.rows {
+            self.row_axpy(i, u[i], out);
+        }
+    }
+
+    /// Extract the sub-matrix of the given rows (a worker's partition),
+    /// keeping the full column space.
+    pub fn select_rows(&self, row_ids: &[usize]) -> CsrMatrix {
+        let mut indptr = Vec::with_capacity(row_ids.len() + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for &r in row_ids {
+            let (idx, vals) = self.row(r);
+            indices.extend_from_slice(idx);
+            values.extend_from_slice(vals);
+            indptr.push(indices.len());
+        }
+        CsrMatrix {
+            rows: row_ids.len(),
+            cols: self.cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Dense row-major copy (tests, XLA literal packing).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.rows * self.cols];
+        for i in 0..self.rows {
+            let (idx, vals) = self.row(i);
+            for (j, &c) in idx.iter().enumerate() {
+                out[i * self.cols + c as usize] = vals[j];
+            }
+        }
+        out
+    }
+
+    /// Scale each row to unit L2 norm (paper assumption ‖x_i‖ ≤ 1).
+    /// Zero rows are left untouched. Returns the original norms.
+    pub fn normalize_rows(&mut self) -> Vec<f64> {
+        let mut norms = Vec::with_capacity(self.rows);
+        for i in 0..self.rows {
+            let lo = self.indptr[i];
+            let hi = self.indptr[i + 1];
+            let nrm = dense::norm(&self.values[lo..hi]);
+            norms.push(nrm);
+            if nrm > 0.0 {
+                for v in &mut self.values[lo..hi] {
+                    *v /= nrm;
+                }
+            }
+        }
+        norms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [4, 5, 6]]
+        CsrMatrix::from_rows(
+            3,
+            &[
+                vec![(0, 1.0), (2, 2.0)],
+                vec![(1, 3.0)],
+                vec![(0, 4.0), (1, 5.0), (2, 6.0)],
+            ],
+        )
+    }
+
+    #[test]
+    fn structure() {
+        let m = sample();
+        assert_eq!(m.rows, 3);
+        assert_eq!(m.cols, 3);
+        assert_eq!(m.nnz(), 6);
+        assert!((m.density() - 6.0 / 9.0).abs() < 1e-12);
+        assert_eq!(m.row_nnz(1), 1);
+    }
+
+    #[test]
+    fn row_ops() {
+        let m = sample();
+        let v = vec![1.0, 2.0, 3.0];
+        assert!((m.row_dot(0, &v) - 7.0).abs() < 1e-12);
+        assert!((m.row_dot(2, &v) - 32.0).abs() < 1e-12);
+        let mut acc = vec![0.0; 3];
+        m.row_axpy(2, 2.0, &mut acc);
+        assert_eq!(acc, vec![8.0, 10.0, 12.0]);
+    }
+
+    #[test]
+    fn matvec_roundtrip_vs_dense() {
+        let m = sample();
+        let d = m.to_dense();
+        let v = vec![0.5, -1.0, 2.0];
+        let mut out = vec![0.0; 3];
+        m.matvec(&v, &mut out);
+        for i in 0..3 {
+            let expect: f64 = (0..3).map(|c| d[i * 3 + c] * v[c]).sum();
+            assert!((out[i] - expect).abs() < 1e-12);
+        }
+        let u = vec![1.0, 2.0, 3.0];
+        let mut out_t = vec![0.0; 3];
+        m.matvec_t(&u, &mut out_t);
+        for c in 0..3 {
+            let expect: f64 = (0..3).map(|r| d[r * 3 + c] * u[r]).sum();
+            assert!((out_t[c] - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn duplicate_columns_are_summed() {
+        let m = CsrMatrix::from_rows(2, &[vec![(0, 1.0), (0, 2.0)], vec![]]);
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.row(0).1, &[3.0]);
+        assert_eq!(m.row_nnz(1), 0);
+    }
+
+    #[test]
+    fn explicit_zeros_dropped() {
+        let m = CsrMatrix::from_rows(2, &[vec![(1, 0.0)], vec![(0, 5.0)]]);
+        assert_eq!(m.nnz(), 1);
+    }
+
+    #[test]
+    fn select_rows_is_partition_view() {
+        let m = sample();
+        let sub = m.select_rows(&[2, 0]);
+        assert_eq!(sub.rows, 2);
+        assert_eq!(sub.row(0).1, m.row(2).1);
+        assert_eq!(sub.row(1).1, m.row(0).1);
+    }
+
+    #[test]
+    fn row_norms_and_normalization() {
+        let mut m = sample();
+        let norms = m.row_norms_sq();
+        assert!((norms[0] - 5.0).abs() < 1e-12);
+        assert!((norms[2] - 77.0).abs() < 1e-12);
+        let orig = m.normalize_rows();
+        assert!((orig[0] - 5.0f64.sqrt()).abs() < 1e-12);
+        for n in m.row_norms_sq() {
+            assert!((n - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn from_dense_roundtrip() {
+        let data = vec![0.0, 1.0, 2.0, 0.0, 0.0, 3.0];
+        let m = CsrMatrix::from_dense(2, 3, &data);
+        assert_eq!(m.to_dense(), data);
+        assert_eq!(m.nnz(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_column_panics() {
+        CsrMatrix::from_rows(2, &[vec![(5, 1.0)]]);
+    }
+}

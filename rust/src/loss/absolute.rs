@@ -1,0 +1,98 @@
+//! Absolute (L1) regression loss ℓ(z) = |z − y| — the "non-smooth
+//! regression variant" the paper's abstract extends the theory to.
+//! 1-Lipschitz, non-smooth (Theorem 8 territory, like hinge).
+//!
+//! Conjugate: ℓ*(u) = uy + I[|u| ≤ 1], so ℓ*(−α) = −αy for α ∈ [−1, 1]
+//! and +∞ otherwise.
+
+/// Primal loss value.
+#[inline]
+pub fn value(z: f64, y: f64) -> f64 {
+    (z - y).abs()
+}
+
+/// ℓ*(−α); +∞ when |α| > 1.
+#[inline]
+pub fn conjugate_neg(alpha: f64, y: f64) -> f64 {
+    if (-1.0 - 1e-12..=1.0 + 1e-12).contains(&alpha) {
+        -alpha * y
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// A subgradient of ℓ at z: sign(z − y) (0 at the kink).
+#[inline]
+pub fn subgradient(z: f64, y: f64) -> f64 {
+    if z > y {
+        1.0
+    } else if z < y {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// u with −u ∈ ∂ℓ(z).
+#[inline]
+pub fn dual_witness(z: f64, y: f64) -> f64 {
+    -subgradient(z, y)
+}
+
+/// Maximizer of −ℓ*(−(α+δ)) − δ·xv − (coef/2)δ² with box |α+δ| ≤ 1:
+/// unconstrained stationary point α+δ = α + (y − xv)/coef, clipped.
+#[inline]
+pub fn coordinate_delta(alpha: f64, y: f64, xv: f64, coef: f64) -> f64 {
+    debug_assert!(coef > 0.0);
+    let a_unc = alpha + (y - xv) / coef;
+    a_unc.clamp(-1.0, 1.0) - alpha
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::test_util::assert_coordinate_opt;
+
+    #[test]
+    fn primal_and_subgradient() {
+        assert_eq!(value(3.0, 1.0), 2.0);
+        assert_eq!(value(-1.0, 1.0), 2.0);
+        assert_eq!(subgradient(3.0, 1.0), 1.0);
+        assert_eq!(subgradient(-3.0, 1.0), -1.0);
+        assert_eq!(subgradient(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn conjugate_box() {
+        assert_eq!(conjugate_neg(0.5, 2.0), -1.0);
+        assert_eq!(conjugate_neg(-1.0, 2.0), 2.0);
+        assert!(conjugate_neg(1.5, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn fenchel_young() {
+        for zi in -8..=8 {
+            let z = zi as f64 * 0.4;
+            let y = 0.7;
+            for ai in -10..=10 {
+                let alpha = ai as f64 / 10.0;
+                let lhs = value(z, y) + conjugate_neg(alpha, y);
+                assert!(lhs + 1e-9 >= -alpha * z, "z={z} a={alpha}");
+            }
+        }
+    }
+
+    #[test]
+    fn coordinate_delta_is_argmax() {
+        // labels here are regression targets, not ±1
+        assert_coordinate_opt(conjugate_neg, coordinate_delta, &[0.5, -1.2, 2.0]);
+    }
+
+    #[test]
+    fn delta_respects_box() {
+        for ai in [-1.0, -0.3, 0.0, 0.8, 1.0] {
+            let d = coordinate_delta(ai, 5.0, -3.0, 0.1);
+            assert!((ai + d).abs() <= 1.0 + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Hinge loss ℓ(z) = max(0, 1 − yz), the paper's experimental workload
+//! (binary SVM). L-Lipschitz with L = 1; non-smooth.
+//!
+//! Dual: with b := yα, the conjugate is ℓ*(−α) = −b for b ∈ [0, 1] and +∞
+//! otherwise (Shalev-Shwartz & Zhang 2013). Feasible dual iterates keep
+//! yα_i ∈ [0, 1].
+
+/// Primal loss value.
+#[inline]
+pub fn value(z: f64, y: f64) -> f64 {
+    (1.0 - y * z).max(0.0)
+}
+
+/// ℓ*(−α). Returns +∞ when yα ∉ [0,1].
+#[inline]
+pub fn conjugate_neg(alpha: f64, y: f64) -> f64 {
+    let b = y * alpha;
+    if (-1e-12..=1.0 + 1e-12).contains(&b) {
+        -b
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// A subgradient of ℓ at z: −y·1{yz < 1}.
+#[inline]
+pub fn subgradient(z: f64, y: f64) -> f64 {
+    if y * z < 1.0 {
+        -y
+    } else {
+        0.0
+    }
+}
+
+/// An element u with −u ∈ ∂ℓ(z) (Eq. 17 of the paper).
+#[inline]
+pub fn dual_witness(z: f64, y: f64) -> f64 {
+    -subgradient(z, y)
+}
+
+/// Closed-form maximizer of the 1-D local subproblem (Eq. 49):
+///   max_δ  −ℓ*(−(α+δ)) − δ·xv − (coef/2)·δ²
+/// where xv = x_iᵀv (v = local primal image) and coef = σ'‖x_i‖²/(λn).
+/// Returns δ*.
+#[inline]
+pub fn coordinate_delta(alpha: f64, y: f64, xv: f64, coef: f64) -> f64 {
+    debug_assert!(coef > 0.0);
+    let b = y * alpha;
+    // Unconstrained optimum in b-space, then clip to the box [0, 1].
+    let b_unc = b + (1.0 - y * xv) / coef;
+    let b_new = b_unc.clamp(0.0, 1.0);
+    y * b_new - alpha
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::test_util::assert_coordinate_opt;
+
+    #[test]
+    fn primal_values() {
+        assert_eq!(value(0.0, 1.0), 1.0);
+        assert_eq!(value(2.0, 1.0), 0.0);
+        assert_eq!(value(-1.0, 1.0), 2.0);
+        assert_eq!(value(-2.0, -1.0), 0.0);
+    }
+
+    #[test]
+    fn conjugate_feasibility() {
+        assert_eq!(conjugate_neg(0.5, 1.0), -0.5);
+        assert_eq!(conjugate_neg(-0.5, -1.0), -0.5);
+        assert!(conjugate_neg(1.5, 1.0).is_infinite());
+        assert!(conjugate_neg(-0.1, 1.0).is_infinite());
+    }
+
+    #[test]
+    fn fenchel_young_inequality() {
+        // ℓ(z) + ℓ*(−α) ≥ −αz for all feasible α.
+        for &y in &[1.0, -1.0] {
+            for zi in -10..=10 {
+                let z = zi as f64 * 0.3;
+                for bi in 0..=10 {
+                    let alpha = y * (bi as f64 / 10.0);
+                    let lhs = value(z, y) + conjugate_neg(alpha, y);
+                    assert!(lhs + 1e-9 >= -alpha * z, "FY violated: y={y} z={z} a={alpha}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn coordinate_delta_is_argmax() {
+        assert_coordinate_opt(|a, y| conjugate_neg(a, y), coordinate_delta, &[1.0, -1.0]);
+    }
+
+    #[test]
+    fn delta_keeps_feasible() {
+        for &y in &[1.0, -1.0] {
+            for ai in 0..=10 {
+                let alpha = y * ai as f64 / 10.0;
+                let d = coordinate_delta(alpha, y, 0.3, 2.0);
+                let b = y * (alpha + d);
+                assert!((-1e-12..=1.0 + 1e-12).contains(&b), "b={b}");
+            }
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Logistic loss ℓ(z) = log(1 + exp(−yz)). (1/4)-smooth (μ = 4 in the
+//! paper's (1/μ)-smooth convention is wrong way round: ℓ'' ≤ 1/4, i.e. the
+//! derivative is (1/4)-Lipschitz, so ℓ is (1/μ)-smooth with μ = 4) and
+//! 1-Lipschitz.
+//!
+//! Conjugate (b := yα ∈ [0, 1]): ℓ*(−α) = b·log b + (1−b)·log(1−b)
+//! (with 0·log 0 := 0); +∞ outside. No closed-form coordinate maximizer —
+//! we run a safeguarded Newton method on the strictly concave 1-D problem.
+
+/// Numerically stable log(1 + exp(−m)).
+#[inline]
+fn log1p_exp_neg(m: f64) -> f64 {
+    if m > 0.0 {
+        (-m).exp().ln_1p()
+    } else {
+        -m + m.exp().ln_1p()
+    }
+}
+
+/// Primal loss value.
+#[inline]
+pub fn value(z: f64, y: f64) -> f64 {
+    log1p_exp_neg(y * z)
+}
+
+/// x·log x with the 0·log 0 = 0 convention.
+#[inline]
+fn xlogx(x: f64) -> f64 {
+    if x <= 0.0 {
+        0.0
+    } else {
+        x * x.ln()
+    }
+}
+
+/// ℓ*(−α); +∞ when yα ∉ [0, 1].
+#[inline]
+pub fn conjugate_neg(alpha: f64, y: f64) -> f64 {
+    let b = y * alpha;
+    if (-1e-12..=1.0 + 1e-12).contains(&b) {
+        let b = b.clamp(0.0, 1.0);
+        xlogx(b) + xlogx(1.0 - b)
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// ℓ'(z) = −y / (1 + exp(yz)).
+#[inline]
+pub fn subgradient(z: f64, y: f64) -> f64 {
+    let m = y * z;
+    // sigmoid(-m) computed stably
+    let s = if m >= 0.0 {
+        let e = (-m).exp();
+        e / (1.0 + e)
+    } else {
+        1.0 / (1.0 + m.exp())
+    };
+    -y * s
+}
+
+/// u with −u ∈ ∂ℓ(z).
+#[inline]
+pub fn dual_witness(z: f64, y: f64) -> f64 {
+    -subgradient(z, y)
+}
+
+/// Maximize φ(δ) = −ℓ*(−(α+δ)) − δ·xv − (coef/2)δ² by safeguarded Newton
+/// in b-space (b = y(α+δ) ∈ (0,1)):
+///   φ(b) = −b·ln b − (1−b)·ln(1−b) − (yb − α)·xv − (coef/2)(b − yα)²
+///   φ'(b) = −ln(b/(1−b)) − y·xv − coef·(b − yα)
+///   φ''(b) = −1/(b(1−b)) − coef  < 0.
+#[inline]
+pub fn coordinate_delta(alpha: f64, y: f64, xv: f64, coef: f64) -> f64 {
+    debug_assert!(coef > 0.0);
+    let b0 = (y * alpha).clamp(1e-12, 1.0 - 1e-12);
+    let g = |b: f64| -((b / (1.0 - b)).ln()) - y * xv - coef * (b - y * alpha);
+
+    // Bracket the root of g (g is strictly decreasing; g(0+)=+inf, g(1-)=-inf).
+    let (mut lo, mut hi) = (1e-12, 1.0 - 1e-12);
+    let mut b = b0;
+    for _ in 0..100 {
+        let gb = g(b);
+        if gb > 0.0 {
+            lo = b;
+        } else {
+            hi = b;
+        }
+        // Newton step
+        let h = -1.0 / (b * (1.0 - b)) - coef;
+        let mut b_new = b - gb / h;
+        // Safeguard: fall back to bisection when Newton leaves the bracket.
+        if !(b_new > lo && b_new < hi) || !b_new.is_finite() {
+            b_new = 0.5 * (lo + hi);
+        }
+        if (b_new - b).abs() < 1e-14 {
+            b = b_new;
+            break;
+        }
+        b = b_new;
+    }
+    y * b - alpha
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::test_util::assert_coordinate_opt;
+
+    #[test]
+    fn stable_primal_values() {
+        assert!((value(0.0, 1.0) - std::f64::consts::LN_2).abs() < 1e-12);
+        // large margins: loss → 0, no overflow
+        assert!(value(1000.0, 1.0) < 1e-10);
+        assert!(value(-1000.0, 1.0) > 999.0);
+    }
+
+    #[test]
+    fn derivative_matches_finite_difference() {
+        let h = 1e-6;
+        for zi in -8..=8 {
+            let z = zi as f64 * 0.45;
+            for &y in &[1.0, -1.0] {
+                let fd = (value(z + h, y) - value(z - h, y)) / (2.0 * h);
+                let an = subgradient(z, y);
+                assert!((fd - an).abs() < 1e-5, "z={z} fd={fd} an={an}");
+            }
+        }
+    }
+
+    #[test]
+    fn conjugate_boundary_values() {
+        // b=0 and b=1 give ℓ* = 0 (entropy vanishes).
+        assert_eq!(conjugate_neg(0.0, 1.0), 0.0);
+        assert!((conjugate_neg(1.0, 1.0)).abs() < 1e-9);
+        assert!((conjugate_neg(0.5, 1.0) + std::f64::consts::LN_2).abs() < 1e-12);
+        assert!(conjugate_neg(1.2, 1.0).is_infinite());
+    }
+
+    #[test]
+    fn fenchel_young() {
+        for &y in &[1.0, -1.0] {
+            for zi in -5..=5 {
+                let z = zi as f64 * 0.6;
+                for bi in 0..=20 {
+                    let alpha = y * bi as f64 / 20.0;
+                    let lhs = value(z, y) + conjugate_neg(alpha, y);
+                    assert!(lhs + 1e-9 >= -alpha * z);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn coordinate_delta_is_argmax() {
+        assert_coordinate_opt(conjugate_neg, coordinate_delta, &[1.0, -1.0]);
+    }
+
+    #[test]
+    fn newton_converges_from_boundary_start() {
+        // α at the dual boundary (b≈0) must still move.
+        let d = coordinate_delta(0.0, 1.0, -2.0, 0.5);
+        assert!(d > 0.0);
+        let b = d; // y=1
+        assert!((0.0..1.0).contains(&b));
+    }
+}

@@ -1,0 +1,238 @@
+//! Loss-function library: the convex loss classes of the paper (§2).
+//!
+//! Each concrete loss lives in its own module as free functions over
+//! (z, y); [`Loss`] is a zero-cost enum dispatcher used by the objective,
+//! the solvers, and the baselines. The paper's experiments use `Hinge`
+//! (L-Lipschitz, non-smooth — Theorem 8 territory); `SmoothedHinge`,
+//! `Logistic`, and `Squared` exercise the smooth-loss rates (Theorem 10).
+
+pub mod absolute;
+pub mod hinge;
+pub mod logistic;
+pub mod smoothed_hinge;
+pub mod squared;
+
+/// Which convex loss to use. All methods are `#[inline]` match-dispatched,
+/// so the SDCA inner loop pays no dynamic-dispatch cost.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Loss {
+    /// max(0, 1 − yz); L = 1.
+    Hinge,
+    /// Smoothed hinge with parameter μ (1/μ-smooth, 1-Lipschitz).
+    SmoothedHinge { mu: f64 },
+    /// log(1 + e^{−yz}); 1-Lipschitz, (1/4)-smooth.
+    Logistic,
+    /// ½(z − y)²; 1-smooth, not Lipschitz.
+    Squared,
+    /// |z − y| (L1 regression); 1-Lipschitz, non-smooth.
+    Absolute,
+}
+
+impl Loss {
+    pub fn parse(name: &str) -> Option<Loss> {
+        match name {
+            "hinge" | "svm" => Some(Loss::Hinge),
+            "smoothed_hinge" | "smooth-hinge" => Some(Loss::SmoothedHinge { mu: 0.5 }),
+            "logistic" | "logreg" => Some(Loss::Logistic),
+            "squared" | "ridge" | "ls" => Some(Loss::Squared),
+            "absolute" | "l1" | "lad" => Some(Loss::Absolute),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Loss::Hinge => "hinge",
+            Loss::SmoothedHinge { .. } => "smoothed_hinge",
+            Loss::Logistic => "logistic",
+            Loss::Squared => "squared",
+            Loss::Absolute => "absolute",
+        }
+    }
+
+    /// ℓ(z; y).
+    #[inline]
+    pub fn value(&self, z: f64, y: f64) -> f64 {
+        match *self {
+            Loss::Hinge => hinge::value(z, y),
+            Loss::SmoothedHinge { mu } => smoothed_hinge::value(z, y, mu),
+            Loss::Logistic => logistic::value(z, y),
+            Loss::Squared => squared::value(z, y),
+            Loss::Absolute => absolute::value(z, y),
+        }
+    }
+
+    /// ℓ*(−α; y); +∞ when dual-infeasible.
+    #[inline]
+    pub fn conjugate_neg(&self, alpha: f64, y: f64) -> f64 {
+        match *self {
+            Loss::Hinge => hinge::conjugate_neg(alpha, y),
+            Loss::SmoothedHinge { mu } => smoothed_hinge::conjugate_neg(alpha, y, mu),
+            Loss::Logistic => logistic::conjugate_neg(alpha, y),
+            Loss::Squared => squared::conjugate_neg(alpha, y),
+            Loss::Absolute => absolute::conjugate_neg(alpha, y),
+        }
+    }
+
+    /// A subgradient of ℓ at z.
+    #[inline]
+    pub fn subgradient(&self, z: f64, y: f64) -> f64 {
+        match *self {
+            Loss::Hinge => hinge::subgradient(z, y),
+            Loss::SmoothedHinge { mu } => smoothed_hinge::subgradient(z, y, mu),
+            Loss::Logistic => logistic::subgradient(z, y),
+            Loss::Squared => squared::subgradient(z, y),
+            Loss::Absolute => absolute::subgradient(z, y),
+        }
+    }
+
+    /// u with −u ∈ ∂ℓ(z) — the dual witness of Eq. (17).
+    #[inline]
+    pub fn dual_witness(&self, z: f64, y: f64) -> f64 {
+        match *self {
+            Loss::Hinge => hinge::dual_witness(z, y),
+            Loss::SmoothedHinge { mu } => smoothed_hinge::dual_witness(z, y, mu),
+            Loss::Logistic => logistic::dual_witness(z, y),
+            Loss::Squared => squared::dual_witness(z, y),
+            Loss::Absolute => absolute::dual_witness(z, y),
+        }
+    }
+
+    /// Maximizer δ* of the 1-D data-local subproblem
+    /// −ℓ*(−(α+δ)) − δ·xv − (coef/2)δ², coef = σ'‖x_i‖²/(λn).
+    #[inline]
+    pub fn coordinate_delta(&self, alpha: f64, y: f64, xv: f64, coef: f64) -> f64 {
+        match *self {
+            Loss::Hinge => hinge::coordinate_delta(alpha, y, xv, coef),
+            Loss::SmoothedHinge { mu } => smoothed_hinge::coordinate_delta(alpha, y, xv, coef, mu),
+            Loss::Logistic => logistic::coordinate_delta(alpha, y, xv, coef),
+            Loss::Squared => squared::coordinate_delta(alpha, y, xv, coef),
+            Loss::Absolute => absolute::coordinate_delta(alpha, y, xv, coef),
+        }
+    }
+
+    /// Lipschitz constant L (Definition 1), if the loss is Lipschitz.
+    pub fn lipschitz(&self) -> Option<f64> {
+        match self {
+            Loss::Hinge | Loss::SmoothedHinge { .. } | Loss::Logistic | Loss::Absolute => {
+                Some(1.0)
+            }
+            Loss::Squared => None,
+        }
+    }
+
+    /// μ such that ℓ is (1/μ)-smooth (Definition 2), if smooth.
+    pub fn smoothness_mu(&self) -> Option<f64> {
+        match *self {
+            Loss::Hinge | Loss::Absolute => None,
+            Loss::SmoothedHinge { mu } => Some(mu),
+            Loss::Logistic => Some(4.0),
+            Loss::Squared => Some(1.0),
+        }
+    }
+
+    /// Whether α = 0 is dual-feasible (true for all implemented losses).
+    pub fn zero_feasible(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    /// Check the closed-form coordinate maximizer against a dense grid
+    /// search of the 1-D objective φ(δ) = −ℓ*(−(α+δ)) − δ·xv − (coef/2)δ².
+    pub fn assert_coordinate_opt(
+        conj: impl Fn(f64, f64) -> f64,
+        delta_fn: impl Fn(f64, f64, f64, f64) -> f64,
+        ys: &[f64],
+    ) {
+        let phi = |alpha: f64, y: f64, xv: f64, coef: f64, d: f64| -> f64 {
+            let c = conj(alpha + d, y);
+            if c.is_infinite() {
+                return f64::NEG_INFINITY;
+            }
+            -c - d * xv - 0.5 * coef * d * d
+        };
+        for &y in ys {
+            for &alpha0 in &[0.0, 0.3 * y, 0.9 * y] {
+                for &xv in &[-1.5, -0.2, 0.0, 0.4, 2.0] {
+                    for &coef in &[0.1, 1.0, 10.0] {
+                        let d_star = delta_fn(alpha0, y, xv, coef);
+                        let f_star = phi(alpha0, y, xv, coef, d_star);
+                        assert!(f_star.is_finite(), "optimizer left feasible set");
+                        // grid search over a wide range
+                        let mut best = f64::NEG_INFINITY;
+                        for gi in -2000..=2000 {
+                            let d = gi as f64 * 0.002;
+                            best = best.max(phi(alpha0, y, xv, coef, d));
+                        }
+                        assert!(
+                            f_star + 1e-5 >= best,
+                            "closed form {f_star} < grid {best} (y={y} a={alpha0} xv={xv} coef={coef})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Loss::parse("hinge"), Some(Loss::Hinge));
+        assert_eq!(Loss::parse("ridge"), Some(Loss::Squared));
+        assert!(Loss::parse("unknown").is_none());
+    }
+
+    #[test]
+    fn class_constants() {
+        assert_eq!(Loss::Hinge.lipschitz(), Some(1.0));
+        assert_eq!(Loss::Hinge.smoothness_mu(), None);
+        assert_eq!(Loss::Squared.lipschitz(), None);
+        assert_eq!(Loss::Squared.smoothness_mu(), Some(1.0));
+        assert_eq!(Loss::Logistic.smoothness_mu(), Some(4.0));
+    }
+
+    #[test]
+    fn loss_at_zero_bounded_by_one() {
+        // Paper assumption (5): ℓ_i(0) ≤ 1 for classification losses with
+        // |y| = 1 (squared loss satisfies it for |y| ≤ √2).
+        for loss in [
+            Loss::Hinge,
+            Loss::SmoothedHinge { mu: 0.5 },
+            Loss::Logistic,
+        ] {
+            for &y in &[1.0, -1.0] {
+                assert!(loss.value(0.0, y) <= 1.0 + 1e-12);
+            }
+        }
+        assert!(Loss::Squared.value(0.0, 1.0) <= 1.0);
+    }
+
+    #[test]
+    fn dual_witness_is_feasible() {
+        // The witness u from Eq. (17) must itself be dual-feasible
+        // (conjugate finite) for Lipschitz losses.
+        for loss in [
+            Loss::Hinge,
+            Loss::SmoothedHinge { mu: 0.5 },
+            Loss::Logistic,
+        ] {
+            for zi in -10..=10 {
+                let z = zi as f64 * 0.33;
+                for &y in &[1.0, -1.0] {
+                    let u = loss.dual_witness(z, y);
+                    assert!(
+                        loss.conjugate_neg(u, y).is_finite(),
+                        "{} witness infeasible at z={z} y={y}",
+                        loss.name()
+                    );
+                }
+            }
+        }
+    }
+}

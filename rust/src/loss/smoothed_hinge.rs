@@ -1,0 +1,137 @@
+//! Smoothed hinge loss (Shalev-Shwartz & Zhang 2013c §5):
+//!
+//!   ℓ(z) = 0                      if yz ≥ 1
+//!        = 1 − yz − μ/2           if yz ≤ 1 − μ
+//!        = (1 − yz)²/(2μ)         otherwise
+//!
+//! (1/μ)-smooth and 1-Lipschitz; this is the smooth-loss representative
+//! used to exercise Theorem 10 / Corollary 11.
+//!
+//! Conjugate (b := yα ∈ [0, 1]): ℓ*(−α) = −b + (μ/2)·b².
+
+/// Primal loss value with smoothing parameter mu.
+#[inline]
+pub fn value(z: f64, y: f64, mu: f64) -> f64 {
+    let m = y * z;
+    if m >= 1.0 {
+        0.0
+    } else if m <= 1.0 - mu {
+        1.0 - m - mu / 2.0
+    } else {
+        (1.0 - m) * (1.0 - m) / (2.0 * mu)
+    }
+}
+
+/// ℓ*(−α); +∞ outside the box.
+#[inline]
+pub fn conjugate_neg(alpha: f64, y: f64, mu: f64) -> f64 {
+    let b = y * alpha;
+    if (-1e-12..=1.0 + 1e-12).contains(&b) {
+        -b + 0.5 * mu * b * b
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// Derivative of ℓ at z (smooth, so unique).
+#[inline]
+pub fn subgradient(z: f64, y: f64, mu: f64) -> f64 {
+    let m = y * z;
+    if m >= 1.0 {
+        0.0
+    } else if m <= 1.0 - mu {
+        -y
+    } else {
+        -y * (1.0 - m) / mu
+    }
+}
+
+/// u with −u ∈ ∂ℓ(z).
+#[inline]
+pub fn dual_witness(z: f64, y: f64, mu: f64) -> f64 {
+    -subgradient(z, y, mu)
+}
+
+/// Closed-form maximizer of −ℓ*(−(α+δ)) − δ·xv − (coef/2)δ².
+/// In b-space the objective is b − (μ/2)b² − (yb − α)xv − (coef/2)(b − yα)²
+/// (using y² = 1), a concave quadratic: stationary point then clip to [0,1].
+#[inline]
+pub fn coordinate_delta(alpha: f64, y: f64, xv: f64, coef: f64, mu: f64) -> f64 {
+    debug_assert!(coef > 0.0 && mu > 0.0);
+    let b = y * alpha;
+    let b_unc = (1.0 - y * xv + coef * b) / (mu + coef);
+    let b_new = b_unc.clamp(0.0, 1.0);
+    y * b_new - alpha
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::test_util::assert_coordinate_opt;
+
+    const MU: f64 = 0.5;
+
+    #[test]
+    fn piecewise_values_continuous() {
+        // Continuity at the knots m = 1 and m = 1-μ.
+        let eps = 1e-9;
+        let at = |m: f64| value(m, 1.0, MU);
+        assert!((at(1.0 - eps) - at(1.0 + eps)).abs() < 1e-6);
+        assert!((at(1.0 - MU - eps) - at(1.0 - MU + eps)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reduces_to_hinge_as_mu_to_zero() {
+        for zi in -6..=6 {
+            let z = zi as f64 * 0.5;
+            let h = crate::loss::hinge::value(z, 1.0);
+            let s = value(z, 1.0, 1e-9);
+            assert!((h - s).abs() < 1e-6, "z={z} hinge={h} smooth={s}");
+        }
+    }
+
+    #[test]
+    fn derivative_matches_finite_difference() {
+        let h = 1e-6;
+        for zi in -8..=8 {
+            let z = zi as f64 * 0.37 + 0.01;
+            for &y in &[1.0, -1.0] {
+                let fd = (value(z + h, y, MU) - value(z - h, y, MU)) / (2.0 * h);
+                let an = subgradient(z, y, MU);
+                assert!((fd - an).abs() < 1e-4, "z={z} y={y} fd={fd} an={an}");
+            }
+        }
+    }
+
+    #[test]
+    fn fenchel_young() {
+        for &y in &[1.0, -1.0] {
+            for zi in -6..=6 {
+                let z = zi as f64 * 0.4;
+                for bi in 0..=10 {
+                    let alpha = y * bi as f64 / 10.0;
+                    let lhs = value(z, y, MU) + conjugate_neg(alpha, y, MU);
+                    assert!(lhs + 1e-9 >= -alpha * z);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn coordinate_delta_is_argmax() {
+        assert_coordinate_opt(
+            |a, y| conjugate_neg(a, y, MU),
+            |a, y, xv, coef| coordinate_delta(a, y, xv, coef, MU),
+            &[1.0, -1.0],
+        );
+    }
+
+    #[test]
+    fn lipschitz_bound_holds() {
+        // |ℓ'| ≤ 1 everywhere.
+        for zi in -40..=40 {
+            let z = zi as f64 * 0.1;
+            assert!(subgradient(z, 1.0, MU).abs() <= 1.0 + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Squared loss ℓ(z) = ½(z − y)² (ridge regression). 1-smooth (μ = 1),
+//! not globally Lipschitz.
+//!
+//! Conjugate: ℓ*(u) = ½u² + uy, so ℓ*(−α) = ½α² − αy (feasible everywhere).
+
+/// Primal loss value.
+#[inline]
+pub fn value(z: f64, y: f64) -> f64 {
+    0.5 * (z - y) * (z - y)
+}
+
+/// ℓ*(−α).
+#[inline]
+pub fn conjugate_neg(alpha: f64, y: f64) -> f64 {
+    0.5 * alpha * alpha - alpha * y
+}
+
+/// ℓ'(z) = z − y.
+#[inline]
+pub fn subgradient(z: f64, y: f64) -> f64 {
+    z - y
+}
+
+/// u with −u ∈ ∂ℓ(z).
+#[inline]
+pub fn dual_witness(z: f64, y: f64) -> f64 {
+    y - z
+}
+
+/// Maximizer of −ℓ*(−(α+δ)) − δ·xv − (coef/2)δ², unconstrained quadratic:
+/// δ* = (y − α − xv) / (1 + coef).
+#[inline]
+pub fn coordinate_delta(alpha: f64, y: f64, xv: f64, coef: f64) -> f64 {
+    debug_assert!(coef > 0.0);
+    (y - alpha - xv) / (1.0 + coef)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::test_util::assert_coordinate_opt;
+
+    #[test]
+    fn values_and_derivative() {
+        assert_eq!(value(3.0, 1.0), 2.0);
+        assert_eq!(subgradient(3.0, 1.0), 2.0);
+        assert_eq!(dual_witness(3.0, 1.0), -2.0);
+    }
+
+    #[test]
+    fn fenchel_young_equality_at_optimum() {
+        // For smooth losses FY holds with equality at α = −ℓ'(z).
+        for zi in -5..=5 {
+            let z = zi as f64 * 0.7;
+            let y = 1.5;
+            let alpha = -(z - y);
+            let gap = value(z, y) + conjugate_neg(alpha, y) + alpha * z;
+            assert!(gap.abs() < 1e-10, "gap {gap}");
+        }
+    }
+
+    #[test]
+    fn coordinate_delta_is_argmax() {
+        assert_coordinate_opt(conjugate_neg, coordinate_delta, &[1.0, -1.0, 0.3, 2.0]);
+    }
+}

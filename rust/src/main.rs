@@ -1,0 +1,199 @@
+//! `cocoa` CLI — leader entrypoint for training runs, dataset generation,
+//! partition diagnostics, and paper-experiment regeneration.
+//!
+//! Subcommands:
+//!   train        train a model with CoCoA/CoCoA+ on synthetic or LibSVM data
+//!   gen-data     write a synthetic dataset in LibSVM format
+//!   sigma        report partition constants σ_k, σ, and the Table-1 ratio
+//!   experiment   regenerate a paper table/figure: table1|table2|fig1|fig2|fig3|rates|all
+//!   artifacts-check   load + smoke-run the AOT artifacts via PJRT
+//!
+//! Run `cocoa <subcommand> --help` for flags.
+
+use cocoa::prelude::*;
+use cocoa::util::cli::Args;
+use cocoa::util::logging;
+
+fn main() {
+    logging::init_from_env();
+    let args = Args::from_env();
+    if let Some(level) = args.get_opt("log").and_then(logging::parse_level) {
+        logging::set_level(level);
+    }
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "train" => cmd_train(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "sigma" => cmd_sigma(&args),
+        "experiment" => cocoa::experiments::run_from_cli(&args),
+        "artifacts-check" => cmd_artifacts_check(&args),
+        "help" | "--help" => {
+            print_help();
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "cocoa — CoCoA+ distributed primal-dual optimization (ICML 2015 reproduction)
+
+USAGE: cocoa <SUBCOMMAND> [flags]
+
+SUBCOMMANDS
+  train            --data <path.svm> | --dataset <covtype|epsilon|rcv1|news|real-sim>
+                   --k <workers> --lambda <λ> --loss <hinge|smoothed_hinge|logistic|squared>
+                   --variant <plus|avg> --sigma-prime <σ'> --epochs <local epochs>
+                   --rounds <max> --gap-tol <ε> --scale <dataset downscale> --seed <s>
+  gen-data         --dataset <name> --scale <s> --seed <s> --out <path.svm>
+  sigma            --dataset <name> --scale <s> --ks 16,32,64 --seed <s>
+  experiment       table1|table2|fig1|fig2|fig3|rates|all  [--quick] [--scale s]
+  artifacts-check  --artifacts <dir>
+
+GLOBAL FLAGS
+  --log <error|warn|info|debug|trace>   (or COCOA_LOG env var)
+  Results are written under ./results (or COCOA_RESULTS_DIR)."
+    );
+}
+
+fn load_data(args: &Args) -> Dataset {
+    if let Some(path) = args.get_opt("data") {
+        cocoa::data::libsvm::load(std::path::Path::new(path), None)
+            .unwrap_or_else(|e| panic!("failed to load {path}: {e}"))
+    } else {
+        let name = args.get_str("dataset", "covtype");
+        let scale = args.get_f64("scale", 500.0);
+        let seed = args.get_u64("seed", 42);
+        cocoa::data::synth::paper_dataset(&name, scale, seed)
+    }
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let data = load_data(args);
+    let n = data.n();
+    let k = args.get_usize("k", 8);
+    let lambda = args.get_f64("lambda", 1e-4);
+    let loss = Loss::parse(&args.get_str("loss", "hinge")).expect("unknown --loss");
+    let seed = args.get_u64("seed", 42);
+    let epochs = args.get_f64("epochs", 1.0);
+    let variant = args.get_str("variant", "plus");
+
+    let part = cocoa::data::partition::random_balanced(n, k, seed);
+    let solver = SolverSpec::SdcaEpochs { epochs };
+    let mut cfg = match variant.as_str() {
+        "plus" | "add" => CocoaConfig::cocoa_plus(k, loss, lambda, solver),
+        "avg" | "cocoa" => CocoaConfig::cocoa(k, loss, lambda, solver),
+        other => panic!("unknown --variant {other:?} (plus|avg)"),
+    }
+    .with_rounds(args.get_usize("rounds", 100))
+    .with_gap_tol(args.get_f64("gap-tol", 1e-4))
+    .with_seed(seed);
+    if let Some(sp) = args.get_opt("sigma-prime") {
+        cfg = cfg.with_sigma_prime(sp.parse().expect("--sigma-prime must be a float"));
+    }
+
+    println!(
+        "dataset={} n={} d={} density={:.4} | K={k} λ={lambda} loss={} γ={} σ'={}",
+        data.name,
+        n,
+        data.d(),
+        data.density(),
+        loss.name(),
+        cfg.gamma(),
+        cfg.effective_sigma_prime()
+    );
+    let problem = Problem::new(data, loss, lambda);
+    let mut trainer = Trainer::new(problem, part, cfg);
+    let hist = trainer.run();
+    for r in &hist.records {
+        println!(
+            "round {:>4}  vecs {:>7}  sim_t {:>9.3}s  P {:.6e}  D {:.6e}  gap {:.6e}",
+            r.round, r.comm_vectors, r.sim_time_s, r.primal, r.dual, r.gap
+        );
+    }
+    println!(
+        "stopped: {:?}; final gap {:.3e}; train error {:.4}",
+        hist.stop,
+        hist.final_gap(),
+        trainer.problem.data.classification_error(&trainer.w)
+    );
+    let csv = hist.to_csv();
+    if let Ok(p) = cocoa::report::write_result("train/last_run.csv", &csv) {
+        println!("history written to {}", p.display());
+    }
+    0
+}
+
+fn cmd_gen_data(args: &Args) -> i32 {
+    let name = args.get_str("dataset", "covtype");
+    let scale = args.get_f64("scale", 500.0);
+    let seed = args.get_u64("seed", 42);
+    let out = args.get_str("out", "data.svm");
+    let data = cocoa::data::synth::paper_dataset(&name, scale, seed);
+    cocoa::data::libsvm::save(&data, std::path::Path::new(&out)).expect("write failed");
+    println!(
+        "wrote {}: n={} d={} density={:.4}",
+        out,
+        data.n(),
+        data.d(),
+        data.density()
+    );
+    0
+}
+
+fn cmd_sigma(args: &Args) -> i32 {
+    let data = load_data(args);
+    let n = data.n();
+    let ks = args.get_usize_list("ks", &[4, 8, 16]);
+    let seed = args.get_u64("seed", 42);
+    println!("dataset={} n={} d={}", data.name, n, data.d());
+    println!(
+        "{:>6} {:>14} {:>14} {:>14} {:>10}",
+        "K", "sigma=Σσ_k·n_k", "n²/K bound", "ratio", "σ_max"
+    );
+    for &k in &ks {
+        if k > n {
+            continue;
+        }
+        let part = cocoa::data::partition::random_balanced(n, k, seed);
+        let ps = cocoa::subproblem::sigma::partition_sigma(&data, &part, seed);
+        println!(
+            "{:>6} {:>14.2} {:>14.2} {:>14.3} {:>10.3}",
+            k,
+            ps.sigma_sum,
+            (n * n) as f64 / k as f64,
+            ps.table1_ratio(n),
+            ps.sigma_max()
+        );
+    }
+    0
+}
+
+fn cmd_artifacts_check(args: &Args) -> i32 {
+    let dir = args.get_str("artifacts", "artifacts");
+    match cocoa::runtime::artifact::Manifest::load(std::path::Path::new(&dir)) {
+        Ok(manifest) => {
+            println!("manifest OK: {} artifacts", manifest.entries.len());
+            match cocoa::runtime::smoke_test(&manifest) {
+                Ok(report) => {
+                    println!("{report}");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("artifact execution failed: {e}");
+                    1
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("failed to load artifacts from {dir}: {e} (run `make artifacts`)");
+            1
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Primal/dual objectives and the duality-gap certificate (§2 of the paper).
+//!
+//! * Primal (1):  P(w) = (1/n) Σ ℓ_i(x_iᵀw) + (λ/2)‖w‖²
+//! * Dual   (2):  D(α) = −(1/n) Σ ℓ*_i(−α_i) − (λ/2)‖Aα/(λn)‖²
+//! * Map    (3):  w(α) = Aα/(λn)
+//! * Gap    (4):  G(α) = P(w(α)) − D(α) ≥ 0   (weak duality)
+//!
+//! The gap is the paper's practical stopping certificate; we expose it both
+//! from scratch (`duality_gap`) and from cached margins for the hot path.
+
+use crate::data::Dataset;
+use crate::linalg::dense;
+use crate::loss::Loss;
+
+/// Problem definition: dataset + loss + regularizer.
+#[derive(Clone, Debug)]
+pub struct Problem {
+    pub data: Dataset,
+    pub loss: Loss,
+    pub lambda: f64,
+}
+
+impl Problem {
+    pub fn new(data: Dataset, loss: Loss, lambda: f64) -> Problem {
+        assert!(lambda > 0.0, "λ must be positive");
+        Problem { data, loss, lambda }
+    }
+
+    pub fn n(&self) -> usize {
+        self.data.n()
+    }
+
+    pub fn d(&self) -> usize {
+        self.data.d()
+    }
+
+    /// w(α) = Aα/(λn), writing into `w`.
+    pub fn primal_from_dual(&self, alpha: &[f64], w: &mut [f64]) {
+        assert_eq!(alpha.len(), self.n());
+        assert_eq!(w.len(), self.d());
+        self.data.x.matvec_t(alpha, w);
+        dense::scale(1.0 / (self.lambda * self.n() as f64), w);
+    }
+
+    /// P(w) from scratch.
+    pub fn primal_value(&self, w: &[f64]) -> f64 {
+        let n = self.n();
+        let mut loss_sum = 0.0;
+        for i in 0..n {
+            let z = self.data.x.row_dot(i, w);
+            loss_sum += self.loss.value(z, self.data.y[i]);
+        }
+        loss_sum / n as f64 + 0.5 * self.lambda * dense::norm_sq(w)
+    }
+
+    /// P(w) given precomputed margins z_i = x_iᵀw.
+    pub fn primal_value_from_margins(&self, margins: &[f64], w_norm_sq: f64) -> f64 {
+        let n = self.n();
+        assert_eq!(margins.len(), n);
+        let mut loss_sum = 0.0;
+        for i in 0..n {
+            loss_sum += self.loss.value(margins[i], self.data.y[i]);
+        }
+        loss_sum / n as f64 + 0.5 * self.lambda * w_norm_sq
+    }
+
+    /// D(α) given w = w(α) (the caller maintains the invariant).
+    pub fn dual_value(&self, alpha: &[f64], w: &[f64]) -> f64 {
+        let n = self.n();
+        assert_eq!(alpha.len(), n);
+        let mut conj_sum = 0.0;
+        for i in 0..n {
+            let c = self.loss.conjugate_neg(alpha[i], self.data.y[i]);
+            if c.is_infinite() {
+                return f64::NEG_INFINITY; // dual-infeasible α
+            }
+            conj_sum += c;
+        }
+        -conj_sum / n as f64 - 0.5 * self.lambda * dense::norm_sq(w)
+    }
+
+    /// Duality gap G(α) = P(w(α)) − D(α), recomputing w(α) from scratch.
+    pub fn duality_gap(&self, alpha: &[f64]) -> f64 {
+        let mut w = vec![0.0; self.d()];
+        self.primal_from_dual(alpha, &mut w);
+        self.primal_value(&w) - self.dual_value(alpha, &w)
+    }
+
+    /// Primal, dual, and gap from a consistent (α, w) pair.
+    pub fn certificates(&self, alpha: &[f64], w: &[f64]) -> Certificates {
+        let primal = self.primal_value(w);
+        let dual = self.dual_value(alpha, w);
+        Certificates {
+            primal,
+            dual,
+            gap: primal - dual,
+        }
+    }
+
+    /// The dual witness vector u (Eq. 17): −u_i ∈ ∂ℓ_i(x_iᵀw).
+    pub fn dual_witness(&self, w: &[f64]) -> Vec<f64> {
+        (0..self.n())
+            .map(|i| {
+                let z = self.data.x.row_dot(i, w);
+                self.loss.dual_witness(z, self.data.y[i])
+            })
+            .collect()
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Certificates {
+    pub primal: f64,
+    pub dual: f64,
+    pub gap: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::linalg::CsrMatrix;
+
+    fn small_problem(loss: Loss) -> Problem {
+        let data = generate(&SynthConfig::new("t", 40, 6).seed(11));
+        Problem::new(data, loss, 0.1)
+    }
+
+    #[test]
+    fn gap_nonnegative_at_zero_and_random_alpha() {
+        for loss in [
+            Loss::Hinge,
+            Loss::SmoothedHinge { mu: 0.5 },
+            Loss::Logistic,
+            Loss::Squared,
+        ] {
+            let p = small_problem(loss);
+            let n = p.n();
+            let zero = vec![0.0; n];
+            let g0 = p.duality_gap(&zero);
+            assert!(g0 >= -1e-10, "{}: gap at 0 = {g0}", loss.name());
+            // feasible random alpha: b = y*α in [0,1]
+            let alpha: Vec<f64> = (0..n).map(|i| p.data.y[i] * ((i % 10) as f64 / 10.0)).collect();
+            let g = p.duality_gap(&alpha);
+            assert!(g >= -1e-10, "{}: gap = {g}", loss.name());
+        }
+    }
+
+    #[test]
+    fn gap_at_zero_bounded_by_one() {
+        // Lemma 17: D(α*) − D(0) ≤ 1, and P(0) − D(0) = (1/n)Σℓ_i(0) ≤ 1.
+        for loss in [Loss::Hinge, Loss::SmoothedHinge { mu: 0.5 }, Loss::Logistic] {
+            let p = small_problem(loss);
+            let zero = vec![0.0; p.n()];
+            let g0 = p.duality_gap(&zero);
+            assert!(g0 <= 1.0 + 1e-9, "{}: {g0}", loss.name());
+        }
+    }
+
+    #[test]
+    fn infeasible_alpha_gives_neg_inf_dual() {
+        let p = small_problem(Loss::Hinge);
+        let mut alpha = vec![0.0; p.n()];
+        alpha[0] = -5.0 * p.data.y[0]; // way outside [0,1] box
+        let mut w = vec![0.0; p.d()];
+        p.primal_from_dual(&alpha, &mut w);
+        assert_eq!(p.dual_value(&alpha, &w), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn primal_from_margins_matches_scratch() {
+        let p = small_problem(Loss::Hinge);
+        let w: Vec<f64> = (0..p.d()).map(|i| (i as f64 * 0.1).sin()).collect();
+        let mut margins = vec![0.0; p.n()];
+        p.data.x.matvec(&w, &mut margins);
+        let a = p.primal_value(&w);
+        let b = p.primal_value_from_margins(&margins, dense::norm_sq(&w));
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn squared_loss_analytic_optimum_has_zero_gap() {
+        // Ridge regression on a tiny exactly-solvable problem: at the
+        // optimal α the gap must vanish.
+        // Problem: X = I (2×2), y = (1, 2), λ arbitrary.
+        let x = CsrMatrix::from_dense(2, 2, &[1.0, 0.0, 0.0, 1.0]);
+        let data = Dataset::new("tiny", x, vec![1.0, 2.0]);
+        let lambda = 0.5;
+        let p = Problem::new(data, Loss::Squared, lambda);
+        let n = 2.0;
+        // For X=I: w_j = α_j/(λn); optimal primal w_j = y_j/(1+λn).
+        // Optimal dual α_j = λn·y_j/(1+λn).
+        let scale = lambda * n / (1.0 + lambda * n);
+        let alpha = vec![scale * 1.0, scale * 2.0];
+        let gap = p.duality_gap(&alpha);
+        assert!(gap.abs() < 1e-10, "gap {gap}");
+    }
+
+    #[test]
+    fn witness_is_feasible_for_lipschitz_losses() {
+        let p = small_problem(Loss::Hinge);
+        let w: Vec<f64> = (0..p.d()).map(|i| (i as f64).cos()).collect();
+        let u = p.dual_witness(&w);
+        for (i, &ui) in u.iter().enumerate() {
+            assert!(p.loss.conjugate_neg(ui, p.data.y[i]).is_finite());
+        }
+    }
+}

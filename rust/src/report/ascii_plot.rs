@@ -1,0 +1,179 @@
+//! Terminal ASCII plots for experiment output — log-log line charts like
+//! the paper's Figures 1–3, rendered into the experiment logs so results
+//! are inspectable without any plotting stack.
+
+/// One plotted series.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+    pub marker: char,
+}
+
+impl Series {
+    pub fn new(label: &str, xs: Vec<f64>, ys: Vec<f64>, marker: char) -> Series {
+        assert_eq!(xs.len(), ys.len());
+        Series {
+            label: label.to_string(),
+            xs,
+            ys,
+            marker,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct PlotCfg {
+    pub width: usize,
+    pub height: usize,
+    pub log_x: bool,
+    pub log_y: bool,
+}
+
+impl Default for PlotCfg {
+    fn default() -> Self {
+        PlotCfg {
+            width: 72,
+            height: 20,
+            log_x: true,
+            log_y: true,
+        }
+    }
+}
+
+fn tx(v: f64, log: bool) -> Option<f64> {
+    if !v.is_finite() {
+        return None;
+    }
+    if log {
+        if v <= 0.0 {
+            None
+        } else {
+            Some(v.log10())
+        }
+    } else {
+        Some(v)
+    }
+}
+
+/// Render a multi-series chart to a string.
+pub fn render(title: &str, series: &[Series], cfg: &PlotCfg) -> String {
+    // Collect transformed points.
+    let mut pts: Vec<(usize, f64, f64)> = Vec::new();
+    for (si, s) in series.iter().enumerate() {
+        for (&x, &y) in s.xs.iter().zip(&s.ys) {
+            if let (Some(px), Some(py)) = (tx(x, cfg.log_x), tx(y, cfg.log_y)) {
+                pts.push((si, px, py));
+            }
+        }
+    }
+    if pts.is_empty() {
+        return format!("{title}\n(no plottable points)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(_, x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+
+    let mut grid = vec![vec![' '; cfg.width]; cfg.height];
+    for &(si, x, y) in &pts {
+        let cx = ((x - x0) / (x1 - x0) * (cfg.width - 1) as f64).round() as usize;
+        let cy = ((y - y0) / (y1 - y0) * (cfg.height - 1) as f64).round() as usize;
+        let row = cfg.height - 1 - cy;
+        grid[row][cx] = series[si].marker;
+    }
+
+    let fmt_tick = |v: f64, log: bool| -> String {
+        if log {
+            format!("1e{v:.1}")
+        } else {
+            format!("{v:.3}")
+        }
+    };
+
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    for (li, row) in grid.iter().enumerate() {
+        let ylab = if li == 0 {
+            fmt_tick(y1, cfg.log_y)
+        } else if li == cfg.height - 1 {
+            fmt_tick(y0, cfg.log_y)
+        } else {
+            String::new()
+        };
+        out.push_str(&format!("{ylab:>9} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>9} +{}\n", "", "-".repeat(cfg.width)));
+    out.push_str(&format!(
+        "{:>10} {:<w$}{}\n",
+        "",
+        fmt_tick(x0, cfg.log_x),
+        fmt_tick(x1, cfg.log_x),
+        w = cfg.width.saturating_sub(6)
+    ));
+    for s in series {
+        out.push_str(&format!("    {} {}\n", s.marker, s.label));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_two_series() {
+        let s1 = Series::new(
+            "cocoa+",
+            vec![1.0, 10.0, 100.0],
+            vec![1.0, 0.1, 0.001],
+            '+',
+        );
+        let s2 = Series::new("cocoa", vec![1.0, 10.0, 100.0], vec![1.0, 0.5, 0.1], 'o');
+        let chart = render("gap vs rounds", &[s1, s2], &PlotCfg::default());
+        assert!(chart.contains('+'));
+        assert!(chart.contains('o'));
+        assert!(chart.contains("cocoa+"));
+        assert!(chart.lines().count() > 20);
+    }
+
+    #[test]
+    fn skips_nonpositive_on_log_axes() {
+        let s = Series::new("s", vec![0.0, 1.0], vec![-1.0, 1.0], '*');
+        let chart = render("t", &[s], &PlotCfg::default());
+        // only the (1,1) point is plottable; must not panic
+        assert!(chart.contains('*'));
+    }
+
+    #[test]
+    fn empty_series_ok() {
+        let s = Series::new("s", vec![], vec![], '*');
+        let chart = render("t", &[s], &PlotCfg::default());
+        assert!(chart.contains("no plottable points"));
+    }
+
+    #[test]
+    fn linear_axes() {
+        let cfg = PlotCfg {
+            log_x: false,
+            log_y: false,
+            ..Default::default()
+        };
+        let s = Series::new("s", vec![0.0, 1.0, 2.0], vec![0.0, 1.0, 4.0], 'x');
+        let chart = render("t", &[s], &cfg);
+        assert!(chart.contains('x'));
+    }
+}

@@ -1,0 +1,70 @@
+//! Minimal CSV writer/reader for experiment series.
+
+/// Build a CSV string from a header and rows of f64 cells.
+pub fn to_csv(header: &[&str], rows: &[Vec<f64>]) -> String {
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format_cell(*v)).collect();
+        out.push_str(&cells.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+fn format_cell(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.10e}")
+    }
+}
+
+/// Parse a CSV of f64 cells back (header returned separately). Tolerates
+/// blank lines; fails on ragged or non-numeric rows.
+pub fn parse_csv(text: &str) -> Result<(Vec<String>, Vec<Vec<f64>>), String> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header: Vec<String> = lines
+        .next()
+        .ok_or("empty csv")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let mut rows = Vec::new();
+    for (i, line) in lines.enumerate() {
+        let cells: Result<Vec<f64>, _> = line.split(',').map(|c| c.trim().parse::<f64>()).collect();
+        let cells = cells.map_err(|e| format!("row {}: {e}", i + 2))?;
+        if cells.len() != header.len() {
+            return Err(format!(
+                "row {}: {} cells, expected {}",
+                i + 2,
+                cells.len(),
+                header.len()
+            ));
+        }
+        rows.push(cells);
+    }
+    Ok((header, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let csv = to_csv(&["a", "b"], &[vec![1.0, 2.5], vec![3.0, 4.0]]);
+        let (h, rows) = parse_csv(&csv).unwrap();
+        assert_eq!(h, vec!["a", "b"]);
+        assert_eq!(rows.len(), 2);
+        assert!((rows[0][1] - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        assert!(parse_csv("a,b\n1\n").is_err());
+        assert!(parse_csv("a\nxyz\n").is_err());
+        assert!(parse_csv("").is_err());
+    }
+}

@@ -1,0 +1,45 @@
+//! Experiment reporting: CSV/JSON writers and terminal ASCII plots.
+
+pub mod ascii_plot;
+pub mod csv;
+
+use std::path::{Path, PathBuf};
+
+/// Where experiment outputs land (CSV series + JSON summaries).
+pub fn results_dir() -> PathBuf {
+    let dir = std::env::var("COCOA_RESULTS_DIR").unwrap_or_else(|_| "results".to_string());
+    PathBuf::from(dir)
+}
+
+/// Write text to `results_dir()/name`, creating directories as needed.
+pub fn write_result(name: &str, contents: &str) -> std::io::Result<PathBuf> {
+    let path = results_dir().join(name);
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&path, contents)?;
+    Ok(path)
+}
+
+/// Write to an explicit path, creating parents.
+pub fn write_to(path: &Path, contents: &str) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, contents)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_result_creates_dirs() {
+        std::env::set_var("COCOA_RESULTS_DIR", "/tmp/cocoa_report_test");
+        let p = write_result("sub/dir/file.csv", "a,b\n1,2\n").unwrap();
+        assert!(p.exists());
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "a,b\n1,2\n");
+        std::fs::remove_dir_all("/tmp/cocoa_report_test").ok();
+        std::env::remove_var("COCOA_RESULTS_DIR");
+    }
+}

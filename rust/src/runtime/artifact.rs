@@ -1,0 +1,230 @@
+//! The AOT artifact manifest: the contract between `python/compile/aot.py`
+//! (producer) and the PJRT runtime (consumer).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io error reading {path}: {source}")]
+    Io {
+        path: String,
+        source: std::io::Error,
+    },
+    #[error("manifest parse error: {0}")]
+    Parse(String),
+    #[error("manifest missing field {0:?}")]
+    Missing(&'static str),
+    #[error("no artifact of kind {0:?} in manifest")]
+    NoSuchKind(String),
+}
+
+/// Tensor signature of one positional input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: String,
+    pub loss: String,
+    pub file: String,
+    pub dims: BTreeMap<String, usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub sha256: String,
+}
+
+impl ArtifactEntry {
+    pub fn dim(&self, key: &str) -> Option<usize> {
+        self.dims.get(key).copied()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dtype: String,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+fn tensor_specs(j: &Json, field: &'static str) -> Result<Vec<TensorSpec>, ManifestError> {
+    let arr = j
+        .get(field)
+        .and_then(|v| v.as_arr())
+        .ok_or(ManifestError::Missing(field))?;
+    arr.iter()
+        .map(|t| {
+            let name = t
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or(ManifestError::Missing("tensor.name"))?
+                .to_string();
+            let shape = t
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .ok_or(ManifestError::Missing("tensor.shape"))?
+                .iter()
+                .map(|s| s.as_usize().ok_or(ManifestError::Missing("tensor.shape[i]")))
+                .collect::<Result<Vec<_>, _>>()?;
+            let dtype = t
+                .get("dtype")
+                .and_then(|v| v.as_str())
+                .ok_or(ManifestError::Missing("tensor.dtype"))?
+                .to_string();
+            Ok(TensorSpec { name, shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|source| ManifestError::Io {
+            path: path.display().to_string(),
+            source,
+        })?;
+        let j = Json::parse(&text).map_err(ManifestError::Parse)?;
+        let dtype = j
+            .get("dtype")
+            .and_then(|v| v.as_str())
+            .ok_or(ManifestError::Missing("dtype"))?
+            .to_string();
+        let entries_json = j
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .ok_or(ManifestError::Missing("entries"))?;
+        let mut entries = Vec::with_capacity(entries_json.len());
+        for e in entries_json {
+            let get_str = |k: &'static str| -> Result<String, ManifestError> {
+                e.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(|s| s.to_string())
+                    .ok_or(ManifestError::Missing(k))
+            };
+            let mut dims = BTreeMap::new();
+            if let Some(Json::Obj(m)) = e.get("dims") {
+                for (k, v) in m {
+                    if let Some(x) = v.as_usize() {
+                        dims.insert(k.clone(), x);
+                    }
+                }
+            }
+            entries.push(ArtifactEntry {
+                name: get_str("name")?,
+                kind: get_str("kind")?,
+                loss: get_str("loss")?,
+                file: get_str("file")?,
+                dims,
+                inputs: tensor_specs(e, "inputs")?,
+                outputs: tensor_specs(e, "outputs")?,
+                sha256: get_str("sha256").unwrap_or_default(),
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            dtype,
+            entries,
+        })
+    }
+
+    /// First entry of a given kind (optionally filtered by loss).
+    pub fn find(&self, kind: &str) -> Result<&ArtifactEntry, ManifestError> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind)
+            .ok_or_else(|| ManifestError::NoSuchKind(kind.to_string()))
+    }
+
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+/// Locate the artifacts directory: `COCOA_ARTIFACTS_DIR`, else ./artifacts,
+/// walking up a few parents (tests run from target subdirs).
+pub fn default_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(d) = std::env::var("COCOA_ARTIFACTS_DIR") {
+        let p = PathBuf::from(d);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    for _ in 0..4 {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !cur.pop() {
+            break;
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let manifest = r#"{
+          "version": 1, "dtype": "f64",
+          "entries": [{
+            "name": "t1", "kind": "local_sdca", "loss": "hinge",
+            "file": "t1.hlo.txt", "dims": {"m": 4, "d": 2, "h": 8},
+            "inputs": [{"name": "x", "shape": [4, 2], "dtype": "f64"}],
+            "outputs": [{"name": "da", "shape": [4], "dtype": "f64"}],
+            "sha256": "00"
+          }]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    }
+
+    #[test]
+    fn parses_fixture() {
+        let dir = std::env::temp_dir().join("cocoa_manifest_test");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.dtype, "f64");
+        assert_eq!(m.entries.len(), 1);
+        let e = m.find("local_sdca").unwrap();
+        assert_eq!(e.dim("m"), Some(4));
+        assert_eq!(e.inputs[0].shape, vec![4, 2]);
+        assert_eq!(e.inputs[0].elements(), 8);
+        assert!(m.hlo_path(e).ends_with("t1.hlo.txt"));
+        assert!(m.find("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        let err = Manifest::load(Path::new("/nonexistent/xyz")).unwrap_err();
+        assert!(matches!(err, ManifestError::Io { .. }));
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Integration-ish: if `make artifacts` has run, the real manifest
+        // must parse and contain both kinds.
+        if let Some(dir) = default_artifacts_dir() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.find("local_sdca").is_ok());
+            assert!(m.find("duality_gap").is_ok());
+        }
+    }
+}

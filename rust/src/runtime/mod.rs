@@ -1,0 +1,163 @@
+//! Runtime bridge: AOT artifacts (HLO text + manifest) loaded and executed
+//! via PJRT from the Rust coordinator. Python is never on this path — it
+//! produced the artifacts once at build time (`make artifacts`).
+
+pub mod artifact;
+pub mod pjrt;
+pub mod xla_solver;
+
+use crate::runtime::artifact::Manifest;
+use crate::runtime::pjrt::{
+    literal_f64_matrix, literal_f64_vec, to_f64_scalar, to_f64_vec, Executable, PjrtRuntime,
+};
+use anyhow::{ensure, Context, Result};
+
+pub use xla_solver::{XlaSdcaProgram, XlaSdcaSolver};
+
+/// The duality-gap certificate evaluator backed by the AOT graph.
+pub struct XlaGapEvaluator {
+    exe: Executable,
+    pub n: usize,
+    pub d: usize,
+}
+
+pub struct XlaCertificates {
+    pub primal: f64,
+    pub dual: f64,
+    pub gap: f64,
+    pub w: Vec<f64>,
+}
+
+impl XlaGapEvaluator {
+    pub fn load(rt: &PjrtRuntime, manifest: &Manifest) -> Result<XlaGapEvaluator> {
+        let entry = manifest.find("duality_gap")?;
+        let exe = rt.load_hlo_text(&manifest.hlo_path(entry))?;
+        Ok(XlaGapEvaluator {
+            exe,
+            n: entry.dim("n").context("manifest missing dim n")?,
+            d: entry.dim("d").context("manifest missing dim d")?,
+        })
+    }
+
+    /// Evaluate certificates for a (dense, row-major, possibly smaller)
+    /// problem; inputs are zero-padded to the artifact's (n, d).
+    pub fn certificates(
+        &self,
+        x_dense: &[f64],
+        rows: usize,
+        cols: usize,
+        y: &[f64],
+        alpha: &[f64],
+        lambda: f64,
+    ) -> Result<XlaCertificates> {
+        ensure!(rows <= self.n, "problem rows {rows} exceed artifact n {}", self.n);
+        ensure!(cols <= self.d, "problem cols {cols} exceed artifact d {}", self.d);
+        ensure!(x_dense.len() == rows * cols);
+        let mut x_pad = vec![0.0f64; self.n * self.d];
+        for i in 0..rows {
+            x_pad[i * self.d..i * self.d + cols].copy_from_slice(&x_dense[i * cols..(i + 1) * cols]);
+        }
+        let mut y_pad = vec![1.0f64; self.n];
+        y_pad[..rows].copy_from_slice(y);
+        let mut alpha_pad = vec![0.0f64; self.n];
+        alpha_pad[..rows].copy_from_slice(alpha);
+        let mut mask = vec![0.0f64; self.n];
+        for m in mask.iter_mut().take(rows) {
+            *m = 1.0;
+        }
+        let out = self.exe.call(&[
+            literal_f64_matrix(&x_pad, self.n, self.d)?,
+            literal_f64_vec(&y_pad),
+            literal_f64_vec(&alpha_pad),
+            literal_f64_vec(&mask),
+            literal_f64_vec(&[lambda]),
+        ])?;
+        ensure!(out.len() == 4, "duality_gap must return 4 outputs");
+        let mut w = to_f64_vec(&out[3])?;
+        w.truncate(cols);
+        Ok(XlaCertificates {
+            primal: to_f64_scalar(&out[0])?,
+            dual: to_f64_scalar(&out[1])?,
+            gap: to_f64_scalar(&out[2])?,
+            w,
+        })
+    }
+}
+
+/// Load every artifact in the manifest, execute each once with benign
+/// inputs, and report. Used by `cocoa artifacts-check`.
+pub fn smoke_test(manifest: &Manifest) -> Result<String> {
+    let rt = PjrtRuntime::cpu()?;
+    let mut report = format!("platform: {}\n", rt.platform());
+
+    // duality_gap: α = 0 on unit rows ⇒ P = 1, D = 0, gap = 1 (hinge).
+    let gap = XlaGapEvaluator::load(&rt, manifest)?;
+    let rows = gap.n.min(32);
+    let cols = gap.d.min(8);
+    let mut x = vec![0.0f64; rows * cols];
+    for i in 0..rows {
+        x[i * cols + i % cols] = 1.0;
+    }
+    let y: Vec<f64> = (0..rows).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let alpha = vec![0.0f64; rows];
+    let certs = gap.certificates(&x, rows, cols, &y, &alpha, 1e-2)?;
+    ensure!(
+        (certs.primal - 1.0).abs() < 1e-9 && certs.dual.abs() < 1e-9,
+        "duality_gap smoke mismatch: P={} D={}",
+        certs.primal,
+        certs.dual
+    );
+    report.push_str(&format!(
+        "duality_gap(n={},d={}): P(0)={:.3} D(0)={:.3} gap={:.3}  OK\n",
+        gap.n, gap.d, certs.primal, certs.dual, certs.gap
+    ));
+
+    // local_sdca: one call on the same toy block must improve the dual.
+    use crate::data::Dataset;
+    use crate::linalg::CsrMatrix;
+    use crate::subproblem::LocalBlock;
+    let program = std::rc::Rc::new(XlaSdcaProgram::load(&rt, manifest)?);
+    let data = Dataset::new("smoke", CsrMatrix::from_dense(rows, cols, &x), y.clone());
+    let rows_idx: Vec<usize> = (0..rows).collect();
+    let block = LocalBlock::from_partition(&data, &rows_idx);
+    let lambda = 1e-2;
+    let lambda_n = lambda * rows as f64;
+    let mut solver = XlaSdcaSolver::new(program, &block, lambda_n, 1.0, 7)?;
+    use crate::solver::{LocalSolveCtx, LocalSolver};
+    use crate::subproblem::SubproblemSpec;
+    let spec = SubproblemSpec {
+        loss: crate::loss::Loss::Hinge,
+        lambda,
+        n_global: rows,
+        sigma_prime: 1.0,
+        k: 1,
+    };
+    let w0 = vec![0.0f64; cols];
+    let alpha0 = vec![0.0f64; rows];
+    let ctx = LocalSolveCtx {
+        block: &block,
+        spec: &spec,
+        w: &w0,
+        alpha_local: &alpha0,
+    };
+    let update = solver.solve(&ctx);
+    let alpha1: Vec<f64> = alpha0
+        .iter()
+        .zip(&update.delta_alpha)
+        .map(|(a, d)| a + d)
+        .collect();
+    let after = gap.certificates(&x, rows, cols, &y, &alpha1, lambda)?;
+    ensure!(
+        after.gap < certs.gap,
+        "local_sdca smoke did not shrink the gap: {} → {}",
+        certs.gap,
+        after.gap
+    );
+    report.push_str(&format!(
+        "local_sdca(H={}): gap {:.4} → {:.4} after one round  OK\n",
+        solver.steps_per_round(),
+        certs.gap,
+        after.gap
+    ));
+    Ok(report)
+}

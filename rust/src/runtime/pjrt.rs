@@ -1,0 +1,149 @@
+//! PJRT bridge: load HLO-text artifacts, compile them once on the CPU
+//! client, execute them from the L3 hot path.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. All artifacts are lowered with
+//! `return_tuple=True`, so outputs always unwrap as a tuple.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A process-wide PJRT CPU client (creating one per executable would leak
+/// threads and startup cost).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact into an executable.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().to_string())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// A compiled computation plus its provenance.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    pub fn call(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = literal.to_tuple().context("decomposing output tuple")?;
+        Ok(parts)
+    }
+}
+
+/// Pack a row-major f64 matrix into a literal of shape `[rows, cols]`.
+pub fn literal_f64_matrix(data: &[f64], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == rows * cols, "matrix size mismatch");
+    xla::Literal::vec1(data)
+        .reshape(&[rows as i64, cols as i64])
+        .context("reshaping matrix literal")
+}
+
+/// Pack an f64 vector literal.
+pub fn literal_f64_vec(data: &[f64]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Pack an i32 vector literal.
+pub fn literal_i32_vec(data: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Unpack a literal into Vec<f64>.
+pub fn to_f64_vec(lit: &xla::Literal) -> Result<Vec<f64>> {
+    lit.to_vec::<f64>().context("reading f64 literal")
+}
+
+/// Unpack a scalar f64.
+pub fn to_f64_scalar(lit: &xla::Literal) -> Result<f64> {
+    lit.get_first_element::<f64>()
+        .context("reading f64 scalar literal")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{default_artifacts_dir, Manifest};
+
+    /// End-to-end PJRT smoke: requires `make artifacts` to have run (the
+    /// Makefile guarantees it before `cargo test`). Skips gracefully in
+    /// environments without the artifacts.
+    #[test]
+    fn load_and_run_duality_gap_artifact() {
+        let Some(dir) = default_artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        let entry = manifest.find("duality_gap").unwrap();
+        let n = entry.dim("n").unwrap();
+        let d = entry.dim("d").unwrap();
+        let rt = PjrtRuntime::cpu().unwrap();
+        let exe = rt.load_hlo_text(&manifest.hlo_path(entry)).unwrap();
+
+        // alpha = 0 on a trivial dataset: P - D = (1/n)Σℓ(0) = 1 for hinge.
+        let mut x = vec![0.0f64; n * d];
+        for i in 0..n {
+            x[i * d + i % d] = 1.0; // unit rows
+        }
+        let y: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let alpha = vec![0.0f64; n];
+        let mask = vec![1.0f64; n];
+        let lam = vec![1e-2f64];
+        let out = exe
+            .call(&[
+                literal_f64_matrix(&x, n, d).unwrap(),
+                literal_f64_vec(&y),
+                literal_f64_vec(&alpha),
+                literal_f64_vec(&mask),
+                literal_f64_vec(&lam),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 4);
+        let primal = to_f64_scalar(&out[0]).unwrap();
+        let dual = to_f64_scalar(&out[1]).unwrap();
+        let gap = to_f64_scalar(&out[2]).unwrap();
+        assert!((primal - 1.0).abs() < 1e-12, "P(0) = {primal}");
+        assert!(dual.abs() < 1e-12, "D(0) = {dual}");
+        assert!((gap - 1.0).abs() < 1e-12, "gap = {gap}");
+        let w = to_f64_vec(&out[3]).unwrap();
+        assert_eq!(w.len(), d);
+        assert!(w.iter().all(|v| v.abs() < 1e-12));
+    }
+}

@@ -1,0 +1,214 @@
+//! The XLA-backed local solver: the same [`LocalSolver`] contract as the
+//! native Rust SDCA, but the inner loop executes the AOT-compiled
+//! L2/L1 graph (`local_sdca` → Pallas SDCA kernel) through PJRT.
+//!
+//! The coordinate index sequence is generated here with the *same* PCG
+//! stream the native solver uses, so `XlaSdcaSolver` and
+//! [`crate::solver::sdca::SdcaSolver`] produce bit-comparable trajectories
+//! (asserted by `rust/tests/xla_runtime.rs`).
+//!
+//! Shapes are monomorphic: the worker's block is zero-padded to the
+//! artifact's (m, d); padding rows carry q_i = 0 and are predicated out
+//! inside the kernel.
+
+use crate::runtime::artifact::{ArtifactEntry, Manifest};
+use crate::runtime::pjrt::{
+    literal_f64_matrix, literal_f64_vec, literal_i32_vec, to_f64_vec, Executable, PjrtRuntime,
+};
+use crate::solver::{LocalSolveCtx, LocalSolver, LocalUpdate};
+use crate::subproblem::LocalBlock;
+use crate::util::rng::Pcg32;
+use anyhow::{ensure, Context, Result};
+use std::rc::Rc;
+
+/// Shared runtime + compiled executable, reused across workers.
+pub struct XlaSdcaProgram {
+    pub exe: Executable,
+    pub m: usize,
+    pub d: usize,
+    pub h: usize,
+}
+
+impl XlaSdcaProgram {
+    pub fn load(rt: &PjrtRuntime, manifest: &Manifest) -> Result<XlaSdcaProgram> {
+        let entry = manifest.find("local_sdca")?;
+        Self::load_entry(rt, manifest, entry)
+    }
+
+    pub fn load_entry(
+        rt: &PjrtRuntime,
+        manifest: &Manifest,
+        entry: &ArtifactEntry,
+    ) -> Result<XlaSdcaProgram> {
+        let exe = rt.load_hlo_text(&manifest.hlo_path(entry))?;
+        Ok(XlaSdcaProgram {
+            exe,
+            m: entry.dim("m").context("manifest missing dim m")?,
+            d: entry.dim("d").context("manifest missing dim d")?,
+            h: entry.dim("h").context("manifest missing dim h")?,
+        })
+    }
+}
+
+/// Per-worker XLA solver instance. Holds the padded dense copies of the
+/// block (packed once) and the PCG stream for index generation.
+pub struct XlaSdcaSolver {
+    program: Rc<XlaSdcaProgram>,
+    /// Rounds of H steps per outer round (the artifact's h is the unit).
+    pub repeats: usize,
+    rng: Pcg32,
+    n_local: usize,
+    x_lit: xla::Literal,
+    y_pad: Vec<f64>,
+    qi_pad: Vec<f64>,
+    lambda_n: f64,
+    sigma_prime: f64,
+}
+
+impl XlaSdcaSolver {
+    /// Pack a worker's block against the compiled program.
+    ///
+    /// `lambda_n` = λ·n_global and `sigma_prime` must match the trainer's
+    /// SubproblemSpec (they are baked into the executed scalars each call,
+    /// not into the artifact).
+    pub fn new(
+        program: Rc<XlaSdcaProgram>,
+        block: &LocalBlock,
+        lambda_n: f64,
+        sigma_prime: f64,
+        seed: u64,
+    ) -> Result<XlaSdcaSolver> {
+        let (m, d) = (program.m, program.d);
+        ensure!(
+            block.n_local() <= m,
+            "block has {} rows but artifact is compiled for m={}; \
+             rebuild artifacts with a larger --m",
+            block.n_local(),
+            m
+        );
+        ensure!(
+            block.d() <= d,
+            "block has {} features but artifact d={}",
+            block.d(),
+            d
+        );
+        // Zero-pad the dense copy: rows beyond n_local stay zero with q=0.
+        let mut x_dense = vec![0.0f64; m * d];
+        for i in 0..block.n_local() {
+            let (idx, vals) = block.x.row(i);
+            for (j, &c) in idx.iter().enumerate() {
+                x_dense[i * d + c as usize] = vals[j];
+            }
+        }
+        let mut y_pad = vec![1.0f64; m];
+        y_pad[..block.n_local()].copy_from_slice(&block.y);
+        let mut qi_pad = vec![0.0f64; m];
+        qi_pad[..block.n_local()].copy_from_slice(&block.norms_sq);
+        let x_lit = literal_f64_matrix(&x_dense, m, d)?;
+        Ok(XlaSdcaSolver {
+            program,
+            repeats: 1,
+            rng: Pcg32::new(seed, 101), // same stream tag as SdcaSolver
+            n_local: block.n_local(),
+            x_lit,
+            y_pad,
+            qi_pad,
+            lambda_n,
+            sigma_prime,
+        })
+    }
+
+    pub fn with_repeats(mut self, repeats: usize) -> Self {
+        self.repeats = repeats.max(1);
+        self
+    }
+
+    /// Total inner steps per outer round.
+    pub fn steps_per_round(&self) -> usize {
+        self.program.h * self.repeats
+    }
+
+    fn call_once(
+        &self,
+        w: &[f64],
+        alpha_pad: &[f64],
+        indices: &[i32],
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let (m, d, h) = (self.program.m, self.program.d, self.program.h);
+        ensure!(indices.len() == h);
+        ensure!(alpha_pad.len() == m);
+        let mut w_pad = vec![0.0f64; d];
+        w_pad[..w.len()].copy_from_slice(w);
+        let out = self.program.exe.call(&[
+            self.x_lit.clone(),
+            literal_f64_vec(&self.y_pad),
+            literal_f64_vec(alpha_pad),
+            literal_f64_vec(&w_pad),
+            literal_f64_vec(&self.qi_pad),
+            literal_i32_vec(indices),
+            literal_f64_vec(&[self.lambda_n, self.sigma_prime]),
+        ])?;
+        ensure!(out.len() == 2, "local_sdca must return (Δα, Δw)");
+        Ok((to_f64_vec(&out[0])?, to_f64_vec(&out[1])?))
+    }
+}
+
+impl LocalSolver for XlaSdcaSolver {
+    fn name(&self) -> String {
+        format!(
+            "xla_sdca(H={}x{},m={},d={})",
+            self.program.h, self.repeats, self.program.m, self.program.d
+        )
+    }
+
+    fn solve(&mut self, ctx: &LocalSolveCtx) -> LocalUpdate {
+        debug_assert_eq!(ctx.block.n_local(), self.n_local);
+        debug_assert!((ctx.spec.lambda * ctx.spec.n_global as f64 - self.lambda_n).abs() < 1e-12);
+        let (m, h) = (self.program.m, self.program.h);
+        let d_model = self.program.d;
+        let d_block = ctx.block.d();
+
+        let mut alpha_pad = vec![0.0f64; m];
+        alpha_pad[..self.n_local].copy_from_slice(ctx.alpha_local);
+        let mut delta_alpha = vec![0.0f64; self.n_local];
+        let mut delta_w = vec![0.0f64; d_block];
+        let mut w_cur: Vec<f64> = ctx.w.to_vec();
+
+        for _ in 0..self.repeats {
+            // Same index-generation contract as the native SdcaSolver:
+            // uniform over the *real* rows only.
+            let indices: Vec<i32> = (0..h)
+                .map(|_| self.rng.gen_range(self.n_local) as i32)
+                .collect();
+            let (da, dw) = self
+                .call_once(&w_cur, &alpha_pad, &indices)
+                .expect("XLA local_sdca execution failed");
+            for i in 0..self.n_local {
+                alpha_pad[i] += da[i];
+                delta_alpha[i] += da[i];
+            }
+            for j in 0..d_block {
+                delta_w[j] += dw[j];
+                // chained repeats continue from the locally updated image
+                w_cur[j] += self.sigma_prime * dw[j];
+            }
+            let _ = d_model;
+        }
+        LocalUpdate {
+            delta_alpha,
+            delta_w,
+            steps: h * self.repeats,
+        }
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.rng = Pcg32::new(seed, 101);
+    }
+}
+
+// SAFETY: PjRtLoadedExecutable wraps a thread-safe PJRT CPU executable
+// (TfrtCpuClient supports concurrent Execute calls); the Rc is never
+// shared across threads because the coordinator moves whole workers. We
+// still default all XLA runs to `parallel=false`; this impl exists so the
+// type satisfies the `LocalSolver: Send` bound.
+unsafe impl Send for XlaSdcaSolver {}

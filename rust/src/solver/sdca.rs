@@ -1,0 +1,214 @@
+//! LOCALSDCA (Algorithm 2 of the paper): randomized dual coordinate ascent
+//! on the local subproblem G_k^{σ'}.
+//!
+//! Per inner step h: draw i ∈ P_k uniformly, solve the 1-D problem
+//!   δ* = argmax_δ G_k^{σ'}(Δα + δ e_i)
+//! in closed form (loss-specific, see `loss::*::coordinate_delta`), and
+//! update the local primal image v ← v + (σ'/(λn)) δ x_i. Theorems 13/14
+//! bound the number of inner steps H needed for a target Θ.
+//!
+//! The hot loop is two sparse kernels per step (`row_dot`, `row_axpy`) and
+//! is completely allocation-free after setup.
+
+use crate::solver::{delta_w_from_v, LocalSolveCtx, LocalSolver, LocalUpdate};
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Debug)]
+pub struct SdcaSolver {
+    /// Number of inner coordinate steps per outer round. The paper sweeps
+    /// H ∈ {1e4, 1e5, 1e6}; a common default is a multiple of n_k.
+    pub h: usize,
+    rng: Pcg32,
+    /// Scratch: local primal image v (reused across rounds).
+    v: Vec<f64>,
+    /// Scratch: per-round index sequence (reused across rounds).
+    indices: Vec<usize>,
+}
+
+impl SdcaSolver {
+    pub fn new(h: usize, seed: u64) -> SdcaSolver {
+        SdcaSolver {
+            h,
+            rng: Pcg32::new(seed, 101),
+            v: Vec::new(),
+            indices: Vec::new(),
+        }
+    }
+
+    /// H as a multiple of the local datapoint count ("epochs").
+    pub fn with_epochs(epochs: f64, n_local: usize, seed: u64) -> SdcaSolver {
+        let h = ((n_local as f64 * epochs).round() as usize).max(1);
+        SdcaSolver::new(h, seed)
+    }
+
+    /// Run the inner loop with an externally supplied coordinate sequence
+    /// (used by the XLA-equivalence tests: the Rust and AOT solvers consume
+    /// the same index stream and must produce identical trajectories).
+    pub fn solve_with_indices(
+        &mut self,
+        ctx: &LocalSolveCtx,
+        indices: &[usize],
+    ) -> LocalUpdate {
+        let block = ctx.block;
+        let spec = ctx.spec;
+        let nk = block.n_local();
+        assert!(nk > 0, "empty local block");
+
+        // v = w (then updated in place); delta starts at 0.
+        self.v.clear();
+        self.v.extend_from_slice(ctx.w);
+        let v = &mut self.v;
+        let mut delta = vec![0.0; nk];
+        let v_scale = spec.v_scale();
+
+        for &i in indices {
+            let q = block.norms_sq[i];
+            if q == 0.0 {
+                continue; // empty row cannot move the objective
+            }
+            let xv = block.x.row_dot(i, v);
+            let coef = spec.coef(q);
+            let d = spec
+                .loss
+                .coordinate_delta(ctx.alpha_local[i] + delta[i], block.y[i], xv, coef);
+            if d != 0.0 {
+                delta[i] += d;
+                block.x.row_axpy(i, v_scale * d, v);
+            }
+        }
+
+        let delta_w = delta_w_from_v(ctx.w, v, spec.sigma_prime);
+        LocalUpdate {
+            delta_alpha: delta,
+            delta_w,
+            steps: indices.len(),
+        }
+    }
+}
+
+impl LocalSolver for SdcaSolver {
+    fn name(&self) -> String {
+        format!("sdca(H={})", self.h)
+    }
+
+    fn solve(&mut self, ctx: &LocalSolveCtx) -> LocalUpdate {
+        let nk = ctx.block.n_local();
+        // Draw the index sequence first (borrow discipline: rng vs &mut
+        // self), into the reused scratch buffer.
+        let mut indices = std::mem::take(&mut self.indices);
+        indices.clear();
+        indices.reserve(self.h);
+        for _ in 0..self.h {
+            indices.push(self.rng.gen_range(nk));
+        }
+        let out = self.solve_with_indices(ctx, &indices);
+        self.indices = indices; // return scratch for the next round
+        out
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.rng = Pcg32::new(seed, 101);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::Loss;
+    use crate::solver::test_fixtures::{check_solver_contract, fixture};
+    use crate::subproblem::subproblem_value;
+
+    #[test]
+    fn contract_all_losses() {
+        for loss in [
+            Loss::Hinge,
+            Loss::SmoothedHinge { mu: 0.5 },
+            Loss::Logistic,
+            Loss::Squared,
+        ] {
+            let mut s = SdcaSolver::new(200, 5);
+            check_solver_contract(&mut s, loss);
+        }
+    }
+
+    #[test]
+    fn more_inner_steps_more_gain() {
+        let (_d, _p, blocks, spec) = fixture(60, 8, 2, Loss::Hinge, 0.02);
+        let block = &blocks[0];
+        let w = vec![0.0; block.d()];
+        let alpha = vec![0.0; block.n_local()];
+        let ctx = LocalSolveCtx {
+            block,
+            spec: &spec,
+            w: &w,
+            alpha_local: &alpha,
+        };
+        let gain = |h: usize| {
+            let mut s = SdcaSolver::new(h, 7);
+            let out = s.solve(&ctx);
+            subproblem_value(block, &spec, &w, &alpha, &out.delta_alpha)
+        };
+        let g_small = gain(10);
+        let g_big = gain(2000);
+        assert!(
+            g_big >= g_small - 1e-12,
+            "H=2000 ({g_big}) should beat H=10 ({g_small})"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (_d, _p, blocks, spec) = fixture(40, 6, 2, Loss::Hinge, 0.05);
+        let block = &blocks[0];
+        let w = vec![0.0; block.d()];
+        let alpha = vec![0.0; block.n_local()];
+        let ctx = LocalSolveCtx {
+            block,
+            spec: &spec,
+            w: &w,
+            alpha_local: &alpha,
+        };
+        let mut s1 = SdcaSolver::new(100, 9);
+        let mut s2 = SdcaSolver::new(100, 9);
+        assert_eq!(s1.solve(&ctx).delta_alpha, s2.solve(&ctx).delta_alpha);
+        let mut s3 = SdcaSolver::new(100, 10);
+        assert_ne!(s1.reseed_then_solve(&ctx, 9), s3.solve(&ctx).delta_alpha);
+    }
+
+    impl SdcaSolver {
+        fn reseed_then_solve(&mut self, ctx: &LocalSolveCtx, seed: u64) -> Vec<f64> {
+            self.reseed(seed);
+            self.solve(ctx).delta_alpha
+        }
+    }
+
+    #[test]
+    fn epochs_constructor() {
+        let s = SdcaSolver::with_epochs(2.5, 40, 0);
+        assert_eq!(s.h, 100);
+        let s1 = SdcaSolver::with_epochs(0.0001, 40, 0);
+        assert_eq!(s1.h, 1);
+    }
+
+    #[test]
+    fn index_injection_reproduces_solve() {
+        let (_d, _p, blocks, spec) = fixture(30, 5, 2, Loss::Hinge, 0.05);
+        let block = &blocks[0];
+        let w = vec![0.0; block.d()];
+        let alpha = vec![0.0; block.n_local()];
+        let ctx = LocalSolveCtx {
+            block,
+            spec: &spec,
+            w: &w,
+            alpha_local: &alpha,
+        };
+        // Manually draw the same indices the solver would draw.
+        let mut rng = Pcg32::new(3, 101);
+        let idx: Vec<usize> = (0..50).map(|_| rng.gen_range(block.n_local())).collect();
+        let mut s_auto = SdcaSolver::new(50, 3);
+        let auto = s_auto.solve(&ctx);
+        let mut s_inj = SdcaSolver::new(50, 999);
+        let inj = s_inj.solve_with_indices(&ctx, &idx);
+        assert_eq!(auto.delta_alpha, inj.delta_alpha);
+    }
+}

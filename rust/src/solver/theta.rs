@@ -1,0 +1,131 @@
+//! Empirical estimation of a local solver's approximation quality Θ
+//! (Assumption 1, Eq. 12):
+//!
+//!   Θ ≈ [G(Δα*) − G(Δα)] / [G(Δα*) − G(0)]
+//!
+//! where Δα* is approximated by a long reference SDCA run. Used by the
+//! rate-checking experiment (`experiments/rates.rs`) to plug measured Θ
+//! into Theorems 8/10 and compare predicted vs observed round counts.
+
+use crate::solver::sdca::SdcaSolver;
+use crate::solver::{LocalSolveCtx, LocalSolver};
+use crate::subproblem::subproblem_value;
+
+/// Result of a Θ estimate on one block/state.
+#[derive(Clone, Copy, Debug)]
+pub struct ThetaEstimate {
+    pub theta: f64,
+    /// G_k(0) — the baseline value.
+    pub g_zero: f64,
+    /// G_k at the solver's output.
+    pub g_solver: f64,
+    /// G_k at the (approximate) optimum.
+    pub g_star: f64,
+}
+
+/// Estimate Θ for `solver` on the given round state. `ref_epochs` controls
+/// how long the reference SDCA runs to approximate Δα*.
+pub fn estimate_theta(
+    solver: &mut dyn LocalSolver,
+    ctx: &LocalSolveCtx,
+    ref_epochs: usize,
+    seed: u64,
+) -> ThetaEstimate {
+    let nk = ctx.block.n_local();
+    let zeros = vec![0.0; nk];
+    let g_zero = subproblem_value(ctx.block, ctx.spec, ctx.w, ctx.alpha_local, &zeros);
+
+    let out = solver.solve(ctx);
+    let g_solver = subproblem_value(ctx.block, ctx.spec, ctx.w, ctx.alpha_local, &out.delta_alpha);
+
+    let mut reference = SdcaSolver::new(nk * ref_epochs.max(1), seed);
+    let ref_out = reference.solve(ctx);
+    let g_star = subproblem_value(
+        ctx.block,
+        ctx.spec,
+        ctx.w,
+        ctx.alpha_local,
+        &ref_out.delta_alpha,
+    )
+    .max(g_solver); // Δα* is at least as good as anything we saw
+
+    let denom = g_star - g_zero;
+    let theta = if denom <= 1e-15 {
+        0.0 // subproblem already optimal: any solver is Θ=0
+    } else {
+        ((g_star - g_solver) / denom).clamp(0.0, 1.0)
+    };
+    ThetaEstimate {
+        theta,
+        g_zero,
+        g_solver,
+        g_star,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::Loss;
+    use crate::solver::test_fixtures::fixture;
+
+    #[test]
+    fn theta_decreases_with_inner_work() {
+        let (_d, _p, blocks, spec) = fixture(60, 8, 2, Loss::Hinge, 0.02);
+        let block = &blocks[0];
+        let w = vec![0.0; block.d()];
+        let alpha = vec![0.0; block.n_local()];
+        let ctx = LocalSolveCtx {
+            block,
+            spec: &spec,
+            w: &w,
+            alpha_local: &alpha,
+        };
+        let theta_of = |h: usize| {
+            let mut s = SdcaSolver::new(h, 11);
+            estimate_theta(&mut s, &ctx, 60, 12).theta
+        };
+        let weak = theta_of(5);
+        let strong = theta_of(3000);
+        assert!(
+            strong <= weak + 1e-9,
+            "H=3000 Θ={strong} should be ≤ H=5 Θ={weak}"
+        );
+        assert!(strong < 0.2, "long run should be near-exact, Θ={strong}");
+        assert!((0.0..=1.0).contains(&weak));
+    }
+
+    #[test]
+    fn theta_zero_when_already_optimal() {
+        // Start from a state where the subproblem optimum is ~0 gain:
+        // run a long solve first, then re-estimate from that point.
+        let (_d, _p, blocks, spec) = fixture(40, 6, 2, Loss::Squared, 0.1);
+        let block = &blocks[0];
+        let w = vec![0.0; block.d()];
+        let alpha0 = vec![0.0; block.n_local()];
+        let ctx0 = LocalSolveCtx {
+            block,
+            spec: &spec,
+            w: &w,
+            alpha_local: &alpha0,
+        };
+        let mut long = SdcaSolver::new(block.n_local() * 200, 1);
+        let out = long.solve(&ctx0);
+        let alpha1: Vec<f64> = alpha0
+            .iter()
+            .zip(&out.delta_alpha)
+            .map(|(a, d)| a + d)
+            .collect();
+        // NOTE: w is *not* updated here — we only care that from (w, α₁) the
+        // remaining subproblem gain is tiny relative to denominators.
+        let ctx1 = LocalSolveCtx {
+            block,
+            spec: &spec,
+            w: &w,
+            alpha_local: &alpha1,
+        };
+        let mut s = SdcaSolver::new(block.n_local() * 50, 2);
+        let est = estimate_theta(&mut s, &ctx1, 100, 3);
+        assert!(est.theta < 0.5, "near-converged state should give small Θ");
+    }
+}

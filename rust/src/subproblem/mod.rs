@@ -1,0 +1,274 @@
+//! The data-local subproblem `G_k^{σ'}` of CoCoA+ (Eq. 8–9) — the paper's
+//! central object. Each worker k holds a [`LocalBlock`] (its partition of
+//! the data) and maximizes
+//!
+//!   G_k^{σ'}(Δα_[k]; w, α_[k]) = −(1/n) Σ_{i∈P_k} ℓ*_i(−α_i − Δα_i)
+//!       − (λ/2K)‖w‖² − (1/n) wᵀ A Δα_[k] − (λσ'/2) ‖A Δα_[k]/(λn)‖²
+//!
+//! approximately (Assumption 1, Θ-quality). The quadratic term scaled by σ'
+//! is what makes additive aggregation (γ=1) safe: Lemma 3 shows that for
+//! σ' ≥ γ·max ‖AΔ‖²/Σ‖AΔ_[k]‖², the sum of local gains lower-bounds the
+//! global dual improvement.
+
+pub mod sigma;
+
+use crate::data::{Dataset, Partition};
+use crate::linalg::{dense, CsrMatrix};
+use crate::loss::Loss;
+
+/// Worker k's resident slice of the problem.
+#[derive(Clone, Debug)]
+pub struct LocalBlock {
+    /// Local rows (n_k × d), full column space.
+    pub x: CsrMatrix,
+    /// Local labels.
+    pub y: Vec<f64>,
+    /// Precomputed ‖x_i‖² for the local rows.
+    pub norms_sq: Vec<f64>,
+    /// Global row index of each local row (for scattering Δα back).
+    pub global_idx: Vec<usize>,
+}
+
+impl LocalBlock {
+    pub fn from_partition(data: &Dataset, part_rows: &[usize]) -> LocalBlock {
+        let x = data.x.select_rows(part_rows);
+        let y = part_rows.iter().map(|&r| data.y[r]).collect();
+        let norms_sq = part_rows.iter().map(|&r| data.row_norms_sq[r]).collect();
+        LocalBlock {
+            x,
+            y,
+            norms_sq,
+            global_idx: part_rows.to_vec(),
+        }
+    }
+
+    /// Build all K blocks of a partition.
+    pub fn split(data: &Dataset, partition: &Partition) -> Vec<LocalBlock> {
+        partition
+            .parts
+            .iter()
+            .map(|rows| LocalBlock::from_partition(data, rows))
+            .collect()
+    }
+
+    pub fn n_local(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols
+    }
+}
+
+/// Hyperparameters of the local subproblem, fixed per run.
+#[derive(Clone, Copy, Debug)]
+pub struct SubproblemSpec {
+    pub loss: Loss,
+    pub lambda: f64,
+    /// Global number of datapoints n (the subproblem scales by 1/n, not 1/n_k).
+    pub n_global: usize,
+    /// σ' — the subproblem difficulty parameter (Eq. 11; safe choice γK).
+    pub sigma_prime: f64,
+    /// K — number of workers (only enters through the constant ‖w‖² term).
+    pub k: usize,
+}
+
+impl SubproblemSpec {
+    /// Per-coordinate quadratic coefficient σ'‖x_i‖²/(λn): the curvature of
+    /// the 1-D problem solved by each SDCA step.
+    #[inline]
+    pub fn coef(&self, norm_sq: f64) -> f64 {
+        self.sigma_prime * norm_sq / (self.lambda * self.n_global as f64)
+    }
+
+    /// Step scale for maintaining the local primal image
+    /// v = w + (σ'/(λn))·A Δα: each δ on row i adds `v_scale·δ·x_i`.
+    #[inline]
+    pub fn v_scale(&self) -> f64 {
+        self.sigma_prime / (self.lambda * self.n_global as f64)
+    }
+}
+
+/// Evaluate G_k^{σ'}(Δα; w, α) exactly (Eq. 9). Used by tests, by the
+/// Θ-quality estimator, and by monotonicity checks — not on the hot path.
+pub fn subproblem_value(
+    block: &LocalBlock,
+    spec: &SubproblemSpec,
+    w: &[f64],
+    alpha_local: &[f64],
+    delta_local: &[f64],
+) -> f64 {
+    let n = spec.n_global as f64;
+    let nk = block.n_local();
+    assert_eq!(alpha_local.len(), nk);
+    assert_eq!(delta_local.len(), nk);
+
+    // −(1/n) Σ ℓ*(−(α+Δ))
+    let mut conj = 0.0;
+    for i in 0..nk {
+        let c = spec
+            .loss
+            .conjugate_neg(alpha_local[i] + delta_local[i], block.y[i]);
+        if c.is_infinite() {
+            return f64::NEG_INFINITY;
+        }
+        conj += c;
+    }
+
+    // A Δα (in feature space)
+    let mut a_delta = vec![0.0; block.d()];
+    block.x.matvec_t(delta_local, &mut a_delta);
+
+    let term_conj = -conj / n;
+    let term_reg = -(0.5 * spec.lambda / spec.k as f64) * dense::norm_sq(w);
+    let term_lin = -dense::dot(w, &a_delta) / n;
+    let term_quad = -0.5 * spec.lambda * spec.sigma_prime
+        * dense::norm_sq(&a_delta)
+        / (spec.lambda * n).powi(2);
+    term_conj + term_reg + term_lin + term_quad
+}
+
+/// Lemma 3 right-hand side: (1−γ)·D(α) + γ·Σ_k G_k^{σ'}(Δα_[k]) — used by
+/// the property tests to verify the paper's key inequality on instances.
+pub fn lemma3_rhs(d_alpha: f64, gamma: f64, local_gains: &[f64]) -> f64 {
+    (1.0 - gamma) * d_alpha + gamma * local_gains.iter().sum::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::random_balanced;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::objective::Problem;
+    use crate::util::rng::Pcg32;
+
+    fn setup(k: usize) -> (Problem, Vec<LocalBlock>, Partition) {
+        let data = generate(&SynthConfig::new("t", 60, 8).seed(3));
+        let part = random_balanced(60, k, 7);
+        let blocks = LocalBlock::split(&data, &part);
+        let p = Problem::new(data, Loss::Hinge, 0.05);
+        (p, blocks, part)
+    }
+
+    #[test]
+    fn blocks_cover_dataset() {
+        let (p, blocks, part) = setup(4);
+        assert!(part.is_exact_cover());
+        let total: usize = blocks.iter().map(|b| b.n_local()).sum();
+        assert_eq!(total, p.n());
+        for b in &blocks {
+            for (li, &gi) in b.global_idx.iter().enumerate() {
+                assert_eq!(b.y[li], p.data.y[gi]);
+                assert_eq!(b.x.row(li).1, p.data.x.row(gi).1);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_delta_value_matches_dual_decomposition() {
+        // Σ_k G_k^{σ'}(0; w, α) should equal D(α) when σ' arbitrary (the Δ
+        // terms vanish and the ‖w‖² term splits as K·(1/K)).
+        let (p, blocks, part) = setup(3);
+        let n = p.n();
+        let mut rng = Pcg32::seeded(9);
+        let alpha: Vec<f64> = (0..n).map(|i| p.data.y[i] * rng.next_f64()).collect();
+        let mut w = vec![0.0; p.d()];
+        p.primal_from_dual(&alpha, &mut w);
+        let d_val = p.dual_value(&alpha, &w);
+
+        let spec = SubproblemSpec {
+            loss: p.loss,
+            lambda: p.lambda,
+            n_global: n,
+            sigma_prime: 2.0,
+            k: part.k(),
+        };
+        let mut total = 0.0;
+        for (k, b) in blocks.iter().enumerate() {
+            let alpha_local: Vec<f64> =
+                part.parts[k].iter().map(|&gi| alpha[gi]).collect();
+            let zeros = vec![0.0; b.n_local()];
+            total += subproblem_value(b, &spec, &w, &alpha_local, &zeros);
+        }
+        assert!((total - d_val).abs() < 1e-9, "{total} vs {d_val}");
+    }
+
+    #[test]
+    fn lemma3_inequality_holds_for_safe_sigma() {
+        // D(α + γ ΣΔ_[k]) ≥ (1−γ)D(α) + γ Σ G_k(Δ_[k]) when σ' = γK.
+        let (p, blocks, part) = setup(4);
+        let n = p.n();
+        let gamma = 1.0;
+        let spec = SubproblemSpec {
+            loss: p.loss,
+            lambda: p.lambda,
+            n_global: n,
+            sigma_prime: gamma * part.k() as f64,
+            k: part.k(),
+        };
+        let mut rng = Pcg32::seeded(21);
+        // start from a feasible dual point
+        let alpha: Vec<f64> = (0..n).map(|i| p.data.y[i] * 0.3 * rng.next_f64()).collect();
+        let mut w = vec![0.0; p.d()];
+        p.primal_from_dual(&alpha, &mut w);
+        let d_before = p.dual_value(&alpha, &w);
+
+        // random feasible local deltas
+        let mut new_alpha = alpha.clone();
+        let mut gains = Vec::new();
+        for (k, b) in blocks.iter().enumerate() {
+            let alpha_local: Vec<f64> =
+                part.parts[k].iter().map(|&gi| alpha[gi]).collect();
+            let delta: Vec<f64> = (0..b.n_local())
+                .map(|i| {
+                    let target = b.y[i] * rng.next_f64();
+                    target - alpha_local[i]
+                })
+                .collect();
+            gains.push(subproblem_value(b, &spec, &w, &alpha_local, &delta));
+            for (li, &gi) in b.global_idx.iter().enumerate() {
+                new_alpha[gi] += gamma * delta[li];
+            }
+        }
+        let mut w_new = vec![0.0; p.d()];
+        p.primal_from_dual(&new_alpha, &mut w_new);
+        let d_after = p.dual_value(&new_alpha, &w_new);
+        let rhs = lemma3_rhs(d_before, gamma, &gains);
+        assert!(
+            d_after + 1e-9 >= rhs,
+            "Lemma 3 violated: D_after={d_after} rhs={rhs}"
+        );
+    }
+
+    #[test]
+    fn coef_and_vscale_consistent() {
+        let spec = SubproblemSpec {
+            loss: Loss::Hinge,
+            lambda: 0.1,
+            n_global: 100,
+            sigma_prime: 4.0,
+            k: 4,
+        };
+        // coef(q) = v_scale * q
+        assert!((spec.coef(2.5) - spec.v_scale() * 2.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn infeasible_delta_is_neg_inf() {
+        let (p, blocks, part) = setup(2);
+        let spec = SubproblemSpec {
+            loss: p.loss,
+            lambda: p.lambda,
+            n_global: p.n(),
+            sigma_prime: 2.0,
+            k: part.k(),
+        };
+        let b = &blocks[0];
+        let w = vec![0.0; p.d()];
+        let alpha_local = vec![0.0; b.n_local()];
+        let mut delta = vec![0.0; b.n_local()];
+        delta[0] = -10.0 * b.y[0]; // pushes yα far below 0
+        let v = subproblem_value(b, &spec, &w, &alpha_local, &delta);
+        assert_eq!(v, f64::NEG_INFINITY);
+    }
+}

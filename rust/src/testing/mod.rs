@@ -1,0 +1,3 @@
+//! Mini property-testing harness (the offline registry has no proptest).
+
+pub mod prop;

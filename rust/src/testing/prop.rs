@@ -1,0 +1,135 @@
+//! Seeded property-testing harness — a from-scratch stand-in for proptest
+//! (unavailable offline). Generators draw from [`Pcg32`]; `forall` runs a
+//! predicate over many generated cases and reports the seed of the first
+//! failure so it can be replayed exactly.
+//!
+//! ```no_run
+//! use cocoa::testing::prop::{forall, Gen};
+//! forall("dot is symmetric", 50, |g| {
+//!     let xs = g.vec_f64(10, -5.0, 5.0);
+//!     let ys = g.vec_f64(10, -5.0, 5.0);
+//!     let a = cocoa::linalg::dense::dot(&xs, &ys);
+//!     let b = cocoa::linalg::dense::dot(&ys, &xs);
+//!     assert!((a - b).abs() < 1e-12);
+//! });
+//! ```
+
+use crate::util::rng::Pcg32;
+
+/// A case generator handed to each property iteration.
+pub struct Gen {
+    pub rng: Pcg32,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi_excl: usize) -> usize {
+        assert!(hi_excl > lo);
+        lo + self.rng.gen_range(hi_excl - lo)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// Log-uniform positive float (for λ, tolerances, …).
+    pub fn f64_log(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(lo > 0.0 && hi > lo);
+        (self.rng.uniform(lo.ln(), hi.ln())).exp()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn gaussian_vec(&mut self, n: usize) -> Vec<f64> {
+        self.rng.gaussian_vec(n)
+    }
+
+    /// ±1 labels.
+    pub fn labels(&mut self, n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|_| if self.bool() { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, options: &'a [T]) -> &'a T {
+        &options[self.rng.gen_range(options.len())]
+    }
+}
+
+/// Run `body` for `cases` generated cases. Panics (with the case seed in
+/// the message) on the first failing case. Override the master seed with
+/// `COCOA_PROP_SEED` to replay a failure.
+pub fn forall(name: &str, cases: usize, mut body: impl FnMut(&mut Gen)) {
+    let master: u64 = std::env::var("COCOA_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0C0_A000);
+    for case in 0..cases {
+        let case_seed = master
+            .wrapping_add((case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut gen = Gen {
+            rng: Pcg32::new(case_seed, 777),
+            case_seed,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut gen)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property {name:?} failed at case {case}/{cases} \
+                 (replay with COCOA_PROP_SEED={master}, case seed {case_seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("usize bounds", 100, |g| {
+            let v = g.usize_in(3, 10);
+            assert!((3..10).contains(&v));
+        });
+    }
+
+    #[test]
+    fn forall_reports_failures() {
+        let result = std::panic::catch_unwind(|| {
+            forall("always fails", 5, |_| panic!("boom"));
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("always fails"));
+        assert!(msg.contains("replay"));
+    }
+
+    #[test]
+    fn log_uniform_in_range() {
+        forall("log uniform", 200, |g| {
+            let v = g.f64_log(1e-6, 1e-1);
+            assert!((1e-6..=1e-1).contains(&v));
+        });
+    }
+
+    #[test]
+    fn labels_are_plus_minus_one() {
+        forall("labels", 20, |g| {
+            let n = g.usize_in(1, 30);
+            for y in g.labels(n) {
+                assert!(y == 1.0 || y == -1.0);
+            }
+        });
+    }
+}

@@ -1,0 +1,164 @@
+//! Micro-benchmark harness (the offline registry has no `criterion`).
+//!
+//! Usage from a `[[bench]] harness = false` target:
+//! ```ignore
+//! let mut b = Bench::new("sdca_epoch");
+//! b.run("sparse_n10000", || solver.epoch(&mut state));
+//! b.report();
+//! ```
+//! Each case is warmed up, then sampled `samples` times; we report mean,
+//! p50, p95, and min. `black_box` prevents the optimizer from deleting the
+//! measured work.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+#[derive(Clone, Debug)]
+pub struct CaseResult {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl CaseResult {
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len() as u32
+    }
+    pub fn percentile(&self, p: f64) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort();
+        let idx = ((s.len() as f64 - 1.0) * p).round() as usize;
+        s[idx]
+    }
+    pub fn min(&self) -> Duration {
+        *self.samples.iter().min().unwrap()
+    }
+}
+
+pub struct Bench {
+    pub suite: String,
+    pub warmup: usize,
+    pub samples: usize,
+    pub results: Vec<CaseResult>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        // Environment knobs so CI / quick runs can shrink the work.
+        let warmup = std::env::var("BENCH_WARMUP")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(2);
+        let samples = std::env::var("BENCH_SAMPLES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(7);
+        Self {
+            suite: suite.to_string(),
+            warmup,
+            samples,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_samples(mut self, samples: usize) -> Self {
+        self.samples = samples;
+        self
+    }
+
+    /// Time `f` (already including any per-iteration setup it owns).
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &CaseResult {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        self.results.push(CaseResult {
+            name: name.to_string(),
+            samples,
+        });
+        self.results.last().unwrap()
+    }
+
+    pub fn report(&self) {
+        println!("\n== bench suite: {} ==", self.suite);
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>12}",
+            "case", "mean", "p50", "p95", "min"
+        );
+        for r in &self.results {
+            println!(
+                "{:<44} {:>12} {:>12} {:>12} {:>12}",
+                r.name,
+                fmt_dur(r.mean()),
+                fmt_dur(r.percentile(0.5)),
+                fmt_dur(r.percentile(0.95)),
+                fmt_dur(r.min()),
+            );
+        }
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench::new("test").with_samples(3);
+        b.warmup = 1;
+        let r = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(r.samples.len(), 3);
+        assert!(r.min() > Duration::ZERO);
+        assert!(r.mean() >= r.min());
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.50ms");
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let r = CaseResult {
+            name: "x".into(),
+            samples: vec![
+                Duration::from_millis(1),
+                Duration::from_millis(5),
+                Duration::from_millis(3),
+            ],
+        };
+        assert!(r.percentile(0.0) <= r.percentile(0.5));
+        assert!(r.percentile(0.5) <= r.percentile(1.0));
+        assert_eq!(r.min(), Duration::from_millis(1));
+    }
+}

@@ -1,0 +1,170 @@
+//! A tiny command-line argument parser (no `clap` in the offline registry).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Typed getters parse on demand and report readable errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    out.flags
+                        .insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else {
+                    // `--key value` unless next token is another flag / absent.
+                    let is_value_next = it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if is_value_next {
+                        let v = it.next().unwrap();
+                        out.flags.insert(body.to_string(), v);
+                    } else {
+                        out.flags.insert(body.to_string(), "true".to_string());
+                    }
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        match self.flags.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key} expects an integer, got {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        match self.flags.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key} expects an integer, got {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        match self.flags.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key} expects a float, got {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.flags.get(key).map(|s| s.as_str()) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => panic!("--{key} expects a boolean, got {v:?}"),
+        }
+    }
+
+    /// Parse a comma-separated list of floats, e.g. `--lambdas 1e-4,1e-5`.
+    pub fn get_f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.flags.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .unwrap_or_else(|e| panic!("--{key}: bad float {t:?}: {e}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Parse a comma-separated list of integers, e.g. `--ks 4,8,16`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.flags.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .unwrap_or_else(|e| panic!("--{key}: bad integer {t:?}: {e}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        // binding is greedy: `--flag token` consumes the token as a value,
+        // so boolean flags either go last or use `--flag=true`.
+        let a = parse("train data.svm --k 8 --gamma=1.0 --verbose");
+        assert_eq!(a.positional, vec!["train", "data.svm"]);
+        assert_eq!(a.get_usize("k", 1), 8);
+        assert_eq!(a.get_f64("gamma", 0.0), 1.0);
+        assert!(a.get_bool("verbose", false));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_usize("k", 4), 4);
+        assert_eq!(a.get_str("loss", "hinge"), "hinge");
+        assert!(!a.get_bool("quiet", false));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--lambdas 1e-4,1e-5 --ks 2,4,8");
+        assert_eq!(a.get_f64_list("lambdas", &[]), vec![1e-4, 1e-5]);
+        assert_eq!(a.get_usize_list("ks", &[]), vec![2, 4, 8]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse("--quiet --k 3");
+        assert!(a.get_bool("quiet", false));
+        assert_eq!(a.get_usize("k", 0), 3);
+    }
+}

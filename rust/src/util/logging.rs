@@ -1,0 +1,105 @@
+//! Leveled stderr logger (no external logging backends offline).
+//!
+//! Verbosity is process-global and settable from the CLI (`--log debug`) or
+//! the `COCOA_LOG` environment variable. The coordinator logs one line per
+//! round at `Debug` and per-experiment summaries at `Info`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+pub fn parse_level(s: &str) -> Option<Level> {
+    match s.to_ascii_lowercase().as_str() {
+        "error" => Some(Level::Error),
+        "warn" | "warning" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        "trace" => Some(Level::Trace),
+        _ => None,
+    }
+}
+
+/// Initialize from `COCOA_LOG` if present.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("COCOA_LOG") {
+        if let Some(l) = parse_level(&v) {
+            set_level(l);
+        }
+    }
+}
+
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+pub fn log(l: Level, msg: std::fmt::Arguments) {
+    if enabled(l) {
+        let tag = match l {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_error { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_warn  { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn,  format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_info  { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info,  format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($t)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(parse_level("debug"), Some(Level::Debug));
+        assert_eq!(parse_level("WARN"), Some(Level::Warn));
+        assert_eq!(parse_level("bogus"), None);
+    }
+
+    #[test]
+    fn set_and_query() {
+        let old = level();
+        set_level(Level::Error);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Error));
+        set_level(old);
+    }
+}

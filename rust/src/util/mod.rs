@@ -1,0 +1,9 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! RNG, JSON, CLI parsing, timing, logging, and a micro-bench harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,125 @@
+//! CLI smoke tests: drive the built `cocoa` binary end-to-end as a user
+//! would (subprocess), covering train / gen-data / sigma / experiment
+//! quick paths and failure modes.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn cocoa_bin() -> Option<PathBuf> {
+    // target/<profile>/cocoa next to the test binary
+    let mut p = std::env::current_exe().ok()?;
+    p.pop(); // deps/
+    p.pop(); // release|debug/
+    p.push("cocoa");
+    p.exists().then_some(p)
+}
+
+macro_rules! require_bin {
+    () => {
+        match cocoa_bin() {
+            Some(b) => b,
+            None => {
+                eprintln!("skipping: cocoa binary not built (run cargo build first)");
+                return;
+            }
+        }
+    };
+}
+
+fn run(bin: &PathBuf, args: &[&str]) -> (i32, String, String) {
+    let out = Command::new(bin)
+        .args(args)
+        .env("COCOA_RESULTS_DIR", std::env::temp_dir().join("cocoa_cli_smoke"))
+        .output()
+        .expect("spawn cocoa");
+    (
+        out.status.code().unwrap_or(-1),
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+    )
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let bin = require_bin!();
+    let (code, stdout, _) = run(&bin, &["help"]);
+    assert_eq!(code, 0);
+    for sub in ["train", "gen-data", "sigma", "experiment", "artifacts-check"] {
+        assert!(stdout.contains(sub), "help missing {sub}");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let bin = require_bin!();
+    let (code, _, stderr) = run(&bin, &["frobnicate"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("unknown subcommand"));
+}
+
+#[test]
+fn train_quick_run_converges() {
+    let bin = require_bin!();
+    let (code, stdout, stderr) = run(
+        &bin,
+        &[
+            "train", "--dataset", "covtype", "--scale", "3000", "--k", "4", "--lambda", "1e-2",
+            "--epochs", "1", "--rounds", "80", "--gap-tol", "1e-3",
+        ],
+    );
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("GapReached"), "did not converge:\n{stdout}");
+}
+
+#[test]
+fn gen_data_roundtrips_through_train() {
+    let bin = require_bin!();
+    let svm = std::env::temp_dir().join("cocoa_cli_gen.svm");
+    let svm_s = svm.to_str().unwrap();
+    let (code, stdout, _) = run(
+        &bin,
+        &["gen-data", "--dataset", "rcv1", "--scale", "3000", "--out", svm_s],
+    );
+    assert_eq!(code, 0);
+    assert!(stdout.contains("wrote"));
+    let (code2, stdout2, stderr2) = run(
+        &bin,
+        &[
+            "train", "--data", svm_s, "--k", "2", "--lambda", "1e-2", "--rounds", "40",
+            "--gap-tol", "1e-2",
+        ],
+    );
+    assert_eq!(code2, 0, "stderr: {stderr2}");
+    assert!(stdout2.contains("stopped"), "{stdout2}");
+    std::fs::remove_file(&svm).ok();
+}
+
+#[test]
+fn sigma_reports_table() {
+    let bin = require_bin!();
+    let (code, stdout, _) = run(
+        &bin,
+        &["sigma", "--dataset", "covtype", "--scale", "3000", "--ks", "2,4"],
+    );
+    assert_eq!(code, 0);
+    assert!(stdout.contains("ratio"));
+}
+
+#[test]
+fn experiment_table2_quick() {
+    let bin = require_bin!();
+    let (code, stdout, _) = run(
+        &bin,
+        &["experiment", "table2", "--quick", "--scale", "3000"],
+    );
+    assert_eq!(code, 0);
+    assert!(stdout.contains("covtype"));
+}
+
+#[test]
+fn experiment_unknown_name_fails() {
+    let bin = require_bin!();
+    let (code, _, stderr) = run(&bin, &["experiment", "fig9"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("unknown experiment"));
+}

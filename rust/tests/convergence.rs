@@ -1,0 +1,184 @@
+//! Integration: end-to-end convergence of the framework across losses,
+//! solvers, partitions, and aggregation regimes.
+
+use cocoa::baselines::serial_sdca;
+use cocoa::coordinator::StopReason;
+use cocoa::data::partition::{by_label, contiguous, random_balanced};
+use cocoa::data::synth::{generate, SynthConfig};
+use cocoa::prelude::*;
+
+fn data(n: usize, d: usize, seed: u64) -> Dataset {
+    generate(&SynthConfig::new("it", n, d).density(0.4).seed(seed))
+}
+
+#[test]
+fn cocoa_plus_converges_all_losses() {
+    for loss in [
+        Loss::Hinge,
+        Loss::SmoothedHinge { mu: 0.5 },
+        Loss::Logistic,
+        Loss::Squared,
+    ] {
+        let ds = data(300, 20, 1);
+        let part = random_balanced(300, 4, 2);
+        let problem = Problem::new(ds, loss, 1e-2);
+        let cfg = CocoaConfig::cocoa_plus(4, loss, 1e-2, SolverSpec::SdcaEpochs { epochs: 1.0 })
+            .with_rounds(250)
+            .with_gap_tol(1e-4);
+        let mut t = Trainer::new(problem, part, cfg);
+        let h = t.run();
+        assert_eq!(
+            h.stop,
+            StopReason::GapReached,
+            "{}: final gap {}",
+            loss.name(),
+            h.final_gap()
+        );
+    }
+}
+
+#[test]
+fn cocoa_plus_converges_all_solvers() {
+    for solver in [
+        SolverSpec::Sdca { h: 150 },
+        SolverSpec::SdcaEpochs { epochs: 2.0 },
+        SolverSpec::Cyclic {
+            epochs: 2,
+            shuffle: true,
+        },
+        SolverSpec::Jacobi {
+            sweeps: 6,
+            beta: 0.5,
+        },
+    ] {
+        let ds = data(240, 16, 3);
+        let part = random_balanced(240, 4, 4);
+        let problem = Problem::new(ds, Loss::Hinge, 1e-2);
+        let cfg = CocoaConfig::cocoa_plus(4, Loss::Hinge, 1e-2, solver.clone())
+            .with_rounds(300)
+            .with_gap_tol(1e-3);
+        let mut t = Trainer::new(problem, part, cfg);
+        let h = t.run();
+        assert_eq!(
+            h.stop,
+            StopReason::GapReached,
+            "{solver:?}: final gap {}",
+            h.final_gap()
+        );
+    }
+}
+
+#[test]
+fn adversarial_partitions_still_converge_with_safe_sigma() {
+    let ds = data(200, 12, 5);
+    let labels = ds.y.clone();
+    for (name, part) in [
+        ("contiguous", contiguous(200, 5)),
+        ("by_label", by_label(&labels, 5)),
+    ] {
+        let problem = Problem::new(ds.clone(), Loss::Hinge, 1e-2);
+        let cfg = CocoaConfig::cocoa_plus(
+            5,
+            Loss::Hinge,
+            1e-2,
+            SolverSpec::SdcaEpochs { epochs: 1.0 },
+        )
+        .with_rounds(400)
+        .with_gap_tol(1e-3);
+        let mut t = Trainer::new(problem, part, cfg);
+        let h = t.run();
+        assert_eq!(
+            h.stop,
+            StopReason::GapReached,
+            "{name}: gap {}",
+            h.final_gap()
+        );
+    }
+}
+
+#[test]
+fn distributed_matches_serial_optimum() {
+    // The distributed solution must agree with serial SDCA on the same
+    // problem: same optimal dual value within tolerance.
+    let ds = data(200, 10, 7);
+    let problem = Problem::new(ds, Loss::Hinge, 1e-2);
+    let serial = serial_sdca::solve(&problem, &Default::default());
+    let part = random_balanced(200, 8, 8);
+    let cfg = CocoaConfig::cocoa_plus(
+        8,
+        Loss::Hinge,
+        1e-2,
+        SolverSpec::SdcaEpochs { epochs: 1.0 },
+    )
+    .with_rounds(400)
+    .with_gap_tol(1e-6);
+    let mut t = Trainer::new(problem.clone(), part, cfg);
+    t.run();
+    let d_dist = t.problem.dual_value(&t.alpha, &t.w);
+    assert!(
+        (serial.certs.dual - d_dist).abs() < 1e-3,
+        "serial D={} vs distributed D={}",
+        serial.certs.dual,
+        d_dist
+    );
+}
+
+#[test]
+fn k_equals_one_matches_serial_sdca_family() {
+    // K=1, γ=1, σ'=1 is just serial SDCA in rounds.
+    let ds = data(150, 8, 9);
+    let problem = Problem::new(ds, Loss::Hinge, 5e-2);
+    let part = random_balanced(150, 1, 0);
+    let cfg = CocoaConfig::cocoa_plus(1, Loss::Hinge, 5e-2, SolverSpec::SdcaEpochs { epochs: 1.0 })
+        .with_sigma_prime(1.0)
+        .with_rounds(200)
+        .with_gap_tol(1e-6);
+    let mut t = Trainer::new(problem, part, cfg);
+    let h = t.run();
+    assert_eq!(h.stop, StopReason::GapReached);
+}
+
+#[test]
+fn gap_certificate_brackets_primal_suboptimality() {
+    // For any iterate: P(w) − P(w*) ≤ gap. Train partially, then compare
+    // against a near-optimal reference primal.
+    let ds = data(200, 12, 11);
+    let problem = Problem::new(ds, Loss::Hinge, 1e-2);
+    let reference = serial_sdca::solve(&problem, &Default::default());
+    let p_star_ub = reference.certs.primal; // ≈ P(w*)
+
+    let part = random_balanced(200, 4, 1);
+    let cfg = CocoaConfig::cocoa_plus(4, Loss::Hinge, 1e-2, SolverSpec::Sdca { h: 30 })
+        .with_rounds(10)
+        .with_gap_tol(0.0);
+    let mut t = Trainer::new(problem.clone(), part, cfg);
+    let h = t.run();
+    for r in &h.records {
+        let subopt = r.primal - p_star_ub;
+        assert!(
+            subopt <= r.gap + 1e-6,
+            "round {}: primal subopt {} exceeds gap {}",
+            r.round,
+            subopt,
+            r.gap
+        );
+    }
+}
+
+#[test]
+fn history_is_monotone_in_counters() {
+    let ds = data(120, 8, 13);
+    let problem = Problem::new(ds, Loss::Hinge, 1e-2);
+    let part = random_balanced(120, 3, 1);
+    let cfg = CocoaConfig::cocoa_plus(3, Loss::Hinge, 1e-2, SolverSpec::Sdca { h: 50 })
+        .with_rounds(12)
+        .with_gap_tol(0.0);
+    let mut t = Trainer::new(problem, part, cfg);
+    let h = t.run();
+    for pair in h.records.windows(2) {
+        assert!(pair[1].comm_vectors > pair[0].comm_vectors);
+        assert!(pair[1].sim_time_s >= pair[0].sim_time_s);
+        assert!(pair[1].compute_s >= pair[0].compute_s);
+        assert!(pair[1].dual >= pair[0].dual - 1e-10, "dual decreased");
+    }
+}

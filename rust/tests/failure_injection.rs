@@ -1,0 +1,170 @@
+//! Failure injection: the coordinator's behaviour when local solvers
+//! misbehave — NaN updates must be caught by the divergence guard, a
+//! panicking worker must fail the round loudly (not hang or silently
+//! corrupt state), and checkpoint corruption must be rejected.
+
+use cocoa::coordinator::StopReason;
+use cocoa::data::partition::random_balanced;
+use cocoa::data::synth::{generate, SynthConfig};
+use cocoa::prelude::*;
+use cocoa::solver::{LocalSolveCtx, LocalSolver, LocalUpdate};
+
+/// A solver that behaves for `good_rounds` rounds, then emits NaNs.
+struct NanAfter {
+    good_rounds: usize,
+    calls: usize,
+}
+
+impl LocalSolver for NanAfter {
+    fn name(&self) -> String {
+        "nan_after".into()
+    }
+    fn solve(&mut self, ctx: &LocalSolveCtx) -> LocalUpdate {
+        self.calls += 1;
+        let nk = ctx.block.n_local();
+        let d = ctx.block.d();
+        if self.calls <= self.good_rounds {
+            LocalUpdate {
+                delta_alpha: vec![0.0; nk],
+                delta_w: vec![0.0; d],
+                steps: 0,
+            }
+        } else {
+            LocalUpdate {
+                delta_alpha: vec![f64::NAN; nk],
+                delta_w: vec![f64::NAN; d],
+                steps: 0,
+            }
+        }
+    }
+}
+
+/// A solver that panics on its first call.
+struct Panicker;
+
+impl LocalSolver for Panicker {
+    fn name(&self) -> String {
+        "panicker".into()
+    }
+    fn solve(&mut self, _ctx: &LocalSolveCtx) -> LocalUpdate {
+        panic!("injected worker failure");
+    }
+}
+
+fn problem(n: usize) -> (Problem, cocoa::data::Partition) {
+    let data = generate(&SynthConfig::new("fi", n, 6).seed(1));
+    let part = random_balanced(n, 3, 2);
+    (Problem::new(data, Loss::Hinge, 1e-2), part)
+}
+
+#[test]
+fn nan_updates_stop_as_diverged() {
+    let (p, part) = problem(60);
+    let solvers: Vec<Box<dyn LocalSolver>> = (0..3)
+        .map(|_| {
+            Box::new(NanAfter {
+                good_rounds: 2,
+                calls: 0,
+            }) as Box<dyn LocalSolver>
+        })
+        .collect();
+    let cfg = CocoaConfig::cocoa_plus(3, Loss::Hinge, 1e-2, SolverSpec::Sdca { h: 1 })
+        .with_rounds(10)
+        .with_gap_tol(1e-12)
+        .with_parallel(false);
+    let mut t = Trainer::with_solvers(p, part, cfg, solvers);
+    let hist = t.run();
+    assert_eq!(hist.stop, StopReason::Diverged, "NaN must trip the guard");
+    assert!(hist.rounds_run() <= 4, "should stop at the first bad round");
+}
+
+#[test]
+fn panicking_worker_fails_fast_sequential() {
+    let (p, part) = problem(60);
+    let solvers: Vec<Box<dyn LocalSolver>> = vec![
+        Box::new(Panicker),
+        Box::new(Panicker),
+        Box::new(Panicker),
+    ];
+    let cfg = CocoaConfig::cocoa_plus(3, Loss::Hinge, 1e-2, SolverSpec::Sdca { h: 1 })
+        .with_rounds(5)
+        .with_parallel(false);
+    let mut t = Trainer::with_solvers(p, part, cfg, solvers);
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t.round()));
+    assert!(res.is_err(), "worker panic must propagate");
+}
+
+#[test]
+fn panicking_worker_fails_fast_parallel() {
+    let (p, part) = problem(60);
+    let solvers: Vec<Box<dyn LocalSolver>> = vec![
+        Box::new(Panicker),
+        Box::new(Panicker),
+        Box::new(Panicker),
+    ];
+    let cfg = CocoaConfig::cocoa_plus(3, Loss::Hinge, 1e-2, SolverSpec::Sdca { h: 1 })
+        .with_rounds(5)
+        .with_parallel(true);
+    let mut t = Trainer::with_solvers(p, part, cfg, solvers);
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t.round()));
+    assert!(res.is_err(), "worker panic must propagate across threads");
+}
+
+#[test]
+fn mismatched_solver_count_rejected() {
+    let (p, part) = problem(60);
+    let solvers: Vec<Box<dyn LocalSolver>> = vec![Box::new(Panicker)]; // 1 ≠ K=3
+    let cfg = CocoaConfig::cocoa_plus(3, Loss::Hinge, 1e-2, SolverSpec::Sdca { h: 1 });
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        Trainer::with_solvers(p, part, cfg, solvers)
+    }));
+    assert!(res.is_err());
+}
+
+#[test]
+fn mismatched_partition_rejected() {
+    let (p, _) = problem(60);
+    let wrong_part = random_balanced(50, 3, 2); // n mismatch
+    let cfg = CocoaConfig::cocoa_plus(3, Loss::Hinge, 1e-2, SolverSpec::Sdca { h: 1 });
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        Trainer::new(p, wrong_part, cfg)
+    }));
+    assert!(res.is_err());
+}
+
+#[test]
+fn recovery_after_transient_bad_round_via_checkpoint() {
+    use cocoa::coordinator::checkpoint::Checkpoint;
+    // Train, checkpoint, corrupt the live trainer, restore, verify the
+    // restored state reproduces the checkpointed certificates.
+    let (p, part) = problem(90);
+    let cfg = CocoaConfig::cocoa_plus(
+        3,
+        Loss::Hinge,
+        1e-2,
+        SolverSpec::SdcaEpochs { epochs: 1.0 },
+    )
+    .with_rounds(30)
+    .with_parallel(false);
+    let mut t = Trainer::new(p, part, cfg);
+    for _ in 0..5 {
+        t.round();
+    }
+    let certs_before = t.problem.certificates(&t.alpha, &t.w);
+    let ck = Checkpoint::capture(&t);
+    // simulate corruption
+    for a in t.alpha.iter_mut() {
+        *a = f64::NAN;
+    }
+    for w in t.w.iter_mut() {
+        *w = f64::NAN;
+    }
+    ck.restore(&mut t).expect("restore after corruption");
+    let certs_after = t.problem.certificates(&t.alpha, &t.w);
+    assert!((certs_before.gap - certs_after.gap).abs() < 1e-12);
+    // and training continues fine
+    for _ in 0..5 {
+        t.round();
+    }
+    assert!(t.problem.certificates(&t.alpha, &t.w).gap <= certs_after.gap + 1e-9);
+}

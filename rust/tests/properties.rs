@@ -1,0 +1,205 @@
+//! Property tests (via the from-scratch harness in testing::prop) on the
+//! coordinator's invariants, randomized over problem instances — the
+//! proptest-style coverage DESIGN.md calls out.
+
+use cocoa::data::partition::random_balanced;
+use cocoa::data::synth::{generate, SynthConfig};
+use cocoa::linalg::dense;
+use cocoa::prelude::*;
+use cocoa::subproblem::{subproblem_value, LocalBlock, SubproblemSpec};
+use cocoa::testing::prop::{forall, Gen};
+
+fn random_problem(g: &mut Gen) -> (Problem, usize) {
+    let n = g.usize_in(40, 160);
+    let d = g.usize_in(4, 24);
+    let density = g.f64_in(0.2, 1.0);
+    let lambda = g.f64_log(1e-3, 1e-1);
+    let loss = *g.choose(&[
+        Loss::Hinge,
+        Loss::SmoothedHinge { mu: 0.5 },
+        Loss::Logistic,
+        Loss::Squared,
+    ]);
+    let seed = g.case_seed;
+    let data = generate(&SynthConfig::new("prop", n, d).density(density).seed(seed));
+    let k = g.usize_in(2, 8.min(n / 8));
+    (Problem::new(data, loss, lambda), k)
+}
+
+#[test]
+fn prop_w_invariant_maintained_across_rounds() {
+    forall("w == Aα/(λn) after any round", 25, |g| {
+        let (problem, k) = random_problem(g);
+        let n = problem.n();
+        let part = random_balanced(n, k, g.case_seed);
+        let cfg = CocoaConfig::cocoa_plus(
+            k,
+            problem.loss,
+            problem.lambda,
+            SolverSpec::Sdca {
+                h: g.usize_in(5, 80),
+            },
+        )
+        .with_rounds(3)
+        .with_gap_tol(0.0)
+        .with_seed(g.case_seed)
+        .with_parallel(false);
+        let mut t = Trainer::new(problem, part, cfg);
+        for _ in 0..3 {
+            t.round();
+            let err = t.primal_consistency_error();
+            assert!(err < 1e-9, "w drift {err}");
+        }
+    });
+}
+
+#[test]
+fn prop_gap_nonnegative_and_dual_monotone_safe_sigma() {
+    forall("gap ≥ 0 and dual non-decreasing under σ'=γK", 20, |g| {
+        let (problem, k) = random_problem(g);
+        let n = problem.n();
+        let part = random_balanced(n, k, g.case_seed ^ 1);
+        let gamma = g.f64_in(0.2, 1.0);
+        let cfg = CocoaConfig::cocoa_plus(
+            k,
+            problem.loss,
+            problem.lambda,
+            SolverSpec::SdcaEpochs { epochs: 0.5 },
+        )
+        .with_rounds(4)
+        .with_gap_tol(0.0)
+        .with_seed(g.case_seed)
+        .with_parallel(false);
+        let cfg = CocoaConfig {
+            aggregation: cocoa::coordinator::Aggregation::Gamma(gamma),
+            sigma_prime: None, // safe bound γK
+            ..cfg
+        };
+        let mut t = Trainer::new(problem, part, cfg);
+        let mut prev_dual = f64::NEG_INFINITY;
+        for _ in 0..4 {
+            t.round();
+            let certs = t.problem.certificates(&t.alpha, &t.w);
+            assert!(certs.gap >= -1e-9, "negative gap {}", certs.gap);
+            assert!(
+                certs.dual >= prev_dual - 1e-9,
+                "dual decreased {} -> {}",
+                prev_dual,
+                certs.dual
+            );
+            prev_dual = certs.dual;
+        }
+    });
+}
+
+#[test]
+fn prop_lemma3_inequality_on_solver_outputs() {
+    // D(α + γΣΔ) ≥ (1−γ)D(α) + γΣ G_k(Δ_[k]) for solver-produced Δ.
+    forall("Lemma 3 on SDCA outputs", 15, |g| {
+        let (problem, k) = random_problem(g);
+        let n = problem.n();
+        let part = random_balanced(n, k, g.case_seed ^ 2);
+        let gamma = g.f64_in(0.3, 1.0);
+        let sigma_prime = gamma * k as f64;
+        let blocks = LocalBlock::split(&problem.data, &part);
+        let spec = SubproblemSpec {
+            loss: problem.loss,
+            lambda: problem.lambda,
+            n_global: n,
+            sigma_prime,
+            k,
+        };
+        let alpha = vec![0.0; n];
+        let w = vec![0.0; problem.d()];
+        let d_before = problem.dual_value(&alpha, &w);
+
+        let mut new_alpha = alpha.clone();
+        let mut gains = 0.0;
+        for (kid, block) in blocks.iter().enumerate() {
+            let alpha_local = vec![0.0; block.n_local()];
+            let mut solver = cocoa::solver::sdca::SdcaSolver::new(
+                g.usize_in(10, 120),
+                g.case_seed ^ kid as u64,
+            );
+            use cocoa::solver::{LocalSolveCtx, LocalSolver};
+            let out = solver.solve(&LocalSolveCtx {
+                block,
+                spec: &spec,
+                w: &w,
+                alpha_local: &alpha_local,
+            });
+            gains += subproblem_value(block, &spec, &w, &alpha_local, &out.delta_alpha);
+            for (li, &gi) in block.global_idx.iter().enumerate() {
+                new_alpha[gi] += gamma * out.delta_alpha[li];
+            }
+        }
+        let mut w_new = vec![0.0; problem.d()];
+        problem.primal_from_dual(&new_alpha, &mut w_new);
+        let d_after = problem.dual_value(&new_alpha, &w_new);
+        let rhs = (1.0 - gamma) * d_before + gamma * gains;
+        assert!(
+            d_after + 1e-8 >= rhs,
+            "Lemma 3 violated: D_after={d_after} rhs={rhs} (γ={gamma}, K={k})"
+        );
+    });
+}
+
+#[test]
+fn prop_partition_scatter_gather_roundtrip() {
+    forall("blocks scatter back to the exact dataset", 30, |g| {
+        let n = g.usize_in(10, 200);
+        let d = g.usize_in(2, 30);
+        let k = g.usize_in(1, n.min(9));
+        let data = generate(&SynthConfig::new("p", n, d).density(0.5).seed(g.case_seed));
+        let part = random_balanced(n, k, g.case_seed);
+        assert!(part.is_exact_cover());
+        let blocks = LocalBlock::split(&data, &part);
+        let mut seen = vec![false; n];
+        for b in &blocks {
+            for (li, &gi) in b.global_idx.iter().enumerate() {
+                assert!(!seen[gi]);
+                seen[gi] = true;
+                assert_eq!(b.y[li], data.y[gi]);
+                assert_eq!(b.x.row(li), data.x.row(gi));
+                assert!((b.norms_sq[li] - data.row_norms_sq[gi]).abs() < 1e-15);
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    });
+}
+
+#[test]
+fn prop_delta_w_matches_a_delta_alpha() {
+    forall("solver Δw == A Δα/(λn)", 20, |g| {
+        let (problem, k) = random_problem(g);
+        let part = random_balanced(problem.n(), k, g.case_seed ^ 3);
+        let blocks = LocalBlock::split(&problem.data, &part);
+        let spec = SubproblemSpec {
+            loss: problem.loss,
+            lambda: problem.lambda,
+            n_global: problem.n(),
+            sigma_prime: k as f64,
+            k,
+        };
+        let block = &blocks[0];
+        let w: Vec<f64> = g.gaussian_vec(problem.d()).iter().map(|v| v * 0.05).collect();
+        let alpha_local = vec![0.0; block.n_local()];
+        use cocoa::solver::{LocalSolveCtx, LocalSolver};
+        let mut solver = cocoa::solver::sdca::SdcaSolver::new(50, g.case_seed);
+        let out = solver.solve(&LocalSolveCtx {
+            block,
+            spec: &spec,
+            w: &w,
+            alpha_local: &alpha_local,
+        });
+        let mut a_delta = vec![0.0; problem.d()];
+        block.x.matvec_t(&out.delta_alpha, &mut a_delta);
+        dense::scale(1.0 / (problem.lambda * problem.n() as f64), &mut a_delta);
+        let err = a_delta
+            .iter()
+            .zip(&out.delta_w)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(err < 1e-10, "Δw mismatch {err}");
+    });
+}

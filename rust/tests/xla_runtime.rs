@@ -1,0 +1,204 @@
+//! Integration over the PJRT runtime: artifact loading, gap-graph
+//! agreement with the native objective, XLA↔native solver trajectory
+//! identity, and a short full training run on the XLA path.
+//!
+//! These tests require `make artifacts` (the Makefile orders it before
+//! `cargo test`); they skip with a note when artifacts are absent so
+//! plain `cargo test` still works in a fresh checkout.
+
+use cocoa::coordinator::worker::Worker;
+use cocoa::prelude::*;
+use cocoa::runtime::artifact::{default_artifacts_dir, Manifest};
+use cocoa::runtime::pjrt::PjrtRuntime;
+use cocoa::runtime::{XlaGapEvaluator, XlaSdcaProgram, XlaSdcaSolver};
+use cocoa::solver::sdca::SdcaSolver;
+use cocoa::solver::{LocalSolveCtx, LocalSolver};
+use cocoa::subproblem::{LocalBlock, SubproblemSpec};
+use std::rc::Rc;
+
+struct Env {
+    manifest: Manifest,
+    rt: PjrtRuntime,
+}
+
+fn env() -> Option<Env> {
+    let dir = default_artifacts_dir()?;
+    let manifest = Manifest::load(&dir).ok()?;
+    let rt = PjrtRuntime::cpu().ok()?;
+    Some(Env { manifest, rt })
+}
+
+macro_rules! require_env {
+    () => {
+        match env() {
+            Some(e) => e,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn smoke_test_all_artifacts() {
+    let e = require_env!();
+    let report = cocoa::runtime::smoke_test(&e.manifest).expect("smoke test");
+    assert!(report.contains("OK"));
+}
+
+#[test]
+fn gap_graph_matches_native_objective() {
+    let e = require_env!();
+    let gap = XlaGapEvaluator::load(&e.rt, &e.manifest).unwrap();
+    let (rows, cols) = (gap.n.min(200), gap.d.min(32));
+    let data = cocoa::data::synth::generate(
+        &cocoa::data::synth::SynthConfig::new("t", rows, cols)
+            .density(1.0)
+            .seed(3),
+    );
+    let lambda = 2e-2;
+    let problem = Problem::new(data.clone(), Loss::Hinge, lambda);
+    // random feasible dual point
+    let alpha: Vec<f64> = (0..rows)
+        .map(|i| data.y[i] * ((i % 17) as f64 / 17.0))
+        .collect();
+    let native_gap = problem.duality_gap(&alpha);
+    let x_dense = data.x.to_dense();
+    let certs = gap
+        .certificates(&x_dense, rows, cols, &data.y, &alpha, lambda)
+        .unwrap();
+    assert!(
+        (certs.gap - native_gap).abs() < 1e-9,
+        "XLA {} vs native {}",
+        certs.gap,
+        native_gap
+    );
+    // mapped w agrees too
+    let mut w_native = vec![0.0; cols];
+    problem.primal_from_dual(&alpha, &mut w_native);
+    let werr = certs
+        .w
+        .iter()
+        .zip(&w_native)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(werr < 1e-12, "w mismatch {werr}");
+}
+
+#[test]
+fn xla_solver_trajectory_identical_to_native() {
+    let e = require_env!();
+    let program = Rc::new(XlaSdcaProgram::load(&e.rt, &e.manifest).unwrap());
+    let (m, d, h) = (program.m, program.d, program.h);
+    // deliberately smaller than the artifact to exercise padding
+    let n_local = m - 37;
+    let data = cocoa::data::synth::generate(
+        &cocoa::data::synth::SynthConfig::new("t", n_local, d.min(48))
+            .density(1.0)
+            .seed(5),
+    );
+    let rows: Vec<usize> = (0..n_local).collect();
+    let block = LocalBlock::from_partition(&data, &rows);
+    let lambda = 1e-2;
+    let spec = SubproblemSpec {
+        loss: Loss::Hinge,
+        lambda,
+        n_global: n_local,
+        sigma_prime: 4.0,
+        k: 4,
+    };
+    let w: Vec<f64> = (0..block.d()).map(|j| 0.01 * (j as f64).sin()).collect();
+    let alpha: Vec<f64> = (0..n_local).map(|i| data.y[i] * 0.2).collect();
+    let ctx = LocalSolveCtx {
+        block: &block,
+        spec: &spec,
+        w: &w,
+        alpha_local: &alpha,
+    };
+
+    let seed = Worker::round_seed(9, 0, 0);
+    let mut xla = XlaSdcaSolver::new(
+        Rc::clone(&program),
+        &block,
+        lambda * n_local as f64,
+        4.0,
+        seed,
+    )
+    .unwrap();
+    let mut native = SdcaSolver::new(h, seed);
+    let u_x = xla.solve(&ctx);
+    let u_n = native.solve(&ctx);
+    let da_err = u_x
+        .delta_alpha
+        .iter()
+        .zip(&u_n.delta_alpha)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    let dw_err = u_x
+        .delta_w
+        .iter()
+        .zip(&u_n.delta_w)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(da_err < 1e-9, "Δα diverged: {da_err}");
+    assert!(dw_err < 1e-9, "Δw diverged: {dw_err}");
+}
+
+#[test]
+fn xla_backed_training_converges() {
+    let e = require_env!();
+    let program = Rc::new(XlaSdcaProgram::load(&e.rt, &e.manifest).unwrap());
+    let (m, d, h) = (program.m, program.d, program.h);
+    let k = 2usize;
+    let n = k * (m / 2); // half-filled blocks: padding in play
+    let data = cocoa::data::synth::generate(
+        &cocoa::data::synth::SynthConfig::new("t", n, d).density(1.0).seed(7),
+    );
+    let lambda = 2e-2;
+    let part = cocoa::data::partition::random_balanced(n, k, 7);
+    let problem = Problem::new(data, Loss::Hinge, lambda);
+    let blocks = LocalBlock::split(&problem.data, &part);
+    let solvers: Vec<Box<dyn LocalSolver>> = blocks
+        .iter()
+        .enumerate()
+        .map(|(wk, b)| {
+            Box::new(
+                XlaSdcaSolver::new(
+                    Rc::clone(&program),
+                    b,
+                    lambda * n as f64,
+                    k as f64,
+                    Worker::round_seed(11, 0, wk),
+                )
+                .unwrap(),
+            ) as Box<dyn LocalSolver>
+        })
+        .collect();
+    let cfg = CocoaConfig::cocoa_plus(k, Loss::Hinge, lambda, SolverSpec::Sdca { h })
+        .with_rounds(15)
+        .with_gap_tol(1e-4)
+        .with_parallel(false);
+    let mut t = Trainer::with_solvers(problem, part, cfg, solvers);
+    let hist = t.run();
+    assert!(
+        hist.final_gap() < 1e-3,
+        "XLA-backed training gap {}",
+        hist.final_gap()
+    );
+    assert!(t.primal_consistency_error() < 1e-9);
+}
+
+#[test]
+fn oversized_block_is_rejected() {
+    let e = require_env!();
+    let program = Rc::new(XlaSdcaProgram::load(&e.rt, &e.manifest).unwrap());
+    let m = program.m;
+    let data = cocoa::data::synth::generate(
+        &cocoa::data::synth::SynthConfig::new("t", m + 1, 8).seed(1),
+    );
+    let rows: Vec<usize> = (0..m + 1).collect();
+    let block = LocalBlock::from_partition(&data, &rows);
+    let res = XlaSdcaSolver::new(program, &block, 1.0, 1.0, 0);
+    assert!(res.is_err(), "block larger than artifact m must be rejected");
+}
