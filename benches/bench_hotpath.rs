@@ -74,9 +74,12 @@ fn main() {
         black_box(power_iter::spectral_norm_sq(&data.x, 100, 1e-9, 1).sigma)
     });
 
-    // ---- one full coordinator round (K=8, parallel) ----------------------
+    // ---- one full coordinator round (K=8): persistent pool vs sequential --
+    // The pool spawns its threads once at Trainer::new, so the measured
+    // rounds below contain zero thread spawns and zero result allocations.
     let data = generate(&SynthConfig::new("b", 8192, 256).density(0.1).seed(4));
     let part = random_balanced(8192, 8, 1);
+    let problem = Problem::new(data, Loss::Hinge, 1e-3);
     let cfg = CocoaConfig::cocoa_plus(
         8,
         Loss::Hinge,
@@ -84,9 +87,23 @@ fn main() {
         SolverSpec::SdcaEpochs { epochs: 1.0 },
     )
     .with_rounds(1);
-    let problem = Problem::new(data, Loss::Hinge, 1e-3);
-    let mut trainer = Trainer::new(problem, part, cfg);
-    b.run("coordinator_round_k8_n8192", || black_box(trainer.round()));
+
+    let mut pooled = Trainer::new(
+        problem.clone(),
+        part.clone(),
+        cfg.clone().with_parallel(true),
+    );
+    assert_eq!(pooled.executor_kind(), "pooled");
+    b.run("coordinator_round_k8_n8192_pooled", || {
+        black_box(pooled.round())
+    });
+    println!("  pooled runtime: {}", pooled.comm_stats().runtime_summary());
+
+    let mut sequential = Trainer::new(problem, part, cfg.with_parallel(false));
+    assert_eq!(sequential.executor_kind(), "sequential");
+    b.run("coordinator_round_k8_n8192_sequential", || {
+        black_box(sequential.round())
+    });
 
     b.report();
 }

@@ -7,14 +7,36 @@ use crate::coordinator::Trainer;
 use crate::util::json::{jarr, jnum, jobj, jstr, Json};
 use std::path::Path;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CheckpointError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("parse error: {0}")]
+    Io(std::io::Error),
     Parse(String),
-    #[error("checkpoint incompatible: {0}")]
     Incompatible(String),
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "io error: {e}"),
+            CheckpointError::Parse(msg) => write!(f, "parse error: {msg}"),
+            CheckpointError::Incompatible(msg) => write!(f, "checkpoint incompatible: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CheckpointError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> CheckpointError {
+        CheckpointError::Io(e)
+    }
 }
 
 /// Serializable snapshot of the optimizer state.
@@ -129,12 +151,9 @@ impl Checkpoint {
         }
         trainer.alpha.copy_from_slice(&self.alpha);
         trainer.w.copy_from_slice(&self.w);
-        // scatter α back into per-worker local views
-        for wk in trainer.workers.iter_mut() {
-            for (li, &gi) in wk.block.global_idx.clone().iter().enumerate() {
-                wk.alpha_local[li] = self.alpha[gi];
-            }
-        }
+        // scatter α back into per-worker local views (runtime-agnostic:
+        // the executor routes it to pool threads or in-process workers)
+        trainer.sync_workers_from_alpha();
         let drift = trainer.primal_consistency_error();
         if drift > 1e-6 {
             return Err(CheckpointError::Incompatible(format!(
@@ -203,6 +222,46 @@ mod tests {
         let db = b.problem.dual_value(&b.alpha, &b.w);
         assert!((da - db).abs() < 5e-3, "{da} vs {db}");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn restore_reaches_pooled_worker_state() {
+        // Capture a mid-training checkpoint, restore it into a fresh
+        // pooled trainer and a fresh sequential trainer, and train both:
+        // bit-identical trajectories prove the α scatter actually reached
+        // the pool's worker threads (stale α_[k] would change the solves).
+        let mut src = trainer();
+        for _ in 0..4 {
+            src.round();
+        }
+        let ck = Checkpoint::capture(&src);
+
+        let pooled_cfg = |parallel: bool| {
+            let data = generate(&SynthConfig::new("ck", 80, 8).seed(1));
+            let part = random_balanced(80, 4, 2);
+            let problem = Problem::new(data, Loss::Hinge, 1e-2);
+            let cfg = CocoaConfig::cocoa_plus(
+                4,
+                Loss::Hinge,
+                1e-2,
+                SolverSpec::SdcaEpochs { epochs: 1.0 },
+            )
+            .with_rounds(50)
+            .with_parallel(parallel);
+            Trainer::new(problem, part, cfg)
+        };
+        let mut a = pooled_cfg(true);
+        let mut b = pooled_cfg(false);
+        assert_eq!(a.executor_kind(), "pooled");
+        assert_eq!(b.executor_kind(), "sequential");
+        ck.restore(&mut a).unwrap();
+        ck.restore(&mut b).unwrap();
+        for _ in 0..3 {
+            a.round();
+            b.round();
+        }
+        assert_eq!(a.alpha, b.alpha, "pooled restore diverged from sequential");
+        assert_eq!(a.w, b.w);
     }
 
     #[test]

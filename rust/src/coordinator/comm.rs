@@ -69,13 +69,24 @@ impl CommModel {
     }
 }
 
-/// Running totals the coordinator keeps.
+/// Running totals the coordinator keeps. The simulated quantities
+/// (`sim_comm_s`) model the cluster network; `barrier_s`/`reduce_s` are
+/// *measured* runtime overheads of the in-process execution engine, kept
+/// separate so compute-time curves stay clean: the fan-out/gather
+/// synchronization of the worker pool lands in `barrier_s` (under the old
+/// spawn-per-round runtime, thread-spawn cost silently inflated measured
+/// compute instead) and the leader's Eq.-14 scatter/axpy lands in
+/// `reduce_s`.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CommStats {
     pub rounds: usize,
     pub vectors: usize,
     pub bytes: usize,
     pub sim_comm_s: f64,
+    /// Measured runtime fan-out/gather seconds beyond worker compute.
+    pub barrier_s: f64,
+    /// Measured leader-side reduce seconds (α scatter + w axpy).
+    pub reduce_s: f64,
 }
 
 impl CommStats {
@@ -84,6 +95,32 @@ impl CommStats {
         self.vectors += model.round_vectors(k);
         self.bytes += k * d * 8;
         self.sim_comm_s += model.round_time(d);
+    }
+
+    /// Accumulate the measured runtime overheads of one round.
+    pub fn record_runtime(&mut self, barrier_s: f64, reduce_s: f64) {
+        self.barrier_s += barrier_s;
+        self.reduce_s += reduce_s;
+    }
+
+    /// Mean per-round runtime overhead (barrier + reduce), seconds.
+    pub fn runtime_overhead_per_round_s(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        (self.barrier_s + self.reduce_s) / self.rounds as f64
+    }
+
+    /// One-line human-readable per-round overhead breakdown (CLI + bench).
+    pub fn runtime_summary(&self) -> String {
+        let rounds = self.rounds.max(1) as f64;
+        format!(
+            "per-round overhead {:.1}µs (barrier {:.1}µs + reduce {:.1}µs over {} rounds)",
+            self.runtime_overhead_per_round_s() * 1e6,
+            self.barrier_s / rounds * 1e6,
+            self.reduce_s / rounds * 1e6,
+            self.rounds
+        )
     }
 }
 
@@ -117,6 +154,21 @@ mod tests {
         assert_eq!(s.vectors, 16);
         assert_eq!(s.bytes, 2 * 8 * 1000 * 8);
         assert!((s.sim_comm_s - 2.0 * m.round_time(1000)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn runtime_overhead_accumulates_separately() {
+        let m = CommModel::ec2_like();
+        let mut s = CommStats::default();
+        s.record_round(&m, 100, 4);
+        s.record_runtime(2e-4, 1e-4);
+        s.record_round(&m, 100, 4);
+        s.record_runtime(2e-4, 1e-4);
+        assert!((s.barrier_s - 4e-4).abs() < 1e-12);
+        assert!((s.reduce_s - 2e-4).abs() < 1e-12);
+        assert!((s.runtime_overhead_per_round_s() - 3e-4).abs() < 1e-12);
+        // runtime overhead must not leak into the simulated comm model
+        assert!((s.sim_comm_s - 2.0 * m.round_time(100)).abs() < 1e-12);
     }
 
     #[test]

@@ -1,7 +1,8 @@
-//! The CoCoA+ framework — Algorithm 1 of the paper.
+//! The CoCoA+ framework — Algorithm 1 of the paper, on a persistent
+//! worker-pool runtime.
 //!
 //! Per outer round t:
-//!   1. broadcast the shared primal vector w to all K workers;
+//!   1. the leader broadcasts the shared primal vector w to all K workers;
 //!   2. each worker k computes a Θ-approximate solution Δα_[k] of its
 //!      local subproblem G_k^{σ'} (any [`LocalSolver`]);
 //!   3. each worker applies α_[k] ← α_[k] + γ·Δα_[k] locally;
@@ -9,18 +10,44 @@
 //!
 //! γ = 1/K + σ' = 1 recovers original CoCoA (Remark 12); γ = 1 + σ' = K is
 //! the paper's CoCoA+ "adding" regime with K-independent rates
-//! (Corollaries 9/11). The trainer maintains the exact invariant
-//! w = Aα/(λn) across rounds (checked in debug builds and by tests) and
-//! evaluates primal-dual certificates on a configurable cadence.
+//! (Corollaries 9/11).
+//!
+//! ### Execution model
+//!
+//! Steps 1–3 run on an [`pool::Executor`]: either the persistent
+//! [`pool::PooledExecutor`] (K worker threads spawned once at
+//! [`Trainer::new`], rounds driven over bounded channels with per-worker
+//! reusable scratch — zero thread spawns and zero result allocations per
+//! steady-state round) or the in-process [`pool::SequentialExecutor`]
+//! (`cfg.parallel = false`, or K = 1). Both execute bit-identical
+//! trajectories: per-worker solver streams are seeded from
+//! `(seed, worker)` and the leader applies the step-4 reduce in worker-id
+//! order, so scheduling can never perturb results.
+//!
+//! ### Time accounting
+//!
+//! Each round reports the *measured* max per-worker compute seconds (the
+//! quantity that gates a synchronous cluster round) to the simulated
+//! cluster model in [`comm`]; the runtime's own fan-out/gather barrier
+//! and the leader's reduce are measured separately into
+//! [`comm::CommStats`] (`barrier_s`, `reduce_s`), so compute-time curves
+//! no longer absorb scheduling overhead (previously: per-round thread
+//! spawns).
+//!
+//! The trainer maintains the exact invariant w = Aα/(λn) across rounds
+//! (checked in debug builds and by tests) and evaluates primal-dual
+//! certificates on a configurable cadence.
 
 pub mod checkpoint;
 pub mod comm;
 pub mod config;
 pub mod history;
+pub mod pool;
 pub mod worker;
 
 pub use config::{Aggregation, CocoaConfig, SolverSpec};
 pub use history::{History, RoundRecord, StopReason};
+pub use pool::{Executor, PoolError, RoundTiming};
 
 use crate::data::Partition;
 use crate::linalg::dense;
@@ -30,6 +57,7 @@ use crate::solver::{
 };
 use crate::subproblem::{LocalBlock, SubproblemSpec};
 use comm::CommStats;
+use std::time::Instant;
 use worker::Worker;
 
 /// Build a solver instance from a [`SolverSpec`] for a worker with n_k
@@ -47,16 +75,16 @@ pub fn make_solver(spec: &SolverSpec, n_local: usize, seed: u64) -> Box<dyn Loca
     }
 }
 
-/// The distributed trainer (leader + K workers).
+/// The distributed trainer (leader + K workers behind an [`Executor`]).
 pub struct Trainer {
     pub cfg: CocoaConfig,
     pub problem: Problem,
     pub partition: Partition,
-    pub workers: Vec<Worker>,
     /// Global dual iterate α ∈ R^n.
     pub alpha: Vec<f64>,
     /// Shared primal vector w = Aα/(λn) ∈ R^d.
     pub w: Vec<f64>,
+    executor: Box<dyn Executor>,
     spec: SubproblemSpec,
     comm_stats: CommStats,
 }
@@ -110,13 +138,14 @@ impl Trainer {
         };
         let n = problem.n();
         let d = problem.d();
+        let executor = pool::make_executor(workers, spec, cfg.parallel);
         Trainer {
             cfg,
             problem,
             partition,
-            workers,
             alpha: vec![0.0; n],
             w: vec![0.0; d],
+            executor,
             spec,
             comm_stats: CommStats::default(),
         }
@@ -130,48 +159,65 @@ impl Trainer {
         &self.comm_stats
     }
 
+    /// Which runtime this trainer executes on: `"pooled"` or `"sequential"`.
+    pub fn executor_kind(&self) -> &'static str {
+        self.executor.kind()
+    }
+
     /// One synchronous outer round. Returns the measured max-worker compute
     /// seconds (the quantity that gates a synchronous cluster round).
+    /// Panics if a worker fails; use [`Trainer::try_round`] to handle
+    /// failures as values.
     pub fn round(&mut self) -> f64 {
-        let gamma = self.cfg.gamma();
-        let w_snapshot = &self.w;
-        let spec = &self.spec;
+        match self.try_round() {
+            Ok(compute) => compute,
+            Err(e) => panic!("round failed: {e}"),
+        }
+    }
 
-        // --- fan out: local solves ------------------------------------
-        let results: Vec<worker::WorkerResult> = if self.cfg.parallel {
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = self
-                    .workers
-                    .iter_mut()
-                    .map(|wk| scope.spawn(move || wk.round(w_snapshot, spec)))
-                    .collect();
-                handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-            })
-        } else {
-            self.workers
-                .iter_mut()
-                .map(|wk| wk.round(w_snapshot, spec))
-                .collect()
+    /// One synchronous outer round; worker failures (e.g. a panicking
+    /// local solver) surface as a [`PoolError`] naming the failed workers.
+    /// The pool stays alive and consistent: the leader's (α, w) are
+    /// untouched by a failed round and surviving workers' α_[k] views are
+    /// re-synced from the leader, so a later round may be attempted.
+    pub fn try_round(&mut self) -> Result<f64, PoolError> {
+        let gamma = self.cfg.gamma();
+
+        // --- fan out: broadcast w, local solves, gather ----------------
+        let timing = match self.executor.run_round(&self.w, gamma) {
+            Ok(timing) => timing,
+            Err(e) => {
+                // Workers apply γΔα_[k] locally before the leader sees a
+                // failure; roll their views back to the leader's α so the
+                // discarded round leaves no split state behind.
+                self.executor.load_alpha(&self.alpha);
+                return Err(e);
+            }
         };
 
-        let max_compute = results
-            .iter()
-            .map(|r| r.compute_s)
-            .fold(0.0f64, f64::max);
-
-        // --- reduce (Eq. 14) -------------------------------------------
-        for res in &results {
-            let wk = &mut self.workers[res.id];
-            wk.apply(gamma, &res.update.delta_alpha);
-            // scatter to the global dual vector
-            for (li, &gi) in wk.block.global_idx.iter().enumerate() {
+        // --- reduce (Eq. 14), in worker-id order for determinism -------
+        let t0 = Instant::now();
+        for k in 0..self.cfg.k {
+            let res = self.executor.result(k);
+            // scatter to the global dual vector (workers already applied
+            // γΔα to their local views during the round)
+            for (li, &gi) in self.partition.parts[k].iter().enumerate() {
                 self.alpha[gi] += gamma * res.update.delta_alpha[li];
             }
             dense::axpy(gamma, &res.update.delta_w, &mut self.w);
         }
+        let reduce_s = t0.elapsed().as_secs_f64();
+
         self.comm_stats
             .record_round(&self.cfg.comm, self.problem.d(), self.cfg.k);
-        max_compute
+        self.comm_stats.record_runtime(timing.barrier_s, reduce_s);
+        Ok(timing.max_compute_s)
+    }
+
+    /// Push the leader's global α into every worker's local α_[k] view
+    /// (used by checkpoint restore).
+    pub fn sync_workers_from_alpha(&mut self) {
+        self.executor.load_alpha(&self.alpha);
     }
 
     /// Recompute w from α and report the max deviation from the maintained
@@ -194,10 +240,7 @@ impl Trainer {
             self.cfg.k,
             self.cfg.gamma(),
             self.spec.sigma_prime,
-            self.workers
-                .first()
-                .map(|w| w.solver.name())
-                .unwrap_or_default(),
+            self.executor.solver_name(),
         );
         let mut hist = History::new(&label);
         let mut cum_compute = 0.0f64;
@@ -298,6 +341,37 @@ mod tests {
         let mut t = trainer(2, |c| c.with_rounds(300).with_gap_tol(1e-3));
         let hist = t.run();
         assert_eq!(hist.stop, StopReason::GapReached, "final gap {}", hist.final_gap());
+    }
+
+    #[test]
+    fn pooled_runtime_selected_and_runtime_stats_recorded() {
+        let p = problem(60, 8, 0.05, Loss::Hinge);
+        let part = random_balanced(60, 3, 5);
+        let cfg = CocoaConfig::cocoa_plus(3, Loss::Hinge, 0.05, SolverSpec::Sdca { h: 20 })
+            .with_rounds(2);
+        let mut t = Trainer::new(p, part, cfg);
+        assert_eq!(t.executor_kind(), "pooled");
+        t.round();
+        t.round();
+        let s = t.comm_stats();
+        assert_eq!(s.rounds, 2);
+        assert!(s.barrier_s >= 0.0, "barrier time must be accounted");
+        assert!(s.reduce_s >= 0.0, "reduce time must be accounted");
+    }
+
+    #[test]
+    fn k1_parallel_degenerates_to_sequential_runtime() {
+        let p = problem(40, 6, 0.05, Loss::Hinge);
+        let part = random_balanced(40, 1, 5);
+        let cfg = CocoaConfig::cocoa_plus(1, Loss::Hinge, 0.05, SolverSpec::Sdca { h: 20 })
+            .with_rounds(3);
+        assert!(cfg.parallel, "preset should default to parallel");
+        let mut t = Trainer::new(p, part, cfg);
+        assert_eq!(t.executor_kind(), "sequential");
+        for _ in 0..3 {
+            t.round();
+        }
+        assert!(t.primal_consistency_error() < 1e-9);
     }
 
     #[test]

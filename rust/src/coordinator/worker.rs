@@ -2,9 +2,11 @@
 //!
 //! A worker owns its data block (it never touches other workers' rows —
 //! the locality the paper's framework is built around), its slice of the
-//! dual variables α_[k], and its local solver instance. The coordinator
-//! fans a round out to all workers (threads or sequential), then reduces
-//! their Δw_k.
+//! dual variables α_[k], and its local solver instance. Under the
+//! persistent-pool runtime ([`crate::coordinator::pool`]) each worker
+//! lives on its own long-lived thread and fills a reusable
+//! [`WorkerResult`] scratch every round; the sequential executor drives
+//! the same state in-process.
 
 use crate::solver::{LocalSolveCtx, LocalSolver, LocalUpdate};
 use crate::subproblem::{LocalBlock, SubproblemSpec};
@@ -19,12 +21,26 @@ pub struct Worker {
     pub solver: Box<dyn LocalSolver>,
 }
 
-/// What a worker sends back to the leader each round.
+/// What a worker sends back to the leader each round. Allocated once per
+/// worker at pool startup and ping-ponged between leader and worker
+/// thereafter (zero allocations in the steady-state round loop).
+#[derive(Clone, Debug)]
 pub struct WorkerResult {
     pub id: usize,
     pub update: LocalUpdate,
     /// Measured local compute seconds for this round.
     pub compute_s: f64,
+}
+
+impl WorkerResult {
+    /// A zeroed result scratch for worker `id` with an (n_k, d) block.
+    pub fn with_dims(id: usize, n_local: usize, d: usize) -> WorkerResult {
+        WorkerResult {
+            id,
+            update: LocalUpdate::with_dims(n_local, d),
+            compute_s: 0.0,
+        }
+    }
 }
 
 impl Worker {
@@ -38,21 +54,26 @@ impl Worker {
         }
     }
 
-    /// Run one outer round's local solve against the shared w.
-    pub fn round(&mut self, w: &[f64], spec: &SubproblemSpec) -> WorkerResult {
+    /// Run one outer round's local solve against the shared w, writing
+    /// Δα/Δw into the reusable `out` scratch.
+    pub fn round_into(&mut self, w: &[f64], spec: &SubproblemSpec, out: &mut WorkerResult) {
         let t0 = Instant::now();
+        out.id = self.id;
         let ctx = LocalSolveCtx {
             block: &self.block,
             spec,
             w,
             alpha_local: &self.alpha_local,
         };
-        let update = self.solver.solve(&ctx);
-        WorkerResult {
-            id: self.id,
-            update,
-            compute_s: t0.elapsed().as_secs_f64(),
-        }
+        self.solver.solve_into(&ctx, &mut out.update);
+        out.compute_s = t0.elapsed().as_secs_f64();
+    }
+
+    /// Allocating convenience wrapper around [`Worker::round_into`].
+    pub fn round(&mut self, w: &[f64], spec: &SubproblemSpec) -> WorkerResult {
+        let mut out = WorkerResult::with_dims(self.id, self.block.n_local(), self.block.d());
+        self.round_into(w, spec, &mut out);
+        out
     }
 
     /// Apply the γ-scaled accepted update to the local dual state (Eq. 14,

@@ -11,12 +11,34 @@ use crate::linalg::CsrMatrix;
 use std::io::Write;
 use std::path::Path;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LibsvmError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("line {line}: {msg}")]
+    Io(std::io::Error),
     Parse { line: usize, msg: String },
+}
+
+impl std::fmt::Display for LibsvmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LibsvmError::Io(e) => write!(f, "io error: {e}"),
+            LibsvmError::Parse { line, msg } => write!(f, "line {line}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for LibsvmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LibsvmError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for LibsvmError {
+    fn from(e: std::io::Error) -> LibsvmError {
+        LibsvmError::Io(e)
+    }
 }
 
 /// Parse LibSVM text. `expected_dim`: pass Some(d) to force the feature

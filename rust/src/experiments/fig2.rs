@@ -49,11 +49,15 @@ pub fn run(ctx: &ExpContext) -> String {
 
         let mut xs = Vec::new();
         let (mut t_plus_s, mut t_avg_s, mut t_sgd_s) = (Vec::new(), Vec::new(), Vec::new());
+        // Measured per-round overhead of the persistent-pool runtime
+        // (barrier + reduce) across all CoCoA/CoCoA+ runs — reported so
+        // scaling curves can be sanity-checked against runtime cost.
+        let mut overhead_us: Vec<f64> = Vec::new();
         for &k in &ks {
             if k > n / 4 {
                 continue;
             }
-            let time_for = |plus: bool| -> Option<f64> {
+            let mut time_for = |plus: bool| -> Option<f64> {
                 let part = random_balanced(n, k, ctx.seed);
                 let problem = Problem::new(data.clone(), Loss::Hinge, lambda);
                 let solver = SolverSpec::SdcaEpochs { epochs: 1.0 };
@@ -69,15 +73,18 @@ pub fn run(ctx: &ExpContext) -> String {
                 let mut trainer = Trainer::new(problem, part, cfg);
                 // custom loop: stop when dual suboptimality hits eps_d
                 let mut cum = 0.0;
+                let mut reached = None;
                 for _t in 0..rounds {
                     let c = trainer.round();
                     cum += c + trainer.cfg.comm.round_time(trainer.problem.d());
                     let dual = trainer.problem.dual_value(&trainer.alpha, &trainer.w);
                     if d_star - dual <= eps_d {
-                        return Some(cum);
+                        reached = Some(cum);
+                        break;
                     }
                 }
-                None
+                overhead_us.push(trainer.comm_stats().runtime_overhead_per_round_s() * 1e6);
+                reached
             };
             let t_plus = time_for(true);
             let t_avg = time_for(false);
@@ -120,6 +127,14 @@ pub fn run(ctx: &ExpContext) -> String {
             t_plus_s.push(t_plus.unwrap_or(f64::NAN));
             t_avg_s.push(t_avg.unwrap_or(f64::NAN));
             t_sgd_s.push(t_sgd.unwrap_or(f64::NAN));
+        }
+
+        if !overhead_us.is_empty() {
+            let mean = overhead_us.iter().sum::<f64>() / overhead_us.len() as f64;
+            out.push_str(&format!(
+                "pool runtime overhead: {mean:.1}µs/round mean over {} runs (excluded from compute axis)\n",
+                overhead_us.len()
+            ));
         }
 
         let chart = render(

@@ -8,14 +8,43 @@
 //! iteration counts independent of the number of machines K.
 //!
 //! Architecture (three layers, Python never on the request path):
-//! * **L3** — this crate: the coordinator (Algorithm 1), local solvers,
-//!   baselines, datasets, experiment harness;
+//! * **L3** — this crate: the coordinator (Algorithm 1) on a persistent
+//!   worker-pool runtime, local solvers, baselines, datasets, experiment
+//!   harness;
 //! * **L2** — `python/compile/model.py`: the local SDCA epoch and
 //!   duality-gap graphs in JAX, AOT-lowered to HLO text;
 //! * **L1** — `python/compile/kernels/`: Pallas kernels for the SDCA block
 //!   sweep and the tiled matvecs, called from L2.
-//! The [`runtime`] module loads the AOT artifacts via PJRT so the same
-//! [`solver::LocalSolver`] interface runs native-Rust or XLA compute.
+//! The `runtime` module (feature `xla`; requires the PJRT bindings crate,
+//! not vendored in the offline toolchain) loads the AOT artifacts via
+//! PJRT so the same [`solver::LocalSolver`] interface runs native-Rust or
+//! XLA compute.
+//!
+//! ## Execution model
+//!
+//! [`coordinator::Trainer::new`] spawns the simulated cluster **once**: K
+//! long-lived worker threads ([`coordinator::pool::PooledExecutor`]),
+//! each owning its data block, its α_[k] slice, and its solver state.
+//! Every outer round the leader publishes a `w` snapshot to a shared
+//! broadcast buffer, kicks the workers over bounded channels, and gathers
+//! their Δ-updates into per-worker scratch buffers that ping-pong between
+//! leader and workers — the steady-state round loop performs zero thread
+//! spawns and zero result allocations. With `cfg.parallel = false` (or
+//! K = 1, or non-thread-safe solvers such as the PJRT-backed one) the
+//! same rounds run on the in-process
+//! [`coordinator::pool::SequentialExecutor`]; both executors produce
+//! bit-identical trajectories (seeded per-worker solver streams +
+//! worker-id-ordered reduce), which `rust/tests/determinism.rs` locks in.
+//!
+//! ## Time accounting
+//!
+//! Measured per-worker compute (max over workers — what gates a
+//! synchronous cluster round) feeds the simulated cluster clock in
+//! [`coordinator::comm`]; the runtime's own fan-out/gather barrier and
+//! the leader's reduce are measured into
+//! [`coordinator::comm::CommStats`] (`barrier_s` / `reduce_s`) so
+//! compute-time curves no longer absorb scheduler overhead the paper's
+//! cluster would not have.
 //!
 //! Quickstart:
 //! ```no_run
@@ -39,6 +68,7 @@ pub mod linalg;
 pub mod loss;
 pub mod objective;
 pub mod report;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod solver;
 pub mod subproblem;

@@ -123,6 +123,11 @@ fn cmd_train(args: &Args) -> i32 {
         hist.final_gap(),
         trainer.problem.data.classification_error(&trainer.w)
     );
+    println!(
+        "runtime: {} executor; {}",
+        trainer.executor_kind(),
+        trainer.comm_stats().runtime_summary()
+    );
     let csv = hist.to_csv();
     if let Ok(p) = cocoa::report::write_result("train/last_run.csv", &csv) {
         println!("history written to {}", p.display());
@@ -175,6 +180,17 @@ fn cmd_sigma(args: &Args) -> i32 {
     0
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_artifacts_check(_args: &Args) -> i32 {
+    eprintln!(
+        "artifacts-check needs the PJRT runtime, which this build excludes: the `xla` \
+         feature additionally requires the unvendored xla/anyhow/thiserror crates, so it \
+         only builds in an environment with those dependencies available (see rust/Cargo.toml)"
+    );
+    2
+}
+
+#[cfg(feature = "xla")]
 fn cmd_artifacts_check(args: &Args) -> i32 {
     let dir = args.get_str("artifacts", "artifacts");
     match cocoa::runtime::artifact::Manifest::load(std::path::Path::new(&dir)) {

@@ -161,17 +161,16 @@ impl LocalSolver for XlaSdcaSolver {
         )
     }
 
-    fn solve(&mut self, ctx: &LocalSolveCtx) -> LocalUpdate {
+    fn solve_into(&mut self, ctx: &LocalSolveCtx, out: &mut LocalUpdate) {
         debug_assert_eq!(ctx.block.n_local(), self.n_local);
         debug_assert!((ctx.spec.lambda * ctx.spec.n_global as f64 - self.lambda_n).abs() < 1e-12);
         let (m, h) = (self.program.m, self.program.h);
         let d_model = self.program.d;
         let d_block = ctx.block.d();
+        out.reset(self.n_local, d_block);
 
         let mut alpha_pad = vec![0.0f64; m];
         alpha_pad[..self.n_local].copy_from_slice(ctx.alpha_local);
-        let mut delta_alpha = vec![0.0f64; self.n_local];
-        let mut delta_w = vec![0.0f64; d_block];
         let mut w_cur: Vec<f64> = ctx.w.to_vec();
 
         for _ in 0..self.repeats {
@@ -185,20 +184,16 @@ impl LocalSolver for XlaSdcaSolver {
                 .expect("XLA local_sdca execution failed");
             for i in 0..self.n_local {
                 alpha_pad[i] += da[i];
-                delta_alpha[i] += da[i];
+                out.delta_alpha[i] += da[i];
             }
             for j in 0..d_block {
-                delta_w[j] += dw[j];
+                out.delta_w[j] += dw[j];
                 // chained repeats continue from the locally updated image
                 w_cur[j] += self.sigma_prime * dw[j];
             }
             let _ = d_model;
         }
-        LocalUpdate {
-            delta_alpha,
-            delta_w,
-            steps: h * self.repeats,
-        }
+        out.steps = h * self.repeats;
     }
 
     fn reseed(&mut self, seed: u64) {

@@ -3,7 +3,7 @@
 //! sampling with replacement. A second "arbitrary local solver" satisfying
 //! Assumption 1 — often slightly faster per epoch in practice.
 
-use crate::solver::{delta_w_from_v, LocalSolveCtx, LocalSolver, LocalUpdate};
+use crate::solver::{delta_w_from_v_into, LocalSolveCtx, LocalSolver, LocalUpdate};
 use crate::util::rng::Pcg32;
 
 #[derive(Clone, Debug)]
@@ -38,18 +38,19 @@ impl LocalSolver for CyclicCdSolver {
         )
     }
 
-    fn solve(&mut self, ctx: &LocalSolveCtx) -> LocalUpdate {
+    fn solve_into(&mut self, ctx: &LocalSolveCtx, out: &mut LocalUpdate) {
         let block = ctx.block;
         let spec = ctx.spec;
         let nk = block.n_local();
         assert!(nk > 0, "empty local block");
+        out.reset(nk, block.d());
 
         self.v.clear();
         self.v.extend_from_slice(ctx.w);
         if self.order.len() != nk {
             self.order = (0..nk).collect();
         }
-        let mut delta = vec![0.0; nk];
+        let delta = &mut out.delta_alpha;
         let v_scale = spec.v_scale();
         let mut steps = 0usize;
 
@@ -78,12 +79,8 @@ impl LocalSolver for CyclicCdSolver {
             }
         }
 
-        let delta_w = delta_w_from_v(ctx.w, &self.v, spec.sigma_prime);
-        LocalUpdate {
-            delta_alpha: delta,
-            delta_w,
-            steps,
-        }
+        delta_w_from_v_into(ctx.w, &self.v, spec.sigma_prime, &mut out.delta_w);
+        out.steps = steps;
     }
 
     fn reseed(&mut self, seed: u64) {

@@ -12,7 +12,7 @@
 //! a candidate step does not improve G_k^{σ'}, β is halved (up to a few
 //! times) before giving up and returning the best found.
 
-use crate::solver::{delta_w_from_v, LocalSolveCtx, LocalSolver, LocalUpdate};
+use crate::solver::{delta_w_from_v_into, LocalSolveCtx, LocalSolver, LocalUpdate};
 use crate::subproblem::subproblem_value;
 
 #[derive(Clone, Debug)]
@@ -21,6 +21,11 @@ pub struct JacobiSolver {
     pub sweeps: usize,
     /// Initial damping β.
     pub beta: f64,
+    /// Scratch (reused across rounds): local primal image, candidate
+    /// coordinate moves, and the damped trial point.
+    v: Vec<f64>,
+    cand: Vec<f64>,
+    trial: Vec<f64>,
 }
 
 impl JacobiSolver {
@@ -29,6 +34,9 @@ impl JacobiSolver {
         JacobiSolver {
             sweeps: sweeps.max(1),
             beta,
+            v: Vec::new(),
+            cand: Vec::new(),
+            trial: Vec::new(),
         }
     }
 }
@@ -38,27 +46,32 @@ impl LocalSolver for JacobiSolver {
         format!("jacobi(sweeps={},beta={})", self.sweeps, self.beta)
     }
 
-    fn solve(&mut self, ctx: &LocalSolveCtx) -> LocalUpdate {
+    fn solve_into(&mut self, ctx: &LocalSolveCtx, out: &mut LocalUpdate) {
         let block = ctx.block;
         let spec = ctx.spec;
         let nk = block.n_local();
         assert!(nk > 0, "empty local block");
+        out.reset(nk, block.d());
         let v_scale = spec.v_scale();
 
-        let mut delta = vec![0.0; nk];
-        let mut v: Vec<f64> = ctx.w.to_vec();
-        let mut g_cur = subproblem_value(block, spec, ctx.w, ctx.alpha_local, &delta);
+        let delta = &mut out.delta_alpha;
+        self.v.clear();
+        self.v.extend_from_slice(ctx.w);
+        self.cand.clear();
+        self.cand.resize(nk, 0.0);
+        self.trial.clear();
+        self.trial.resize(nk, 0.0);
+        let mut g_cur = subproblem_value(block, spec, ctx.w, ctx.alpha_local, delta);
         let mut steps = 0usize;
-        let mut cand = vec![0.0; nk];
 
         for _ in 0..self.sweeps {
             // Candidate coordinate moves from the frozen image v.
             for i in 0..nk {
                 let q = block.norms_sq[i];
-                cand[i] = if q == 0.0 {
+                self.cand[i] = if q == 0.0 {
                     0.0
                 } else {
-                    let xv = block.x.row_dot(i, &v);
+                    let xv = block.x.row_dot(i, &self.v);
                     spec.loss.coordinate_delta(
                         ctx.alpha_local[i] + delta[i],
                         block.y[i],
@@ -72,18 +85,19 @@ impl LocalSolver for JacobiSolver {
             let mut beta = self.beta;
             let mut applied = false;
             for _try in 0..6 {
-                let trial: Vec<f64> =
-                    delta.iter().zip(&cand).map(|(&d, &c)| d + beta * c).collect();
-                let g_trial = subproblem_value(block, spec, ctx.w, ctx.alpha_local, &trial);
+                for i in 0..nk {
+                    self.trial[i] = delta[i] + beta * self.cand[i];
+                }
+                let g_trial = subproblem_value(block, spec, ctx.w, ctx.alpha_local, &self.trial);
                 if g_trial >= g_cur {
                     // Rebuild v for the accepted point.
                     for i in 0..nk {
-                        let step = trial[i] - delta[i];
+                        let step = self.trial[i] - delta[i];
                         if step != 0.0 {
-                            block.x.row_axpy(i, v_scale * step, &mut v);
+                            block.x.row_axpy(i, v_scale * step, &mut self.v);
                         }
                     }
-                    delta = trial;
+                    delta.copy_from_slice(&self.trial);
                     g_cur = g_trial;
                     applied = true;
                     break;
@@ -95,12 +109,8 @@ impl LocalSolver for JacobiSolver {
             }
         }
 
-        let delta_w = delta_w_from_v(ctx.w, &v, spec.sigma_prime);
-        LocalUpdate {
-            delta_alpha: delta,
-            delta_w,
-            steps,
-        }
+        delta_w_from_v_into(ctx.w, &self.v, spec.sigma_prime, &mut out.delta_w);
+        out.steps = steps;
     }
 }
 

@@ -30,7 +30,11 @@ pub struct LocalSolveCtx<'a> {
     pub alpha_local: &'a [f64],
 }
 
-/// The update a local solver returns.
+/// The update a local solver returns. In the persistent-pool runtime this
+/// struct doubles as a reusable scratch buffer: the coordinator allocates
+/// it once per worker at startup and solvers overwrite it in place every
+/// round via [`LocalSolver::solve_into`].
+#[derive(Clone, Debug, Default)]
 pub struct LocalUpdate {
     /// Δα_[k] in local indexing (length n_k).
     pub delta_alpha: Vec<f64>,
@@ -40,12 +44,45 @@ pub struct LocalUpdate {
     pub steps: usize,
 }
 
+impl LocalUpdate {
+    /// A zeroed update sized for an (n_k, d) block.
+    pub fn with_dims(n_local: usize, d: usize) -> LocalUpdate {
+        LocalUpdate {
+            delta_alpha: vec![0.0; n_local],
+            delta_w: vec![0.0; d],
+            steps: 0,
+        }
+    }
+
+    /// Zero the buffers and (re)size them for an (n_k, d) block. After the
+    /// first round this never reallocates — the basis of the pool's
+    /// allocation-free steady state.
+    pub fn reset(&mut self, n_local: usize, d: usize) {
+        self.delta_alpha.clear();
+        self.delta_alpha.resize(n_local, 0.0);
+        self.delta_w.clear();
+        self.delta_w.resize(d, 0.0);
+        self.steps = 0;
+    }
+}
+
 /// A Θ-approximate local solver (Assumption 1).
 pub trait LocalSolver: Send {
     fn name(&self) -> String;
 
-    /// Produce an approximate maximizer of G_k^{σ'}(·; w, α_[k]).
-    fn solve(&mut self, ctx: &LocalSolveCtx) -> LocalUpdate;
+    /// Produce an approximate maximizer of G_k^{σ'}(·; w, α_[k]), writing
+    /// Δα and Δw into `out` (implementations call [`LocalUpdate::reset`]
+    /// first, so `out` may hold a previous round's values). Steady-state
+    /// implementations must not allocate: the worker-pool runtime hands
+    /// the same `out` back every round.
+    fn solve_into(&mut self, ctx: &LocalSolveCtx, out: &mut LocalUpdate);
+
+    /// Allocating convenience wrapper around [`LocalSolver::solve_into`].
+    fn solve(&mut self, ctx: &LocalSolveCtx) -> LocalUpdate {
+        let mut out = LocalUpdate::with_dims(ctx.block.n_local(), ctx.block.d());
+        self.solve_into(ctx, &mut out);
+        out
+    }
 
     /// Re-seed the solver's RNG stream (for reproducible multi-round runs
     /// the coordinator calls this with (round, worker) derived seeds).
@@ -58,12 +95,23 @@ pub trait LocalSolver: Send {
 /// `v = w + (σ'/(λn))·A Δα` and derive `Δw = (v − w)/σ'` at the end.
 /// All three solvers use this identity instead of accumulating Δw
 /// separately — one O(d) pass at the end instead of O(nnz) per step.
-pub(crate) fn delta_w_from_v(w: &[f64], v: &[f64], sigma_prime: f64) -> Vec<f64> {
+/// Writes into the caller's reusable buffer.
+pub(crate) fn delta_w_from_v_into(w: &[f64], v: &[f64], sigma_prime: f64, out: &mut Vec<f64>) {
     debug_assert!(sigma_prime > 0.0);
-    w.iter()
-        .zip(v.iter())
-        .map(|(&wi, &vi)| (vi - wi) / sigma_prime)
-        .collect()
+    out.clear();
+    out.extend(
+        w.iter()
+            .zip(v.iter())
+            .map(|(&wi, &vi)| (vi - wi) / sigma_prime),
+    );
+}
+
+/// Allocating form of [`delta_w_from_v_into`] (tests and one-shot callers).
+#[cfg(test)]
+pub(crate) fn delta_w_from_v(w: &[f64], v: &[f64], sigma_prime: f64) -> Vec<f64> {
+    let mut out = Vec::new();
+    delta_w_from_v_into(w, v, sigma_prime, &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -154,5 +202,19 @@ mod tests {
         let v = vec![1.5, 3.0];
         let dw = delta_w_from_v(&w, &v, 2.0);
         assert_eq!(dw, vec![0.25, 0.5]);
+    }
+
+    #[test]
+    fn reset_zeroes_and_resizes_without_growth() {
+        let mut u = LocalUpdate::with_dims(4, 2);
+        u.delta_alpha[1] = 3.0;
+        u.delta_w[0] = -1.0;
+        u.steps = 9;
+        let cap_a = u.delta_alpha.capacity();
+        u.reset(4, 2);
+        assert_eq!(u.delta_alpha, vec![0.0; 4]);
+        assert_eq!(u.delta_w, vec![0.0; 2]);
+        assert_eq!(u.steps, 0);
+        assert_eq!(u.delta_alpha.capacity(), cap_a, "reset must not reallocate");
     }
 }

@@ -10,7 +10,7 @@
 //! The hot loop is two sparse kernels per step (`row_dot`, `row_axpy`) and
 //! is completely allocation-free after setup.
 
-use crate::solver::{delta_w_from_v, LocalSolveCtx, LocalSolver, LocalUpdate};
+use crate::solver::{delta_w_from_v_into, LocalSolveCtx, LocalSolver, LocalUpdate};
 use crate::util::rng::Pcg32;
 
 #[derive(Clone, Debug)]
@@ -44,21 +44,31 @@ impl SdcaSolver {
     /// Run the inner loop with an externally supplied coordinate sequence
     /// (used by the XLA-equivalence tests: the Rust and AOT solvers consume
     /// the same index stream and must produce identical trajectories).
-    pub fn solve_with_indices(
+    pub fn solve_with_indices(&mut self, ctx: &LocalSolveCtx, indices: &[usize]) -> LocalUpdate {
+        let mut out = LocalUpdate::with_dims(ctx.block.n_local(), ctx.block.d());
+        self.solve_with_indices_into(ctx, indices, &mut out);
+        out
+    }
+
+    /// Scratch-reusing core of the solver: write Δα/Δw for the given index
+    /// stream into `out` without allocating (after the first round).
+    pub fn solve_with_indices_into(
         &mut self,
         ctx: &LocalSolveCtx,
         indices: &[usize],
-    ) -> LocalUpdate {
+        out: &mut LocalUpdate,
+    ) {
         let block = ctx.block;
         let spec = ctx.spec;
         let nk = block.n_local();
         assert!(nk > 0, "empty local block");
+        out.reset(nk, block.d());
 
         // v = w (then updated in place); delta starts at 0.
         self.v.clear();
         self.v.extend_from_slice(ctx.w);
         let v = &mut self.v;
-        let mut delta = vec![0.0; nk];
+        let delta = &mut out.delta_alpha;
         let v_scale = spec.v_scale();
 
         for &i in indices {
@@ -77,12 +87,8 @@ impl SdcaSolver {
             }
         }
 
-        let delta_w = delta_w_from_v(ctx.w, v, spec.sigma_prime);
-        LocalUpdate {
-            delta_alpha: delta,
-            delta_w,
-            steps: indices.len(),
-        }
+        delta_w_from_v_into(ctx.w, v, spec.sigma_prime, &mut out.delta_w);
+        out.steps = indices.len();
     }
 }
 
@@ -91,7 +97,7 @@ impl LocalSolver for SdcaSolver {
         format!("sdca(H={})", self.h)
     }
 
-    fn solve(&mut self, ctx: &LocalSolveCtx) -> LocalUpdate {
+    fn solve_into(&mut self, ctx: &LocalSolveCtx, out: &mut LocalUpdate) {
         let nk = ctx.block.n_local();
         // Draw the index sequence first (borrow discipline: rng vs &mut
         // self), into the reused scratch buffer.
@@ -101,9 +107,8 @@ impl LocalSolver for SdcaSolver {
         for _ in 0..self.h {
             indices.push(self.rng.gen_range(nk));
         }
-        let out = self.solve_with_indices(ctx, &indices);
+        self.solve_with_indices_into(ctx, &indices, out);
         self.indices = indices; // return scratch for the next round
-        out
     }
 
     fn reseed(&mut self, seed: u64) {

@@ -1,0 +1,108 @@
+//! Determinism suite for the persistent worker-pool runtime: with a fixed
+//! seed, the pooled-parallel and sequential executors must produce
+//! **bit-identical** trajectories — gap records, the global dual iterate
+//! α, and the shared primal vector w — for both aggregation regimes of
+//! the paper (CoCoA: γ=1/K, σ'=1; CoCoA+: γ=1, σ'=K).
+//!
+//! This is what makes the pool's scratch reuse safe to rely on: any
+//! cross-round buffer contamination, scheduling-order dependence, or
+//! misrouted reduce would break bit-identity within a few rounds.
+
+use cocoa::data::partition::random_balanced;
+use cocoa::data::synth::{generate, SynthConfig};
+use cocoa::prelude::*;
+
+const ROUNDS: usize = 8;
+
+fn build(k: usize, plus: bool, parallel: bool, seed: u64) -> Trainer {
+    let n = 96;
+    let d = 12;
+    let data = generate(&SynthConfig::new("det", n, d).seed(7));
+    let part = random_balanced(n, k, 3);
+    let problem = Problem::new(data, Loss::Hinge, 0.01);
+    let solver = SolverSpec::SdcaEpochs { epochs: 1.0 };
+    let cfg = if plus {
+        CocoaConfig::cocoa_plus(k, Loss::Hinge, 0.01, solver)
+    } else {
+        CocoaConfig::cocoa(k, Loss::Hinge, 0.01, solver)
+    }
+    .with_rounds(ROUNDS)
+    .with_gap_tol(1e-14)
+    .with_seed(seed)
+    .with_parallel(parallel);
+    Trainer::new(problem, part, cfg)
+}
+
+/// Run to completion; return the bitwise gap trajectory plus final (α, w).
+fn trajectory(mut t: Trainer) -> (Vec<u64>, Vec<f64>, Vec<f64>) {
+    let hist = t.run();
+    let gaps = hist.records.iter().map(|r| r.gap.to_bits()).collect();
+    (gaps, t.alpha, t.w)
+}
+
+fn assert_bit_identical(k: usize, plus: bool, seed: u64) {
+    let pooled = build(k, plus, true, seed);
+    let sequential = build(k, plus, false, seed);
+    assert_eq!(pooled.executor_kind(), "pooled");
+    assert_eq!(sequential.executor_kind(), "sequential");
+    let (gaps_p, alpha_p, w_p) = trajectory(pooled);
+    let (gaps_s, alpha_s, w_s) = trajectory(sequential);
+    let variant = if plus { "cocoa+" } else { "cocoa" };
+    assert_eq!(
+        gaps_p, gaps_s,
+        "{variant} K={k}: gap trajectory diverged between runtimes"
+    );
+    assert_eq!(alpha_p, alpha_s, "{variant} K={k}: α diverged");
+    assert_eq!(w_p, w_s, "{variant} K={k}: w diverged");
+}
+
+#[test]
+fn pooled_matches_sequential_cocoa_plus() {
+    // γ = 1, σ' = K — the paper's adding regime.
+    assert_bit_identical(4, true, 42);
+}
+
+#[test]
+fn pooled_matches_sequential_cocoa() {
+    // γ = 1/K, σ' = 1 — the conservative averaging regime (Remark 12).
+    assert_bit_identical(4, false, 42);
+}
+
+#[test]
+fn pooled_matches_sequential_across_k_and_seeds() {
+    for k in [2, 8] {
+        for seed in [1, 99] {
+            assert_bit_identical(k, true, seed);
+        }
+    }
+}
+
+#[test]
+fn pooled_runs_are_repeatable() {
+    // Two independent pooled trainers with the same seed: thread
+    // scheduling must not be able to perturb anything.
+    let (gaps_a, alpha_a, w_a) = trajectory(build(4, true, true, 5));
+    let (gaps_b, alpha_b, w_b) = trajectory(build(4, true, true, 5));
+    assert_eq!(gaps_a, gaps_b);
+    assert_eq!(alpha_a, alpha_b);
+    assert_eq!(w_a, w_b);
+}
+
+#[test]
+fn scratch_reuse_is_clean_across_many_rounds() {
+    // Drive one pooled trainer well past the buffer warm-up and compare
+    // against a fresh sequential reference round-by-round: stale scratch
+    // contents from round t would corrupt round t+1.
+    let mut pooled = build(4, true, true, 11);
+    let mut sequential = build(4, true, false, 11);
+    for round in 0..20 {
+        pooled.round();
+        sequential.round();
+        assert_eq!(
+            pooled.alpha, sequential.alpha,
+            "α diverged at round {round}"
+        );
+        assert_eq!(pooled.w, sequential.w, "w diverged at round {round}");
+    }
+    assert!(pooled.primal_consistency_error() < 1e-9);
+}

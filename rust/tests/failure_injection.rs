@@ -1,7 +1,8 @@
 //! Failure injection: the coordinator's behaviour when local solvers
 //! misbehave — NaN updates must be caught by the divergence guard, a
-//! panicking worker must fail the round loudly (not hang or silently
-//! corrupt state), and checkpoint corruption must be rejected.
+//! panicking worker must surface as an error (never a hang, under either
+//! runtime), the persistent pool must stay alive across failed rounds and
+//! shut down cleanly on drop, and checkpoint corruption must be rejected.
 
 use cocoa::coordinator::StopReason;
 use cocoa::data::partition::random_balanced;
@@ -19,35 +20,47 @@ impl LocalSolver for NanAfter {
     fn name(&self) -> String {
         "nan_after".into()
     }
-    fn solve(&mut self, ctx: &LocalSolveCtx) -> LocalUpdate {
+    fn solve_into(&mut self, ctx: &LocalSolveCtx, out: &mut LocalUpdate) {
         self.calls += 1;
         let nk = ctx.block.n_local();
         let d = ctx.block.d();
-        if self.calls <= self.good_rounds {
-            LocalUpdate {
-                delta_alpha: vec![0.0; nk],
-                delta_w: vec![0.0; d],
-                steps: 0,
-            }
-        } else {
-            LocalUpdate {
-                delta_alpha: vec![f64::NAN; nk],
-                delta_w: vec![f64::NAN; d],
-                steps: 0,
-            }
+        out.reset(nk, d);
+        if self.calls > self.good_rounds {
+            out.delta_alpha.fill(f64::NAN);
+            out.delta_w.fill(f64::NAN);
         }
     }
 }
 
-/// A solver that panics on its first call.
+/// A solver that panics on every call.
 struct Panicker;
 
 impl LocalSolver for Panicker {
     fn name(&self) -> String {
         "panicker".into()
     }
-    fn solve(&mut self, _ctx: &LocalSolveCtx) -> LocalUpdate {
+    fn solve_into(&mut self, _ctx: &LocalSolveCtx, _out: &mut LocalUpdate) {
         panic!("injected worker failure");
+    }
+}
+
+/// A solver that panics only on round `bad_round` (0-based call index).
+struct PanicOnce {
+    bad_round: usize,
+    calls: usize,
+}
+
+impl LocalSolver for PanicOnce {
+    fn name(&self) -> String {
+        "panic_once".into()
+    }
+    fn solve_into(&mut self, ctx: &LocalSolveCtx, out: &mut LocalUpdate) {
+        let call = self.calls;
+        self.calls += 1;
+        if call == self.bad_round {
+            panic!("transient worker failure");
+        }
+        out.reset(ctx.block.n_local(), ctx.block.d());
     }
 }
 
@@ -108,6 +121,132 @@ fn panicking_worker_fails_fast_parallel() {
     let mut t = Trainer::with_solvers(p, part, cfg, solvers);
     let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t.round()));
     assert!(res.is_err(), "worker panic must propagate across threads");
+}
+
+#[test]
+fn single_panicking_worker_identified_and_pool_survives() {
+    // One bad worker out of three: try_round must name exactly worker 1,
+    // and the pool must keep answering (error again, not hang) on the
+    // next round — the long-lived threads survive a member's panic.
+    let (p, part) = problem(60);
+    let solvers: Vec<Box<dyn LocalSolver>> = vec![
+        Box::new(NanAfter {
+            good_rounds: usize::MAX,
+            calls: 0,
+        }),
+        Box::new(Panicker),
+        Box::new(NanAfter {
+            good_rounds: usize::MAX,
+            calls: 0,
+        }),
+    ];
+    let cfg = CocoaConfig::cocoa_plus(3, Loss::Hinge, 1e-2, SolverSpec::Sdca { h: 1 })
+        .with_rounds(5)
+        .with_parallel(true);
+    let mut t = Trainer::with_solvers(p, part, cfg, solvers);
+    assert_eq!(t.executor_kind(), "pooled");
+    for attempt in 0..2 {
+        let err = t.try_round().expect_err("panicking worker must fail the round");
+        assert_eq!(err.failed.len(), 1, "attempt {attempt}: {err}");
+        assert_eq!(err.failed[0].0, 1, "wrong worker blamed: {err}");
+        assert!(
+            err.failed[0].1.contains("injected worker failure"),
+            "panic payload lost: {err}"
+        );
+    }
+}
+
+#[test]
+fn transient_panic_then_recovery_under_pool() {
+    // Worker 2 panics only in round 1; rounds 0 and 2 must succeed, the
+    // leader's (α, w) must be untouched by the failed round, and the
+    // surviving workers' locally-applied γΔα must be rolled back — which
+    // we verify by comparing against a sequential trainer with identical
+    // solvers going through the same failure.
+    use cocoa::solver::sdca::SdcaSolver;
+    let build = |parallel: bool| {
+        let (p, part) = problem(60);
+        let solvers: Vec<Box<dyn LocalSolver>> = vec![
+            Box::new(SdcaSolver::new(30, 100)),
+            Box::new(SdcaSolver::new(30, 200)),
+            Box::new(PanicOnce {
+                bad_round: 1,
+                calls: 0,
+            }),
+        ];
+        let cfg = CocoaConfig::cocoa_plus(3, Loss::Hinge, 1e-2, SolverSpec::Sdca { h: 1 })
+            .with_rounds(5)
+            .with_parallel(parallel);
+        Trainer::with_solvers(p, part, cfg, solvers)
+    };
+    let mut pooled = build(true);
+    let mut sequential = build(false);
+    assert_eq!(pooled.executor_kind(), "pooled");
+
+    assert!(pooled.try_round().is_ok(), "round 0 should succeed");
+    assert!(sequential.try_round().is_ok());
+
+    let alpha_before = pooled.alpha.clone();
+    let w_before = pooled.w.clone();
+    let err = pooled.try_round().expect_err("round 1 must fail");
+    assert_eq!(err.failed[0].0, 2);
+    assert!(sequential.try_round().is_err());
+    assert_eq!(pooled.alpha, alpha_before, "failed round must not touch α");
+    assert_eq!(pooled.w, w_before, "failed round must not touch w");
+
+    assert!(pooled.try_round().is_ok(), "round 2 should succeed again");
+    assert!(sequential.try_round().is_ok());
+    assert_eq!(
+        pooled.alpha, sequential.alpha,
+        "post-recovery trajectories diverged — worker rollback broken"
+    );
+    assert_eq!(pooled.w, sequential.w);
+    assert!(pooled.primal_consistency_error() < 1e-9);
+}
+
+#[test]
+fn pool_shuts_down_cleanly_on_trainer_drop() {
+    // Dropping a pooled trainer mid-run must join all worker threads
+    // without hanging — repeatedly, so leaked threads would accumulate
+    // into an obvious failure under any thread limit.
+    for i in 0..8 {
+        let (p, part) = problem(60);
+        let cfg = CocoaConfig::cocoa_plus(
+            3,
+            Loss::Hinge,
+            1e-2,
+            SolverSpec::SdcaEpochs { epochs: 1.0 },
+        )
+        .with_rounds(50)
+        .with_seed(i);
+        let mut t = Trainer::new(p, part, cfg);
+        assert_eq!(t.executor_kind(), "pooled");
+        t.round();
+        drop(t); // joins the pool; a hang here fails the suite via timeout
+    }
+}
+
+#[test]
+fn k1_parallel_config_runs_on_sequential_path() {
+    // K = 1 must degenerate to the in-process executor even when the
+    // config asks for the parallel runtime.
+    let data = generate(&SynthConfig::new("fi1", 40, 6).seed(2));
+    let part = random_balanced(40, 1, 2);
+    let p = Problem::new(data, Loss::Hinge, 1e-2);
+    let cfg = CocoaConfig::cocoa_plus(
+        1,
+        Loss::Hinge,
+        1e-2,
+        SolverSpec::SdcaEpochs { epochs: 1.0 },
+    )
+    .with_rounds(3);
+    assert!(cfg.parallel);
+    let mut t = Trainer::new(p, part, cfg);
+    assert_eq!(t.executor_kind(), "sequential");
+    for _ in 0..3 {
+        t.round();
+    }
+    assert!(t.primal_consistency_error() < 1e-9);
 }
 
 #[test]

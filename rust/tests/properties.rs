@@ -54,6 +54,50 @@ fn prop_w_invariant_maintained_across_rounds() {
 }
 
 #[test]
+fn prop_w_invariant_under_pooled_runtime() {
+    // The pooled executor must preserve the coordinator's central
+    // invariant w = Aα/(λn) for randomized round counts, worker counts
+    // K ∈ {1, 2, 4, 8} (K = 1 degenerates to the sequential path), and
+    // losses — i.e. scratch reuse and channel plumbing never corrupt the
+    // reduce.
+    forall("w == Aα/(λn) under the worker pool", 12, |g| {
+        let k = *g.choose(&[1usize, 2, 4, 8]);
+        let loss = *g.choose(&[
+            Loss::Hinge,
+            Loss::SmoothedHinge { mu: 0.5 },
+            Loss::Squared,
+        ]);
+        let rounds = g.usize_in(1, 7);
+        let n = g.usize_in(40, 120);
+        let d = g.usize_in(4, 16);
+        let lambda = g.f64_log(1e-3, 1e-1);
+        let data = generate(&SynthConfig::new("pool", n, d).seed(g.case_seed));
+        let part = random_balanced(n, k, g.case_seed ^ 7);
+        let problem = Problem::new(data, loss, lambda);
+        let cfg = CocoaConfig::cocoa_plus(
+            k,
+            loss,
+            lambda,
+            SolverSpec::SdcaEpochs { epochs: 1.0 },
+        )
+        .with_rounds(rounds)
+        .with_gap_tol(0.0)
+        .with_seed(g.case_seed)
+        .with_parallel(true);
+        let mut t = Trainer::new(problem, part, cfg);
+        assert_eq!(
+            t.executor_kind(),
+            if k > 1 { "pooled" } else { "sequential" }
+        );
+        for _ in 0..rounds {
+            t.round();
+        }
+        let err = t.primal_consistency_error();
+        assert!(err <= 1e-9, "pooled w drift {err} (K={k}, rounds={rounds})");
+    });
+}
+
+#[test]
 fn prop_gap_nonnegative_and_dual_monotone_safe_sigma() {
     forall("gap ≥ 0 and dual non-decreasing under σ'=γK", 20, |g| {
         let (problem, k) = random_problem(g);
