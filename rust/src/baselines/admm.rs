@@ -16,10 +16,11 @@
 //! (one d-vector per worker up, one broadcast down).
 
 use crate::coordinator::comm::CommModel;
-use crate::coordinator::history::{History, RoundRecord, StopReason};
+use crate::coordinator::history::History;
 use crate::data::Partition;
+use crate::driver::{Driver, Method, StepStats, StopPolicy};
 use crate::linalg::dense;
-use crate::objective::Problem;
+use crate::objective::{Certificates, Problem};
 use crate::subproblem::LocalBlock;
 use crate::util::rng::Pcg32;
 use std::time::Instant;
@@ -65,6 +66,9 @@ pub struct Admm {
     /// Consensus iterate z.
     pub z: Vec<f64>,
     rngs: Vec<Pcg32>,
+    /// Externally estimated P(w*) — when set, the history's `gap` column
+    /// holds primal suboptimality against it.
+    p_star: Option<f64>,
 }
 
 impl Admm {
@@ -85,7 +89,14 @@ impl Admm {
             u: vec![vec![0.0; d]; cfg.k],
             z: vec![0.0; d],
             rngs,
+            p_star: None,
         }
+    }
+
+    /// Set (or clear) the primal-suboptimality target P(w*) that
+    /// [`Method::eval`] reports against.
+    pub fn set_primal_target(&mut self, p_star: Option<f64>) {
+        self.p_star = p_star;
     }
 
     /// Inexact w_k update: subgradient descent on
@@ -110,8 +121,8 @@ impl Admm {
             let g = loss.subgradient(z_i, block.y[i]) * (nk as f64 / n);
             // w ← w − η(g·x_i + ρ(w − c))
             let shrink = 1.0 - eta * rho;
-            for j in 0..d {
-                w[j] = shrink * w[j] + eta * rho * c[j];
+            for (wj, cj) in w.iter_mut().zip(&c) {
+                *wj = shrink * *wj + eta * rho * *cj;
             }
             if g != 0.0 {
                 block.x.row_axpy(i, -eta * g, w);
@@ -134,19 +145,19 @@ impl Admm {
         }
         // z-update (leader)
         let mut acc = vec![0.0; d];
-        for kid in 0..k {
-            for j in 0..d {
-                acc[j] += self.w_local[kid][j] + self.u[kid][j];
+        for (wk, uk) in self.w_local.iter().zip(&self.u) {
+            for ((aj, wj), uj) in acc.iter_mut().zip(wk).zip(uk) {
+                *aj += *wj + *uj;
             }
         }
         let scale = rho / (lambda + k as f64 * rho);
-        for j in 0..d {
-            self.z[j] = scale * acc[j];
+        for (zj, aj) in self.z.iter_mut().zip(&acc) {
+            *zj = scale * *aj;
         }
         // u-update
-        for kid in 0..k {
-            for j in 0..d {
-                self.u[kid][j] += self.w_local[kid][j] - self.z[j];
+        for (uk, wk) in self.u.iter_mut().zip(&self.w_local) {
+            for ((uj, wj), zj) in uk.iter_mut().zip(wk).zip(&self.z) {
+                *uj += *wj - *zj;
             }
         }
         max_compute
@@ -160,46 +171,72 @@ impl Admm {
             .fold(0.0f64, f64::max)
     }
 
-    /// Run, reporting primal values of the consensus iterate (ADMM has no
-    /// dual certificate in this form — the paper's §6 point about
-    /// primal-only baselines).
+    /// Run through the shared [`Driver`] loop, reporting primal values of
+    /// the consensus iterate (ADMM has no dual certificate in this form —
+    /// the paper's §6 point about primal-only baselines). Only when
+    /// `p_star` is provided can the tolerance stop the run.
     pub fn run(&mut self, p_star: Option<f64>) -> History {
-        let mut hist = History::new(&format!(
+        self.p_star = p_star;
+        let gap_tol = if p_star.is_some() {
+            self.cfg.tol
+        } else {
+            f64::NEG_INFINITY
+        };
+        // f64::MAX: an overflowed (infinite) primal flags divergence, as
+        // the old hand-rolled loop did, while any finite value runs on.
+        let mut driver = Driver::new(
+            StopPolicy::new(self.cfg.max_rounds)
+                .with_gap_tol(gap_tol)
+                .with_divergence_gap(f64::MAX),
+        )
+        .with_gap_every(self.cfg.gap_every);
+        driver.run(self)
+    }
+}
+
+impl Method for Admm {
+    fn step(&mut self) -> StepStats {
+        let compute_s = self.round();
+        StepStats {
+            compute_s,
+            comm_vectors: self.cfg.comm.round_vectors(self.cfg.k),
+        }
+    }
+
+    fn eval(&self) -> Certificates {
+        let primal = self.problem.primal_value(&self.z);
+        let gap = match self.p_star {
+            Some(ps) => primal - ps,
+            None => primal,
+        };
+        Certificates {
+            primal,
+            dual: f64::NEG_INFINITY,
+            gap,
+        }
+    }
+
+    fn comm_vectors_per_round(&self) -> usize {
+        self.cfg.comm.round_vectors(self.cfg.k)
+    }
+
+    fn w(&self) -> &[f64] {
+        &self.z
+    }
+
+    fn label(&self) -> String {
+        format!(
             "admm(K={},rho={},iters={})",
             self.cfg.k, self.cfg.rho, self.cfg.local_iters
-        ));
-        let mut cum_compute = 0.0;
-        let mut cum_sim = 0.0;
-        let mut vectors = 0usize;
-        for t in 0..self.cfg.max_rounds {
-            let c = self.round();
-            cum_compute += c;
-            cum_sim += c + self.cfg.comm.round_time(self.problem.d());
-            vectors += self.cfg.comm.round_vectors(self.cfg.k);
-            if t % self.cfg.gap_every == 0 || t + 1 == self.cfg.max_rounds {
-                let primal = self.problem.primal_value(&self.z);
-                let gap = p_star.map(|ps| primal - ps).unwrap_or(primal);
-                hist.push(RoundRecord {
-                    round: t,
-                    comm_vectors: vectors,
-                    sim_time_s: cum_sim,
-                    compute_s: cum_compute,
-                    primal,
-                    dual: f64::NEG_INFINITY,
-                    gap,
-                });
-                if !primal.is_finite() {
-                    hist.stop = StopReason::Diverged;
-                    return hist;
-                }
-                if p_star.is_some() && gap <= self.cfg.tol {
-                    hist.stop = StopReason::GapReached;
-                    return hist;
-                }
-            }
-        }
-        hist.stop = StopReason::MaxRounds;
-        hist
+        )
+    }
+
+    fn comm_model(&self) -> CommModel {
+        self.cfg.comm
+    }
+
+    fn train_error(&self) -> Option<f64> {
+        Some(self.problem.data.classification_error(&self.z))
     }
 }
 

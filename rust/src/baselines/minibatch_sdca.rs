@@ -9,9 +9,10 @@
 //! paper contrasts CoCoA+ against.
 
 use crate::coordinator::comm::CommModel;
-use crate::coordinator::history::{History, RoundRecord, StopReason};
+use crate::coordinator::history::History;
 use crate::data::Partition;
-use crate::objective::Problem;
+use crate::driver::{Driver, Method, StepStats, StopPolicy};
+use crate::objective::{Certificates, Problem};
 use crate::subproblem::LocalBlock;
 use crate::util::rng::Pcg32;
 use std::time::Instant;
@@ -123,42 +124,53 @@ impl MiniBatchSdca {
         max_compute
     }
 
+    /// Run under the config's stopping policy through the shared
+    /// [`Driver`] loop.
     pub fn run(&mut self) -> History {
-        let mut hist = History::new(&format!(
+        let mut driver = Driver::new(
+            StopPolicy::new(self.cfg.max_rounds)
+                .with_gap_tol(self.cfg.gap_tol)
+                .with_divergence_gap(1e6),
+        )
+        .with_gap_every(self.cfg.gap_every);
+        driver.run(self)
+    }
+}
+
+impl Method for MiniBatchSdca {
+    fn step(&mut self) -> StepStats {
+        let compute_s = self.round();
+        StepStats {
+            compute_s,
+            comm_vectors: self.cfg.comm.round_vectors(self.cfg.k),
+        }
+    }
+
+    fn eval(&self) -> Certificates {
+        self.problem.certificates(&self.alpha, &self.w)
+    }
+
+    fn comm_vectors_per_round(&self) -> usize {
+        self.cfg.comm.round_vectors(self.cfg.k)
+    }
+
+    fn w(&self) -> &[f64] {
+        &self.w
+    }
+
+    fn label(&self) -> String {
+        format!(
             "minibatch_sdca(K={},b={},beta={})",
             self.cfg.k, self.cfg.batch_per_worker, self.cfg.beta
-        ));
-        let mut cum_compute = 0.0;
-        let mut cum_sim = 0.0;
-        let mut vectors = 0usize;
-        for t in 0..self.cfg.max_rounds {
-            let c = self.round();
-            cum_compute += c;
-            cum_sim += c + self.cfg.comm.round_time(self.problem.d());
-            vectors += self.cfg.comm.round_vectors(self.cfg.k);
-            if t % self.cfg.gap_every == 0 || t + 1 == self.cfg.max_rounds {
-                let certs = self.problem.certificates(&self.alpha, &self.w);
-                hist.push(RoundRecord {
-                    round: t,
-                    comm_vectors: vectors,
-                    sim_time_s: cum_sim,
-                    compute_s: cum_compute,
-                    primal: certs.primal,
-                    dual: certs.dual,
-                    gap: certs.gap,
-                });
-                if !certs.gap.is_finite() || certs.gap > 1e6 {
-                    hist.stop = StopReason::Diverged;
-                    return hist;
-                }
-                if certs.gap <= self.cfg.gap_tol {
-                    hist.stop = StopReason::GapReached;
-                    return hist;
-                }
-            }
-        }
-        hist.stop = StopReason::MaxRounds;
-        hist
+        )
+    }
+
+    fn comm_model(&self) -> CommModel {
+        self.cfg.comm
+    }
+
+    fn train_error(&self) -> Option<f64> {
+        Some(self.problem.data.classification_error(&self.w))
     }
 }
 

@@ -9,10 +9,11 @@
 //! single gradient step — exactly the contrast the paper draws.
 
 use crate::coordinator::comm::CommModel;
-use crate::coordinator::history::{History, RoundRecord, StopReason};
+use crate::coordinator::history::History;
 use crate::data::Partition;
+use crate::driver::{Driver, Method, StepStats, StopPolicy};
 use crate::linalg::dense;
-use crate::objective::Problem;
+use crate::objective::{Certificates, Problem};
 use crate::subproblem::LocalBlock;
 use crate::util::rng::Pcg32;
 use std::time::Instant;
@@ -52,6 +53,11 @@ pub struct MiniBatchSgd {
     blocks: Vec<LocalBlock>,
     pub w: Vec<f64>,
     rngs: Vec<Pcg32>,
+    /// Rounds taken so far (drives the η_t schedule under the step API).
+    t: usize,
+    /// Externally estimated P(w*) — when set, the history's `gap` column
+    /// holds primal suboptimality against it.
+    p_star: Option<f64>,
 }
 
 impl MiniBatchSgd {
@@ -69,7 +75,15 @@ impl MiniBatchSgd {
             blocks,
             w: vec![0.0; d],
             rngs,
+            t: 0,
+            p_star: None,
         }
+    }
+
+    /// Set (or clear) the primal-suboptimality target P(w*) that
+    /// [`Method::eval`] reports against.
+    pub fn set_primal_target(&mut self, p_star: Option<f64>) {
+        self.p_star = p_star;
     }
 
     /// One synchronous round; returns max worker compute seconds.
@@ -107,57 +121,81 @@ impl MiniBatchSgd {
         max_compute
     }
 
-    /// Run to a *primal suboptimality* target. SGD has no dual certificate
-    /// (the paper makes this point explicitly) — we report the primal value
-    /// and, when `p_star` is provided, suboptimality against it.
+    /// Run to a *primal suboptimality* target through the shared
+    /// [`Driver`] loop. SGD has no dual certificate (the paper makes this
+    /// point explicitly) — we report the primal value and, when `p_star`
+    /// is provided, suboptimality against it (and only then can the gap
+    /// tolerance stop the run).
     pub fn run(&mut self, p_star: Option<f64>) -> History {
-        let mut hist = History::new(&format!(
+        self.p_star = p_star;
+        let gap_tol = if p_star.is_some() {
+            self.cfg.gap_tol
+        } else {
+            f64::NEG_INFINITY
+        };
+        // f64::MAX: an overflowed (infinite) primal flags divergence, as
+        // the old hand-rolled loop did, while any finite value runs on.
+        let mut driver = Driver::new(
+            StopPolicy::new(self.cfg.max_rounds)
+                .with_gap_tol(gap_tol)
+                .with_divergence_gap(f64::MAX),
+        )
+        .with_gap_every(self.cfg.gap_every);
+        driver.run(self)
+    }
+}
+
+impl Method for MiniBatchSgd {
+    fn step(&mut self) -> StepStats {
+        let compute_s = self.round(self.t);
+        self.t += 1;
+        StepStats {
+            compute_s,
+            comm_vectors: self.cfg.comm.round_vectors(self.cfg.k),
+        }
+    }
+
+    fn eval(&self) -> Certificates {
+        let primal = self.problem.primal_value(&self.w);
+        let gap = match self.p_star {
+            Some(ps) => primal - ps,
+            None => primal,
+        };
+        Certificates {
+            primal,
+            dual: f64::NEG_INFINITY,
+            gap,
+        }
+    }
+
+    fn comm_vectors_per_round(&self) -> usize {
+        self.cfg.comm.round_vectors(self.cfg.k)
+    }
+
+    fn w(&self) -> &[f64] {
+        &self.w
+    }
+
+    fn label(&self) -> String {
+        format!(
             "minibatch_sgd(K={},b={})",
             self.cfg.k, self.cfg.batch_per_worker
-        ));
-        let mut cum_compute = 0.0;
-        let mut cum_sim = 0.0;
-        let mut vectors = 0usize;
-        for t in 0..self.cfg.max_rounds {
-            let c = self.round(t);
-            cum_compute += c;
-            cum_sim += c + self.cfg.comm.round_time(self.problem.d());
-            vectors += self.cfg.comm.round_vectors(self.cfg.k);
-            if t % self.cfg.gap_every == 0 || t + 1 == self.cfg.max_rounds {
-                let primal = self.problem.primal_value(&self.w);
-                // "gap" column holds primal suboptimality when p* is known,
-                // else the raw primal value (documented in History).
-                let gap = match p_star {
-                    Some(ps) => primal - ps,
-                    None => primal,
-                };
-                hist.push(RoundRecord {
-                    round: t,
-                    comm_vectors: vectors,
-                    sim_time_s: cum_sim,
-                    compute_s: cum_compute,
-                    primal,
-                    dual: f64::NEG_INFINITY,
-                    gap,
-                });
-                if !primal.is_finite() {
-                    hist.stop = StopReason::Diverged;
-                    return hist;
-                }
-                if p_star.is_some() && gap <= self.cfg.gap_tol {
-                    hist.stop = StopReason::GapReached;
-                    return hist;
-                }
-            }
-        }
-        hist.stop = StopReason::MaxRounds;
-        hist
+        )
+    }
+
+    fn comm_model(&self) -> CommModel {
+        self.cfg.comm
+    }
+
+    fn train_error(&self) -> Option<f64> {
+        Some(self.problem.data.classification_error(&self.w))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::history::StopReason;
     use crate::data::partition::random_balanced;
     use crate::data::synth::{generate, SynthConfig};
     use crate::loss::Loss;

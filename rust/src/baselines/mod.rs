@@ -2,6 +2,13 @@
 //! discussion (§6): distributed mini-batch SGD (Fig. 2's third curve),
 //! mini-batch SDCA, one-shot averaging, and the serial SDCA reference
 //! used to estimate optima, plus consensus-ADMM (Forero et al. 2010).
+//!
+//! Every baseline implements the [`Method`](crate::driver::Method) trait,
+//! so the [`Driver`](crate::driver::Driver) runs all of them — and the
+//! CoCoA/CoCoA+ [`Trainer`](crate::coordinator::Trainer) — through one
+//! loop with identical communication and simulated-time accounting. The
+//! per-baseline `run()` helpers are thin wrappers that translate each
+//! config's stopping fields into a [`StopPolicy`](crate::driver::StopPolicy).
 
 pub mod admm;
 pub mod minibatch_sdca;

@@ -10,6 +10,7 @@
 
 use crate::coordinator::comm::CommModel;
 use crate::data::Partition;
+use crate::driver::{Method, StepStats};
 use crate::linalg::dense;
 use crate::objective::{Certificates, Problem};
 use crate::subproblem::{LocalBlock, SubproblemSpec};
@@ -43,11 +44,14 @@ pub struct OneShotResult {
     pub comm_vectors: usize,
 }
 
-/// Run one-shot averaging. The returned certificates are computed on the
-/// *global* problem at the averaged w; the dual is evaluated at the
-/// concatenated local duals divided by K (a feasible point whose map is
-/// exactly the averaged w, so the gap certificate is meaningful).
-pub fn run(problem: &Problem, partition: &Partition, cfg: &OneShotConfig) -> OneShotResult {
+/// The local solves + single averaging round: returns the averaged model,
+/// the scaled global dual point, and the measured max-worker compute
+/// seconds. Shared by [`run`] and the stepwise [`OneShot`] method.
+fn solve_and_average(
+    problem: &Problem,
+    partition: &Partition,
+    cfg: &OneShotConfig,
+) -> (Vec<f64>, Vec<f64>, f64) {
     assert_eq!(partition.k(), cfg.k);
     let n = problem.n();
     let d = problem.d();
@@ -99,23 +103,122 @@ pub fn run(problem: &Problem, partition: &Partition, cfg: &OneShotConfig) -> One
         }
         max_compute = max_compute.max(t0.elapsed().as_secs_f64());
     }
+    (w_avg, alpha_global, max_compute)
+}
 
-    // NOTE: the scaled α_global may be dual-infeasible for box-constrained
-    // losses (scale > 1) — in that case we certify with primal only and an
-    // infinite gap, which is itself the paper's point. Try the certificate,
-    // fall back gracefully.
-    let primal = problem.primal_value(&w_avg);
-    let dual = problem.dual_value(&alpha_global, &w_avg);
-    let certs = Certificates {
+/// Certify the averaged model on the *global* problem. The dual is
+/// evaluated at the concatenated local duals divided by K (a feasible
+/// point whose map is exactly the averaged w, so the gap certificate is
+/// meaningful).
+///
+/// NOTE: the scaled α_global may be dual-infeasible for box-constrained
+/// losses (scale > 1) — in that case we certify with primal only and an
+/// infinite gap, which is itself the paper's point.
+fn certify(problem: &Problem, alpha_global: &[f64], w_avg: &[f64]) -> Certificates {
+    let primal = problem.primal_value(w_avg);
+    let dual = problem.dual_value(alpha_global, w_avg);
+    Certificates {
         primal,
         dual,
         gap: primal - dual,
-    };
+    }
+}
+
+/// Run one-shot averaging end-to-end (the original single-call API).
+pub fn run(problem: &Problem, partition: &Partition, cfg: &OneShotConfig) -> OneShotResult {
+    let (w_avg, alpha_global, max_compute) = solve_and_average(problem, partition, cfg);
+    let certs = certify(problem, &alpha_global, &w_avg);
     OneShotResult {
         w: w_avg,
         certs,
-        sim_time_s: max_compute + cfg.comm.round_time(d),
+        sim_time_s: max_compute + cfg.comm.round_time(problem.d()),
         comm_vectors: cfg.comm.round_vectors(cfg.k),
+    }
+}
+
+/// One-shot averaging as a stepwise [`Method`]: the first
+/// [`Method::step`] performs the local solves and the single averaging
+/// round; later steps are free no-ops (no compute, no communication), so
+/// a [`Driver`](crate::driver::Driver) can run it alongside iterative
+/// methods under any round budget without inflating its clock.
+pub struct OneShot {
+    pub cfg: OneShotConfig,
+    pub problem: Problem,
+    partition: Partition,
+    /// The averaged model (zeros until the first step).
+    pub w: Vec<f64>,
+    certs: Option<Certificates>,
+}
+
+impl OneShot {
+    pub fn new(problem: Problem, partition: Partition, cfg: OneShotConfig) -> OneShot {
+        assert_eq!(partition.k(), cfg.k);
+        assert_eq!(partition.n, problem.n());
+        let d = problem.d();
+        OneShot {
+            cfg,
+            problem,
+            partition,
+            w: vec![0.0; d],
+            certs: None,
+        }
+    }
+
+    /// Whether the single averaging round has happened yet.
+    pub fn done(&self) -> bool {
+        self.certs.is_some()
+    }
+}
+
+impl Method for OneShot {
+    fn step(&mut self) -> StepStats {
+        if self.certs.is_some() {
+            return StepStats {
+                compute_s: 0.0,
+                comm_vectors: 0,
+            };
+        }
+        let (w_avg, alpha_global, max_compute) =
+            solve_and_average(&self.problem, &self.partition, &self.cfg);
+        self.certs = Some(certify(&self.problem, &alpha_global, &w_avg));
+        self.w = w_avg;
+        StepStats {
+            compute_s: max_compute,
+            comm_vectors: self.cfg.comm.round_vectors(self.cfg.k),
+        }
+    }
+
+    fn eval(&self) -> Certificates {
+        match self.certs {
+            Some(c) => c,
+            None => {
+                let alpha = vec![0.0; self.problem.n()];
+                self.problem.certificates(&alpha, &self.w)
+            }
+        }
+    }
+
+    fn comm_vectors_per_round(&self) -> usize {
+        self.cfg.comm.round_vectors(self.cfg.k)
+    }
+
+    fn w(&self) -> &[f64] {
+        &self.w
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "one_shot(K={},epochs={})",
+            self.cfg.k, self.cfg.local_epochs
+        )
+    }
+
+    fn comm_model(&self) -> CommModel {
+        self.cfg.comm
+    }
+
+    fn train_error(&self) -> Option<f64> {
+        Some(self.problem.data.classification_error(&self.w))
     }
 }
 

@@ -4,8 +4,11 @@
 //! and P(w*) for suboptimality axes (Fig. 2 needs "time to ε_D-accurate"),
 //! and (ii) the K=1 sanity baseline every distributed method must match.
 
+use crate::coordinator::comm::CommModel;
+use crate::driver::{Method, StepStats};
 use crate::objective::{Certificates, Problem};
 use crate::util::rng::Pcg32;
+use std::time::Instant;
 
 #[derive(Clone, Debug)]
 pub struct SerialSdcaConfig {
@@ -34,33 +37,115 @@ pub struct SerialSdcaResult {
     pub epochs_run: usize,
 }
 
-/// Run serial SDCA to high accuracy on the full problem.
+/// Serial SDCA as a stepwise optimizer: one [`SerialSdca::epoch`] (= n
+/// random coordinate steps) per [`Method::step`]. Communicates nothing,
+/// so its simulated clock is pure measured compute — the single-machine
+/// reference line every distributed method is compared against.
+pub struct SerialSdca {
+    pub cfg: SerialSdcaConfig,
+    pub problem: Problem,
+    pub alpha: Vec<f64>,
+    pub w: Vec<f64>,
+    rng: Pcg32,
+    epochs_run: usize,
+}
+
+impl SerialSdca {
+    pub fn new(problem: Problem, cfg: SerialSdcaConfig) -> SerialSdca {
+        let n = problem.n();
+        let d = problem.d();
+        SerialSdca {
+            rng: Pcg32::new(cfg.seed, 4000),
+            cfg,
+            problem,
+            alpha: vec![0.0; n],
+            w: vec![0.0; d],
+            epochs_run: 0,
+        }
+    }
+
+    /// One epoch: n random coordinate-ascent steps (K=1, σ'=1 — coef
+    /// q/(λn)).
+    pub fn epoch(&mut self) {
+        sdca_epoch(&self.problem, &mut self.alpha, &mut self.w, &mut self.rng);
+        self.epochs_run += 1;
+    }
+
+    pub fn epochs_run(&self) -> usize {
+        self.epochs_run
+    }
+}
+
+impl Method for SerialSdca {
+    fn step(&mut self) -> StepStats {
+        let t0 = Instant::now();
+        self.epoch();
+        StepStats {
+            compute_s: t0.elapsed().as_secs_f64(),
+            comm_vectors: 0,
+        }
+    }
+
+    fn eval(&self) -> Certificates {
+        self.problem.certificates(&self.alpha, &self.w)
+    }
+
+    fn comm_vectors_per_round(&self) -> usize {
+        0
+    }
+
+    fn w(&self) -> &[f64] {
+        &self.w
+    }
+
+    fn label(&self) -> String {
+        format!("serial_sdca(seed={})", self.cfg.seed)
+    }
+
+    fn comm_model(&self) -> CommModel {
+        CommModel::disabled()
+    }
+
+    fn train_error(&self) -> Option<f64> {
+        Some(self.problem.data.classification_error(&self.w))
+    }
+}
+
+/// One SDCA epoch (n random coordinate steps) on `problem`, updating
+/// (α, w) in place. The K=1, σ'=1 case: coef = q/(λn). Shared by the
+/// borrowing [`solve`] and the owning stepwise [`SerialSdca`].
+fn sdca_epoch(problem: &Problem, alpha: &mut [f64], w: &mut [f64], rng: &mut Pcg32) {
+    let n = problem.n();
+    let lambda = problem.lambda;
+    let loss = problem.loss;
+    let inv_ln = 1.0 / (lambda * n as f64);
+    for _ in 0..n {
+        let i = rng.gen_range(n);
+        let q = problem.data.row_norms_sq[i];
+        if q == 0.0 {
+            continue;
+        }
+        let z = problem.data.x.row_dot(i, w);
+        let delta = loss.coordinate_delta(alpha[i], problem.data.y[i], z, q * inv_ln);
+        if delta != 0.0 {
+            alpha[i] += delta;
+            problem.data.x.row_axpy(i, delta * inv_ln, w);
+        }
+    }
+}
+
+/// Run serial SDCA to high accuracy on the full problem (borrows the
+/// problem — no dataset copy).
 pub fn solve(problem: &Problem, cfg: &SerialSdcaConfig) -> SerialSdcaResult {
     let n = problem.n();
     let d = problem.d();
-    let lambda = problem.lambda;
-    let loss = problem.loss;
     let mut alpha = vec![0.0; n];
     let mut w = vec![0.0; d];
     let mut rng = Pcg32::new(cfg.seed, 4000);
-    let inv_ln = 1.0 / (lambda * n as f64);
 
     let mut epochs_run = 0;
     for epoch in 0..cfg.max_epochs {
-        for _ in 0..n {
-            let i = rng.gen_range(n);
-            let q = problem.data.row_norms_sq[i];
-            if q == 0.0 {
-                continue;
-            }
-            let z = problem.data.x.row_dot(i, &w);
-            // Serial SDCA is the K=1, σ'=1 case: coef = q/(λn).
-            let delta = loss.coordinate_delta(alpha[i], problem.data.y[i], z, q * inv_ln);
-            if delta != 0.0 {
-                alpha[i] += delta;
-                problem.data.x.row_axpy(i, delta * inv_ln, &mut w);
-            }
-        }
+        sdca_epoch(problem, &mut alpha, &mut w, &mut rng);
         epochs_run = epoch + 1;
         if epoch % cfg.check_every == 0 {
             let certs = problem.certificates(&alpha, &w);

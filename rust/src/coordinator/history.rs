@@ -1,10 +1,16 @@
 //! Per-round training history: the raw series behind every figure.
+//!
+//! Histories are produced by the [`Driver`](crate::driver::Driver) run
+//! loop for every [`Method`](crate::driver::Method), serialize to CSV
+//! and JSON, and parse back ([`History::from_csv`] /
+//! [`History::from_json`]) so recorded series round-trip through the
+//! `results/` directory.
 
 use crate::util::json::{jarr, jnum, jobj, jstr, Json};
 
 /// One evaluated round (certificates are computed every `gap_every`
 /// rounds, so records may be sparser than rounds).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RoundRecord {
     pub round: usize,
     /// Cumulative communicated vectors (paper's Fig. 1 x-axis).
@@ -26,9 +32,36 @@ pub enum StopReason {
     MaxRounds,
     Diverged,
     DualStalled,
+    /// The Fig.-2 criterion: dual suboptimality D(α*) − D(α) reached the
+    /// configured ε_D target.
+    DualTargetReached,
 }
 
-#[derive(Clone, Debug)]
+impl StopReason {
+    /// Stable serialization name (JSON `stop` field, CSV `# stop=` line).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StopReason::GapReached => "gap_reached",
+            StopReason::MaxRounds => "max_rounds",
+            StopReason::Diverged => "diverged",
+            StopReason::DualStalled => "dual_stalled",
+            StopReason::DualTargetReached => "dual_target_reached",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<StopReason> {
+        match s {
+            "gap_reached" => Some(StopReason::GapReached),
+            "max_rounds" => Some(StopReason::MaxRounds),
+            "diverged" => Some(StopReason::Diverged),
+            "dual_stalled" => Some(StopReason::DualStalled),
+            "dual_target_reached" => Some(StopReason::DualTargetReached),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
 pub struct History {
     pub label: String,
     pub records: Vec<RoundRecord>,
@@ -92,30 +125,104 @@ impl History {
         self.stop == StopReason::Diverged
     }
 
-    /// CSV rows: round,comm_vectors,sim_time_s,compute_s,primal,dual,gap.
+    /// The CSV column header (shared by [`History::to_csv`] and the
+    /// streaming CSV observer).
+    pub fn csv_header() -> &'static str {
+        "round,comm_vectors,sim_time_s,compute_s,primal,dual,gap\n"
+    }
+
+    /// One CSV row. Floats use Rust's shortest round-trip formatting so
+    /// [`History::from_csv`] reconstructs the series exactly
+    /// (infinities print as `inf`/`-inf`, which also parse back).
+    pub fn csv_row(r: &RoundRecord) -> String {
+        format!(
+            "{},{},{},{},{},{},{}\n",
+            r.round, r.comm_vectors, r.sim_time_s, r.compute_s, r.primal, r.dual, r.gap
+        )
+    }
+
+    /// CSV serialization: `# label=` / `# stop=` comment lines, the
+    /// column header, then one row per record.
     pub fn to_csv(&self) -> String {
-        let mut out = String::from("round,comm_vectors,sim_time_s,compute_s,primal,dual,gap\n");
+        let mut out = format!("# label={}\n# stop={}\n", self.label, self.stop.as_str());
+        out.push_str(Self::csv_header());
         for r in &self.records {
-            out.push_str(&format!(
-                "{},{},{:.6},{:.6},{:.10},{:.10},{:.10}\n",
-                r.round, r.comm_vectors, r.sim_time_s, r.compute_s, r.primal, r.dual, r.gap
-            ));
+            out.push_str(&Self::csv_row(r));
         }
         out
+    }
+
+    /// Parse [`History::to_csv`] output (the `#` comment lines are
+    /// optional — a streamed CSV without them parses with default
+    /// label/stop).
+    pub fn from_csv(text: &str) -> Result<History, String> {
+        let mut label = String::from("history");
+        let mut stop = StopReason::MaxRounds;
+        let mut records = Vec::new();
+        let mut saw_header = false;
+        for (idx, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('#') {
+                let rest = rest.trim();
+                if let Some(v) = rest.strip_prefix("label=") {
+                    label = v.to_string();
+                } else if let Some(v) = rest.strip_prefix("stop=") {
+                    stop = StopReason::parse(v)
+                        .ok_or_else(|| format!("line {}: unknown stop reason {v:?}", idx + 1))?;
+                }
+                continue;
+            }
+            if !saw_header {
+                if line != Self::csv_header().trim_end() {
+                    return Err(format!("line {}: unexpected header {line:?}", idx + 1));
+                }
+                saw_header = true;
+                continue;
+            }
+            let cells: Vec<&str> = line.split(',').collect();
+            if cells.len() != 7 {
+                return Err(format!(
+                    "line {}: expected 7 cells, got {}",
+                    idx + 1,
+                    cells.len()
+                ));
+            }
+            let fnum = |i: usize| -> Result<f64, String> {
+                cells[i]
+                    .parse()
+                    .map_err(|e| format!("line {}: {e}", idx + 1))
+            };
+            records.push(RoundRecord {
+                round: cells[0]
+                    .parse()
+                    .map_err(|e| format!("line {}: {e}", idx + 1))?,
+                comm_vectors: cells[1]
+                    .parse()
+                    .map_err(|e| format!("line {}: {e}", idx + 1))?,
+                sim_time_s: fnum(2)?,
+                compute_s: fnum(3)?,
+                primal: fnum(4)?,
+                dual: fnum(5)?,
+                gap: fnum(6)?,
+            });
+        }
+        if !saw_header {
+            return Err("missing csv header".into());
+        }
+        Ok(History {
+            label,
+            records,
+            stop,
+        })
     }
 
     pub fn to_json(&self) -> Json {
         jobj(vec![
             ("label", jstr(&self.label)),
-            (
-                "stop",
-                jstr(match self.stop {
-                    StopReason::GapReached => "gap_reached",
-                    StopReason::MaxRounds => "max_rounds",
-                    StopReason::Diverged => "diverged",
-                    StopReason::DualStalled => "dual_stalled",
-                }),
-            ),
+            ("stop", jstr(self.stop.as_str())),
             (
                 "records",
                 jarr(
@@ -136,6 +243,51 @@ impl History {
                 ),
             ),
         ])
+    }
+
+    /// Parse [`History::to_json`] output. JSON cannot represent
+    /// non-finite numbers (the writer emits `null`), so a null dual maps
+    /// back to `f64::NEG_INFINITY` (primal-only methods) and a null
+    /// primal/gap to `f64::INFINITY` (diverged or uncertifiable runs);
+    /// the counters and clocks are always finite and remain required.
+    pub fn from_json(j: &Json) -> Result<History, String> {
+        let label = j
+            .get("label")
+            .and_then(|v| v.as_str())
+            .ok_or("missing label")?
+            .to_string();
+        let stop = j
+            .get("stop")
+            .and_then(|v| v.as_str())
+            .and_then(StopReason::parse)
+            .ok_or("missing or unknown stop reason")?;
+        let recs = j
+            .get("records")
+            .and_then(|v| v.as_arr())
+            .ok_or("missing records")?;
+        let mut records = Vec::with_capacity(recs.len());
+        for (i, r) in recs.iter().enumerate() {
+            let fnum = |key: &str| -> Result<f64, String> {
+                r.get(key)
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| format!("record {i}: missing {key}"))
+            };
+            let opt = |key: &str| r.get(key).and_then(|v| v.as_f64());
+            records.push(RoundRecord {
+                round: fnum("round")? as usize,
+                comm_vectors: fnum("comm_vectors")? as usize,
+                sim_time_s: fnum("sim_time_s")?,
+                compute_s: fnum("compute_s")?,
+                primal: opt("primal").unwrap_or(f64::INFINITY),
+                dual: opt("dual").unwrap_or(f64::NEG_INFINITY),
+                gap: opt("gap").unwrap_or(f64::INFINITY),
+            });
+        }
+        Ok(History {
+            label,
+            records,
+            stop,
+        })
     }
 }
 
@@ -173,8 +325,40 @@ mod tests {
         let mut h = History::new("t");
         h.push(rec(0, 0.5));
         let csv = h.to_csv();
-        assert_eq!(csv.lines().count(), 2);
-        assert!(csv.starts_with("round,"));
+        // 2 comment lines + header + 1 row
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.starts_with("# label=t\n# stop=max_rounds\n"));
+        assert!(csv.contains("round,comm_vectors,"));
+    }
+
+    #[test]
+    fn csv_roundtrip_exact() {
+        let mut h = History::new("series-a");
+        h.push(rec(0, 0.123456789012345));
+        h.push(rec(3, 1e-9));
+        h.stop = StopReason::DualTargetReached;
+        let parsed = History::from_csv(&h.to_csv()).unwrap();
+        assert_eq!(parsed, h);
+    }
+
+    #[test]
+    fn csv_roundtrip_handles_infinite_dual() {
+        // Primal-only methods (SGD/ADMM) report dual = −∞.
+        let mut h = History::new("sgd");
+        let mut r = rec(0, 0.5);
+        r.dual = f64::NEG_INFINITY;
+        h.push(r);
+        let parsed = History::from_csv(&h.to_csv()).unwrap();
+        assert_eq!(parsed.records[0].dual, f64::NEG_INFINITY);
+        assert_eq!(parsed, h);
+    }
+
+    #[test]
+    fn csv_rejects_garbage() {
+        assert!(History::from_csv("").is_err());
+        assert!(History::from_csv("not,the,header\n1,2,3\n").is_err());
+        let ragged = format!("{}1,2,3\n", History::csv_header());
+        assert!(History::from_csv(&ragged).is_err());
     }
 
     #[test]
@@ -187,6 +371,28 @@ mod tests {
         assert_eq!(parsed.get("label").unwrap().as_str(), Some("series"));
         assert_eq!(parsed.get("stop").unwrap().as_str(), Some("gap_reached"));
         assert_eq!(parsed.get("records").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn json_roundtrip_through_from_json() {
+        let mut h = History::new("series-b");
+        h.push(rec(0, 0.25));
+        h.push(rec(2, 0.0625));
+        // non-finite certificates (primal-only dual, uncertifiable gap)
+        // serialize as JSON null and must map back to the same infinities
+        let mut r = rec(3, 0.5);
+        r.dual = f64::NEG_INFINITY;
+        r.gap = f64::INFINITY;
+        h.push(r);
+        h.stop = StopReason::DualTargetReached;
+        let text = h.to_json().to_string_pretty();
+        let parsed = History::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, h);
+        // the new variant's name round-trips through its stable string
+        assert_eq!(
+            StopReason::parse(StopReason::DualTargetReached.as_str()),
+            Some(StopReason::DualTargetReached)
+        );
     }
 
     #[test]

@@ -50,6 +50,7 @@ pub use history::{History, RoundRecord, StopReason};
 pub use pool::{Executor, PoolError, RoundTiming};
 
 use crate::data::Partition;
+use crate::driver::{Driver, Method, StepStats};
 use crate::linalg::dense;
 use crate::objective::Problem;
 use crate::solver::{
@@ -232,55 +233,61 @@ impl Trainer {
             .fold(0.0f64, f64::max)
     }
 
-    /// Run until the gap tolerance, divergence, or the round budget.
+    /// Run under the policy encoded in `cfg` (gap tolerance, divergence,
+    /// round budget, certificate cadence) through the shared
+    /// method-agnostic [`Driver`] loop.
     pub fn run(&mut self) -> History {
-        let label = format!(
+        let mut driver = Driver::from_cocoa_config(&self.cfg);
+        driver.run(self)
+    }
+}
+
+impl Method for Trainer {
+    fn step(&mut self) -> StepStats {
+        let compute_s = self.round();
+        StepStats {
+            compute_s,
+            comm_vectors: self.cfg.comm.round_vectors(self.cfg.k),
+        }
+    }
+
+    fn eval(&self) -> crate::objective::Certificates {
+        self.problem.certificates(&self.alpha, &self.w)
+    }
+
+    fn comm_vectors_per_round(&self) -> usize {
+        self.cfg.comm.round_vectors(self.cfg.k)
+    }
+
+    fn w(&self) -> &[f64] {
+        &self.w
+    }
+
+    fn label(&self) -> String {
+        format!(
             "{}(K={},γ={},σ'={},{})",
             if self.cfg.gamma() >= 1.0 { "cocoa+" } else { "cocoa" },
             self.cfg.k,
             self.cfg.gamma(),
             self.spec.sigma_prime,
             self.executor.solver_name(),
-        );
-        let mut hist = History::new(&label);
-        let mut cum_compute = 0.0f64;
-        let mut cum_sim = 0.0f64;
+        )
+    }
 
-        for t in 0..self.cfg.max_rounds {
-            let max_compute = self.round();
-            cum_compute += max_compute;
-            cum_sim += max_compute + self.cfg.comm.round_time(self.problem.d());
+    fn comm_model(&self) -> comm::CommModel {
+        self.cfg.comm
+    }
 
-            if t % self.cfg.gap_every == 0 || t + 1 == self.cfg.max_rounds {
-                let certs = self.problem.certificates(&self.alpha, &self.w);
-                hist.push(RoundRecord {
-                    round: t,
-                    comm_vectors: self.comm_stats.vectors,
-                    sim_time_s: cum_sim,
-                    compute_s: cum_compute,
-                    primal: certs.primal,
-                    dual: certs.dual,
-                    gap: certs.gap,
-                });
-                crate::log_debug!(
-                    "round {t}: P={:.6e} D={:.6e} gap={:.6e}",
-                    certs.primal,
-                    certs.dual,
-                    certs.gap
-                );
-                if !certs.gap.is_finite() || certs.gap > self.cfg.divergence_gap {
-                    hist.stop = StopReason::Diverged;
-                    crate::log_warn!("{label}: diverged at round {t} (gap={})", certs.gap);
-                    return hist;
-                }
-                if certs.gap <= self.cfg.gap_tol {
-                    hist.stop = StopReason::GapReached;
-                    return hist;
-                }
-            }
-        }
-        hist.stop = StopReason::MaxRounds;
-        hist
+    fn runtime_notes(&self) -> Option<String> {
+        Some(format!(
+            "{} executor; {}",
+            self.executor_kind(),
+            self.comm_stats().runtime_summary()
+        ))
+    }
+
+    fn train_error(&self) -> Option<f64> {
+        Some(self.problem.data.classification_error(&self.w))
     }
 }
 

@@ -1,0 +1,451 @@
+//! The unified training API: every optimizer in this crate — the CoCoA+
+//! [`crate::coordinator::Trainer`] and all five baselines — implements the
+//! [`Method`] trait, and a single [`Driver`] owns everything their
+//! hand-rolled loops used to duplicate:
+//!
+//! * the **stopping policy** ([`StopPolicy`]): duality-gap tolerance,
+//!   round budget, divergence abort, dual-progress stall, and the Fig.-2
+//!   dual-target criterion (stop when D(α*) − D(α) ≤ ε_D);
+//! * the **certificate cadence** (`gap_every`): certificates cost a full
+//!   pass over the data, so they are evaluated every N rounds;
+//! * the **simulated cluster clock**: per round the Driver charges the
+//!   method's measured compute seconds plus the
+//!   [`CommModel`](crate::coordinator::comm::CommModel) network time
+//!   (only on rounds that actually communicate);
+//! * pluggable [`Observer`]s (streaming CSV, progress logging,
+//!   checkpoint-every-N, best-gap tracking — see [`observers`]).
+//!
+//! The Driver's loop body is byte-for-byte the accounting the paper's
+//! comparison needs: identical communication and time treatment for every
+//! method, so CoCoA+ vs CoCoA vs mini-batch curves are produced by the
+//! *same* code path. `rust/tests/determinism.rs` locks in that routing
+//! `Trainer::run` through the Driver preserves bit-identical trajectories.
+
+pub mod observers;
+pub mod registry;
+
+pub use observers::{BestGapTracker, CheckpointEvery, CsvStream, Observer, ProgressLog};
+pub use registry::{build_method, BuildOpts, MethodName};
+
+use crate::coordinator::comm::CommModel;
+use crate::coordinator::config::CocoaConfig;
+use crate::coordinator::history::{History, RoundRecord, StopReason};
+use crate::objective::Certificates;
+
+/// What one outer round of a [`Method`] reports back to the [`Driver`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    /// Measured local-compute seconds for the round (max over workers —
+    /// the quantity that gates a synchronous cluster round).
+    pub compute_s: f64,
+    /// Vectors communicated this round (0 for serial methods and for
+    /// no-op rounds, e.g. one-shot averaging after its single round).
+    pub comm_vectors: usize,
+}
+
+/// A distributed (or serial reference) optimizer that the [`Driver`] can
+/// run: one synchronous outer round per [`Method::step`], primal/dual
+/// certificates on demand via [`Method::eval`].
+pub trait Method {
+    /// Execute one outer round and report its cost.
+    fn step(&mut self) -> StepStats;
+
+    /// Primal/dual certificates at the current iterate. Methods without a
+    /// dual certificate (mini-batch SGD, ADMM) report
+    /// `dual = f64::NEG_INFINITY` and use the `gap` slot for primal
+    /// suboptimality against an externally supplied target (or the raw
+    /// primal value when none is known) — the paper's §6 point that
+    /// primal-only methods cannot certify their own accuracy.
+    fn eval(&self) -> Certificates;
+
+    /// Vectors a full communicating round moves (the paper's Fig.-1
+    /// x-axis unit): one per worker for the distributed methods, 0 for
+    /// serial ones.
+    fn comm_vectors_per_round(&self) -> usize;
+
+    /// The current shared primal model.
+    fn w(&self) -> &[f64];
+
+    /// Human-readable series label (method, K, γ, σ', solver, …).
+    fn label(&self) -> String;
+
+    /// Simulated cluster network used for the elapsed-time axis.
+    fn comm_model(&self) -> CommModel;
+
+    /// Dimension of the communicated vectors (defaults to `w().len()`).
+    fn dim(&self) -> usize {
+        self.w().len()
+    }
+
+    /// Optional runtime diagnostics printed by the CLI after a run
+    /// (e.g. the Trainer's executor kind and pool overhead).
+    fn runtime_notes(&self) -> Option<String> {
+        None
+    }
+
+    /// Training 0/1 classification error of the current model on the
+    /// method's own dataset, when it can evaluate one.
+    fn train_error(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// The Fig.-2 stopping rule: stop once the dual suboptimality
+/// D(α*) − D(α) falls below `eps`, given an externally estimated optimum
+/// `d_star` (calibrated by a long serial-SDCA run).
+#[derive(Clone, Copy, Debug)]
+pub struct DualTarget {
+    pub d_star: f64,
+    pub eps: f64,
+}
+
+/// Stop when the dual has not improved by more than `min_delta` for
+/// `patience` consecutive certificate evaluations.
+#[derive(Clone, Copy, Debug)]
+pub struct DualStall {
+    pub patience: usize,
+    pub min_delta: f64,
+}
+
+/// When a [`Driver`] run ends. All rules are checked at certificate
+/// cadence, in this order: divergence, gap tolerance, dual target,
+/// dual stall; the round budget bounds everything.
+#[derive(Clone, Copy, Debug)]
+pub struct StopPolicy {
+    /// Hard bound on outer rounds.
+    pub max_rounds: usize,
+    /// Stop when the duality gap falls below this. Use
+    /// `f64::NEG_INFINITY` to disable gap stopping.
+    pub gap_tol: f64,
+    /// Abort and flag divergence when the gap exceeds this (an infinite
+    /// gap trips any finite threshold). Use `f64::INFINITY` to disable —
+    /// useful for methods whose gap may legitimately be infinite, e.g.
+    /// one-shot averaging with a dual-infeasible scaled α. NaN gaps
+    /// always abort.
+    pub divergence_gap: f64,
+    /// Optional Fig.-2 dual-target criterion.
+    pub dual_target: Option<DualTarget>,
+    /// Optional dual-progress stall criterion.
+    pub dual_stall: Option<DualStall>,
+}
+
+impl Default for StopPolicy {
+    fn default() -> StopPolicy {
+        StopPolicy {
+            max_rounds: 200,
+            gap_tol: 1e-4,
+            divergence_gap: 1e6,
+            dual_target: None,
+            dual_stall: None,
+        }
+    }
+}
+
+impl StopPolicy {
+    pub fn new(max_rounds: usize) -> StopPolicy {
+        StopPolicy {
+            max_rounds,
+            ..StopPolicy::default()
+        }
+    }
+
+    pub fn with_gap_tol(mut self, tol: f64) -> StopPolicy {
+        self.gap_tol = tol;
+        self
+    }
+
+    pub fn with_divergence_gap(mut self, gap: f64) -> StopPolicy {
+        self.divergence_gap = gap;
+        self
+    }
+
+    pub fn with_dual_target(mut self, d_star: f64, eps: f64) -> StopPolicy {
+        self.dual_target = Some(DualTarget { d_star, eps });
+        self
+    }
+
+    pub fn with_dual_stall(mut self, patience: usize, min_delta: f64) -> StopPolicy {
+        self.dual_stall = Some(DualStall {
+            patience,
+            min_delta,
+        });
+        self
+    }
+}
+
+/// The method-agnostic outer loop: steps a [`Method`], keeps the
+/// simulated cluster clock and communication totals, evaluates
+/// certificates on a cadence, applies the [`StopPolicy`], and notifies
+/// [`Observer`]s.
+pub struct Driver {
+    pub stop: StopPolicy,
+    /// Evaluate certificates every `gap_every` rounds (they cost a full
+    /// pass over the data). The final round is always evaluated.
+    pub gap_every: usize,
+    observers: Vec<Box<dyn Observer>>,
+}
+
+impl Driver {
+    pub fn new(stop: StopPolicy) -> Driver {
+        Driver {
+            stop,
+            gap_every: 1,
+            observers: Vec::new(),
+        }
+    }
+
+    /// The policy a [`CocoaConfig`] encodes (gap tolerance, round budget,
+    /// divergence abort, certificate cadence) — what `Trainer::run` uses.
+    pub fn from_cocoa_config(cfg: &CocoaConfig) -> Driver {
+        Driver::new(
+            StopPolicy::new(cfg.max_rounds)
+                .with_gap_tol(cfg.gap_tol)
+                .with_divergence_gap(cfg.divergence_gap),
+        )
+        .with_gap_every(cfg.gap_every)
+    }
+
+    pub fn with_gap_every(mut self, every: usize) -> Driver {
+        self.gap_every = every.max(1);
+        self
+    }
+
+    pub fn with_observer(mut self, obs: Box<dyn Observer>) -> Driver {
+        self.observers.push(obs);
+        self
+    }
+
+    /// Run `method` under this driver's policy and return the history.
+    pub fn run(&mut self, method: &mut dyn Method) -> History {
+        let label = method.label();
+        let comm = method.comm_model();
+        let mut hist = History::new(&label);
+        let mut cum_compute = 0.0f64;
+        let mut cum_sim = 0.0f64;
+        let mut vectors = 0usize;
+        let mut best_dual = f64::NEG_INFINITY;
+        let mut stalled_evals = 0usize;
+        let mut stop = StopReason::MaxRounds;
+
+        'rounds: for t in 0..self.stop.max_rounds {
+            let stats = method.step();
+            cum_compute += stats.compute_s;
+            cum_sim += stats.compute_s;
+            if stats.comm_vectors > 0 {
+                // Network time is charged only on rounds that communicate
+                // (one-shot averaging's no-op rounds stay free).
+                cum_sim += comm.round_time(method.dim());
+            }
+            vectors += stats.comm_vectors;
+
+            if t % self.gap_every == 0 || t + 1 == self.stop.max_rounds {
+                let certs = method.eval();
+                let rec = RoundRecord {
+                    round: t,
+                    comm_vectors: vectors,
+                    sim_time_s: cum_sim,
+                    compute_s: cum_compute,
+                    primal: certs.primal,
+                    dual: certs.dual,
+                    gap: certs.gap,
+                };
+                hist.push(rec);
+                for obs in &mut self.observers {
+                    obs.on_record(&rec, method.w());
+                }
+                crate::log_debug!(
+                    "round {t}: P={:.6e} D={:.6e} gap={:.6e}",
+                    certs.primal,
+                    certs.dual,
+                    certs.gap
+                );
+
+                if certs.gap.is_nan() || certs.gap > self.stop.divergence_gap {
+                    stop = StopReason::Diverged;
+                    crate::log_warn!("{label}: diverged at round {t} (gap={})", certs.gap);
+                    break 'rounds;
+                }
+                if certs.gap <= self.stop.gap_tol {
+                    stop = StopReason::GapReached;
+                    break 'rounds;
+                }
+                if let Some(dt) = self.stop.dual_target {
+                    if certs.dual.is_finite() && dt.d_star - certs.dual <= dt.eps {
+                        stop = StopReason::DualTargetReached;
+                        break 'rounds;
+                    }
+                }
+                if let Some(ds) = self.stop.dual_stall {
+                    if certs.dual.is_finite() {
+                        if certs.dual > best_dual + ds.min_delta {
+                            best_dual = certs.dual;
+                            stalled_evals = 0;
+                        } else {
+                            stalled_evals += 1;
+                            if stalled_evals >= ds.patience {
+                                stop = StopReason::DualStalled;
+                                crate::log_warn!(
+                                    "{label}: dual stalled at round {t} (best D={best_dual:.6e})"
+                                );
+                                break 'rounds;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        hist.stop = stop;
+        for obs in &mut self.observers {
+            obs.on_finish(&hist);
+        }
+        hist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic method with a geometric gap trajectory: gap_{t+1} =
+    /// shrink·gap_t, dual = 1 − gap. shrink > 1 models divergence,
+    /// shrink = 1 models a stall.
+    struct Toy {
+        gap: f64,
+        shrink: f64,
+        w: Vec<f64>,
+    }
+
+    impl Toy {
+        fn new(shrink: f64) -> Toy {
+            Toy {
+                gap: 1.0,
+                shrink,
+                w: vec![0.0; 4],
+            }
+        }
+    }
+
+    impl Method for Toy {
+        fn step(&mut self) -> StepStats {
+            self.gap *= self.shrink;
+            StepStats {
+                compute_s: 1e-3,
+                comm_vectors: 2,
+            }
+        }
+        fn eval(&self) -> Certificates {
+            Certificates {
+                primal: 1.0,
+                dual: 1.0 - self.gap,
+                gap: self.gap,
+            }
+        }
+        fn comm_vectors_per_round(&self) -> usize {
+            2
+        }
+        fn w(&self) -> &[f64] {
+            &self.w
+        }
+        fn label(&self) -> String {
+            "toy".to_string()
+        }
+        fn comm_model(&self) -> CommModel {
+            CommModel::disabled()
+        }
+    }
+
+    #[test]
+    fn stops_on_gap_tolerance() {
+        let mut d = Driver::new(StopPolicy::new(100).with_gap_tol(1e-2));
+        let h = d.run(&mut Toy::new(0.5));
+        assert_eq!(h.stop, StopReason::GapReached);
+        assert!(h.final_gap() <= 1e-2);
+        assert!(h.rounds_run() < 100);
+    }
+
+    #[test]
+    fn stops_on_round_budget() {
+        let mut d = Driver::new(StopPolicy::new(5).with_gap_tol(f64::NEG_INFINITY));
+        let h = d.run(&mut Toy::new(0.5));
+        assert_eq!(h.stop, StopReason::MaxRounds);
+        assert_eq!(h.rounds_run(), 5);
+    }
+
+    #[test]
+    fn stops_on_divergence() {
+        let mut d = Driver::new(
+            StopPolicy::new(100)
+                .with_gap_tol(f64::NEG_INFINITY)
+                .with_divergence_gap(10.0),
+        );
+        let h = d.run(&mut Toy::new(2.0));
+        assert_eq!(h.stop, StopReason::Diverged);
+        assert!(h.diverged());
+    }
+
+    #[test]
+    fn stops_on_dual_target() {
+        // dual = 1 − gap → suboptimality vs d* = 1 is exactly the gap.
+        let mut d = Driver::new(
+            StopPolicy::new(100)
+                .with_gap_tol(f64::NEG_INFINITY)
+                .with_dual_target(1.0, 1e-3),
+        );
+        let h = d.run(&mut Toy::new(0.5));
+        assert_eq!(h.stop, StopReason::DualTargetReached);
+        assert!(1.0 - h.final_dual() <= 1e-3);
+    }
+
+    #[test]
+    fn stops_on_dual_stall() {
+        // shrink = 1 → the dual never moves; first eval sets the best,
+        // the next `patience` evals count as stalled.
+        let mut d = Driver::new(
+            StopPolicy::new(100)
+                .with_gap_tol(f64::NEG_INFINITY)
+                .with_dual_stall(3, 0.0),
+        );
+        let h = d.run(&mut Toy::new(1.0));
+        assert_eq!(h.stop, StopReason::DualStalled);
+        assert_eq!(h.rounds_run(), 4); // 1 improving eval + 3 stalled
+    }
+
+    #[test]
+    fn certificate_cadence_and_final_round() {
+        let mut d = Driver::new(StopPolicy::new(7).with_gap_tol(f64::NEG_INFINITY))
+            .with_gap_every(3);
+        let h = d.run(&mut Toy::new(0.9));
+        let rounds: Vec<usize> = h.records.iter().map(|r| r.round).collect();
+        assert_eq!(rounds, vec![0, 3, 6]);
+    }
+
+    #[test]
+    fn clock_and_vectors_accumulate() {
+        let mut d = Driver::new(StopPolicy::new(4).with_gap_tol(f64::NEG_INFINITY));
+        let h = d.run(&mut Toy::new(0.9));
+        let last = h.records.last().unwrap();
+        assert_eq!(last.comm_vectors, 8); // 2 vectors × 4 rounds
+        assert!((last.compute_s - 4e-3).abs() < 1e-12);
+        // comm model disabled → sim clock is pure compute
+        assert!((last.sim_time_s - last.compute_s).abs() < 1e-15);
+        for pair in h.records.windows(2) {
+            assert!(pair[1].sim_time_s > pair[0].sim_time_s);
+        }
+    }
+
+    #[test]
+    fn from_cocoa_config_mirrors_trainer_policy() {
+        use crate::coordinator::{CocoaConfig, SolverSpec};
+        use crate::loss::Loss;
+        let cfg = CocoaConfig::cocoa_plus(4, Loss::Hinge, 0.1, SolverSpec::Sdca { h: 5 })
+            .with_rounds(17)
+            .with_gap_tol(1e-7)
+            .with_gap_every(4);
+        let d = Driver::from_cocoa_config(&cfg);
+        assert_eq!(d.stop.max_rounds, 17);
+        assert_eq!(d.stop.gap_tol, 1e-7);
+        assert_eq!(d.gap_every, 4);
+        assert!(d.stop.dual_target.is_none());
+    }
+}

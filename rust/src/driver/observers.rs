@@ -1,0 +1,258 @@
+//! Pluggable per-round hooks for the [`Driver`](super::Driver): metric
+//! sinks that used to be copy-pasted into every experiment loop. An
+//! observer sees each evaluated [`RoundRecord`] (plus the current model
+//! w) and the final [`History`].
+
+use crate::coordinator::history::{History, RoundRecord};
+use crate::util::json::{jarr, jnum, jobj};
+use std::cell::RefCell;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Receives every evaluated round and the finished history. All hooks
+/// default to no-ops so implementations override only what they need.
+pub trait Observer {
+    fn on_record(&mut self, record: &RoundRecord, w: &[f64]) {
+        let _ = (record, w);
+    }
+    fn on_finish(&mut self, history: &History) {
+        let _ = history;
+    }
+}
+
+/// Streams history rows to a CSV file as they are evaluated (header
+/// first, one row per certificate evaluation, flushed at the end), so a
+/// long run's series is inspectable while it is still going.
+pub struct CsvStream {
+    path: PathBuf,
+    out: Option<std::io::BufWriter<std::fs::File>>,
+}
+
+impl CsvStream {
+    /// Create (or truncate) `path`, creating parent directories, and
+    /// write the header.
+    pub fn create(path: impl Into<PathBuf>) -> std::io::Result<CsvStream> {
+        let path = path.into();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        out.write_all(History::csv_header().as_bytes())?;
+        Ok(CsvStream {
+            path,
+            out: Some(out),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Observer for CsvStream {
+    fn on_record(&mut self, record: &RoundRecord, _w: &[f64]) {
+        if let Some(out) = self.out.as_mut() {
+            if out
+                .write_all(History::csv_row(record).as_bytes())
+                .is_err()
+            {
+                crate::log_warn!("csv stream to {} failed; disabling", self.path.display());
+                self.out = None;
+            }
+        }
+    }
+
+    fn on_finish(&mut self, history: &History) {
+        if let Some(out) = self.out.as_mut() {
+            // Trailing comment lines carry the run's identity and outcome;
+            // History::from_csv accepts them anywhere in the file.
+            let _ = writeln!(out, "# label={}", history.label);
+            let _ = writeln!(out, "# stop={}", history.stop.as_str());
+            let _ = out.flush();
+        }
+    }
+}
+
+/// Logs progress at `log_info` level every `every`-th evaluated round,
+/// plus a summary line when the run finishes.
+pub struct ProgressLog {
+    every: usize,
+    seen: usize,
+}
+
+impl ProgressLog {
+    pub fn new(every: usize) -> ProgressLog {
+        ProgressLog {
+            every: every.max(1),
+            seen: 0,
+        }
+    }
+}
+
+impl Observer for ProgressLog {
+    fn on_record(&mut self, record: &RoundRecord, _w: &[f64]) {
+        if self.seen % self.every == 0 {
+            crate::log_info!(
+                "round {:>4}: gap {:.3e}  P {:.6e}  D {:.6e}  t_sim {:.3}s",
+                record.round,
+                record.gap,
+                record.primal,
+                record.dual,
+                record.sim_time_s
+            );
+        }
+        self.seen += 1;
+    }
+
+    fn on_finish(&mut self, history: &History) {
+        crate::log_info!(
+            "{}: stop={:?} after {} rounds, final gap {:.3e}",
+            history.label,
+            history.stop,
+            history.rounds_run(),
+            history.final_gap()
+        );
+    }
+}
+
+/// Writes a JSON snapshot `{round, w}` of the shared model every
+/// `every`-th evaluated round (overwriting — the file always holds the
+/// latest snapshot), so a long run can be warm-restarted or inspected.
+pub struct CheckpointEvery {
+    every: usize,
+    seen: usize,
+    path: PathBuf,
+}
+
+impl CheckpointEvery {
+    pub fn new(every: usize, path: impl Into<PathBuf>) -> CheckpointEvery {
+        CheckpointEvery {
+            every: every.max(1),
+            seen: 0,
+            path: path.into(),
+        }
+    }
+}
+
+impl Observer for CheckpointEvery {
+    fn on_record(&mut self, record: &RoundRecord, w: &[f64]) {
+        if self.seen % self.every == 0 {
+            let snap = jobj(vec![
+                ("round", jnum(record.round as f64)),
+                ("gap", jnum(record.gap)),
+                ("w", jarr(w.iter().map(|&v| jnum(v)).collect())),
+            ]);
+            if let Err(e) = crate::report::write_to(&self.path, &snap.to_string_compact()) {
+                crate::log_warn!("checkpoint to {} failed: {e}", self.path.display());
+            }
+        }
+        self.seen += 1;
+    }
+}
+
+/// The best (smallest) gap seen so far, with its round and simulated
+/// time — readable after the run through a cloned handle.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BestGap {
+    pub round: usize,
+    pub gap: f64,
+    pub sim_time_s: f64,
+}
+
+/// Tracks the best gap across a run. The tracker is a cheap cloneable
+/// handle: keep one clone, hand the other to the [`Driver`], and read
+/// [`BestGapTracker::best`] after the run.
+#[derive(Clone, Default)]
+pub struct BestGapTracker {
+    inner: Rc<RefCell<Option<BestGap>>>,
+}
+
+impl BestGapTracker {
+    pub fn new() -> BestGapTracker {
+        BestGapTracker::default()
+    }
+
+    pub fn best(&self) -> Option<BestGap> {
+        *self.inner.borrow()
+    }
+}
+
+impl Observer for BestGapTracker {
+    fn on_record(&mut self, record: &RoundRecord, _w: &[f64]) {
+        let mut slot = self.inner.borrow_mut();
+        let better = slot.map_or(true, |b| record.gap < b.gap);
+        if better {
+            *slot = Some(BestGap {
+                round: record.round,
+                gap: record.gap,
+                sim_time_s: record.sim_time_s,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, gap: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            comm_vectors: round * 2,
+            sim_time_s: round as f64 * 0.5,
+            compute_s: round as f64 * 0.25,
+            primal: 1.0,
+            dual: 1.0 - gap,
+            gap,
+        }
+    }
+
+    #[test]
+    fn best_gap_tracker_keeps_minimum() {
+        let tracker = BestGapTracker::new();
+        let mut handle = tracker.clone();
+        handle.on_record(&rec(0, 0.5), &[]);
+        handle.on_record(&rec(1, 0.1), &[]);
+        handle.on_record(&rec(2, 0.3), &[]);
+        let best = tracker.best().unwrap();
+        assert_eq!(best.round, 1);
+        assert!((best.gap - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_stream_writes_parseable_rows_with_outcome_trailer() {
+        use crate::coordinator::history::StopReason;
+        let path = std::env::temp_dir().join("cocoa_obs_stream_test.csv");
+        let mut s = CsvStream::create(&path).unwrap();
+        s.on_record(&rec(0, 0.5), &[]);
+        s.on_record(&rec(1, 0.25), &[]);
+        let mut done = History::new("streamed-series");
+        done.stop = StopReason::GapReached;
+        s.on_finish(&done);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("round,"));
+        assert_eq!(text.lines().count(), 5); // header + 2 rows + 2 trailers
+        let parsed = History::from_csv(&text).unwrap();
+        assert_eq!(parsed.records.len(), 2);
+        assert!((parsed.records[1].gap - 0.25).abs() < 1e-15);
+        assert_eq!(parsed.label, "streamed-series");
+        assert_eq!(parsed.stop, StopReason::GapReached);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checkpoint_every_writes_latest_snapshot() {
+        let path = std::env::temp_dir().join("cocoa_obs_ckpt_test.json");
+        let mut c = CheckpointEvery::new(2, &path);
+        c.on_record(&rec(0, 0.5), &[1.0, 2.0]); // seen 0 → write
+        c.on_record(&rec(1, 0.4), &[3.0, 4.0]); // skipped
+        c.on_record(&rec(2, 0.3), &[5.0, 6.0]); // seen 2 → overwrite
+        let j = crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("round").unwrap().as_f64(), Some(2.0));
+        let w = j.get("w").unwrap().as_arr().unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0].as_f64(), Some(5.0));
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,209 @@
+//! Name-indexed construction of every optimizer behind one flag surface:
+//! `cocoa train --method <name>` and the conformance suite both build
+//! methods through here, so adding an optimizer is a one-file change
+//! (implement [`Method`], add a [`MethodName`] arm).
+
+use crate::baselines::admm::{Admm, AdmmConfig};
+use crate::baselines::minibatch_sdca::{MiniBatchSdca, MiniBatchSdcaConfig};
+use crate::baselines::minibatch_sgd::{MiniBatchSgd, MiniBatchSgdConfig};
+use crate::baselines::one_shot::{OneShot as OneShotAveraging, OneShotConfig};
+use crate::baselines::serial_sdca::{SerialSdca, SerialSdcaConfig};
+use crate::coordinator::{CocoaConfig, SolverSpec, Trainer};
+use crate::data::Partition;
+use crate::driver::Method;
+use crate::objective::Problem;
+
+/// Every optimizer reachable from the CLI and the conformance suite.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodName {
+    /// CoCoA+ (γ=1, σ'=K): the paper's adding regime.
+    CocoaPlus,
+    /// Original CoCoA (γ=1/K, σ'=1): conservative averaging.
+    Cocoa,
+    /// Distributed mini-batch subgradient descent (Fig. 2's third curve).
+    MbSgd,
+    /// Distributed mini-batch SDCA with safe 1/(K·b) scaling.
+    MbSdca,
+    /// One-shot averaging of independently solved local ERMs.
+    OneShot,
+    /// Consensus ADMM (Forero et al. 2010).
+    Admm,
+    /// Serial single-machine SDCA (the K=1 reference).
+    SerialSdca,
+}
+
+impl MethodName {
+    pub const ALL: [MethodName; 7] = [
+        MethodName::CocoaPlus,
+        MethodName::Cocoa,
+        MethodName::MbSgd,
+        MethodName::MbSdca,
+        MethodName::OneShot,
+        MethodName::Admm,
+        MethodName::SerialSdca,
+    ];
+
+    /// The CLI spelling (also used to name output files).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MethodName::CocoaPlus => "cocoa-plus",
+            MethodName::Cocoa => "cocoa",
+            MethodName::MbSgd => "mb-sgd",
+            MethodName::MbSdca => "mb-sdca",
+            MethodName::OneShot => "one-shot",
+            MethodName::Admm => "admm",
+            MethodName::SerialSdca => "serial-sdca",
+        }
+    }
+
+    /// Parse a CLI spelling (plus a few aliases kept for back-compat
+    /// with the old `--variant plus|avg` flag).
+    pub fn parse(s: &str) -> Option<MethodName> {
+        match s {
+            "cocoa-plus" | "cocoa+" | "plus" | "add" => Some(MethodName::CocoaPlus),
+            "cocoa" | "avg" | "average" => Some(MethodName::Cocoa),
+            "mb-sgd" | "minibatch-sgd" => Some(MethodName::MbSgd),
+            "mb-sdca" | "minibatch-sdca" => Some(MethodName::MbSdca),
+            "one-shot" | "oneshot" => Some(MethodName::OneShot),
+            "admm" => Some(MethodName::Admm),
+            "serial-sdca" | "sdca" => Some(MethodName::SerialSdca),
+            _ => None,
+        }
+    }
+
+    /// `cocoa-plus|cocoa|mb-sgd|…` — for help/usage strings.
+    pub fn usage() -> String {
+        MethodName::ALL
+            .iter()
+            .map(|m| m.as_str())
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+}
+
+/// The shared knob surface `cocoa train` exposes; each method reads the
+/// subset it understands and ignores the rest.
+#[derive(Clone, Debug)]
+pub struct BuildOpts {
+    /// Number of workers K (ignored by serial SDCA).
+    pub k: usize,
+    pub seed: u64,
+    /// Local SDCA epochs per round (CoCoA variants) or total local
+    /// epochs (one-shot, rounded to ≥ 1).
+    pub epochs: f64,
+    /// Subproblem parameter σ' override (CoCoA variants only).
+    pub sigma_prime: Option<f64>,
+    /// Pooled-thread vs sequential execution (CoCoA variants only).
+    pub parallel: bool,
+    /// Mini-batch size per worker per round (mb-sgd / mb-sdca).
+    pub batch_per_worker: usize,
+    /// Aggregation scaling β (mb-sdca).
+    pub beta: f64,
+    /// Augmented-Lagrangian penalty ρ (ADMM).
+    pub rho: f64,
+    /// Inexact local subgradient steps per round (ADMM).
+    pub local_iters: usize,
+}
+
+impl BuildOpts {
+    pub fn new(k: usize) -> BuildOpts {
+        BuildOpts {
+            k,
+            seed: 42,
+            epochs: 1.0,
+            sigma_prime: None,
+            parallel: true,
+            batch_per_worker: 16,
+            beta: 1.0,
+            rho: 1.0,
+            local_iters: 50,
+        }
+    }
+}
+
+/// Build a boxed [`Method`] ready to hand to a
+/// [`Driver`](crate::driver::Driver). Loss and λ come from `problem`;
+/// stopping policy and certificate cadence belong to the Driver, not the
+/// method, so the per-method configs' stopping fields are left at their
+/// defaults.
+pub fn build_method(
+    name: MethodName,
+    problem: Problem,
+    partition: Partition,
+    opts: &BuildOpts,
+) -> Box<dyn Method> {
+    match name {
+        MethodName::CocoaPlus | MethodName::Cocoa => {
+            let solver = SolverSpec::SdcaEpochs {
+                epochs: opts.epochs,
+            };
+            let mut cfg = if name == MethodName::CocoaPlus {
+                CocoaConfig::cocoa_plus(opts.k, problem.loss, problem.lambda, solver)
+            } else {
+                CocoaConfig::cocoa(opts.k, problem.loss, problem.lambda, solver)
+            }
+            .with_seed(opts.seed)
+            .with_parallel(opts.parallel);
+            if let Some(sp) = opts.sigma_prime {
+                cfg = cfg.with_sigma_prime(sp);
+            }
+            Box::new(Trainer::new(problem, partition, cfg))
+        }
+        MethodName::MbSgd => {
+            let mut cfg = MiniBatchSgdConfig::new(opts.k);
+            cfg.seed = opts.seed;
+            cfg.batch_per_worker = opts.batch_per_worker;
+            Box::new(MiniBatchSgd::new(problem, partition, cfg))
+        }
+        MethodName::MbSdca => {
+            let mut cfg = MiniBatchSdcaConfig::new(opts.k);
+            cfg.seed = opts.seed;
+            cfg.batch_per_worker = opts.batch_per_worker;
+            cfg.beta = opts.beta;
+            Box::new(MiniBatchSdca::new(problem, partition, cfg))
+        }
+        MethodName::OneShot => {
+            let mut cfg = OneShotConfig::new(opts.k);
+            cfg.seed = opts.seed;
+            cfg.local_epochs = opts.epochs.round().max(1.0) as usize;
+            Box::new(OneShotAveraging::new(problem, partition, cfg))
+        }
+        MethodName::Admm => {
+            let mut cfg = AdmmConfig::new(opts.k);
+            cfg.seed = opts.seed;
+            cfg.rho = opts.rho;
+            cfg.local_iters = opts.local_iters;
+            Box::new(Admm::new(problem, partition, cfg))
+        }
+        MethodName::SerialSdca => {
+            let cfg = SerialSdcaConfig {
+                seed: opts.seed,
+                ..SerialSdcaConfig::default()
+            };
+            Box::new(SerialSdca::new(problem, cfg))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_canonical_spellings() {
+        for name in MethodName::ALL {
+            assert_eq!(MethodName::parse(name.as_str()), Some(name));
+        }
+        assert_eq!(MethodName::parse("plus"), Some(MethodName::CocoaPlus));
+        assert_eq!(MethodName::parse("avg"), Some(MethodName::Cocoa));
+        assert_eq!(MethodName::parse("frobnicate"), None);
+    }
+
+    #[test]
+    fn usage_lists_all_methods() {
+        let u = MethodName::usage();
+        for name in MethodName::ALL {
+            assert!(u.contains(name.as_str()), "usage missing {name:?}: {u}");
+        }
+    }
+}

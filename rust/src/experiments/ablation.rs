@@ -61,6 +61,7 @@ pub fn run(ctx: &ExpContext) -> String {
             .with_gap_tol(tol)
             .with_seed(ctx.seed);
             let mut t = Trainer::new(problem, part, cfg);
+            // Trainer::run == Driver::from_cocoa_config(&cfg).run(..)
             let hist = t.run();
             let hit = hist.time_to_gap(tol).map(|(r, _, _)| r + 1);
             let first_gap = hist.records.first().map(|r| r.gap).unwrap_or(f64::INFINITY);

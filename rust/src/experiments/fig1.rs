@@ -76,6 +76,7 @@ pub fn run(ctx: &ExpContext) -> String {
                     .with_seed(ctx.seed)
                     .with_parallel(true);
                     let mut trainer = Trainer::new(problem, part, cfg);
+                    // Trainer::run == Driver::from_cocoa_config(&cfg).run(..)
                     let hist = trainer.run();
                     // CSV: method, lambda, epochs, round, vectors, time, gap
                     for r in &hist.records {

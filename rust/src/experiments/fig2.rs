@@ -14,8 +14,9 @@
 
 use crate::baselines::minibatch_sgd::{MiniBatchSgd, MiniBatchSgdConfig};
 use crate::baselines::serial_sdca;
-use crate::coordinator::{CocoaConfig, SolverSpec, Trainer};
+use crate::coordinator::{CocoaConfig, SolverSpec, StopReason, Trainer};
 use crate::data::partition::random_balanced;
+use crate::driver::{Driver, StopPolicy};
 use crate::experiments::ExpContext;
 use crate::loss::Loss;
 use crate::objective::Problem;
@@ -66,25 +67,24 @@ pub fn run(ctx: &ExpContext) -> String {
                 } else {
                     CocoaConfig::cocoa(k, Loss::Hinge, lambda, solver)
                 }
-                .with_rounds(rounds)
-                .with_gap_tol(0.0) // run on the dual target, not the gap
                 .with_seed(ctx.seed)
                 .with_parallel(true);
                 let mut trainer = Trainer::new(problem, part, cfg);
-                // custom loop: stop when dual suboptimality hits eps_d
-                let mut cum = 0.0;
-                let mut reached = None;
-                for _t in 0..rounds {
-                    let c = trainer.round();
-                    cum += c + trainer.cfg.comm.round_time(trainer.problem.d());
-                    let dual = trainer.problem.dual_value(&trainer.alpha, &trainer.w);
-                    if d_star - dual <= eps_d {
-                        reached = Some(cum);
-                        break;
-                    }
-                }
+                // Dual-target ε_D stopping is a Driver rule now: per-round
+                // certificates, stop once D(α*) − D(α) ≤ ε_D, gap ignored.
+                let mut driver = Driver::new(
+                    StopPolicy::new(rounds)
+                        .with_gap_tol(f64::NEG_INFINITY)
+                        .with_divergence_gap(f64::INFINITY)
+                        .with_dual_target(d_star, eps_d),
+                );
+                let hist = driver.run(&mut trainer);
                 overhead_us.push(trainer.comm_stats().runtime_overhead_per_round_s() * 1e6);
-                reached
+                if hist.stop == StopReason::DualTargetReached {
+                    hist.records.last().map(|r| r.sim_time_s)
+                } else {
+                    None
+                }
             };
             let t_plus = time_for(true);
             let t_avg = time_for(false);

@@ -57,6 +57,7 @@ pub fn run(ctx: &ExpContext) -> String {
         .with_seed(ctx.seed)
         .with_parallel(true);
         let mut trainer = Trainer::new(problem, part, cfg);
+        // Trainer::run == Driver::from_cocoa_config(&cfg).run(..)
         let hist = trainer.run();
         let hit = hist.time_to_gap(target_gap);
         let first_gap = hist.records.first().map(|r| r.gap).unwrap_or(f64::INFINITY);

@@ -9,8 +9,9 @@
 //! constants can be sanity-checked against the bounds.
 
 use crate::baselines::serial_sdca;
-use crate::coordinator::{CocoaConfig, SolverSpec, Trainer};
+use crate::coordinator::{CocoaConfig, SolverSpec, StopReason, Trainer};
 use crate::data::partition::random_balanced;
+use crate::driver::{Driver, StopPolicy};
 use crate::experiments::ExpContext;
 use crate::loss::Loss;
 use crate::objective::Problem;
@@ -58,18 +59,19 @@ pub fn run(ctx: &ExpContext) -> String {
                 } else {
                     CocoaConfig::cocoa(k, loss, lambda, solver)
                 }
-                .with_rounds(max_rounds)
                 .with_seed(ctx.seed)
                 .with_parallel(true);
                 let mut trainer = Trainer::new(problem, part, cfg);
-                for t in 0..max_rounds {
-                    trainer.round();
-                    let dual = trainer.problem.dual_value(&trainer.alpha, &trainer.w);
-                    if d_star - dual <= eps_d {
-                        return Some(t + 1);
-                    }
-                }
-                None
+                // Rounds to the ε_D dual target, via the Driver's
+                // dual-target stop rule (gap stopping disabled).
+                let mut driver = Driver::new(
+                    StopPolicy::new(max_rounds)
+                        .with_gap_tol(f64::NEG_INFINITY)
+                        .with_divergence_gap(f64::INFINITY)
+                        .with_dual_target(d_star, eps_d),
+                );
+                let hist = driver.run(&mut trainer);
+                (hist.stop == StopReason::DualTargetReached).then(|| hist.rounds_run())
             };
             // Θ of a 1-epoch SDCA pass on the first block of each regime.
             let theta_for = |sigma_prime: f64| -> f64 {

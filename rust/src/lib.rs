@@ -46,6 +46,23 @@
 //! compute-time curves no longer absorb scheduler overhead the paper's
 //! cluster would not have.
 //!
+//! ## Unified training API
+//!
+//! Every optimizer — the CoCoA/CoCoA+ [`coordinator::Trainer`] and all
+//! five baselines (mini-batch SGD, mini-batch SDCA, one-shot averaging,
+//! consensus ADMM, serial SDCA) — implements the [`driver::Method`]
+//! trait (`step` / `eval` / `comm_vectors_per_round` / `w` / `label`),
+//! and a single [`driver::Driver`] owns the outer loop: the stopping
+//! policy ([`driver::StopPolicy`] — gap tolerance, round budget,
+//! divergence abort, dual stall, and the Fig.-2 dual-target ε_D rule),
+//! the certificate cadence, the simulated cluster clock with
+//! [`coordinator::comm::CommModel`] charging, and pluggable
+//! [`driver::Observer`]s (streaming CSV, progress logging,
+//! checkpoint-every-N, best-gap tracking). The experiment harness, the
+//! CLI (`cocoa train --method <name>`), and the conformance suite all
+//! drive optimizers exclusively through this API, so a new method, stop
+//! rule, or metric sink is a one-file change.
+//!
 //! Quickstart:
 //! ```no_run
 //! use cocoa::prelude::*;
@@ -56,13 +73,24 @@
 //! let cfg = CocoaConfig::cocoa_plus(8, Loss::Hinge, 1e-3,
 //!     SolverSpec::SdcaEpochs { epochs: 1.0 });
 //! let mut trainer = Trainer::new(problem, part, cfg);
-//! let history = trainer.run();
-//! println!("final duality gap: {:.3e}", history.final_gap());
+//! // The method-agnostic run loop: swap `trainer` for any other Method
+//! // (MiniBatchSgd, Admm, …) and the loop, clock, and stopping policy
+//! // stay the same.
+//! let mut driver = Driver::new(
+//!     StopPolicy::new(200).with_gap_tol(1e-4));
+//! let history = driver.run(&mut trainer);
+//! println!("final duality gap: {:.3e} ({:?})", history.final_gap(), history.stop);
 //! ```
+//!
+//! Baselines are also constructible by name through
+//! [`driver::registry::build_method`] — the same path `cocoa train
+//! --method cocoa-plus|cocoa|mb-sgd|mb-sdca|one-shot|admm|serial-sdca`
+//! uses.
 
 pub mod baselines;
 pub mod coordinator;
 pub mod data;
+pub mod driver;
 pub mod experiments;
 pub mod linalg;
 pub mod loss;
@@ -77,8 +105,13 @@ pub mod util;
 
 /// The most common imports in one place.
 pub mod prelude {
-    pub use crate::coordinator::{Aggregation, CocoaConfig, History, SolverSpec, Trainer};
+    pub use crate::coordinator::{
+        Aggregation, CocoaConfig, History, SolverSpec, StopReason, Trainer,
+    };
     pub use crate::data::{Dataset, Partition};
+    pub use crate::driver::{
+        BuildOpts, Driver, Method, MethodName, Observer, StepStats, StopPolicy,
+    };
     pub use crate::loss::Loss;
     pub use crate::objective::Problem;
     pub use crate::solver::LocalSolver;

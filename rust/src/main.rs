@@ -2,14 +2,15 @@
 //! partition diagnostics, and paper-experiment regeneration.
 //!
 //! Subcommands:
-//!   train        train a model with CoCoA/CoCoA+ on synthetic or LibSVM data
+//!   train        train with any optimizer (--method) on synthetic or LibSVM data
 //!   gen-data     write a synthetic dataset in LibSVM format
 //!   sigma        report partition constants σ_k, σ, and the Table-1 ratio
 //!   experiment   regenerate a paper table/figure: table1|table2|fig1|fig2|fig3|rates|all
 //!   artifacts-check   load + smoke-run the AOT artifacts via PJRT
 //!
-//! Run `cocoa <subcommand> --help` for flags.
+//! Run `cocoa help` for flags.
 
+use cocoa::driver::{build_method, CsvStream, ProgressLog};
 use cocoa::prelude::*;
 use cocoa::util::cli::Args;
 use cocoa::util::logging;
@@ -48,17 +49,24 @@ USAGE: cocoa <SUBCOMMAND> [flags]
 
 SUBCOMMANDS
   train            --data <path.svm> | --dataset <covtype|epsilon|rcv1|news|real-sim>
+                   --method <{methods}>
                    --k <workers> --lambda <λ> --loss <hinge|smoothed_hinge|logistic|squared>
-                   --variant <plus|avg> --sigma-prime <σ'> --epochs <local epochs>
-                   --rounds <max> --gap-tol <ε> --scale <dataset downscale> --seed <s>
+                   --rounds <max> --gap-tol <ε> --gap-every <N certificate cadence>
+                   --scale <dataset downscale> --seed <s>
+                   CoCoA variants: --sigma-prime <σ'> --epochs <local epochs>
+                                   --parallel <true|false>  (--variant <plus|avg> still accepted)
+                   mb-* variants:  --batch <per-worker batch size>  (mb-sdca: --beta <scaling>)
+                   admm:           --rho <penalty> --local-iters <inner steps>
+                   History streams to results/train/<method>_<dataset>.csv while running.
   gen-data         --dataset <name> --scale <s> --seed <s> --out <path.svm>
   sigma            --dataset <name> --scale <s> --ks 16,32,64 --seed <s>
-  experiment       table1|table2|fig1|fig2|fig3|rates|all  [--quick] [--scale s]
+  experiment       table1|table2|fig1|fig2|fig3|rates|ablation|all  [--quick] [--scale s]
   artifacts-check  --artifacts <dir>
 
 GLOBAL FLAGS
   --log <error|warn|info|debug|trace>   (or COCOA_LOG env var)
-  Results are written under ./results (or COCOA_RESULTS_DIR)."
+  Results are written under ./results (or COCOA_RESULTS_DIR).",
+        methods = MethodName::usage()
     );
 }
 
@@ -74,63 +82,147 @@ fn load_data(args: &Args) -> Dataset {
     }
 }
 
+/// Replace path-hostile characters in a dataset label so it can name an
+/// output file (`--data some/path.svm` keeps only the final component).
+fn file_label(name: &str) -> String {
+    let base = name.rsplit(['/', '\\']).next().unwrap_or(name);
+    base.chars()
+        .map(|c| {
+            if c.is_alphanumeric() || c == '-' || c == '_' || c == '.' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
 fn cmd_train(args: &Args) -> i32 {
+    // --method selects any optimizer; the legacy --variant plus|avg flag
+    // keeps selecting between the two CoCoA regimes when --method is
+    // absent. Validated before the (possibly expensive) data step.
+    let method_name = match args.get_opt("method") {
+        Some(s) => MethodName::parse(s)
+            .unwrap_or_else(|| panic!("unknown --method {s:?} ({})", MethodName::usage())),
+        None => match args.get_str("variant", "plus").as_str() {
+            "plus" | "add" => MethodName::CocoaPlus,
+            "avg" | "cocoa" => MethodName::Cocoa,
+            other => panic!("unknown --variant {other:?} (plus|avg)"),
+        },
+    };
+
     let data = load_data(args);
     let n = data.n();
     let k = args.get_usize("k", 8);
     let lambda = args.get_f64("lambda", 1e-4);
     let loss = Loss::parse(&args.get_str("loss", "hinge")).expect("unknown --loss");
     let seed = args.get_u64("seed", 42);
-    let epochs = args.get_f64("epochs", 1.0);
-    let variant = args.get_str("variant", "plus");
+
+    let mut opts = BuildOpts::new(k);
+    opts.seed = seed;
+    // --epochs means local epochs per round for CoCoA variants and total
+    // local epochs for one-shot (whose useful default is much higher).
+    let epochs_default = if method_name == MethodName::OneShot {
+        50.0
+    } else {
+        1.0
+    };
+    opts.epochs = args.get_f64("epochs", epochs_default);
+    opts.parallel = args.get_bool("parallel", true);
+    opts.batch_per_worker = args.get_usize("batch", 16);
+    opts.beta = args.get_f64("beta", 1.0);
+    opts.rho = args.get_f64("rho", 1.0);
+    opts.local_iters = args.get_usize("local-iters", 50);
+    if let Some(sp) = args.get_opt("sigma-prime") {
+        opts.sigma_prime = Some(sp.parse().expect("--sigma-prime must be a float"));
+    }
 
     let part = cocoa::data::partition::random_balanced(n, k, seed);
-    let solver = SolverSpec::SdcaEpochs { epochs };
-    let mut cfg = match variant.as_str() {
-        "plus" | "add" => CocoaConfig::cocoa_plus(k, loss, lambda, solver),
-        "avg" | "cocoa" => CocoaConfig::cocoa(k, loss, lambda, solver),
-        other => panic!("unknown --variant {other:?} (plus|avg)"),
-    }
-    .with_rounds(args.get_usize("rounds", 100))
-    .with_gap_tol(args.get_f64("gap-tol", 1e-4))
-    .with_seed(seed);
-    if let Some(sp) = args.get_opt("sigma-prime") {
-        cfg = cfg.with_sigma_prime(sp.parse().expect("--sigma-prime must be a float"));
-    }
-
+    let dataset_label = data.name.clone();
     println!(
-        "dataset={} n={} d={} density={:.4} | K={k} λ={lambda} loss={} γ={} σ'={}",
-        data.name,
+        "method={} dataset={} n={} d={} density={:.4} | K={k} λ={lambda} loss={}",
+        method_name.as_str(),
+        dataset_label,
         n,
         data.d(),
         data.density(),
-        loss.name(),
-        cfg.gamma(),
-        cfg.effective_sigma_prime()
+        loss.name()
     );
     let problem = Problem::new(data, loss, lambda);
-    let mut trainer = Trainer::new(problem, part, cfg);
-    let hist = trainer.run();
+    let mut method = build_method(method_name, problem, part, &opts);
+    println!("series: {}", method.label());
+
+    // One-shot averaging is a single communication round by construction,
+    // and its gap certificate may legitimately be infinite (dual-infeasible
+    // scaled α) — uncertifiable, not divergent.
+    let one_shot = method_name == MethodName::OneShot;
+    let max_rounds = if one_shot {
+        1
+    } else {
+        args.get_usize("rounds", 100)
+    };
+    // Primal-only methods (mb-sgd, admm) have no dual certificate: their
+    // gap column holds the raw primal value (no P* is available from the
+    // CLI), so the gap tolerance only applies when explicitly requested.
+    let primal_only = matches!(method_name, MethodName::MbSgd | MethodName::Admm);
+    let gap_tol = if primal_only && !args.has("gap-tol") {
+        f64::NEG_INFINITY
+    } else {
+        args.get_f64("gap-tol", 1e-4)
+    };
+    // Primal-only methods compare a raw primal objective, which can be a
+    // legitimate finite value above any duality-gap-scale threshold:
+    // match their run() wrappers and only flag true overflow.
+    let divergence_default = if one_shot {
+        f64::INFINITY
+    } else if primal_only {
+        f64::MAX
+    } else {
+        1e6
+    };
+    let stop = StopPolicy::new(max_rounds)
+        .with_gap_tol(gap_tol)
+        .with_divergence_gap(args.get_f64("divergence-gap", divergence_default));
+    let mut driver = Driver::new(stop)
+        .with_gap_every(args.get_usize("gap-every", 1))
+        .with_observer(Box::new(ProgressLog::new(10)));
+
+    // Outputs are named by method + dataset so comparison runs coexist.
+    let out_path = cocoa::report::results_dir().join(format!(
+        "train/{}_{}.csv",
+        method_name.as_str(),
+        file_label(&dataset_label)
+    ));
+    let mut streamed = false;
+    match CsvStream::create(&out_path) {
+        Ok(obs) => {
+            driver = driver.with_observer(Box::new(obs));
+            streamed = true;
+        }
+        Err(e) => eprintln!("warning: cannot stream history to {}: {e}", out_path.display()),
+    }
+
+    let hist = driver.run(method.as_mut());
     for r in &hist.records {
         println!(
             "round {:>4}  vecs {:>7}  sim_t {:>9.3}s  P {:.6e}  D {:.6e}  gap {:.6e}",
             r.round, r.comm_vectors, r.sim_time_s, r.primal, r.dual, r.gap
         );
     }
+    let train_err = method
+        .train_error()
+        .map(|e| format!("{e:.4}"))
+        .unwrap_or_else(|| "-".to_string());
     println!(
-        "stopped: {:?}; final gap {:.3e}; train error {:.4}",
+        "stopped: {:?}; final gap {:.3e}; train error {train_err}",
         hist.stop,
-        hist.final_gap(),
-        trainer.problem.data.classification_error(&trainer.w)
+        hist.final_gap()
     );
-    println!(
-        "runtime: {} executor; {}",
-        trainer.executor_kind(),
-        trainer.comm_stats().runtime_summary()
-    );
-    let csv = hist.to_csv();
-    if let Ok(p) = cocoa::report::write_result("train/last_run.csv", &csv) {
-        println!("history written to {}", p.display());
+    if let Some(notes) = method.runtime_notes() {
+        println!("runtime: {notes}");
+    }
+    if streamed {
+        println!("history written to {}", out_path.display());
     }
     0
 }

@@ -95,6 +95,63 @@ fn gen_data_roundtrips_through_train() {
 }
 
 #[test]
+fn train_every_method_runs_and_names_output_by_method() {
+    let bin = require_bin!();
+    for method in [
+        "cocoa-plus",
+        "cocoa",
+        "mb-sgd",
+        "mb-sdca",
+        "one-shot",
+        "admm",
+        "serial-sdca",
+    ] {
+        let (code, stdout, stderr) = run(
+            &bin,
+            &[
+                "train", "--dataset", "covtype", "--scale", "4000", "--k", "2", "--lambda",
+                "1e-2", "--rounds", "5", "--method", method,
+            ],
+        );
+        assert_eq!(code, 0, "--method {method} failed: {stderr}");
+        assert!(stdout.contains("stopped"), "--method {method}:\n{stdout}");
+        assert!(
+            stdout.contains(&format!("method={method}")),
+            "--method {method} not echoed:\n{stdout}"
+        );
+        // outputs are named by method + dataset (no more clobbered last_run.csv)
+        assert!(
+            stdout.contains(&format!("{method}_covtype.csv")),
+            "--method {method} output not method-named:\n{stdout}"
+        );
+    }
+}
+
+#[test]
+fn train_unknown_method_fails() {
+    let bin = require_bin!();
+    let (code, _, stderr) = run(&bin, &["train", "--method", "frobnicate"]);
+    assert_ne!(code, 0);
+    assert!(stderr.contains("unknown --method"), "{stderr}");
+}
+
+#[test]
+fn train_gap_every_thins_certificates() {
+    let bin = require_bin!();
+    let (code, stdout, stderr) = run(
+        &bin,
+        &[
+            "train", "--dataset", "covtype", "--scale", "4000", "--k", "2", "--lambda", "1e-2",
+            "--rounds", "5", "--gap-tol", "0", "--gap-every", "2", "--parallel", "false",
+        ],
+    );
+    assert_eq!(code, 0, "stderr: {stderr}");
+    // rounds 0, 2, 4 evaluated (final round always included)
+    let evaluated = stdout.lines().filter(|l| l.starts_with("round ")).count();
+    assert_eq!(evaluated, 3, "{stdout}");
+}
+
+#[test]
 fn sigma_reports_table() {
     let bin = require_bin!();
     let (code, stdout, _) = run(

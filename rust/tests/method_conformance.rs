@@ -1,0 +1,252 @@
+//! Conformance suite for the unified `Method` step-API: every optimizer
+//! registered in `driver::registry` must behave identically under the
+//! shared `Driver` loop — steps advance the simulated cluster clock,
+//! certificate gaps are non-negative, communication totals are monotone,
+//! and each `StopPolicy` rule actually stops the run.
+
+use cocoa::baselines::serial_sdca;
+use cocoa::data::partition::random_balanced;
+use cocoa::data::synth::{generate, SynthConfig};
+use cocoa::driver::build_method;
+use cocoa::prelude::*;
+
+const K: usize = 3;
+const N: usize = 90;
+const D: usize = 10;
+
+fn setup() -> (Problem, Partition) {
+    let data = generate(&SynthConfig::new("conf", N, D).seed(17));
+    let problem = Problem::new(data, Loss::Hinge, 0.05);
+    let part = random_balanced(N, K, 5);
+    (problem, part)
+}
+
+fn opts() -> BuildOpts {
+    let mut o = BuildOpts::new(K);
+    o.seed = 11;
+    o.parallel = false; // keep the suite single-threaded and fast
+    o.batch_per_worker = 8;
+    o.local_iters = 10;
+    o
+}
+
+#[test]
+fn every_method_conforms_under_the_driver() {
+    for name in MethodName::ALL {
+        let (problem, part) = setup();
+        let mut method = build_method(name, problem, part, &opts());
+
+        assert!(!method.label().is_empty(), "{name:?}: empty label");
+        assert_eq!(method.w().len(), D, "{name:?}: w has wrong dimension");
+
+        let rounds = 4;
+        let mut driver = Driver::new(
+            StopPolicy::new(rounds)
+                .with_gap_tol(f64::NEG_INFINITY)
+                .with_divergence_gap(f64::INFINITY),
+        );
+        let hist = driver.run(method.as_mut());
+
+        assert_eq!(hist.stop, StopReason::MaxRounds, "{name:?}");
+        assert_eq!(hist.records.len(), rounds, "{name:?}: gap_every=1 records");
+
+        // The sim clock advances and never runs backwards.
+        let last = hist.records.last().unwrap();
+        assert!(
+            last.sim_time_s > 0.0,
+            "{name:?}: sim clock did not advance: {}",
+            last.sim_time_s
+        );
+        for pair in hist.records.windows(2) {
+            assert!(
+                pair[1].sim_time_s >= pair[0].sim_time_s,
+                "{name:?}: sim clock ran backwards"
+            );
+            assert!(
+                pair[1].comm_vectors >= pair[0].comm_vectors,
+                "{name:?}: comm vectors decreased"
+            );
+            assert!(
+                pair[1].compute_s >= pair[0].compute_s,
+                "{name:?}: compute time decreased"
+            );
+        }
+
+        // eval: gap non-negative (weak duality for dual methods, primal
+        // value / suboptimality for primal-only ones), primal finite.
+        for r in &hist.records {
+            assert!(r.gap >= -1e-9, "{name:?}: negative gap {}", r.gap);
+            assert!(r.primal.is_finite(), "{name:?}: non-finite primal");
+        }
+
+        // comm accounting: serial SDCA moves nothing, every distributed
+        // method moves one vector per worker per communicating round.
+        match name {
+            MethodName::SerialSdca => {
+                assert_eq!(method.comm_vectors_per_round(), 0, "{name:?}");
+                assert_eq!(last.comm_vectors, 0, "{name:?}");
+            }
+            MethodName::OneShot => {
+                // single communication round, then free no-ops
+                assert_eq!(method.comm_vectors_per_round(), K, "{name:?}");
+                assert_eq!(last.comm_vectors, K, "{name:?}");
+            }
+            _ => {
+                assert_eq!(method.comm_vectors_per_round(), K, "{name:?}");
+                assert_eq!(last.comm_vectors, K * rounds, "{name:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn one_shot_extra_rounds_do_not_inflate_the_clock() {
+    let (problem, part) = setup();
+    let mut method = build_method(MethodName::OneShot, problem, part, &opts());
+    let mut driver = Driver::new(
+        StopPolicy::new(5)
+            .with_gap_tol(f64::NEG_INFINITY)
+            .with_divergence_gap(f64::INFINITY),
+    );
+    let hist = driver.run(method.as_mut());
+    let first = hist.records.first().unwrap();
+    let last = hist.records.last().unwrap();
+    assert_eq!(first.sim_time_s, last.sim_time_s);
+    assert_eq!(first.comm_vectors, last.comm_vectors);
+}
+
+#[test]
+fn one_shot_unbalanced_partition_is_uncertifiable_not_diverged() {
+    // With n not divisible by K the scaled global dual can leave the
+    // hinge box (scale > 1 on small blocks): the gap is legitimately
+    // +∞. With divergence disabled the Driver must record it and run to
+    // the budget instead of flagging divergence; NaN would still abort.
+    let data = generate(&SynthConfig::new("conf-unbal", 100, D).seed(23));
+    let problem = Problem::new(data, Loss::Hinge, 0.05);
+    let part = random_balanced(100, K, 5); // 100 = 34 + 33 + 33
+    let mut method = build_method(MethodName::OneShot, problem, part, &opts());
+    let mut driver = Driver::new(
+        StopPolicy::new(2)
+            .with_gap_tol(f64::NEG_INFINITY)
+            .with_divergence_gap(f64::INFINITY),
+    );
+    let hist = driver.run(method.as_mut());
+    assert!(!hist.diverged(), "infinite gap misreported as divergence");
+    assert_eq!(hist.stop, StopReason::MaxRounds);
+    assert!(hist.records[0].primal.is_finite());
+}
+
+#[test]
+fn driver_honors_gap_tolerance_for_every_dual_method() {
+    // The three methods with a true duality-gap certificate converge on
+    // this easy problem; the Driver must stop them at the tolerance.
+    for name in [
+        MethodName::CocoaPlus,
+        MethodName::Cocoa,
+        MethodName::SerialSdca,
+    ] {
+        let (problem, part) = setup();
+        let mut method = build_method(name, problem, part, &opts());
+        let mut driver = Driver::new(StopPolicy::new(2000).with_gap_tol(1e-3));
+        let hist = driver.run(method.as_mut());
+        assert_eq!(
+            hist.stop,
+            StopReason::GapReached,
+            "{name:?}: final gap {}",
+            hist.final_gap()
+        );
+        assert!(hist.final_gap() <= 1e-3, "{name:?}");
+    }
+}
+
+#[test]
+fn driver_honors_dual_target_rule() {
+    let (problem, part) = setup();
+    let d_star = serial_sdca::estimate_d_star(&problem, 11);
+    let mut method = build_method(MethodName::CocoaPlus, problem, part, &opts());
+    let mut driver = Driver::new(
+        StopPolicy::new(2000)
+            .with_gap_tol(f64::NEG_INFINITY)
+            .with_dual_target(d_star, 1e-3),
+    );
+    let hist = driver.run(method.as_mut());
+    assert_eq!(hist.stop, StopReason::DualTargetReached);
+    assert!(d_star - hist.final_dual() <= 1e-3);
+}
+
+#[test]
+fn driver_honors_divergence_rule() {
+    // A divergence threshold below the initial gap trips immediately —
+    // the rule itself, independent of an actually divergent run.
+    let (problem, part) = setup();
+    let mut method = build_method(MethodName::CocoaPlus, problem, part, &opts());
+    let mut driver = Driver::new(
+        StopPolicy::new(100)
+            .with_gap_tol(f64::NEG_INFINITY)
+            .with_divergence_gap(1e-12),
+    );
+    let hist = driver.run(method.as_mut());
+    assert_eq!(hist.stop, StopReason::Diverged);
+    assert!(hist.diverged());
+}
+
+#[test]
+fn driver_honors_dual_stall_rule() {
+    // An impossible improvement threshold stalls after `patience` evals.
+    let (problem, part) = setup();
+    let mut method = build_method(MethodName::CocoaPlus, problem, part, &opts());
+    let mut driver = Driver::new(
+        StopPolicy::new(100)
+            .with_gap_tol(f64::NEG_INFINITY)
+            .with_dual_stall(2, 1e9),
+    );
+    let hist = driver.run(method.as_mut());
+    assert_eq!(hist.stop, StopReason::DualStalled);
+    assert_eq!(hist.rounds_run(), 3); // 1 best-setting eval + 2 stalled
+}
+
+#[test]
+fn primal_only_methods_ignore_dual_rules() {
+    // SGD reports dual = −∞; dual-target and dual-stall must never fire.
+    let (problem, part) = setup();
+    let mut method = build_method(MethodName::MbSgd, problem, part, &opts());
+    let mut driver = Driver::new(
+        StopPolicy::new(5)
+            .with_gap_tol(f64::NEG_INFINITY)
+            .with_divergence_gap(f64::INFINITY)
+            .with_dual_target(0.0, 1e9)
+            .with_dual_stall(1, 1e9),
+    );
+    let hist = driver.run(method.as_mut());
+    assert_eq!(hist.stop, StopReason::MaxRounds);
+}
+
+#[test]
+fn trainer_run_matches_explicit_driver_bitwise() {
+    // Trainer::run routes through Driver::from_cocoa_config; an explicit
+    // Driver with the same policy must reproduce the trajectory exactly.
+    let mk_trainer = || {
+        let (problem, part) = setup();
+        let cfg = CocoaConfig::cocoa_plus(
+            K,
+            Loss::Hinge,
+            0.05,
+            SolverSpec::SdcaEpochs { epochs: 1.0 },
+        )
+        .with_rounds(6)
+        .with_seed(11)
+        .with_parallel(false);
+        Trainer::new(problem, part, cfg)
+    };
+    let mut a = mk_trainer();
+    let hist_a = a.run();
+    let mut b = mk_trainer();
+    let mut driver = Driver::from_cocoa_config(&b.cfg);
+    let hist_b = driver.run(&mut b);
+    let gaps_a: Vec<u64> = hist_a.records.iter().map(|r| r.gap.to_bits()).collect();
+    let gaps_b: Vec<u64> = hist_b.records.iter().map(|r| r.gap.to_bits()).collect();
+    assert_eq!(gaps_a, gaps_b);
+    assert_eq!(a.alpha, b.alpha);
+    assert_eq!(a.w, b.w);
+    assert_eq!(hist_a.stop, hist_b.stop);
+}
