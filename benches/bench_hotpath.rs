@@ -49,7 +49,7 @@ fn main() {
             w: &w,
             alpha_local: &alpha,
         };
-        let nnz_per_epoch = block.x.nnz() as f64;
+        let nnz_per_epoch = block.x().nnz() as f64;
         let r = b.run(name, || black_box(solver.solve(&ctx).steps));
         let secs = r.min().as_secs_f64();
         println!(
@@ -103,6 +103,20 @@ fn main() {
     assert_eq!(sequential.executor_kind(), "sequential");
     b.run("coordinator_round_k8_n8192_sequential", || {
         black_box(sequential.round())
+    });
+
+    // ---- certificate evaluation: central pass vs pool-distributed -------
+    // The duality-gap certificate (eq. 4) used to be a serial O(nnz) pass
+    // on the leader; it is now a K-way shard-partial reduction through the
+    // worker pool. Track both so the speedup at gap cadence is visible.
+    b.run("certificates_central_n8192_d256", || {
+        black_box(pooled.problem.certificates(&pooled.alpha, &pooled.w).gap)
+    });
+    b.run("certificates_pooled_k8_n8192_d256", || {
+        black_box(pooled.eval().gap)
+    });
+    b.run("certificates_sequential_k8_n8192_d256", || {
+        black_box(sequential.eval().gap)
     });
 
     b.report();

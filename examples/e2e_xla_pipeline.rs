@@ -79,13 +79,16 @@ fn main() {
     let mut trainer = Trainer::with_solvers(problem, partition.clone(), cfg, solvers);
 
     // ---- train, certifying each round through the XLA gap graph --------
-    let x_dense = data.x.to_dense();
+    // The trainer works in its permuted-contiguous layout: feed the XLA
+    // gap graph the trainer's shared dataset so (X, y, α) stay aligned.
+    let x_dense = trainer.problem.data.x.to_dense();
+    let y_layout = trainer.problem.data.y.clone();
     println!("\n{:>5} {:>14} {:>14} {:>12} {:>12}", "round", "P (xla)", "D (xla)", "gap (xla)", "gap (rust)");
     let mut last_gap = f64::INFINITY;
     for round in 0..12 {
         trainer.round();
         let certs_xla = gap_eval
-            .certificates(&x_dense, n, d, &data.y, &trainer.alpha, lambda)
+            .certificates(&x_dense, n, d, &y_layout, &trainer.alpha, lambda)
             .expect("XLA gap eval");
         let certs_rs = trainer.problem.certificates(&trainer.alpha, &trainer.w);
         println!(

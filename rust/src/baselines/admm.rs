@@ -108,6 +108,8 @@ impl Admm {
         let rho = self.cfg.rho;
         let d = self.problem.d();
         let nk = block.n_local();
+        let x = block.x();
+        let y = block.y();
         let mut c = vec![0.0; d];
         dense::sub(&self.z, &self.u[kid], &mut c);
         let w = &mut self.w_local[kid];
@@ -117,15 +119,15 @@ impl Admm {
             // stochastic subgradient of f_k on a sampled point (scaled by
             // n_k/n to match f_k's 1/n normalization), plus the prox term.
             let i = self.rngs[kid].gen_range(nk);
-            let z_i = block.x.row_dot(i, w);
-            let g = loss.subgradient(z_i, block.y[i]) * (nk as f64 / n);
+            let z_i = x.row_dot(i, w);
+            let g = loss.subgradient(z_i, y[i]) * (nk as f64 / n);
             // w ← w − η(g·x_i + ρ(w − c))
             let shrink = 1.0 - eta * rho;
             for (wj, cj) in w.iter_mut().zip(&c) {
                 *wj = shrink * *wj + eta * rho * *cj;
             }
             if g != 0.0 {
-                block.x.row_axpy(i, -eta * g, w);
+                x.row_axpy(i, -eta * g, w);
             }
         }
     }
@@ -203,7 +205,7 @@ impl Method for Admm {
         }
     }
 
-    fn eval(&self) -> Certificates {
+    fn eval(&mut self) -> Certificates {
         let primal = self.problem.primal_value(&self.z);
         let gap = match self.p_star {
             Some(ps) => primal - ps,

@@ -92,18 +92,21 @@ impl MiniBatchSdca {
         for (k, block) in self.blocks.iter().enumerate() {
             let t0 = Instant::now();
             let nk = block.n_local();
+            let x = block.x();
+            let y = block.y();
+            let norms = block.norms_sq();
             let b = self.cfg.batch_per_worker.min(nk);
             for _ in 0..b {
                 let i = self.rngs[k].gen_range(nk);
-                let q = block.norms_sq[i];
+                let q = norms[i];
                 if q == 0.0 {
                     continue;
                 }
                 let gi = block.global_idx[i];
-                let xv = block.x.row_dot(i, &self.w);
+                let xv = x.row_dot(i, &self.w);
                 // Plain serial-SDCA curvature (σ'=1): coef = q/(λn).
                 let coef = q / (lambda * n);
-                let d = loss.coordinate_delta(self.alpha[gi], block.y[i], xv, coef);
+                let d = loss.coordinate_delta(self.alpha[gi], y[i], xv, coef);
                 proposals.push(Prop {
                     global_i: gi,
                     delta: d,
@@ -146,7 +149,7 @@ impl Method for MiniBatchSdca {
         }
     }
 
-    fn eval(&self) -> Certificates {
+    fn eval(&mut self) -> Certificates {
         self.problem.certificates(&self.alpha, &self.w)
     }
 

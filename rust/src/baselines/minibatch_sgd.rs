@@ -99,14 +99,16 @@ impl MiniBatchSgd {
         for (k, block) in self.blocks.iter().enumerate() {
             let t0 = Instant::now();
             let nk = block.n_local();
+            let x = block.x();
+            let y = block.y();
             let b = self.cfg.batch_per_worker.min(nk);
             let mut local = vec![0.0; d];
             for _ in 0..b {
                 let i = self.rngs[k].gen_range(nk);
-                let z = block.x.row_dot(i, &self.w);
-                let g = loss.subgradient(z, block.y[i]);
+                let z = x.row_dot(i, &self.w);
+                let g = loss.subgradient(z, y[i]);
                 if g != 0.0 {
-                    block.x.row_axpy(i, g / b as f64, &mut local);
+                    x.row_axpy(i, g / b as f64, &mut local);
                 }
             }
             dense::axpy(1.0 / self.cfg.k as f64, &local, &mut grad);
@@ -155,7 +157,7 @@ impl Method for MiniBatchSgd {
         }
     }
 
-    fn eval(&self) -> Certificates {
+    fn eval(&mut self) -> Certificates {
         let primal = self.problem.primal_value(&self.w);
         let gap = match self.p_star {
             Some(ps) => primal - ps,

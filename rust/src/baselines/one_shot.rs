@@ -56,6 +56,9 @@ fn solve_and_average(
     let n = problem.n();
     let d = problem.d();
     let lambda = problem.lambda;
+    // Shard views over one shared (permuted) dataset — no per-worker
+    // matrix clones; `global_idx` still scatters back to the caller's
+    // row order.
     let blocks = LocalBlock::split(&problem.data, partition);
 
     let mut w_avg = vec![0.0; d];
@@ -65,6 +68,9 @@ fn solve_and_average(
     for (k, block) in blocks.iter().enumerate() {
         let t0 = Instant::now();
         let nk = block.n_local();
+        let x = block.x();
+        let y = block.y();
+        let norms = block.norms_sq();
         // Solve the local ERM: min (1/n_k) Σ ℓ + (λ/2)‖w‖² via its dual;
         // serial SDCA = our SDCA machinery with σ'=1, K=1 on the local data.
         let spec = SubproblemSpec {
@@ -79,18 +85,16 @@ fn solve_and_average(
         let mut rng = Pcg32::new(cfg.seed, 3000 + k as u64);
         for _ in 0..cfg.local_epochs * nk {
             let i = rng.gen_range(nk);
-            let q = block.norms_sq[i];
+            let q = norms[i];
             if q == 0.0 {
                 continue;
             }
-            let xv = block.x.row_dot(i, &v);
+            let xv = x.row_dot(i, &v);
             let coef = spec.coef(q);
-            let dlt = spec
-                .loss
-                .coordinate_delta(alpha_local[i], block.y[i], xv, coef);
+            let dlt = spec.loss.coordinate_delta(alpha_local[i], y[i], xv, coef);
             if dlt != 0.0 {
                 alpha_local[i] += dlt;
-                block.x.row_axpy(i, spec.v_scale() * dlt, &mut v);
+                x.row_axpy(i, spec.v_scale() * dlt, &mut v);
             }
         }
         // local model w_k = A_k α_k/(λ n_k) == v (σ'=1, n_global=n_k)
@@ -188,7 +192,7 @@ impl Method for OneShot {
         }
     }
 
-    fn eval(&self) -> Certificates {
+    fn eval(&mut self) -> Certificates {
         match self.certs {
             Some(c) => c,
             None => {

@@ -86,7 +86,7 @@ impl Method for SerialSdca {
         }
     }
 
-    fn eval(&self) -> Certificates {
+    fn eval(&mut self) -> Certificates {
         self.problem.certificates(&self.alpha, &self.w)
     }
 

@@ -39,7 +39,10 @@ impl From<std::io::Error> for CheckpointError {
     }
 }
 
-/// Serializable snapshot of the optimizer state.
+/// Serializable snapshot of the optimizer state. `alpha` is stored in the
+/// *caller's original row order* (mapped out of the trainer's internal
+/// permuted-contiguous layout), so a checkpoint is valid across trainers
+/// regardless of how their partitions permuted the shared dataset.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
     pub n: usize,
@@ -59,7 +62,7 @@ impl Checkpoint {
             k: trainer.cfg.k,
             lambda: trainer.cfg.lambda,
             loss: trainer.cfg.loss.name().to_string(),
-            alpha: trainer.alpha.clone(),
+            alpha: trainer.alpha_original(),
             w: trainer.w.clone(),
         }
     }
@@ -149,10 +152,12 @@ impl Checkpoint {
                 trainer.cfg.lambda, self.lambda
             )));
         }
-        trainer.alpha.copy_from_slice(&self.alpha);
+        // gather the caller-order α into the trainer's layout order, then
+        // scatter into per-worker local views (runtime-agnostic: the
+        // executor routes it to pool threads or in-process workers)
+        let layout_alpha = trainer.rows.to_permuted(&self.alpha);
+        trainer.alpha.copy_from_slice(&layout_alpha);
         trainer.w.copy_from_slice(&self.w);
-        // scatter α back into per-worker local views (runtime-agnostic:
-        // the executor routes it to pool threads or in-process workers)
         trainer.sync_workers_from_alpha();
         let drift = trainer.primal_consistency_error();
         if drift > 1e-6 {

@@ -24,6 +24,20 @@
 //! `(seed, worker)` and the leader applies the step-4 reduce in worker-id
 //! order, so scheduling can never perturb results.
 //!
+//! ### Shared data plane
+//!
+//! The trainer canonicalizes its partition into the permuted-contiguous
+//! [`ShardLayout`](crate::data::ShardLayout) at construction: the dataset
+//! is reordered **once** so worker k's rows are the contiguous range
+//! `parts[k]`, and the leader's [`Problem`] plus all K worker
+//! [`LocalBlock`]s view the same `Arc<Dataset>` — total resident data is
+//! 1× the dataset instead of the old leader copy + K cloned shards.
+//! Consequently `alpha`, `partition`, and `problem.data` all live in
+//! *layout* row order; [`Trainer::rows`] maps back to the caller's
+//! original order ([`Trainer::alpha_original`]), and per-shard contents
+//! are unchanged, so trajectories are what the index-list semantics
+//! produced.
+//!
 //! ### Time accounting
 //!
 //! Each round reports the *measured* max per-worker compute seconds (the
@@ -36,7 +50,8 @@
 //!
 //! The trainer maintains the exact invariant w = Aα/(λn) across rounds
 //! (checked in debug builds and by tests) and evaluates primal-dual
-//! certificates on a configurable cadence.
+//! certificates on a configurable cadence — as a pool-distributed
+//! shard-partial reduction (see [`pool`]), not a serial leader pass.
 
 pub mod checkpoint;
 pub mod comm;
@@ -49,7 +64,7 @@ pub use config::{Aggregation, CocoaConfig, SolverSpec};
 pub use history::{History, RoundRecord, StopReason};
 pub use pool::{Executor, PoolError, RoundTiming};
 
-use crate::data::Partition;
+use crate::data::{Partition, RowPermutation};
 use crate::driver::{Driver, Method, StepStats};
 use crate::linalg::dense;
 use crate::objective::Problem;
@@ -58,6 +73,7 @@ use crate::solver::{
 };
 use crate::subproblem::{LocalBlock, SubproblemSpec};
 use comm::CommStats;
+use std::sync::Arc;
 use std::time::Instant;
 use worker::Worker;
 
@@ -77,13 +93,25 @@ pub fn make_solver(spec: &SolverSpec, n_local: usize, seed: u64) -> Box<dyn Loca
 }
 
 /// The distributed trainer (leader + K workers behind an [`Executor`]).
+///
+/// The trainer works in the permuted-contiguous shard layout: `problem`,
+/// `partition`, and `alpha` all use *layout* row order (worker k owns a
+/// contiguous row range of the one shared dataset), and [`Trainer::rows`]
+/// maps layout rows back to the row order the trainer was constructed
+/// with.
 pub struct Trainer {
     pub cfg: CocoaConfig,
+    /// The problem over the shared (layout-ordered) dataset.
     pub problem: Problem,
+    /// The contiguous partition over `problem.data` (part k is a range).
     pub partition: Partition,
-    /// Global dual iterate α ∈ R^n.
+    /// Layout ↔ caller row order maps (identity for partitions that were
+    /// already contiguous).
+    pub rows: RowPermutation,
+    /// Global dual iterate α ∈ R^n, in layout row order (see
+    /// [`Trainer::alpha_original`] for the caller-order view).
     pub alpha: Vec<f64>,
-    /// Shared primal vector w = Aα/(λn) ∈ R^d.
+    /// Shared primal vector w = Aα/(λn) ∈ R^d (row-order free).
     pub w: Vec<f64>,
     executor: Box<dyn Executor>,
     spec: SubproblemSpec,
@@ -123,7 +151,18 @@ impl Trainer {
             partition.is_exact_cover(),
             "partition must exactly cover [n]"
         );
-        let blocks = LocalBlock::split(&problem.data, &partition);
+        // Shared data plane: realize the partition as the permuted-
+        // contiguous layout. At most one dataset copy is made (none if the
+        // partition is already contiguous); the leader's problem and every
+        // worker's view share that single Arc from here on.
+        let layout = partition.apply_permutation(Arc::clone(&problem.data));
+        let problem = Problem::shared(Arc::clone(&layout.data), problem.loss, problem.lambda);
+        let blocks = LocalBlock::from_layout(&layout);
+        let partition = layout.partition;
+        let rows = layout.rows;
+        debug_assert!(blocks
+            .iter()
+            .all(|b| Arc::ptr_eq(b.shared_data(), &problem.data)));
         let workers: Vec<Worker> = blocks
             .into_iter()
             .zip(solvers)
@@ -144,6 +183,7 @@ impl Trainer {
             cfg,
             problem,
             partition,
+            rows,
             alpha: vec![0.0; n],
             w: vec![0.0; d],
             executor,
@@ -221,6 +261,13 @@ impl Trainer {
         self.executor.load_alpha(&self.alpha);
     }
 
+    /// The dual iterate scattered back to the row order the trainer was
+    /// constructed with (the layout-independent view used by checkpoints
+    /// and external comparisons).
+    pub fn alpha_original(&self) -> Vec<f64> {
+        self.rows.to_original(&self.alpha)
+    }
+
     /// Recompute w from α and report the max deviation from the maintained
     /// w (the coordinator's central invariant; ~0 up to float error).
     pub fn primal_consistency_error(&self) -> f64 {
@@ -251,8 +298,17 @@ impl Method for Trainer {
         }
     }
 
-    fn eval(&self) -> crate::objective::Certificates {
-        self.problem.certificates(&self.alpha, &self.w)
+    /// Pool-distributed duality-gap certificate: each worker reduces its
+    /// own shard to a partial primal-loss sum and partial conjugate sum
+    /// (its local margins are consumed on the fly) in parallel, and the
+    /// leader combines the K partials with the ‖w‖² term. The sequential
+    /// executor runs the identical partial/combine path, so both runtimes
+    /// produce bit-identical gap trajectories.
+    fn eval(&mut self) -> crate::objective::Certificates {
+        match self.executor.eval_partials(&self.w) {
+            Ok(partials) => self.problem.certificates_from_partials(partials, &self.w),
+            Err(e) => panic!("distributed certificate evaluation failed: {e}"),
+        }
     }
 
     fn comm_vectors_per_round(&self) -> usize {
@@ -348,6 +404,58 @@ mod tests {
         let mut t = trainer(2, |c| c.with_rounds(300).with_gap_tol(1e-3));
         let hist = t.run();
         assert_eq!(hist.stop, StopReason::GapReached, "final gap {}", hist.final_gap());
+    }
+
+    #[test]
+    fn distributed_certificates_match_central_evaluation() {
+        let mut t = trainer(4, |c| c.with_rounds(5));
+        for _ in 0..5 {
+            t.round();
+        }
+        let dist = t.eval();
+        let central = t.problem.certificates(&t.alpha, &t.w);
+        assert!(
+            (dist.primal - central.primal).abs() < 1e-12,
+            "primal {} vs {}",
+            dist.primal,
+            central.primal
+        );
+        assert!((dist.dual - central.dual).abs() < 1e-12);
+        assert!((dist.gap - central.gap).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shared_layout_one_dataset_copy_and_original_order_mapping() {
+        let original = problem(80, 10, 0.05, Loss::Hinge);
+        let part = random_balanced(80, 4, 5);
+        let cfg = CocoaConfig::cocoa_plus(
+            4,
+            Loss::Hinge,
+            0.05,
+            SolverSpec::SdcaEpochs { epochs: 1.0 },
+        )
+        .with_parallel(false);
+        let mut t = Trainer::new(original.clone(), part, cfg);
+        // the trainer's partition was canonicalized to contiguous ranges
+        assert!(t.partition.is_contiguous_layout());
+        assert!(!t.rows.is_identity(), "random partition must permute");
+        for _ in 0..5 {
+            t.round();
+        }
+        // the caller-order α certifies equivalently on the caller's problem
+        let internal = t.problem.certificates(&t.alpha, &t.w);
+        let external = original.certificates(&t.alpha_original(), &t.w);
+        assert!(
+            (internal.gap - external.gap).abs() < 1e-9,
+            "layout changed the certificate: {} vs {}",
+            internal.gap,
+            external.gap
+        );
+        // scatter check: layout row holds exactly the original row's dual
+        let orig = t.alpha_original();
+        for (new, &old) in t.rows.new_to_old.iter().enumerate() {
+            assert_eq!(orig[old], t.alpha[new]);
+        }
     }
 
     #[test]

@@ -25,12 +25,28 @@
 //! is an error, never a hang, and the pool stays usable. Dropping the
 //! executor closes the job channels and joins all threads.
 //!
+//! ### The `Eval` message — distributed duality-gap certificates
+//!
+//! Besides `Round`, the per-worker job channel carries an `Eval` message:
+//! each worker computes its shard's [`CertPartial`] (partial primal-loss
+//! sum and partial dual-conjugate sum, over its own zero-copy view and
+//! its own α_[k]; the local margins feeding the loss sum are consumed on
+//! the fly, never shipped) in parallel, and the leader reduces the K
+//! partials plus the ‖w‖² term into
+//! [`Certificates`](crate::objective::Certificates). What used to be a
+//! serial O(nnz) leader pass at every certificate round is now gated by
+//! the largest shard. Partials are combined in worker-id order and the
+//! sequential executor runs the identical partial/combine code path, so
+//! pooled and sequential gap trajectories remain bit-identical
+//! (`rust/tests/determinism.rs`).
+//!
 //! The sequential path (`cfg.parallel = false`, or K = 1, or non-`Send`
 //! local solvers like the PJRT-backed one) implements the same
 //! [`Executor`] trait in-process, so every caller is runtime-agnostic and
 //! results stay comparable across runtimes.
 
 use crate::coordinator::worker::{Worker, WorkerResult};
+use crate::objective::CertPartial;
 use crate::subproblem::SubproblemSpec;
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -86,6 +102,12 @@ pub trait Executor: Send {
     /// subproblem and apply γ·Δα_[k] to its own dual state, gather the
     /// results. After `Ok`, `result(k)` holds worker k's update.
     fn run_round(&mut self, w: &[f64], gamma: f64) -> Result<RoundTiming, PoolError>;
+
+    /// Distributed certificate evaluation: broadcast `w`, let every
+    /// worker compute its shard's [`CertPartial`] against its own α_[k],
+    /// and gather the K partials **in worker-id order** (so the leader's
+    /// reduce is bit-reproducible across runtimes).
+    fn eval_partials(&mut self, w: &[f64]) -> Result<Vec<CertPartial>, PoolError>;
 
     /// Worker k's result from the last successful round.
     fn result(&self, k: usize) -> &WorkerResult;
@@ -191,6 +213,27 @@ impl Executor for SequentialExecutor {
         })
     }
 
+    fn eval_partials(&mut self, w: &[f64]) -> Result<Vec<CertPartial>, PoolError> {
+        // Same partial/combine code path as the pool, one worker at a
+        // time in id order — bit-identical to the pooled reduction — and
+        // the same error contract: a panicking evaluation surfaces as a
+        // PoolError naming the worker, exactly as worker_loop's
+        // catch_unwind does on the pooled runtime.
+        let spec = self.spec;
+        let mut failed: Vec<(usize, String)> = Vec::new();
+        let mut partials = vec![CertPartial::default(); self.workers.len()];
+        for (k, wk) in self.workers.iter().enumerate() {
+            match catch_unwind(AssertUnwindSafe(|| wk.eval_partial(&spec, w))) {
+                Ok(p) => partials[k] = p,
+                Err(payload) => failed.push((k, panic_message(payload.as_ref()))),
+            }
+        }
+        if !failed.is_empty() {
+            return Err(PoolError { failed });
+        }
+        Ok(partials)
+    }
+
     fn result(&self, k: usize) -> &WorkerResult {
         &self.results[k]
     }
@@ -214,14 +257,29 @@ enum Job {
     /// Run one round against the shared `w` snapshot; fill and return the
     /// scratch.
     Round { scratch: WorkerResult, gamma: f64 },
+    /// Compute this shard's certificate partial against the shared `w`
+    /// snapshot and the worker-owned α_[k].
+    Eval,
     /// Replace α_[k] with the provided local values.
     LoadAlpha(Vec<f64>),
 }
 
-/// Worker thread → leader: the filled scratch, plus the panic message if
-/// the local solve panicked (the scratch contents are then meaningless
-/// but the buffer itself is preserved for reuse).
-type Reply = (WorkerResult, Option<String>);
+/// Worker thread → leader. A `Round` reply carries the filled scratch
+/// (preserved for reuse even when the solve panicked — the contents are
+/// then meaningless but the buffer survives); an `Eval` reply carries the
+/// shard's certificate partial by value (it is two floats — nothing to
+/// ping-pong).
+enum Reply {
+    Round {
+        scratch: WorkerResult,
+        panic: Option<String>,
+    },
+    Eval {
+        id: usize,
+        partial: CertPartial,
+        panic: Option<String>,
+    },
+}
 
 fn worker_loop(
     mut wk: Worker,
@@ -242,7 +300,25 @@ fn worker_loop(
                     wk.apply(gamma, &scratch.update.delta_alpha);
                 }));
                 let panic = outcome.err().map(|p| panic_message(p.as_ref()));
-                if replies.send((scratch, panic)).is_err() {
+                if replies.send(Reply::Round { scratch, panic }).is_err() {
+                    return; // leader gone — shut down
+                }
+            }
+            Job::Eval => {
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    let w = w_shared.read().expect("w broadcast lock poisoned");
+                    wk.eval_partial(&spec, &w)
+                }));
+                let (partial, panic) = match outcome {
+                    Ok(p) => (p, None),
+                    Err(p) => (CertPartial::default(), Some(panic_message(p.as_ref()))),
+                };
+                let reply = Reply::Eval {
+                    id: wk.id,
+                    partial,
+                    panic,
+                };
+                if replies.send(reply).is_err() {
                     return; // leader gone — shut down
                 }
             }
@@ -360,13 +436,19 @@ impl Executor for PooledExecutor {
         let mut max_compute = 0.0f64;
         for _ in 0..sent {
             match self.reply_rx.recv() {
-                Ok((scratch, panic)) => {
+                Ok(Reply::Round { scratch, panic }) => {
                     let id = scratch.id;
                     match panic {
                         None => max_compute = max_compute.max(scratch.compute_s),
                         Some(msg) => failed.push((id, msg)),
                     }
                     self.results[id] = Some(scratch);
+                }
+                Ok(Reply::Eval { id, .. }) => {
+                    // Cannot happen: the leader drains every reply before
+                    // issuing the next job kind. Treat it as a failed
+                    // round rather than corrupting state.
+                    failed.push((id, "protocol error: eval reply during round".to_string()));
                 }
                 Err(_) => {
                     // Every reply sender is gone: name the workers whose
@@ -389,6 +471,64 @@ impl Executor for PooledExecutor {
             max_compute_s: max_compute,
             barrier_s,
         })
+    }
+
+    fn eval_partials(&mut self, w: &[f64]) -> Result<Vec<CertPartial>, PoolError> {
+        // Broadcast the evaluation point (workers are idle — uncontended).
+        {
+            let mut shared = self.w_shared.write().expect("w broadcast lock poisoned");
+            shared.copy_from_slice(w);
+        }
+        // Fan out: Eval is payload-free, the snapshot rides the broadcast.
+        let mut failed: Vec<(usize, String)> = Vec::new();
+        let mut sent = 0usize;
+        let mut got = vec![false; self.k];
+        let mut partials = vec![CertPartial::default(); self.k];
+        for (k, tx) in self.job_txs.iter().enumerate() {
+            match tx.send(Job::Eval) {
+                Ok(()) => sent += 1,
+                Err(SendError(_)) => {
+                    // Accounted for here — the dead-channel sweep below
+                    // must not report this worker a second time.
+                    got[k] = true;
+                    failed.push((k, "worker thread terminated".to_string()));
+                }
+            }
+        }
+        // Gather the K partials; `partials` is indexed by worker id, so
+        // arrival order cannot perturb the leader's id-ordered reduce.
+        for _ in 0..sent {
+            match self.reply_rx.recv() {
+                Ok(Reply::Eval { id, partial, panic }) => {
+                    match panic {
+                        None => partials[id] = partial,
+                        Some(msg) => failed.push((id, msg)),
+                    }
+                    got[id] = true;
+                }
+                Ok(Reply::Round { scratch, panic }) => {
+                    let id = scratch.id;
+                    self.results[id] = Some(scratch);
+                    let msg = panic.unwrap_or_else(|| {
+                        "protocol error: round reply during eval".to_string()
+                    });
+                    failed.push((id, msg));
+                }
+                Err(_) => {
+                    for (id, &done) in got.iter().enumerate() {
+                        if !done {
+                            failed.push((id, "worker thread died mid-eval".to_string()));
+                        }
+                    }
+                    break;
+                }
+            }
+        }
+        if !failed.is_empty() {
+            failed.sort_by(|a, b| a.0.cmp(&b.0));
+            return Err(PoolError { failed });
+        }
+        Ok(partials)
     }
 
     fn result(&self, k: usize) -> &WorkerResult {
@@ -430,7 +570,7 @@ mod tests {
 
     fn workers_and_spec(k: usize) -> (Vec<Worker>, SubproblemSpec) {
         let n = 48;
-        let data = generate(&SynthConfig::new("pool", n, 6).seed(11));
+        let data = Arc::new(generate(&SynthConfig::new("pool", n, 6).seed(11)));
         let part = random_balanced(n, k, 3);
         let blocks = LocalBlock::split(&data, &part);
         let workers: Vec<Worker> = blocks
@@ -474,6 +614,53 @@ mod tests {
                 assert_eq!(seq.result(k).update.delta_w, pool.result(k).update.delta_w);
             }
         }
+    }
+
+    #[test]
+    fn pooled_and_sequential_eval_partials_agree_bitwise() {
+        let (wk_a, spec) = workers_and_spec(3);
+        let (wk_b, _) = workers_and_spec(3);
+        let mut seq = SequentialExecutor::new(wk_a, spec);
+        let mut pool = PooledExecutor::spawn(wk_b, spec);
+        let w: Vec<f64> = (0..6).map(|j| 0.05 * (j as f64 + 1.0)).collect();
+        // interleave rounds and evals: partials must track the evolving
+        // worker-owned α_[k] identically on both runtimes
+        for _ in 0..3 {
+            let ps = seq.eval_partials(&w).unwrap();
+            let pp = pool.eval_partials(&w).unwrap();
+            assert_eq!(ps.len(), 3);
+            for k in 0..3 {
+                assert_eq!(
+                    ps[k].loss_sum.to_bits(),
+                    pp[k].loss_sum.to_bits(),
+                    "worker {k} loss partial diverged"
+                );
+                assert_eq!(
+                    ps[k].conj_sum.to_bits(),
+                    pp[k].conj_sum.to_bits(),
+                    "worker {k} conjugate partial diverged"
+                );
+            }
+            seq.run_round(&w, 1.0).unwrap();
+            pool.run_round(&w, 1.0).unwrap();
+        }
+    }
+
+    #[test]
+    fn eval_partials_cover_all_rows_once() {
+        let (workers, spec) = workers_and_spec(4);
+        let n_total: usize = workers.iter().map(|wk| wk.block.n_local()).sum();
+        assert_eq!(n_total, 48);
+        let mut seq = SequentialExecutor::new(workers, spec);
+        // At α = 0, w = 0: hinge loss is 1 per row and ℓ*(0) = 0, so the
+        // reduced partials must sum to exactly n — a row dropped or
+        // double-counted by the shard views would show up immediately.
+        let w = vec![0.0; 6];
+        let partials = seq.eval_partials(&w).unwrap();
+        let loss_total: f64 = partials.iter().map(|p| p.loss_sum).sum();
+        let conj_total: f64 = partials.iter().map(|p| p.conj_sum).sum();
+        assert_eq!(loss_total, 48.0);
+        assert_eq!(conj_total, 0.0);
     }
 
     #[test]

@@ -1,13 +1,16 @@
 //! Worker state: one per machine k in the simulated cluster.
 //!
-//! A worker owns its data block (it never touches other workers' rows —
-//! the locality the paper's framework is built around), its slice of the
-//! dual variables α_[k], and its local solver instance. Under the
-//! persistent-pool runtime ([`crate::coordinator::pool`]) each worker
-//! lives on its own long-lived thread and fills a reusable
-//! [`WorkerResult`] scratch every round; the sequential executor drives
-//! the same state in-process.
+//! A worker owns its data block (a zero-copy view of the shared dataset —
+//! it never touches other workers' rows, the locality the paper's
+//! framework is built around), its slice of the dual variables α_[k], and
+//! its local solver instance. Under the persistent-pool runtime
+//! ([`crate::coordinator::pool`]) each worker lives on its own long-lived
+//! thread and fills a reusable [`WorkerResult`] scratch every round; the
+//! sequential executor drives the same state in-process. Besides the
+//! local solve, a worker answers the pool's `Eval` message with its
+//! [`CertPartial`] — its shard's share of the duality-gap certificate.
 
+use crate::objective::{cert_partial, CertPartial};
 use crate::solver::{LocalSolveCtx, LocalSolver, LocalUpdate};
 use crate::subproblem::{LocalBlock, SubproblemSpec};
 use crate::util::rng::SplitMix64;
@@ -76,6 +79,21 @@ impl Worker {
         out
     }
 
+    /// This worker's shard-partial of the duality-gap certificate against
+    /// the shared `w`: local margins, Σℓ_i over them, and Σℓ*_i over the
+    /// worker-owned α_[k]. Same code path as central evaluation
+    /// ([`crate::objective::cert_partial`]), so the leader's K-way reduce
+    /// is bit-reproducible across runtimes.
+    pub fn eval_partial(&self, spec: &SubproblemSpec, w: &[f64]) -> CertPartial {
+        cert_partial(
+            spec.loss,
+            self.block.x(),
+            self.block.y(),
+            &self.alpha_local,
+            w,
+        )
+    }
+
     /// Apply the γ-scaled accepted update to the local dual state (Eq. 14,
     /// line 5 of Algorithm 1).
     pub fn apply(&mut self, gamma: f64, delta_alpha: &[f64]) {
@@ -134,6 +152,25 @@ mod tests {
         assert!(w.alpha_local.iter().all(|&a| (a - 0.25).abs() < 1e-15));
         w.apply(0.25, &delta);
         assert!(w.alpha_local.iter().all(|&a| (a - 0.5).abs() < 1e-15));
+    }
+
+    #[test]
+    fn eval_partial_matches_direct_sums() {
+        let (mut wk, spec) = worker();
+        let shared_w: Vec<f64> = (0..4).map(|j| 0.1 * (j as f64 + 1.0)).collect();
+        // move off the zero dual point first
+        let res = wk.round(&shared_w, &spec);
+        wk.apply(1.0, &res.update.delta_alpha);
+        let p = wk.eval_partial(&spec, &shared_w);
+        let (mut loss_sum, mut conj_sum) = (0.0, 0.0);
+        let y = wk.block.y();
+        for i in 0..wk.block.n_local() {
+            let z = wk.block.x().row_dot(i, &shared_w);
+            loss_sum += spec.loss.value(z, y[i]);
+            conj_sum += spec.loss.conjugate_neg(wk.alpha_local[i], y[i]);
+        }
+        assert_eq!(p.loss_sum.to_bits(), loss_sum.to_bits());
+        assert_eq!(p.conj_sum.to_bits(), conj_sum.to_bits());
     }
 
     #[test]

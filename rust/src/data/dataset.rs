@@ -46,11 +46,23 @@ impl Dataset {
         self.row_norms_sq = self.x.row_norms_sq();
     }
 
+    /// Gather the given rows into a new dataset (order preserved; rows may
+    /// repeat or be a full permutation). The cached row norms are gathered
+    /// rather than recomputed, so a gathered dataset is bitwise consistent
+    /// with the source — the property the permuted-contiguous shard layout
+    /// relies on (see [`crate::data::Partition::apply_permutation`]).
+    pub fn gather_rows(&self, rows: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.select_rows(rows),
+            y: rows.iter().map(|&r| self.y[r]).collect(),
+            row_norms_sq: rows.iter().map(|&r| self.row_norms_sq[r]).collect(),
+            name: self.name.clone(),
+        }
+    }
+
     /// Restrict to a subset of rows (order preserved).
     pub fn select(&self, rows: &[usize]) -> Dataset {
-        let x = self.x.select_rows(rows);
-        let y = rows.iter().map(|&r| self.y[r]).collect();
-        Dataset::new(&self.name, x, y)
+        self.gather_rows(rows)
     }
 
     /// Max ‖x_i‖² over the dataset (the paper's r_max).
@@ -123,5 +135,17 @@ mod tests {
     fn mismatched_labels_panic() {
         let x = CsrMatrix::from_dense(2, 1, &[1.0, 2.0]);
         Dataset::new("bad", x, vec![1.0]);
+    }
+
+    #[test]
+    fn gather_rows_carries_cached_norms_bitwise() {
+        let d = tiny();
+        let g = d.gather_rows(&[3, 1, 0]);
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.y, vec![-1.0, 1.0, 1.0]);
+        for (li, &gi) in [3usize, 1, 0].iter().enumerate() {
+            assert_eq!(g.row_norms_sq[li].to_bits(), d.row_norms_sq[gi].to_bits());
+            assert_eq!(g.x.row(li), d.x.row(gi));
+        }
     }
 }

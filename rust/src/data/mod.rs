@@ -1,5 +1,14 @@
 //! Dataset substrate: container, synthetic generators (paper analogues),
-//! LibSVM parsing, and partitioners.
+//! LibSVM parsing, partitioners, and the shared data plane.
+//!
+//! Since the zero-copy refactor the dataset is a **shared** object: the
+//! coordinator, the certificate evaluator, and all K workers read the same
+//! `Arc<Dataset>`. A worker's shard is a row-range view into it (see
+//! [`crate::subproblem::LocalBlock`] and
+//! [`crate::linalg::CsrShard`]), produced by permuting the dataset *once*
+//! into the [`partition::ShardLayout`] where every part is contiguous —
+//! total resident data is 1× the dataset instead of the old leader copy
+//! plus K cloned shards (≈2×).
 
 pub mod dataset;
 pub mod libsvm;
@@ -8,4 +17,4 @@ pub mod scale;
 pub mod synth;
 
 pub use dataset::Dataset;
-pub use partition::Partition;
+pub use partition::{Partition, RowPermutation, ShardLayout};

@@ -9,8 +9,23 @@
 //!    ingestion; often adversarial for correlated data),
 //!  * `by_label`         — pathological split grouping one class per worker
 //!    (used in tests to stress σ'-safety).
+//!
+//! ## The permuted-contiguous shard layout
+//!
+//! A partition's index-list form is what the theory speaks; the runtime
+//! wants every part to be a *contiguous row range* so a worker's shard can
+//! be a zero-copy [`CsrShard`](crate::linalg::CsrShard) view instead of a
+//! cloned sub-matrix. [`Partition::apply_permutation`] bridges the two:
+//! it reorders the dataset **once** (concatenating the parts in worker
+//! order) and returns a [`ShardLayout`] — the shared `Arc<Dataset>`, the
+//! equivalent contiguous partition over it, and the global↔local
+//! [`RowPermutation`] for scattering Δα back to the caller's row order.
+//! A partition that is already contiguous permutes nothing and keeps the
+//! caller's `Arc`.
 
+use crate::data::Dataset;
 use crate::util::rng::Pcg32;
+use std::sync::Arc;
 
 /// A partition of row indices 0..n into K disjoint parts.
 #[derive(Clone, Debug)]
@@ -35,10 +50,14 @@ impl Partition {
     }
 
     /// True if all parts have equal size (the balanced assumption of
-    /// Corollaries 9/11 and the DisDCA-p equivalence).
+    /// Corollaries 9/11 and the DisDCA-p equivalence). An empty partition
+    /// is vacuously balanced.
     pub fn is_balanced(&self) -> bool {
         let s = self.sizes();
-        s.iter().all(|&v| v == s[0])
+        match s.first() {
+            Some(&first) => s.iter().all(|&v| v == first),
+            None => true,
+        }
     }
 
     /// Verify the partition is an exact cover of 0..n (used by tests and
@@ -68,6 +87,123 @@ impl Partition {
         }
         owner
     }
+
+    /// True when the parts tile `0..n` in order — part 0 is `0..n_0`,
+    /// part 1 is `n_0..n_0+n_1`, and so on. Exactly the layouts whose
+    /// shards can be zero-copy row-range views.
+    pub fn is_contiguous_layout(&self) -> bool {
+        let mut next = 0usize;
+        for part in &self.parts {
+            for &i in part {
+                if i != next {
+                    return false;
+                }
+                next += 1;
+            }
+        }
+        next == self.n
+    }
+
+    /// Reorder `data` **once** so that every part becomes a contiguous row
+    /// range, and return the resulting [`ShardLayout`]: the shared
+    /// (possibly permuted) dataset, the equivalent contiguous partition
+    /// over it, and the row maps back to the caller's original order.
+    ///
+    /// Permuted row `p` holds original row `layout.rows.new_to_old[p]`;
+    /// within each part the original order of its index list is preserved,
+    /// so per-shard contents — and therefore local-solver trajectories —
+    /// are identical to the index-list semantics. A partition that is
+    /// already contiguous returns the caller's `Arc` untouched (true
+    /// zero-copy).
+    pub fn apply_permutation(&self, data: Arc<Dataset>) -> ShardLayout {
+        assert_eq!(self.n, data.n(), "partition n != dataset n");
+        assert!(
+            self.is_exact_cover(),
+            "apply_permutation needs an exact cover of 0..n"
+        );
+        if self.is_contiguous_layout() {
+            return ShardLayout {
+                data,
+                partition: self.clone(),
+                rows: RowPermutation::identity(self.n),
+            };
+        }
+        let mut new_to_old = Vec::with_capacity(self.n);
+        for part in &self.parts {
+            new_to_old.extend_from_slice(part);
+        }
+        let mut old_to_new = vec![0usize; self.n];
+        for (new, &old) in new_to_old.iter().enumerate() {
+            old_to_new[old] = new;
+        }
+        let permuted = Arc::new(data.gather_rows(&new_to_old));
+        let mut parts = Vec::with_capacity(self.k());
+        let mut pos = 0usize;
+        for part in &self.parts {
+            parts.push((pos..pos + part.len()).collect());
+            pos += part.len();
+        }
+        ShardLayout {
+            data: permuted,
+            partition: Partition { parts, n: self.n },
+            rows: RowPermutation {
+                new_to_old,
+                old_to_new,
+            },
+        }
+    }
+}
+
+/// The global↔local row maps of a permuted-contiguous shard layout.
+#[derive(Clone, Debug)]
+pub struct RowPermutation {
+    /// Permuted (layout) index → original index.
+    pub new_to_old: Vec<usize>,
+    /// Original index → permuted (layout) index.
+    pub old_to_new: Vec<usize>,
+}
+
+impl RowPermutation {
+    pub fn identity(n: usize) -> RowPermutation {
+        RowPermutation {
+            new_to_old: (0..n).collect(),
+            old_to_new: (0..n).collect(),
+        }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.new_to_old.iter().enumerate().all(|(i, &o)| i == o)
+    }
+
+    /// Scatter a layout-ordered vector back to original row order.
+    pub fn to_original(&self, permuted: &[f64]) -> Vec<f64> {
+        assert_eq!(permuted.len(), self.new_to_old.len());
+        let mut out = vec![0.0; permuted.len()];
+        for (new, &old) in self.new_to_old.iter().enumerate() {
+            out[old] = permuted[new];
+        }
+        out
+    }
+
+    /// Gather an original-ordered vector into layout order.
+    pub fn to_permuted(&self, original: &[f64]) -> Vec<f64> {
+        assert_eq!(original.len(), self.new_to_old.len());
+        self.new_to_old.iter().map(|&old| original[old]).collect()
+    }
+}
+
+/// A partition's contiguous realization over a shared dataset: the output
+/// of [`Partition::apply_permutation`]. All K shards are views into
+/// `data`, so the layout owns at most one (permuted) copy of the dataset
+/// regardless of K.
+#[derive(Clone, Debug)]
+pub struct ShardLayout {
+    /// The shared — possibly permuted — dataset every shard views into.
+    pub data: Arc<Dataset>,
+    /// The contiguous partition over `data` (part k is a row range).
+    pub partition: Partition,
+    /// Maps between layout order and the caller's original row order.
+    pub rows: RowPermutation,
 }
 
 /// Shuffled equal split (sizes differ by at most 1).
@@ -188,5 +324,68 @@ mod tests {
     #[should_panic]
     fn more_workers_than_points_panics() {
         random_balanced(3, 5, 0);
+    }
+
+    #[test]
+    fn empty_partition_is_balanced() {
+        // K = 0: no parts at all — vacuously balanced, must not panic.
+        let p = Partition {
+            parts: Vec::new(),
+            n: 0,
+        };
+        assert!(p.is_balanced());
+        assert!(p.is_exact_cover());
+        assert!(p.is_contiguous_layout());
+    }
+
+    #[test]
+    fn contiguous_layout_detection() {
+        assert!(contiguous(10, 3).is_contiguous_layout());
+        let shuffled = random_balanced(40, 4, 1);
+        assert!(!shuffled.is_contiguous_layout());
+        // ordered parts but a gap is not contiguous
+        let p = Partition {
+            parts: vec![vec![0, 2], vec![1, 3]],
+            n: 4,
+        };
+        assert!(!p.is_contiguous_layout());
+    }
+
+    #[test]
+    fn apply_permutation_identity_keeps_arc() {
+        use crate::data::synth::{generate, SynthConfig};
+        let data = Arc::new(generate(&SynthConfig::new("ap", 12, 4).seed(1)));
+        let part = contiguous(12, 3);
+        let layout = part.apply_permutation(Arc::clone(&data));
+        assert!(Arc::ptr_eq(&layout.data, &data), "identity must not copy");
+        assert!(layout.rows.is_identity());
+        assert_eq!(layout.partition.parts, part.parts);
+    }
+
+    #[test]
+    fn apply_permutation_makes_parts_contiguous_and_maps_back() {
+        use crate::data::synth::{generate, SynthConfig};
+        let data = Arc::new(generate(&SynthConfig::new("ap", 30, 5).seed(2)));
+        let part = random_balanced(30, 4, 9);
+        let layout = part.apply_permutation(Arc::clone(&data));
+        assert!(layout.partition.is_contiguous_layout());
+        assert!(layout.partition.is_exact_cover());
+        assert_eq!(layout.partition.sizes(), part.sizes());
+        // permuted row p holds original row new_to_old[p], part order kept
+        let mut pos = 0usize;
+        for (k, rows) in part.parts.iter().enumerate() {
+            for (li, &old) in rows.iter().enumerate() {
+                let new = pos + li;
+                assert_eq!(layout.rows.new_to_old[new], old);
+                assert_eq!(layout.rows.old_to_new[old], new);
+                assert_eq!(layout.data.y[new], data.y[old]);
+                assert_eq!(layout.data.x.row(new), data.x.row(old));
+                assert_eq!(layout.partition.parts[k][li], new);
+            }
+            pos += rows.len();
+        }
+        // round-trip a vector through the maps
+        let v: Vec<f64> = (0..30).map(|i| i as f64).collect();
+        assert_eq!(layout.rows.to_original(&layout.rows.to_permuted(&v)), v);
     }
 }

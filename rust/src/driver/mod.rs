@@ -6,8 +6,9 @@
 //! * the **stopping policy** ([`StopPolicy`]): duality-gap tolerance,
 //!   round budget, divergence abort, dual-progress stall, and the Fig.-2
 //!   dual-target criterion (stop when D(α*) − D(α) ≤ ε_D);
-//! * the **certificate cadence** (`gap_every`): certificates cost a full
-//!   pass over the data, so they are evaluated every N rounds;
+//! * the **certificate cadence** (`gap_every`): certificates cost a pass
+//!   over the data (K-way parallel for the pooled trainer, serial for
+//!   single-machine methods), so they are evaluated every N rounds;
 //! * the **simulated cluster clock**: per round the Driver charges the
 //!   method's measured compute seconds plus the
 //!   [`CommModel`](crate::coordinator::comm::CommModel) network time
@@ -50,13 +51,17 @@ pub trait Method {
     /// Execute one outer round and report its cost.
     fn step(&mut self) -> StepStats;
 
-    /// Primal/dual certificates at the current iterate. Methods without a
-    /// dual certificate (mini-batch SGD, ADMM) report
+    /// Primal/dual certificates at the current iterate. Takes `&mut self`
+    /// because evaluation may *drive the cluster*: the CoCoA trainer
+    /// fans the certificate out to its worker pool as a shard-partial
+    /// reduction (each worker sums its own primal losses and dual
+    /// conjugates) instead of a serial full-data pass on the leader.
+    /// Methods without a dual certificate (mini-batch SGD, ADMM) report
     /// `dual = f64::NEG_INFINITY` and use the `gap` slot for primal
     /// suboptimality against an externally supplied target (or the raw
     /// primal value when none is known) — the paper's §6 point that
     /// primal-only methods cannot certify their own accuracy.
-    fn eval(&self) -> Certificates;
+    fn eval(&mut self) -> Certificates;
 
     /// Vectors a full communicating round moves (the paper's Fig.-1
     /// x-axis unit): one per worker for the distributed methods, 0 for
@@ -334,7 +339,7 @@ mod tests {
                 comm_vectors: 2,
             }
         }
-        fn eval(&self) -> Certificates {
+        fn eval(&mut self) -> Certificates {
             Certificates {
                 primal: 1.0,
                 dual: 1.0 - self.gap,

@@ -20,21 +20,50 @@
 //! PJRT so the same [`solver::LocalSolver`] interface runs native-Rust or
 //! XLA compute.
 //!
+//! ## Shared data plane
+//!
+//! The dataset is a **single shared object**: [`objective::Problem`]
+//! holds it behind an `Arc`, and each worker's
+//! [`subproblem::LocalBlock`] is a zero-copy row-range view
+//! ([`linalg::CsrShard`]) into it — no per-worker matrix clones and no
+//! separate leader copy (resident data is 1× the dataset, down from ≈2×).
+//! An arbitrary partition is realized by reordering the dataset **once**
+//! into the permuted-contiguous [`data::ShardLayout`] (every part becomes
+//! a contiguous row range; [`data::RowPermutation`] maps back to the
+//! caller's row order); a partition that is already contiguous permutes
+//! nothing. Per-shard contents are unchanged by the layout, so solver
+//! trajectories match the index-list semantics exactly.
+//!
 //! ## Execution model
 //!
 //! [`coordinator::Trainer::new`] spawns the simulated cluster **once**: K
 //! long-lived worker threads ([`coordinator::pool::PooledExecutor`]),
-//! each owning its data block, its α_[k] slice, and its solver state.
-//! Every outer round the leader publishes a `w` snapshot to a shared
-//! broadcast buffer, kicks the workers over bounded channels, and gathers
-//! their Δ-updates into per-worker scratch buffers that ping-pong between
-//! leader and workers — the steady-state round loop performs zero thread
-//! spawns and zero result allocations. With `cfg.parallel = false` (or
-//! K = 1, or non-thread-safe solvers such as the PJRT-backed one) the
+//! each owning its data-shard view, its α_[k] slice, and its solver
+//! state. Every outer round the leader publishes a `w` snapshot to a
+//! shared broadcast buffer, kicks the workers over bounded channels, and
+//! gathers their Δ-updates into per-worker scratch buffers that ping-pong
+//! between leader and workers — the steady-state round loop performs zero
+//! thread spawns and zero result allocations. With `cfg.parallel = false`
+//! (or K = 1, or non-thread-safe solvers such as the PJRT-backed one) the
 //! same rounds run on the in-process
 //! [`coordinator::pool::SequentialExecutor`]; both executors produce
 //! bit-identical trajectories (seeded per-worker solver streams +
 //! worker-id-ordered reduce), which `rust/tests/determinism.rs` locks in.
+//!
+//! ## Distributed duality-gap certificates
+//!
+//! The stopping certificate (§2, eq. 4) is no longer a serial full-data
+//! pass on the leader: at certificate cadence the round protocol sends an
+//! `Eval` message and every worker reduces its own shard in parallel to a
+//! partial primal-loss sum and partial dual-conjugate sum, its local
+//! margins consumed on the fly ([`objective::CertPartial`],
+//! [`objective::cert_partial`]) — and the
+//! leader combines the K partials with the ‖w‖² term
+//! ([`objective::Problem::certificates_from_partials`]). Central
+//! evaluation ([`objective::Problem::certificates`]) is the one-shard
+//! case of the same code path, and the sequential executor reduces the
+//! identical partials, so gap trajectories stay bit-identical across
+//! runtimes while the serial O(nnz) bottleneck becomes K-way parallel.
 //!
 //! ## Time accounting
 //!

@@ -1,9 +1,10 @@
-//! Linear-algebra substrate: dense vector kernels, CSR sparse matrices,
-//! and power iteration for the paper's partition constants σ_k.
+//! Linear-algebra substrate: dense vector kernels, CSR sparse matrices
+//! with zero-copy row-range shard views, and power iteration for the
+//! paper's partition constants σ_k.
 
 pub mod dense;
 pub mod power_iter;
 pub mod sparse;
 
 pub use power_iter::{sigma_k, spectral_norm_sq};
-pub use sparse::CsrMatrix;
+pub use sparse::{CsrMatrix, CsrShard};

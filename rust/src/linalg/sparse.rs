@@ -6,6 +6,12 @@
 //! row norms `‖x_i‖²`. Everything else (matvec, transpose-matvec, slicing a
 //! partition into its own local matrix) supports the coordinator and the
 //! spectral σ_k computations.
+//!
+//! [`CsrShard`] is the zero-copy counterpart of `select_rows`: a borrowed
+//! (indptr-offset, row-range) view over a `CsrMatrix` exposing the same
+//! hot-path kernels. A worker's data shard is such a view into the one
+//! shared dataset instead of a cloned sub-matrix — the storage layer of
+//! the shared data plane (see [`crate::subproblem::LocalBlock`]).
 
 use crate::linalg::dense;
 
@@ -31,18 +37,23 @@ impl CsrMatrix {
         let mut indices = Vec::new();
         let mut values = Vec::new();
         indptr.push(0);
+        // One scratch buffer reused across all rows: sort, then merge runs
+        // of equal columns directly into the CSR arrays — no per-row clone
+        // and no per-row merge allocation.
+        let mut scratch: Vec<(usize, f64)> = Vec::new();
         for row in rows {
-            let mut entries: Vec<(usize, f64)> = row.clone();
-            entries.sort_by_key(|&(c, _)| c);
-            let mut merged: Vec<(usize, f64)> = Vec::with_capacity(entries.len());
-            for (c, v) in entries {
+            scratch.clear();
+            scratch.extend_from_slice(row);
+            scratch.sort_by_key(|&(c, _)| c);
+            let mut j = 0;
+            while j < scratch.len() {
+                let (c, mut v) = scratch[j];
                 assert!(c < cols, "column {c} out of bounds ({cols})");
-                match merged.last_mut() {
-                    Some((lc, lv)) if *lc == c => *lv += v,
-                    _ => merged.push((c, v)),
+                j += 1;
+                while j < scratch.len() && scratch[j].0 == c {
+                    v += scratch[j].1;
+                    j += 1;
                 }
-            }
-            for (c, v) in merged {
                 if v != 0.0 {
                     indices.push(c as u32);
                     values.push(v);
@@ -214,6 +225,17 @@ impl CsrMatrix {
         out
     }
 
+    /// Borrow rows `[start, start + len)` as a zero-copy [`CsrShard`] view.
+    pub fn shard(&self, start: usize, len: usize) -> CsrShard<'_> {
+        CsrShard::new(self, start, len)
+    }
+
+    /// The whole matrix as a single shard (the central-evaluation case of
+    /// the shard-partial certificate protocol).
+    pub fn as_shard(&self) -> CsrShard<'_> {
+        CsrShard::new(self, 0, self.rows)
+    }
+
     /// Scale each row to unit L2 norm (paper assumption ‖x_i‖ ≤ 1).
     /// Zero rows are left untouched. Returns the original norms.
     pub fn normalize_rows(&mut self) -> Vec<f64> {
@@ -230,6 +252,103 @@ impl CsrMatrix {
             }
         }
         norms
+    }
+}
+
+/// A borrowed, zero-copy row-range view over a [`CsrMatrix`]: an
+/// (indptr-offset, row-range) pair instead of a cloned sub-matrix.
+///
+/// Shard row `i` is matrix row `start + i`; all kernels delegate to the
+/// matrix's own `row_dot`/`row_axpy`/`row` hot paths, so a view pays one
+/// index add per call and nothing else. This is what makes a worker's
+/// data shard free: K shards of one shared matrix occupy the memory of
+/// the matrix, not 2× of it.
+#[derive(Clone, Copy, Debug)]
+pub struct CsrShard<'a> {
+    mat: &'a CsrMatrix,
+    start: usize,
+    len: usize,
+}
+
+impl<'a> CsrShard<'a> {
+    pub fn new(mat: &'a CsrMatrix, start: usize, len: usize) -> CsrShard<'a> {
+        assert!(
+            start + len <= mat.rows,
+            "shard [{start}, {}) out of bounds for {} rows",
+            start + len,
+            mat.rows
+        );
+        CsrShard { mat, start, len }
+    }
+
+    /// Number of rows in the view.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.len
+    }
+
+    /// Full column space of the underlying matrix.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.mat.cols
+    }
+
+    /// First underlying row (the indptr offset of the view).
+    #[inline]
+    pub fn start(&self) -> usize {
+        self.start
+    }
+
+    /// Nonzeros inside the row range — one indptr subtraction, no scan.
+    pub fn nnz(&self) -> usize {
+        self.mat.indptr[self.start + self.len] - self.mat.indptr[self.start]
+    }
+
+    /// (indices, values) of shard row i.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&'a [u32], &'a [f64]) {
+        debug_assert!(i < self.len);
+        self.mat.row(self.start + i)
+    }
+
+    /// Number of nonzeros in shard row i.
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        debug_assert!(i < self.len);
+        self.mat.row_nnz(self.start + i)
+    }
+
+    /// x_iᵀ v — the same kernel as [`CsrMatrix::row_dot`].
+    #[inline]
+    pub fn row_dot(&self, i: usize, v: &[f64]) -> f64 {
+        debug_assert!(i < self.len);
+        self.mat.row_dot(self.start + i, v)
+    }
+
+    /// v += c·x_i — the same kernel as [`CsrMatrix::row_axpy`].
+    #[inline]
+    pub fn row_axpy(&self, i: usize, c: f64, v: &mut [f64]) {
+        debug_assert!(i < self.len);
+        self.mat.row_axpy(self.start + i, c, v)
+    }
+
+    /// ‖x_i‖² for every shard row. Prefer the dataset's cached
+    /// `row_norms_sq` slice when one exists (e.g.
+    /// [`crate::subproblem::LocalBlock::norms_sq`]) — this recomputes.
+    pub fn row_norms_sq(&self) -> Vec<f64> {
+        (0..self.len)
+            .map(|i| dense::norm_sq(self.row(i).1))
+            .collect()
+    }
+
+    /// out = A_shardᵀ u (u length = shard rows, out length = cols).
+    pub fn matvec_t(&self, u: &[f64], out: &mut [f64]) {
+        assert_eq!(u.len(), self.len);
+        assert_eq!(out.len(), self.cols());
+        dense::zero(out);
+        for (i, &ui) in u.iter().enumerate() {
+            self.row_axpy(i, ui, out);
+        }
     }
 }
 
@@ -340,5 +459,60 @@ mod tests {
     #[should_panic]
     fn out_of_bounds_column_panics() {
         CsrMatrix::from_rows(2, &[vec![(5, 1.0)]]);
+    }
+
+    #[test]
+    fn shard_views_rows_without_copying() {
+        let m = sample();
+        let s = m.shard(1, 2); // rows 1..3
+        assert_eq!(s.rows(), 2);
+        assert_eq!(s.cols(), 3);
+        assert_eq!(s.nnz(), 4); // 1 (row 1) + 3 (row 2)
+        assert_eq!(s.row(0), m.row(1));
+        assert_eq!(s.row(1), m.row(2));
+        assert_eq!(s.row_nnz(1), 3);
+        let v = vec![1.0, 2.0, 3.0];
+        assert_eq!(s.row_dot(1, &v), m.row_dot(2, &v));
+        let mut acc_s = vec![0.0; 3];
+        let mut acc_m = vec![0.0; 3];
+        s.row_axpy(1, 2.0, &mut acc_s);
+        m.row_axpy(2, 2.0, &mut acc_m);
+        assert_eq!(acc_s, acc_m);
+    }
+
+    #[test]
+    fn shard_kernels_match_full_matrix() {
+        let m = sample();
+        let s = m.shard(0, 3);
+        assert_eq!(s.row_norms_sq(), m.row_norms_sq());
+        let u = vec![1.0, 2.0, 3.0];
+        let (mut t_s, mut t_m) = (vec![0.0; 3], vec![0.0; 3]);
+        s.matvec_t(&u, &mut t_s);
+        m.matvec_t(&u, &mut t_m);
+        assert_eq!(t_s, t_m);
+        // a strict sub-range transposes only its own rows
+        let sub = m.shard(1, 2);
+        let u2 = vec![2.0, 3.0];
+        let mut t_sub = vec![0.0; 3];
+        sub.matvec_t(&u2, &mut t_sub);
+        let mut expect = vec![0.0; 3];
+        m.row_axpy(1, 2.0, &mut expect);
+        m.row_axpy(2, 3.0, &mut expect);
+        assert_eq!(t_sub, expect);
+    }
+
+    #[test]
+    fn as_shard_covers_everything() {
+        let m = sample();
+        let s = m.as_shard();
+        assert_eq!(s.rows(), m.rows);
+        assert_eq!(s.nnz(), m.nnz());
+        assert_eq!(s.start(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shard_out_of_range_panics() {
+        sample().shard(2, 2);
     }
 }

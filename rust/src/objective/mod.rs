@@ -5,23 +5,40 @@
 //! * Map    (3):  w(α) = Aα/(λn)
 //! * Gap    (4):  G(α) = P(w(α)) − D(α) ≥ 0   (weak duality)
 //!
-//! The gap is the paper's practical stopping certificate; we expose it both
-//! from scratch (`duality_gap`) and from cached margins for the hot path.
+//! The gap is the paper's practical stopping certificate. Both data-sum
+//! terms decompose over any partition of the rows, so the certificate is
+//! computed as a **shard-partial reduction**: every shard contributes a
+//! [`CertPartial`] (its Σℓ_i over local margins and Σℓ*_i over its dual
+//! variables, via [`cert_partial`]) and
+//! [`Problem::certificates_from_partials`] combines K partials with the
+//! ‖w‖² term. Central evaluation is the one-shard special case — the same
+//! code path the worker pool uses, just with K = 1 — which keeps the
+//! pooled and sequential executors bit-identical.
 
 use crate::data::Dataset;
-use crate::linalg::dense;
+use crate::linalg::{dense, CsrShard};
 use crate::loss::Loss;
+use std::sync::Arc;
 
-/// Problem definition: dataset + loss + regularizer.
+/// Problem definition: dataset + loss + regularizer. The dataset sits
+/// behind an `Arc` so the coordinator, the workers' shard views, and any
+/// baseline share one copy; cloning a `Problem` clones a pointer, not the
+/// data.
 #[derive(Clone, Debug)]
 pub struct Problem {
-    pub data: Dataset,
+    pub data: Arc<Dataset>,
     pub loss: Loss,
     pub lambda: f64,
 }
 
 impl Problem {
     pub fn new(data: Dataset, loss: Loss, lambda: f64) -> Problem {
+        Problem::shared(Arc::new(data), loss, lambda)
+    }
+
+    /// Build over an already-shared dataset (the zero-copy path used by
+    /// the trainer's permuted-contiguous layout).
+    pub fn shared(data: Arc<Dataset>, loss: Loss, lambda: f64) -> Problem {
         assert!(lambda > 0.0, "λ must be positive");
         Problem { data, loss, lambda }
     }
@@ -86,10 +103,40 @@ impl Problem {
         self.primal_value(&w) - self.dual_value(alpha, &w)
     }
 
-    /// Primal, dual, and gap from a consistent (α, w) pair.
+    /// Primal, dual, and gap from a consistent (α, w) pair — the central
+    /// (single-shard) case of the partial/combine protocol.
     pub fn certificates(&self, alpha: &[f64], w: &[f64]) -> Certificates {
-        let primal = self.primal_value(w);
-        let dual = self.dual_value(alpha, w);
+        assert_eq!(alpha.len(), self.n());
+        let partial = cert_partial(self.loss, self.data.x.as_shard(), &self.data.y, alpha, w);
+        self.certificates_from_partials([partial], w)
+    }
+
+    /// Reduce shard partials plus the ‖w‖² term into certificates (the
+    /// leader's side of the distributed gap evaluation). Partials must
+    /// cover the n rows exactly once; they are summed in iteration order,
+    /// so a fixed shard order gives bit-reproducible results.
+    pub fn certificates_from_partials<I>(&self, partials: I, w: &[f64]) -> Certificates
+    where
+        I: IntoIterator<Item = CertPartial>,
+    {
+        assert_eq!(w.len(), self.d());
+        let mut loss_sum = 0.0;
+        let mut conj_sum = 0.0;
+        for p in partials {
+            loss_sum += p.loss_sum;
+            conj_sum += p.conj_sum;
+        }
+        let n = self.n() as f64;
+        let reg = 0.5 * self.lambda * dense::norm_sq(w);
+        let primal = loss_sum / n + reg;
+        // Any dual-infeasible coordinate drives conj_sum to +∞ → D = −∞,
+        // matching `dual_value`'s early return. NaN (from NaN iterates)
+        // propagates so the Driver's NaN guard still fires.
+        let dual = if conj_sum == f64::INFINITY {
+            f64::NEG_INFINITY
+        } else {
+            -conj_sum / n - reg
+        };
         Certificates {
             primal,
             dual,
@@ -113,6 +160,43 @@ pub struct Certificates {
     pub primal: f64,
     pub dual: f64,
     pub gap: f64,
+}
+
+/// One shard's contribution to the duality-gap certificate: the two
+/// data-dependent sums of Eq. (1)/(2) restricted to the shard's rows.
+/// Workers compute these in parallel over their own views; the leader
+/// reduces K of them in worker-id order.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CertPartial {
+    /// Σ_{i∈shard} ℓ(x_iᵀw; y_i) — primal loss over the shard's margins.
+    pub loss_sum: f64,
+    /// Σ_{i∈shard} ℓ*(−α_i; y_i) — dual conjugate sum; +∞ as soon as any
+    /// local coordinate is dual-infeasible.
+    pub conj_sum: f64,
+}
+
+/// Compute a shard's [`CertPartial`] against the shared `w`: one pass
+/// computing the local margins z_i = x_iᵀw, the loss sum over them, and
+/// the conjugate sum over the shard's dual variables. This is the single
+/// code path used by the worker pool, the sequential executor, and
+/// central evaluation — what makes all three produce identical partials.
+pub fn cert_partial(
+    loss: Loss,
+    x: CsrShard<'_>,
+    y: &[f64],
+    alpha: &[f64],
+    w: &[f64],
+) -> CertPartial {
+    assert_eq!(x.rows(), y.len());
+    assert_eq!(x.rows(), alpha.len());
+    let mut loss_sum = 0.0;
+    let mut conj_sum = 0.0;
+    for (i, (&yi, &ai)) in y.iter().zip(alpha).enumerate() {
+        let z = x.row_dot(i, w); // the shard's local margin
+        loss_sum += loss.value(z, yi);
+        conj_sum += loss.conjugate_neg(ai, yi);
+    }
+    CertPartial { loss_sum, conj_sum }
 }
 
 #[cfg(test)]
@@ -194,6 +278,63 @@ mod tests {
         let alpha = vec![scale * 1.0, scale * 2.0];
         let gap = p.duality_gap(&alpha);
         assert!(gap.abs() < 1e-10, "gap {gap}");
+    }
+
+    #[test]
+    fn shard_partials_combine_to_central_certificates() {
+        for loss in [
+            Loss::Hinge,
+            Loss::SmoothedHinge { mu: 0.5 },
+            Loss::Logistic,
+            Loss::Squared,
+            Loss::Absolute,
+        ] {
+            let p = small_problem(loss);
+            let n = p.n();
+            let alpha: Vec<f64> = (0..n)
+                .map(|i| p.data.y[i] * ((i % 10) as f64 / 10.0))
+                .collect();
+            let mut w = vec![0.0; p.d()];
+            p.primal_from_dual(&alpha, &mut w);
+            let central = p.certificates(&alpha, &w);
+            // split the rows into 3 uneven shards
+            let cuts = [0usize, n / 3, n / 2, n];
+            let partials: Vec<CertPartial> = cuts
+                .windows(2)
+                .map(|c| {
+                    cert_partial(
+                        p.loss,
+                        p.data.x.shard(c[0], c[1] - c[0]),
+                        &p.data.y[c[0]..c[1]],
+                        &alpha[c[0]..c[1]],
+                        &w,
+                    )
+                })
+                .collect();
+            let combined = p.certificates_from_partials(partials, &w);
+            assert!(
+                (combined.primal - central.primal).abs() < 1e-12,
+                "{}: primal {} vs {}",
+                loss.name(),
+                combined.primal,
+                central.primal
+            );
+            assert!((combined.dual - central.dual).abs() < 1e-12, "{}", loss.name());
+            assert!((combined.gap - central.gap).abs() < 1e-12, "{}", loss.name());
+        }
+    }
+
+    #[test]
+    fn infeasible_shard_partial_gives_neg_inf_dual() {
+        let p = small_problem(Loss::Hinge);
+        let mut alpha = vec![0.0; p.n()];
+        alpha[1] = -3.0 * p.data.y[1];
+        let w = vec![0.0; p.d()];
+        let partial = cert_partial(p.loss, p.data.x.as_shard(), &p.data.y, &alpha, &w);
+        assert_eq!(partial.conj_sum, f64::INFINITY);
+        let certs = p.certificates_from_partials([partial], &w);
+        assert_eq!(certs.dual, f64::NEG_INFINITY);
+        assert_eq!(certs.gap, f64::INFINITY);
     }
 
     #[test]

@@ -95,15 +95,15 @@ impl XlaSdcaSolver {
         // Zero-pad the dense copy: rows beyond n_local stay zero with q=0.
         let mut x_dense = vec![0.0f64; m * d];
         for i in 0..block.n_local() {
-            let (idx, vals) = block.x.row(i);
+            let (idx, vals) = block.x().row(i);
             for (j, &c) in idx.iter().enumerate() {
                 x_dense[i * d + c as usize] = vals[j];
             }
         }
         let mut y_pad = vec![1.0f64; m];
-        y_pad[..block.n_local()].copy_from_slice(&block.y);
+        y_pad[..block.n_local()].copy_from_slice(block.y());
         let mut qi_pad = vec![0.0f64; m];
-        qi_pad[..block.n_local()].copy_from_slice(&block.norms_sq);
+        qi_pad[..block.n_local()].copy_from_slice(block.norms_sq());
         let x_lit = literal_f64_matrix(&x_dense, m, d)?;
         Ok(XlaSdcaSolver {
             program,

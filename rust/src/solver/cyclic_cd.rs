@@ -44,6 +44,9 @@ impl LocalSolver for CyclicCdSolver {
         let nk = block.n_local();
         assert!(nk > 0, "empty local block");
         out.reset(nk, block.d());
+        let x = block.x();
+        let y = block.y();
+        let norms = block.norms_sq();
 
         self.v.clear();
         self.v.extend_from_slice(ctx.w);
@@ -59,21 +62,21 @@ impl LocalSolver for CyclicCdSolver {
                 self.rng.shuffle(&mut self.order);
             }
             for &i in &self.order {
-                let q = block.norms_sq[i];
+                let q = norms[i];
                 if q == 0.0 {
                     continue;
                 }
-                let xv = block.x.row_dot(i, &self.v);
+                let xv = x.row_dot(i, &self.v);
                 let coef = spec.coef(q);
                 let d = spec.loss.coordinate_delta(
                     ctx.alpha_local[i] + delta[i],
-                    block.y[i],
+                    y[i],
                     xv,
                     coef,
                 );
                 if d != 0.0 {
                     delta[i] += d;
-                    block.x.row_axpy(i, v_scale * d, &mut self.v);
+                    x.row_axpy(i, v_scale * d, &mut self.v);
                 }
                 steps += 1;
             }

@@ -52,6 +52,9 @@ impl LocalSolver for JacobiSolver {
         let nk = block.n_local();
         assert!(nk > 0, "empty local block");
         out.reset(nk, block.d());
+        let x = block.x();
+        let y = block.y();
+        let norms = block.norms_sq();
         let v_scale = spec.v_scale();
 
         let delta = &mut out.delta_alpha;
@@ -67,14 +70,14 @@ impl LocalSolver for JacobiSolver {
         for _ in 0..self.sweeps {
             // Candidate coordinate moves from the frozen image v.
             for i in 0..nk {
-                let q = block.norms_sq[i];
+                let q = norms[i];
                 self.cand[i] = if q == 0.0 {
                     0.0
                 } else {
-                    let xv = block.x.row_dot(i, &self.v);
+                    let xv = x.row_dot(i, &self.v);
                     spec.loss.coordinate_delta(
                         ctx.alpha_local[i] + delta[i],
-                        block.y[i],
+                        y[i],
                         xv,
                         spec.coef(q),
                     )
@@ -94,7 +97,7 @@ impl LocalSolver for JacobiSolver {
                     for i in 0..nk {
                         let step = self.trial[i] - delta[i];
                         if step != 0.0 {
-                            block.x.row_axpy(i, v_scale * step, &mut self.v);
+                            x.row_axpy(i, v_scale * step, &mut self.v);
                         }
                     }
                     delta.copy_from_slice(&self.trial);

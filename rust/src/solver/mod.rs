@@ -121,6 +121,7 @@ pub(crate) mod test_fixtures {
     use crate::data::synth::{generate, SynthConfig};
     use crate::data::{Dataset, Partition};
     use crate::loss::Loss;
+    use std::sync::Arc;
 
     pub fn fixture(
         n: usize,
@@ -128,8 +129,8 @@ pub(crate) mod test_fixtures {
         k: usize,
         loss: Loss,
         lambda: f64,
-    ) -> (Dataset, Partition, Vec<LocalBlock>, SubproblemSpec) {
-        let data = generate(&SynthConfig::new("fix", n, d).seed(13));
+    ) -> (Arc<Dataset>, Partition, Vec<LocalBlock>, SubproblemSpec) {
+        let data = Arc::new(generate(&SynthConfig::new("fix", n, d).seed(13)));
         let part = random_balanced(n, k, 29);
         let blocks = LocalBlock::split(&data, &part);
         let spec = SubproblemSpec {
@@ -162,7 +163,7 @@ pub(crate) mod test_fixtures {
 
         // (a) Δw = A Δα/(λn)
         let mut a_delta = vec![0.0; block.d()];
-        block.x.matvec_t(&out.delta_alpha, &mut a_delta);
+        block.x().matvec_t(&out.delta_alpha, &mut a_delta);
         for j in 0..block.d() {
             let expect = a_delta[j] / (spec.lambda * spec.n_global as f64);
             assert!(
@@ -183,9 +184,10 @@ pub(crate) mod test_fixtures {
         );
 
         // (c) feasibility
+        let y = block.y();
         for (i, &d) in out.delta_alpha.iter().enumerate() {
             assert!(
-                loss.conjugate_neg(alpha_local[i] + d, block.y[i]).is_finite(),
+                loss.conjugate_neg(alpha_local[i] + d, y[i]).is_finite(),
                 "infeasible coordinate {i}"
             );
         }

@@ -63,6 +63,9 @@ impl SdcaSolver {
         let nk = block.n_local();
         assert!(nk > 0, "empty local block");
         out.reset(nk, block.d());
+        let x = block.x();
+        let y = block.y();
+        let norms = block.norms_sq();
 
         // v = w (then updated in place); delta starts at 0.
         self.v.clear();
@@ -72,18 +75,18 @@ impl SdcaSolver {
         let v_scale = spec.v_scale();
 
         for &i in indices {
-            let q = block.norms_sq[i];
+            let q = norms[i];
             if q == 0.0 {
                 continue; // empty row cannot move the objective
             }
-            let xv = block.x.row_dot(i, v);
+            let xv = x.row_dot(i, v);
             let coef = spec.coef(q);
             let d = spec
                 .loss
-                .coordinate_delta(ctx.alpha_local[i] + delta[i], block.y[i], xv, coef);
+                .coordinate_delta(ctx.alpha_local[i] + delta[i], y[i], xv, coef);
             if d != 0.0 {
                 delta[i] += d;
-                block.x.row_axpy(i, v_scale * d, v);
+                x.row_axpy(i, v_scale * d, v);
             }
         }
 

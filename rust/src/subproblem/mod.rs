@@ -9,54 +9,151 @@
 //! is what makes additive aggregation (γ=1) safe: Lemma 3 shows that for
 //! σ' ≥ γ·max ‖AΔ‖²/Σ‖AΔ_[k]‖², the sum of local gains lower-bounds the
 //! global dual improvement.
+//!
+//! Since the zero-copy refactor a [`LocalBlock`] owns no matrix: it is a
+//! contiguous row-range **view** into the shared `Arc<Dataset>` (see
+//! [`LocalBlock::split`] and the permuted-contiguous layout in
+//! [`crate::data::partition`]), exposing the same kernels through
+//! [`LocalBlock::x`]/[`LocalBlock::y`]/[`LocalBlock::norms_sq`] so the
+//! local solvers' inner loops are unchanged.
 
 pub mod sigma;
 
-use crate::data::{Dataset, Partition};
-use crate::linalg::{dense, CsrMatrix};
+use crate::data::{Dataset, Partition, ShardLayout};
+use crate::linalg::{dense, CsrShard};
 use crate::loss::Loss;
+use std::sync::Arc;
 
-/// Worker k's resident slice of the problem.
+/// Worker k's resident slice of the problem — a **view**, not a copy.
+///
+/// A block is an `Arc` to the shared dataset plus a contiguous row range
+/// in it; the matrix shard ([`LocalBlock::x`]), labels ([`LocalBlock::y`])
+/// and cached norms ([`LocalBlock::norms_sq`]) are all borrowed slices of
+/// the shared storage. K blocks of one dataset therefore occupy the
+/// memory of the dataset — the old per-worker `CsrMatrix` clones are
+/// gone. Blocks over an arbitrary (non-contiguous) partition are produced
+/// by permuting the dataset once into a
+/// [`ShardLayout`](crate::data::ShardLayout); `global_idx` always maps
+/// local rows back to the *caller's* row order, so scattering Δα is
+/// unchanged.
 #[derive(Clone, Debug)]
 pub struct LocalBlock {
-    /// Local rows (n_k × d), full column space.
-    pub x: CsrMatrix,
-    /// Local labels.
-    pub y: Vec<f64>,
-    /// Precomputed ‖x_i‖² for the local rows.
-    pub norms_sq: Vec<f64>,
-    /// Global row index of each local row (for scattering Δα back).
+    /// Shared (possibly permuted) dataset all sibling blocks view into.
+    data: Arc<Dataset>,
+    /// First shared-dataset row of this block.
+    start: usize,
+    /// Number of local rows n_k.
+    len: usize,
+    /// Caller-order row index of each local row (for scattering Δα back).
     pub global_idx: Vec<usize>,
 }
 
 impl LocalBlock {
-    pub fn from_partition(data: &Dataset, part_rows: &[usize]) -> LocalBlock {
-        let x = data.x.select_rows(part_rows);
-        let y = part_rows.iter().map(|&r| data.y[r]).collect();
-        let norms_sq = part_rows.iter().map(|&r| data.row_norms_sq[r]).collect();
+    /// A view over rows `[start, start + len)` of a shared dataset.
+    /// `global_idx[i]` names the caller-order row that shared row
+    /// `start + i` holds.
+    pub fn view(
+        data: Arc<Dataset>,
+        start: usize,
+        len: usize,
+        global_idx: Vec<usize>,
+    ) -> LocalBlock {
+        assert!(start + len <= data.n(), "block rows out of range");
+        assert_eq!(global_idx.len(), len, "global_idx must name every row");
         LocalBlock {
-            x,
-            y,
-            norms_sq,
-            global_idx: part_rows.to_vec(),
+            data,
+            start,
+            len,
+            global_idx,
         }
     }
 
-    /// Build all K blocks of a partition.
-    pub fn split(data: &Dataset, partition: &Partition) -> Vec<LocalBlock> {
-        partition
-            .parts
-            .iter()
-            .map(|rows| LocalBlock::from_partition(data, rows))
-            .collect()
+    /// Gather arbitrary rows into a standalone single-block dataset (used
+    /// for one-off blocks in tests, benchmarks, and the Θ estimator; the
+    /// K-way path is [`LocalBlock::split`], which shares storage).
+    pub fn from_partition(data: &Dataset, part_rows: &[usize]) -> LocalBlock {
+        let gathered = Arc::new(data.gather_rows(part_rows));
+        LocalBlock::view(gathered, 0, part_rows.len(), part_rows.to_vec())
+    }
+
+    /// Build all K blocks of a partition as views over shared storage.
+    ///
+    /// A contiguous partition yields views directly into `data` — zero
+    /// copies. Any other partition is realized through
+    /// [`Partition::apply_permutation`]: the dataset is reordered **once**
+    /// and all K blocks view the single permuted copy (`global_idx` still
+    /// carries the original row ids, so Δα scattering against the
+    /// caller's α is unchanged).
+    pub fn split(data: &Arc<Dataset>, partition: &Partition) -> Vec<LocalBlock> {
+        let layout = partition.apply_permutation(Arc::clone(data));
+        LocalBlock::consecutive_views(&layout.data, &partition.parts)
+    }
+
+    /// The K view-blocks of an already-realized [`ShardLayout`],
+    /// addressed in the **layout's own row order**: block k's
+    /// `global_idx` is its contiguous row range of `layout.data`. This is
+    /// the trainer's path — its global α lives in layout order — and it
+    /// skips the re-canonicalization `split` would perform. Use `split`
+    /// when Δα must scatter back to a pre-layout row order instead.
+    pub fn from_layout(layout: &ShardLayout) -> Vec<LocalBlock> {
+        LocalBlock::consecutive_views(&layout.data, &layout.partition.parts)
+    }
+
+    /// Shared constructor behind `split`/`from_layout`: consecutive views
+    /// over `data`, one per index list — block k spans the next
+    /// `idx_lists[k].len()` rows of `data` and keeps its list as
+    /// `global_idx` (the two callers differ only in which row order that
+    /// list speaks).
+    fn consecutive_views(data: &Arc<Dataset>, idx_lists: &[Vec<usize>]) -> Vec<LocalBlock> {
+        let mut blocks = Vec::with_capacity(idx_lists.len());
+        let mut start = 0usize;
+        for rows in idx_lists {
+            blocks.push(LocalBlock::view(
+                Arc::clone(data),
+                start,
+                rows.len(),
+                rows.clone(),
+            ));
+            start += rows.len();
+        }
+        blocks
+    }
+
+    /// The matrix shard: same `row_dot`/`row_axpy` kernels, zero copy.
+    #[inline]
+    pub fn x(&self) -> CsrShard<'_> {
+        self.data.x.shard(self.start, self.len)
+    }
+
+    /// Local labels.
+    #[inline]
+    pub fn y(&self) -> &[f64] {
+        &self.data.y[self.start..self.start + self.len]
+    }
+
+    /// Precomputed ‖x_i‖² for the local rows.
+    #[inline]
+    pub fn norms_sq(&self) -> &[f64] {
+        &self.data.row_norms_sq[self.start..self.start + self.len]
+    }
+
+    /// The shared dataset this block views (sibling blocks of a `split`
+    /// return the same `Arc`).
+    pub fn shared_data(&self) -> &Arc<Dataset> {
+        &self.data
+    }
+
+    /// First shared-dataset row of this block.
+    pub fn start(&self) -> usize {
+        self.start
     }
 
     pub fn n_local(&self) -> usize {
-        self.x.rows
+        self.len
     }
 
     pub fn d(&self) -> usize {
-        self.x.cols
+        self.data.d()
     }
 }
 
@@ -102,13 +199,14 @@ pub fn subproblem_value(
     let nk = block.n_local();
     assert_eq!(alpha_local.len(), nk);
     assert_eq!(delta_local.len(), nk);
+    let y = block.y();
 
     // −(1/n) Σ ℓ*(−(α+Δ))
     let mut conj = 0.0;
     for i in 0..nk {
         let c = spec
             .loss
-            .conjugate_neg(alpha_local[i] + delta_local[i], block.y[i]);
+            .conjugate_neg(alpha_local[i] + delta_local[i], y[i]);
         if c.is_infinite() {
             return f64::NEG_INFINITY;
         }
@@ -117,7 +215,7 @@ pub fn subproblem_value(
 
     // A Δα (in feature space)
     let mut a_delta = vec![0.0; block.d()];
-    block.x.matvec_t(delta_local, &mut a_delta);
+    block.x().matvec_t(delta_local, &mut a_delta);
 
     let term_conj = -conj / n;
     let term_reg = -(0.5 * spec.lambda / spec.k as f64) * dense::norm_sq(w);
@@ -145,8 +243,8 @@ mod tests {
     fn setup(k: usize) -> (Problem, Vec<LocalBlock>, Partition) {
         let data = generate(&SynthConfig::new("t", 60, 8).seed(3));
         let part = random_balanced(60, k, 7);
-        let blocks = LocalBlock::split(&data, &part);
         let p = Problem::new(data, Loss::Hinge, 0.05);
+        let blocks = LocalBlock::split(&p.data, &part);
         (p, blocks, part)
     }
 
@@ -158,9 +256,43 @@ mod tests {
         assert_eq!(total, p.n());
         for b in &blocks {
             for (li, &gi) in b.global_idx.iter().enumerate() {
-                assert_eq!(b.y[li], p.data.y[gi]);
-                assert_eq!(b.x.row(li).1, p.data.x.row(gi).1);
+                assert_eq!(b.y()[li], p.data.y[gi]);
+                assert_eq!(b.x().row(li).1, p.data.x.row(gi).1);
+                assert_eq!(b.norms_sq()[li], p.data.row_norms_sq[gi]);
             }
+        }
+    }
+
+    #[test]
+    fn split_shares_one_dataset_copy() {
+        // Non-contiguous partition: all K blocks must view the SAME
+        // (permuted) dataset — one Arc, no per-worker matrix clones.
+        let (_p, blocks, _part) = setup(4);
+        for b in &blocks[1..] {
+            assert!(
+                Arc::ptr_eq(b.shared_data(), blocks[0].shared_data()),
+                "sibling blocks must share storage"
+            );
+        }
+        let total_rows: usize = blocks.iter().map(|b| b.n_local()).sum();
+        assert_eq!(blocks[0].shared_data().n(), total_rows);
+    }
+
+    #[test]
+    fn contiguous_split_is_zero_copy() {
+        use crate::data::partition::contiguous;
+        let data = generate(&SynthConfig::new("t", 40, 6).seed(5));
+        let p = Problem::new(data, Loss::Hinge, 0.05);
+        let part = contiguous(40, 4);
+        let blocks = LocalBlock::split(&p.data, &part);
+        for (k, b) in blocks.iter().enumerate() {
+            assert!(
+                Arc::ptr_eq(b.shared_data(), &p.data),
+                "contiguous split must view the caller's dataset directly"
+            );
+            assert_eq!(b.start(), k * 10);
+            assert_eq!(b.n_local(), 10);
+            assert_eq!(b.global_idx, part.parts[k]);
         }
     }
 
@@ -221,7 +353,7 @@ mod tests {
                 part.parts[k].iter().map(|&gi| alpha[gi]).collect();
             let delta: Vec<f64> = (0..b.n_local())
                 .map(|i| {
-                    let target = b.y[i] * rng.next_f64();
+                    let target = b.y()[i] * rng.next_f64();
                     target - alpha_local[i]
                 })
                 .collect();
@@ -267,7 +399,7 @@ mod tests {
         let w = vec![0.0; p.d()];
         let alpha_local = vec![0.0; b.n_local()];
         let mut delta = vec![0.0; b.n_local()];
-        delta[0] = -10.0 * b.y[0]; // pushes yα far below 0
+        delta[0] = -10.0 * b.y()[0]; // pushes yα far below 0
         let v = subproblem_value(b, &spec, &w, &alpha_local, &delta);
         assert_eq!(v, f64::NEG_INFINITY);
     }

@@ -8,7 +8,6 @@
 
 use crate::data::{Dataset, Partition};
 use crate::linalg::power_iter::spectral_norm_sq;
-use crate::subproblem::LocalBlock;
 
 /// Per-partition spectral constants.
 #[derive(Clone, Debug)]
@@ -41,8 +40,10 @@ pub fn partition_sigma(data: &Dataset, partition: &Partition, seed: u64) -> Part
     let mut sigma_k = Vec::with_capacity(partition.k());
     let mut sizes = Vec::with_capacity(partition.k());
     for (k, rows) in partition.parts.iter().enumerate() {
-        let block = LocalBlock::from_partition(data, rows);
-        let est = spectral_norm_sq(&block.x, 300, 1e-9, seed.wrapping_add(k as u64));
+        // Power iteration wants an owned matrix; this is off the hot path
+        // and the sub-matrix is dropped right after the estimate.
+        let block_x = data.x.select_rows(rows);
+        let est = spectral_norm_sq(&block_x, 300, 1e-9, seed.wrapping_add(k as u64));
         sigma_k.push(est.sigma);
         sizes.push(rows.len());
     }

@@ -8,7 +8,7 @@
 //! cross-round buffer contamination, scheduling-order dependence, or
 //! misrouted reduce would break bit-identity within a few rounds.
 
-use cocoa::data::partition::random_balanced;
+use cocoa::data::partition::{contiguous, random_balanced};
 use cocoa::data::synth::{generate, SynthConfig};
 use cocoa::prelude::*;
 
@@ -75,6 +75,53 @@ fn pooled_matches_sequential_across_k_and_seeds() {
             assert_bit_identical(k, true, seed);
         }
     }
+}
+
+#[test]
+fn pooled_matches_sequential_under_permuted_contiguous_layout() {
+    // CoCoA+ under both realizations of the shared data plane:
+    //  * a shuffled partition, which the trainer canonicalizes by
+    //    permuting the dataset once (all shards view the permuted copy);
+    //  * an already-contiguous partition, where shards view the caller's
+    //    dataset directly (zero-copy, identity permutation).
+    // Both must stay bit-identical across runtimes, and the layout itself
+    // must be deterministic: two trainers from the same partition agree.
+    let n = 96;
+    let build_contig = |parallel: bool| {
+        let data = generate(&SynthConfig::new("det-c", n, 12).seed(7));
+        let part = contiguous(n, 4);
+        let problem = Problem::new(data, Loss::Hinge, 0.01);
+        let cfg = CocoaConfig::cocoa_plus(
+            4,
+            Loss::Hinge,
+            0.01,
+            SolverSpec::SdcaEpochs { epochs: 1.0 },
+        )
+        .with_rounds(ROUNDS)
+        .with_gap_tol(1e-14)
+        .with_seed(42)
+        .with_parallel(parallel);
+        Trainer::new(problem, part, cfg)
+    };
+    let contig = build_contig(true);
+    assert!(contig.rows.is_identity(), "contiguous layout must not permute");
+    let (gaps_p, alpha_p, w_p) = trajectory(contig);
+    let (gaps_s, alpha_s, w_s) = trajectory(build_contig(false));
+    assert_eq!(gaps_p, gaps_s, "contiguous layout: gap trajectory diverged");
+    assert_eq!(alpha_p, alpha_s);
+    assert_eq!(w_p, w_s);
+
+    // permuted path (random partition): the layout maps must agree across
+    // runtimes, so original-order α does too.
+    let pooled = build(4, true, true, 9);
+    let sequential = build(4, true, false, 9);
+    assert!(!pooled.rows.is_identity(), "random partition must permute");
+    assert_eq!(pooled.rows.new_to_old, sequential.rows.new_to_old);
+    let mut pooled = pooled;
+    let mut sequential = sequential;
+    pooled.run();
+    sequential.run();
+    assert_eq!(pooled.alpha_original(), sequential.alpha_original());
 }
 
 #[test]

@@ -105,8 +105,10 @@ fn disdca_p_trajectory_identical_to_cocoa_plus() {
     for round in 0..5 {
         trainer.round();
         disdca.round(&data, &part.parts, round, seed);
-        let a_err = trainer
-            .alpha
+        // the trainer's α lives in its permuted-contiguous layout; compare
+        // in the original row order the DisDCA transcription uses
+        let trainer_alpha = trainer.alpha_original();
+        let a_err = trainer_alpha
             .iter()
             .zip(&disdca.alpha)
             .map(|(a, b)| (a - b).abs())

@@ -194,7 +194,9 @@ fn prop_partition_scatter_gather_roundtrip() {
         let n = g.usize_in(10, 200);
         let d = g.usize_in(2, 30);
         let k = g.usize_in(1, n.min(9));
-        let data = generate(&SynthConfig::new("p", n, d).density(0.5).seed(g.case_seed));
+        let data = std::sync::Arc::new(generate(
+            &SynthConfig::new("p", n, d).density(0.5).seed(g.case_seed),
+        ));
         let part = random_balanced(n, k, g.case_seed);
         assert!(part.is_exact_cover());
         let blocks = LocalBlock::split(&data, &part);
@@ -203,12 +205,84 @@ fn prop_partition_scatter_gather_roundtrip() {
             for (li, &gi) in b.global_idx.iter().enumerate() {
                 assert!(!seen[gi]);
                 seen[gi] = true;
-                assert_eq!(b.y[li], data.y[gi]);
-                assert_eq!(b.x.row(li), data.x.row(gi));
-                assert!((b.norms_sq[li] - data.row_norms_sq[gi]).abs() < 1e-15);
+                assert_eq!(b.y()[li], data.y[gi]);
+                assert_eq!(b.x().row(li), data.x.row(gi));
+                assert!((b.norms_sq()[li] - data.row_norms_sq[gi]).abs() < 1e-15);
             }
         }
         assert!(seen.iter().all(|&s| s));
+        // shared data plane: all K views alias one dataset copy
+        for b in &blocks[1..] {
+            assert!(std::sync::Arc::ptr_eq(b.shared_data(), blocks[0].shared_data()));
+        }
+    });
+}
+
+#[test]
+fn prop_pool_distributed_certificates_match_central() {
+    // The tentpole invariant of the distributed-evaluation refactor: the
+    // K-way shard-partial reduction (Method::eval through the worker
+    // pool) must equal the central single-pass Problem::certificates to
+    // within float-regrouping noise, for every loss and random problems.
+    forall("pooled certificates == central certificates", 15, |g| {
+        let n = g.usize_in(40, 160);
+        let d = g.usize_in(4, 24);
+        let density = g.f64_in(0.2, 1.0);
+        let lambda = g.f64_log(1e-3, 1e-1);
+        let loss = *g.choose(&[
+            Loss::Hinge,
+            Loss::SmoothedHinge { mu: 0.5 },
+            Loss::Logistic,
+            Loss::Squared,
+            Loss::Absolute,
+        ]);
+        let data = generate(
+            &SynthConfig::new("cert", n, d)
+                .density(density)
+                .seed(g.case_seed),
+        );
+        let k = g.usize_in(2, 8.min(n / 8));
+        let part = random_balanced(n, k, g.case_seed ^ 5);
+        let problem = Problem::new(data, loss, lambda);
+        let parallel = g.case_seed % 2 == 0;
+        let cfg = CocoaConfig::cocoa_plus(
+            k,
+            loss,
+            lambda,
+            SolverSpec::SdcaEpochs { epochs: 0.5 },
+        )
+        .with_rounds(3)
+        .with_gap_tol(0.0)
+        .with_seed(g.case_seed)
+        .with_parallel(parallel);
+        let mut t = Trainer::new(problem, part, cfg);
+        for _ in 0..g.usize_in(1, 3) {
+            t.round();
+        }
+        let dist = t.eval();
+        let central = t.problem.certificates(&t.alpha, &t.w);
+        let scale = 1.0 + central.primal.abs() + central.dual.abs();
+        assert!(
+            (dist.primal - central.primal).abs() <= 1e-12 * scale,
+            "{}: primal {} vs {} (K={k})",
+            loss.name(),
+            dist.primal,
+            central.primal
+        );
+        assert!(
+            (dist.dual - central.dual).abs() <= 1e-12 * scale,
+            "{}: dual {} vs {} (K={k})",
+            loss.name(),
+            dist.dual,
+            central.dual
+        );
+        assert!(
+            (dist.gap - central.gap).abs() <= 1e-12 * scale,
+            "{}: gap {} vs {} (K={k})",
+            loss.name(),
+            dist.gap,
+            central.gap
+        );
     });
 }
 
@@ -237,7 +311,7 @@ fn prop_delta_w_matches_a_delta_alpha() {
             alpha_local: &alpha_local,
         });
         let mut a_delta = vec![0.0; problem.d()];
-        block.x.matvec_t(&out.delta_alpha, &mut a_delta);
+        block.x().matvec_t(&out.delta_alpha, &mut a_delta);
         dense::scale(1.0 / (problem.lambda * problem.n() as f64), &mut a_delta);
         let err = a_delta
             .iter()
