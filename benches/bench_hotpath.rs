@@ -99,10 +99,26 @@ fn main() {
     });
     println!("  pooled runtime: {}", pooled.comm_stats().runtime_summary());
 
-    let mut sequential = Trainer::new(problem, part, cfg.with_parallel(false));
+    let mut sequential = Trainer::new(
+        problem.clone(),
+        part.clone(),
+        cfg.clone().with_parallel(false),
+    );
     assert_eq!(sequential.executor_kind(), "sequential");
     b.run("coordinator_round_k8_n8192_sequential", || {
         black_box(sequential.round())
+    });
+
+    // ---- the same round through real worker processes (socket executor) --
+    // Each round here crosses K Unix-socket hops both ways; the delta vs
+    // the pooled line is the true wire + serialization cost per round.
+    let socket_cfg = cfg
+        .with_executor(ExecutorChoice::Socket)
+        .with_socket_worker_bin(env!("CARGO_BIN_EXE_cocoa"));
+    let mut socket = Trainer::new(problem, part, socket_cfg);
+    assert_eq!(socket.executor_kind(), "socket");
+    b.run("coordinator_round_k8_n8192_socket", || {
+        black_box(socket.round())
     });
 
     // ---- certificate evaluation: central pass vs pool-distributed -------
@@ -118,6 +134,12 @@ fn main() {
     b.run("certificates_sequential_k8_n8192_d256", || {
         black_box(sequential.eval().gap)
     });
+    b.run("certificates_socket_k8_n8192_d256", || {
+        black_box(socket.eval().gap)
+    });
 
     b.report();
+    // CI sets BENCH_JSON=BENCH_<pr>.json to capture the machine-readable
+    // report as a build artifact.
+    b.maybe_write_json_env();
 }

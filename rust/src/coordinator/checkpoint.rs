@@ -86,6 +86,27 @@ impl Checkpoint {
                 .and_then(|v| v.as_f64())
                 .ok_or_else(|| CheckpointError::Parse(format!("missing {k}")))
         };
+        // A checkpoint written by a future incompatible format must be
+        // rejected here, not misread: enforce the version tag up front.
+        let version = num("version")
+            .map_err(|_| CheckpointError::Parse("missing checkpoint version".into()))?;
+        if version != 1.0 {
+            return Err(CheckpointError::Parse(format!(
+                "unsupported checkpoint version {version} (this build reads version 1)"
+            )));
+        }
+        // Dimension fields index into buffers, so a NaN, negative, or
+        // fractional value must not survive the `as usize` cast (which
+        // would silently saturate or truncate).
+        let dim = |k: &str| -> Result<usize, CheckpointError> {
+            let v = num(k)?;
+            if !v.is_finite() || v < 0.0 || v.fract() != 0.0 || v > (1u64 << 53) as f64 {
+                return Err(CheckpointError::Parse(format!(
+                    "field {k} is not a valid dimension: {v}"
+                )));
+            }
+            Ok(v as usize)
+        };
         let vecf = |k: &str| -> Result<Vec<f64>, CheckpointError> {
             j.get(k)
                 .and_then(|v| v.as_arr())
@@ -98,9 +119,9 @@ impl Checkpoint {
                 .collect()
         };
         Ok(Checkpoint {
-            n: num("n")? as usize,
-            d: num("d")? as usize,
-            k: num("k")? as usize,
+            n: dim("n")?,
+            d: dim("d")?,
+            k: dim("k")?,
             lambda: num("lambda")?,
             loss: j
                 .get("loss")
@@ -151,6 +172,31 @@ impl Checkpoint {
                 "λ {} vs checkpoint {}",
                 trainer.cfg.lambda, self.lambda
             )));
+        }
+        // The header dims can agree while the vectors themselves were
+        // truncated (a partial write, a hand-edited file): check the
+        // actual lengths before any copy touches trainer state, so a bad
+        // checkpoint leaves the trainer exactly as it was.
+        if self.alpha.len() != self.n {
+            return Err(CheckpointError::Incompatible(format!(
+                "alpha has {} entries, header says n={}",
+                self.alpha.len(),
+                self.n
+            )));
+        }
+        if self.w.len() != self.d {
+            return Err(CheckpointError::Incompatible(format!(
+                "w has {} entries, header says d={}",
+                self.w.len(),
+                self.d
+            )));
+        }
+        // NaN poisons the drift check below (f64::max ignores NaN, so a
+        // NaN α would *pass* it) — reject non-finite state explicitly.
+        if self.alpha.iter().chain(self.w.iter()).any(|v| !v.is_finite()) {
+            return Err(CheckpointError::Incompatible(
+                "checkpoint contains non-finite values".into(),
+            ));
         }
         // gather the caller-order α into the trainer's layout order, then
         // scatter into per-worker local views (runtime-agnostic: the
@@ -282,6 +328,92 @@ mod tests {
         let mut ck2 = Checkpoint::capture(&a);
         ck2.loss = "squared".into();
         assert!(ck2.restore(&mut b).is_err());
+    }
+
+    #[test]
+    fn truncated_vectors_rejected_before_touching_trainer() {
+        // A checkpoint whose header dims match the problem but whose
+        // vectors were truncated (partial write) must fail up front and
+        // leave the trainer state untouched.
+        let a = trainer();
+        let mut short_alpha = Checkpoint::capture(&a);
+        short_alpha.alpha.truncate(short_alpha.n - 3);
+        let mut short_w = Checkpoint::capture(&a);
+        short_w.w.pop();
+
+        let mut b = trainer();
+        let alpha_before = b.alpha.clone();
+        let w_before = b.w.clone();
+        for ck in [&short_alpha, &short_w] {
+            match ck.restore(&mut b) {
+                Err(CheckpointError::Incompatible(msg)) => {
+                    assert!(msg.contains("entries"), "unexpected message: {msg}")
+                }
+                other => panic!("expected Incompatible, got {other:?}"),
+            }
+        }
+        assert_eq!(b.alpha, alpha_before, "failed restore mutated alpha");
+        assert_eq!(b.w, w_before, "failed restore mutated w");
+    }
+
+    #[test]
+    fn non_finite_state_rejected() {
+        // f64::max ignores NaN, so without an explicit check a NaN α
+        // would sail through the drift invariant.
+        let a = trainer();
+        let mut ck = Checkpoint::capture(&a);
+        ck.alpha[1] = f64::NAN;
+        let mut b = trainer();
+        let err = ck.restore(&mut b).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        let mut ck2 = Checkpoint::capture(&a);
+        ck2.w[0] = f64::INFINITY;
+        assert!(ck2.restore(&mut b).is_err());
+    }
+
+    #[test]
+    fn version_enforced_on_parse() {
+        let a = trainer();
+        let good = Checkpoint::capture(&a).to_json();
+        assert!(Checkpoint::from_json(&good).is_ok());
+
+        let mut missing = good.clone();
+        missing.set("version", Json::Null);
+        match Checkpoint::from_json(&missing) {
+            Err(CheckpointError::Parse(msg)) => assert!(msg.contains("version"), "{msg}"),
+            other => panic!("expected Parse, got {other:?}"),
+        }
+
+        let mut future = good.clone();
+        future.set("version", jnum(2.0));
+        match Checkpoint::from_json(&future) {
+            Err(CheckpointError::Parse(msg)) => {
+                assert!(msg.contains("unsupported"), "{msg}")
+            }
+            other => panic!("expected Parse, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hostile_dimension_fields_rejected() {
+        let a = trainer();
+        let good = Checkpoint::capture(&a).to_json();
+        for (field, bad) in [
+            ("n", f64::NAN),
+            ("n", -1.0),
+            ("d", 2.5),
+            ("k", f64::INFINITY),
+            ("k", -0.5),
+        ] {
+            let mut j = good.clone();
+            j.set(field, jnum(bad));
+            match Checkpoint::from_json(&j) {
+                Err(CheckpointError::Parse(msg)) => {
+                    assert!(msg.contains(field), "message does not name {field}: {msg}")
+                }
+                other => panic!("{field}={bad} should be Parse error, got {other:?}"),
+            }
+        }
     }
 
     #[test]

@@ -4,6 +4,8 @@
 use crate::coordinator::comm::CommModel;
 use crate::loss::Loss;
 use crate::subproblem::sigma::safe_sigma_prime;
+use std::path::PathBuf;
+use std::time::Duration;
 
 /// How local updates are combined across workers (Eq. 14).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -39,6 +41,71 @@ pub enum SolverSpec {
     Jacobi { sweeps: usize, beta: f64 },
 }
 
+/// Which runtime executes the K local solves each round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutorChoice {
+    /// Honour `parallel`: pooled threads when true and K > 1, else
+    /// sequential. This is the pre-existing behaviour and the default.
+    Auto,
+    /// In-process, one worker after another on the leader thread.
+    Sequential,
+    /// K long-lived OS threads (ignores `parallel = false`).
+    Pooled,
+    /// K worker *processes* over Unix domain sockets (or TCP via
+    /// [`SocketOpts::tcp_addr`]).
+    Socket,
+}
+
+impl ExecutorChoice {
+    /// Parse a CLI spelling. Accepts a couple of aliases per runtime.
+    pub fn parse(s: &str) -> Option<ExecutorChoice> {
+        match s {
+            "auto" => Some(ExecutorChoice::Auto),
+            "sequential" | "seq" => Some(ExecutorChoice::Sequential),
+            "pooled" | "threads" => Some(ExecutorChoice::Pooled),
+            "socket" | "process" => Some(ExecutorChoice::Socket),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExecutorChoice::Auto => "auto",
+            ExecutorChoice::Sequential => "sequential",
+            ExecutorChoice::Pooled => "pooled",
+            ExecutorChoice::Socket => "socket",
+        }
+    }
+}
+
+/// Knobs for the socket (multi-process) executor.
+#[derive(Clone, Debug)]
+pub struct SocketOpts {
+    /// Listen on TCP at this address (e.g. `"127.0.0.1:0"`) instead of a
+    /// Unix domain socket.
+    pub tcp_addr: Option<String>,
+    /// Binary to spawn for `cocoa worker`. `None` → the `COCOA_WORKER_BIN`
+    /// environment variable, then the current executable.
+    pub worker_bin: Option<PathBuf>,
+    /// How long workers get to connect and complete the hello/init/ready
+    /// handshake.
+    pub handshake_timeout: Duration,
+    /// Per-round reply deadline; `None` waits forever. A worker that
+    /// misses it fails the round with a `PoolError` naming it.
+    pub round_timeout: Option<Duration>,
+}
+
+impl Default for SocketOpts {
+    fn default() -> SocketOpts {
+        SocketOpts {
+            tcp_addr: None,
+            worker_bin: None,
+            handshake_timeout: Duration::from_secs(10),
+            round_timeout: Some(Duration::from_secs(120)),
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct CocoaConfig {
     /// Number of workers K.
@@ -67,6 +134,11 @@ pub struct CocoaConfig {
     pub seed: u64,
     /// Simulated cluster network for the paper's elapsed-time axes.
     pub comm: CommModel,
+    /// Which runtime executes the K local solves (overrides `parallel`
+    /// unless `Auto`).
+    pub executor: ExecutorChoice,
+    /// Socket-executor knobs; only consulted when `executor == Socket`.
+    pub socket: SocketOpts,
 }
 
 impl CocoaConfig {
@@ -86,6 +158,8 @@ impl CocoaConfig {
             parallel: true,
             seed: 42,
             comm: CommModel::ec2_like(),
+            executor: ExecutorChoice::Auto,
+            socket: SocketOpts::default(),
         }
     }
 
@@ -141,6 +215,18 @@ impl CocoaConfig {
 
     pub fn with_gap_every(mut self, every: usize) -> Self {
         self.gap_every = every.max(1);
+        self
+    }
+
+    pub fn with_executor(mut self, executor: ExecutorChoice) -> Self {
+        self.executor = executor;
+        self
+    }
+
+    /// Set the binary spawned for `cocoa worker` (tests and benches point
+    /// this at `env!("CARGO_BIN_EXE_cocoa")`).
+    pub fn with_socket_worker_bin<P: Into<PathBuf>>(mut self, bin: P) -> Self {
+        self.socket.worker_bin = Some(bin.into());
         self
     }
 
@@ -210,6 +296,16 @@ mod tests {
             ..ok
         };
         assert!(bad_gamma.validate().is_err());
+    }
+
+    #[test]
+    fn executor_choice_parses_aliases() {
+        assert_eq!(ExecutorChoice::parse("auto"), Some(ExecutorChoice::Auto));
+        assert_eq!(ExecutorChoice::parse("seq"), Some(ExecutorChoice::Sequential));
+        assert_eq!(ExecutorChoice::parse("threads"), Some(ExecutorChoice::Pooled));
+        assert_eq!(ExecutorChoice::parse("socket"), Some(ExecutorChoice::Socket));
+        assert_eq!(ExecutorChoice::parse("frobnicate"), None);
+        assert_eq!(ExecutorChoice::Socket.as_str(), "socket");
     }
 
     #[test]

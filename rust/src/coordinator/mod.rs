@@ -14,15 +14,25 @@
 //!
 //! ### Execution model
 //!
-//! Steps 1–3 run on an [`pool::Executor`]: either the persistent
-//! [`pool::PooledExecutor`] (K worker threads spawned once at
-//! [`Trainer::new`], rounds driven over bounded channels with per-worker
-//! reusable scratch — zero thread spawns and zero result allocations per
-//! steady-state round) or the in-process [`pool::SequentialExecutor`]
-//! (`cfg.parallel = false`, or K = 1). Both execute bit-identical
-//! trajectories: per-worker solver streams are seeded from
-//! `(seed, worker)` and the leader applies the step-4 reduce in worker-id
-//! order, so scheduling can never perturb results.
+//! Steps 1–3 run on a [`pool::Executor`] — one of three interchangeable
+//! runtimes selected by [`config::ExecutorChoice`]:
+//!
+//! * [`pool::PooledExecutor`] — K persistent worker threads spawned once
+//!   at [`Trainer::new`], rounds driven over bounded channels with
+//!   per-worker reusable scratch (zero thread spawns and zero result
+//!   allocations per steady-state round);
+//! * [`pool::SequentialExecutor`] — in-process, one worker after another
+//!   on the leader thread (`cfg.parallel = false`, or K = 1);
+//! * [`socket::SocketExecutor`] — K worker *processes* (`cocoa worker`)
+//!   connected over Unix domain sockets or TCP, exchanging rounds in the
+//!   length-prefixed [`wire`] format.
+//!
+//! All three execute bit-identical trajectories: per-worker solver
+//! streams are seeded from `(seed, worker)`, shard data crosses the
+//! process boundary bit-exactly (binary f64 sections, cached norms
+//! shipped rather than recomputed), and the leader applies the step-4
+//! reduce in worker-id order — so neither scheduling nor serialization
+//! can perturb results.
 //!
 //! ### Shared data plane
 //!
@@ -58,9 +68,11 @@ pub mod comm;
 pub mod config;
 pub mod history;
 pub mod pool;
+pub mod socket;
+pub mod wire;
 pub mod worker;
 
-pub use config::{Aggregation, CocoaConfig, SolverSpec};
+pub use config::{Aggregation, CocoaConfig, ExecutorChoice, SocketOpts, SolverSpec};
 pub use history::{History, RoundRecord, StopReason};
 pub use pool::{Executor, PoolError, RoundTiming};
 
@@ -121,32 +133,30 @@ pub struct Trainer {
 impl Trainer {
     /// Build with solvers constructed from `cfg.solver`.
     pub fn new(problem: Problem, partition: Partition, cfg: CocoaConfig) -> Trainer {
-        let solvers: Vec<Box<dyn LocalSolver>> = partition
-            .parts
-            .iter()
-            .enumerate()
-            .map(|(k, rows)| {
-                make_solver(
-                    &cfg.solver,
-                    rows.len(),
-                    Worker::round_seed(cfg.seed, 0, k),
-                )
-            })
-            .collect();
-        Trainer::with_solvers(problem, partition, cfg, solvers)
+        Trainer::build(problem, partition, cfg, None)
     }
 
-    /// Build with caller-supplied local solvers (e.g. the PJRT-backed one).
+    /// Build with caller-supplied local solvers (e.g. the PJRT-backed
+    /// one). Incompatible with the socket executor, which constructs its
+    /// solvers inside the worker processes.
     pub fn with_solvers(
         problem: Problem,
         partition: Partition,
         cfg: CocoaConfig,
         solvers: Vec<Box<dyn LocalSolver>>,
     ) -> Trainer {
+        Trainer::build(problem, partition, cfg, Some(solvers))
+    }
+
+    fn build(
+        problem: Problem,
+        partition: Partition,
+        cfg: CocoaConfig,
+        solvers: Option<Vec<Box<dyn LocalSolver>>>,
+    ) -> Trainer {
         cfg.validate().expect("invalid CocoaConfig");
         assert_eq!(partition.k(), cfg.k, "partition K != config K");
         assert_eq!(partition.n, problem.n(), "partition n != problem n");
-        assert_eq!(solvers.len(), cfg.k, "need one solver per worker");
         assert!(
             partition.is_exact_cover(),
             "partition must exactly cover [n]"
@@ -163,12 +173,6 @@ impl Trainer {
         debug_assert!(blocks
             .iter()
             .all(|b| Arc::ptr_eq(b.shared_data(), &problem.data)));
-        let workers: Vec<Worker> = blocks
-            .into_iter()
-            .zip(solvers)
-            .enumerate()
-            .map(|(k, (block, solver))| Worker::new(k, block, solver))
-            .collect();
         let spec = SubproblemSpec {
             loss: cfg.loss,
             lambda: cfg.lambda,
@@ -178,7 +182,48 @@ impl Trainer {
         };
         let n = problem.n();
         let d = problem.d();
-        let executor = pool::make_executor(workers, spec, cfg.parallel);
+        let executor: Box<dyn Executor> = match (cfg.executor, solvers) {
+            (ExecutorChoice::Socket, Some(_)) => panic!(
+                "the socket executor builds solvers inside worker processes; \
+                 use Trainer::new with cfg.solver instead of with_solvers"
+            ),
+            (ExecutorChoice::Socket, None) => Box::new(
+                socket::SocketExecutor::spawn(&blocks, spec, &cfg)
+                    .unwrap_or_else(|e| panic!("failed to start socket workers: {e}")),
+            ),
+            (choice, solvers) => {
+                // Identical seeds/lengths whether solvers come from the
+                // caller or cfg.solver — shard sizes survive the layout.
+                let solvers = solvers.unwrap_or_else(|| {
+                    blocks
+                        .iter()
+                        .enumerate()
+                        .map(|(k, b)| {
+                            make_solver(
+                                &cfg.solver,
+                                b.n_local(),
+                                Worker::round_seed(cfg.seed, 0, k),
+                            )
+                        })
+                        .collect()
+                });
+                assert_eq!(solvers.len(), cfg.k, "need one solver per worker");
+                let workers: Vec<Worker> = blocks
+                    .into_iter()
+                    .zip(solvers)
+                    .enumerate()
+                    .map(|(k, (block, solver))| Worker::new(k, block, solver))
+                    .collect();
+                match choice {
+                    ExecutorChoice::Auto => pool::make_executor(workers, spec, cfg.parallel),
+                    ExecutorChoice::Sequential => {
+                        Box::new(pool::SequentialExecutor::new(workers, spec))
+                    }
+                    ExecutorChoice::Pooled => pool::make_executor(workers, spec, true),
+                    ExecutorChoice::Socket => unreachable!("handled above"),
+                }
+            }
+        };
         Trainer {
             cfg,
             problem,
@@ -200,7 +245,8 @@ impl Trainer {
         &self.comm_stats
     }
 
-    /// Which runtime this trainer executes on: `"pooled"` or `"sequential"`.
+    /// Which runtime this trainer executes on: `"pooled"`, `"sequential"`,
+    /// or `"socket"`.
     pub fn executor_kind(&self) -> &'static str {
         self.executor.kind()
     }

@@ -40,10 +40,25 @@
 //! pooled and sequential gap trajectories remain bit-identical
 //! (`rust/tests/determinism.rs`).
 //!
-//! The sequential path (`cfg.parallel = false`, or K = 1, or non-`Send`
-//! local solvers like the PJRT-backed one) implements the same
-//! [`Executor`] trait in-process, so every caller is runtime-agnostic and
-//! results stay comparable across runtimes.
+//! ### Three executors, one contract
+//!
+//! [`Executor`] now has three implementations, selected by
+//! [`ExecutorChoice`](crate::coordinator::ExecutorChoice):
+//!
+//! * [`PooledExecutor`] (this module) — K persistent threads, the default
+//!   for K > 1;
+//! * [`SequentialExecutor`] (this module) — in-process, one worker after
+//!   another (`cfg.parallel = false`, K = 1, or non-`Send` local solvers
+//!   like the PJRT-backed one);
+//! * [`SocketExecutor`](crate::coordinator::socket::SocketExecutor) — K
+//!   worker *processes* over Unix domain sockets or TCP, speaking the
+//!   length-prefixed [`wire`](crate::coordinator::wire) format.
+//!
+//! All three honour the same contract: id-ordered gather, failed rounds
+//! surface as [`PoolError`] naming workers (never a hang), and the leader
+//! can keep driving rounds after a failure. Every caller is
+//! runtime-agnostic and results stay bit-comparable across runtimes
+//! (`rust/tests/determinism.rs`).
 
 use crate::coordinator::worker::{Worker, WorkerResult};
 use crate::objective::CertPartial;
@@ -92,7 +107,7 @@ pub struct RoundTiming {
 /// Executes the fan-out/local-solve/gather of one outer round over K
 /// workers. Implementations own the workers.
 pub trait Executor: Send {
-    /// `"pooled"` or `"sequential"` — for labels and tests.
+    /// `"pooled"`, `"sequential"`, or `"socket"` — for labels and tests.
     fn kind(&self) -> &'static str;
 
     /// Worker 0's solver name (run labels).
@@ -132,7 +147,9 @@ pub fn make_executor(
     }
 }
 
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+/// Extract a human-readable message from a caught panic payload. Shared
+/// with the socket executor's worker process (`coordinator::socket`).
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     payload
         .downcast_ref::<String>()
         .cloned()

@@ -1,0 +1,1176 @@
+//! Multi-process socket executor: K worker *processes* connected to the
+//! leader over Unix domain sockets (or TCP behind an address flag).
+//!
+//! This is the third [`Executor`] next to the in-process sequential and
+//! pooled-thread runtimes, and the first one where CoCoA+'s communication
+//! rounds cross a real OS boundary: the leader serializes `w` into a
+//! [`super::wire`] frame per round, each worker process solves its local
+//! subproblem and replies with `(Δα_[k], Δw_k)`, and the leader gathers
+//! replies in worker-id order so the reduction is bit-identical to the
+//! other two executors.
+//!
+//! Lifecycle:
+//!
+//! 1. [`SocketExecutor::spawn`] binds a listener, launches K `cocoa worker
+//!    --connect <addr> --worker <k>` child processes, and handshakes each
+//!    one (hello → init → ready) under `cfg.socket.handshake_timeout`. A
+//!    child that dies before connecting, presents a bad magic/version, or
+//!    claims an out-of-range id fails the spawn with a [`PoolError`]
+//!    naming it — never a hang.
+//! 2. Each round is a fan-out of `round` frames followed by an id-ordered
+//!    gather. Dead connections, malformed replies, and read timeouts
+//!    (`cfg.socket.round_timeout`) surface as `PoolError` entries; a
+//!    worker-side solver panic is reported in-band and leaves the
+//!    connection alive, mirroring the thread pool's semantics.
+//! 3. Dropping the executor sends best-effort `shutdown` frames, closes
+//!    the sockets, and reaps the children (kill after a 2 s grace).
+//!
+//! Determinism: the worker process receives its shard bit-exactly (CSR
+//! arrays, labels, and cached row norms ride binary f64/u64 sections, and
+//! are *not* recomputed), builds its local solver with the same
+//! [`Worker::round_seed`] the in-process runtimes use, and runs the exact
+//! same solver code — which is what lets the determinism suite assert
+//! sequential ≡ pooled ≡ socket down to the last bit.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::config::{CocoaConfig, SolverSpec};
+use super::make_solver;
+use super::pool::{panic_message, Executor, PoolError, RoundTiming};
+use super::wire::{self, Frame, WireError, WIRE_MAGIC, WIRE_VERSION};
+use super::worker::{Worker, WorkerResult};
+use crate::data::Dataset;
+use crate::linalg::sparse::CsrMatrix;
+use crate::loss::Loss;
+use crate::objective::CertPartial;
+use crate::subproblem::{LocalBlock, SubproblemSpec};
+use crate::util::cli::Args;
+use crate::util::json::{jnum, jstr, Json};
+
+static SOCKET_COUNTER: AtomicUsize = AtomicUsize::new(0);
+
+// ---------------------------------------------------------------------
+// Transport: one stream type over Unix / TCP sockets
+// ---------------------------------------------------------------------
+
+/// A connected byte stream — Unix domain socket by default, TCP when the
+/// config carries `socket.tcp_addr`.
+enum Stream {
+    #[cfg(unix)]
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    fn try_clone(&self) -> std::io::Result<Stream> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.try_clone().map(Stream::Unix),
+            Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+        }
+    }
+
+    fn set_read_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(t),
+            Stream::Tcp(s) => s.set_read_timeout(t),
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_nonblocking(nb),
+            Stream::Tcp(s) => s.set_nonblocking(nb),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    #[cfg(unix)]
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(nb),
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+        }
+    }
+}
+
+/// One framed connection: buffered reader/writer over two clones of the
+/// same socket.
+struct Conn {
+    reader: BufReader<Stream>,
+    writer: BufWriter<Stream>,
+}
+
+impl Conn {
+    fn new(stream: Stream) -> std::io::Result<Conn> {
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Conn {
+            reader,
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    fn send(&mut self, frame: &Frame) -> Result<(), WireError> {
+        wire::write_frame(&mut self.writer, frame)?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Frame, WireError> {
+        wire::read_frame(&mut self.reader)
+    }
+
+    fn set_read_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        self.writer.get_ref().set_read_timeout(t)
+    }
+}
+
+fn connect(addr: &str) -> Result<Stream, String> {
+    if let Some(hostport) = addr.strip_prefix("tcp:") {
+        return TcpStream::connect(hostport)
+            .map(Stream::Tcp)
+            .map_err(|e| format!("connect {hostport:?} failed: {e}"));
+    }
+    #[cfg(unix)]
+    {
+        UnixStream::connect(addr)
+            .map(Stream::Unix)
+            .map_err(|e| format!("connect {addr:?} failed: {e}"))
+    }
+    #[cfg(not(unix))]
+    {
+        Err(format!(
+            "unix socket {addr:?} unsupported on this platform; use socket.tcp_addr"
+        ))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Handshake frames
+// ---------------------------------------------------------------------
+
+fn hello_frame(id: usize) -> Frame {
+    Frame::new("hello")
+        .set_str("magic", WIRE_MAGIC)
+        .set_num("version", WIRE_VERSION)
+        .set_num("worker", id as f64)
+}
+
+/// Validate a worker's hello against this leader's protocol and K.
+/// Public so the hostile-input suite can drive it directly.
+pub fn validate_hello(frame: &Frame, k: usize) -> Result<usize, String> {
+    if frame.msg_type() != "hello" {
+        return Err(format!("expected hello, got {:?}", frame.msg_type()));
+    }
+    if frame.opt_str("magic") != Some(WIRE_MAGIC) {
+        return Err(format!(
+            "bad magic {:?} (expected {WIRE_MAGIC:?})",
+            frame.opt_str("magic")
+        ));
+    }
+    let version = frame.num("version").map_err(|e| e.to_string())?;
+    if version != WIRE_VERSION {
+        return Err(format!(
+            "wire version {version} unsupported (leader speaks {WIRE_VERSION})"
+        ));
+    }
+    let id = frame.usize_field("worker").map_err(|e| e.to_string())?;
+    if id >= k {
+        return Err(format!("worker id {id} out of range for K={k}"));
+    }
+    Ok(id)
+}
+
+/// Encode one worker's full init: subproblem spec + solver recipe in the
+/// header, shard data (CSR arrays, labels, cached norms) and the solver
+/// seed in bit-exact binary sections.
+fn init_frame(block: &LocalBlock, spec: &SubproblemSpec, cfg: &CocoaConfig, id: usize) -> Frame {
+    let ds = block.shared_data();
+    let start = block.start();
+    let len = block.n_local();
+    let lo = ds.x.indptr[start];
+    let hi = ds.x.indptr[start + len];
+    let ip: Vec<u64> = ds.x.indptr[start..=start + len]
+        .iter()
+        .map(|p| (p - lo) as u64)
+        .collect();
+    let ix: Vec<u64> = ds.x.indices[lo..hi].iter().map(|&i| i as u64).collect();
+    let values = ds.x.values[lo..hi].to_vec();
+
+    let mu = match spec.loss {
+        Loss::SmoothedHinge { mu } => mu,
+        _ => 0.0,
+    };
+    let (mut epochs_f, mut beta) = (0.0, 0.0);
+    let mut solver = Json::obj();
+    match cfg.solver {
+        SolverSpec::Sdca { h } => {
+            solver.set("kind", jstr("sdca"));
+            solver.set("h", jnum(h as f64));
+        }
+        SolverSpec::SdcaEpochs { epochs } => {
+            solver.set("kind", jstr("sdca_epochs"));
+            epochs_f = epochs;
+        }
+        SolverSpec::Cyclic { epochs, shuffle } => {
+            solver.set("kind", jstr("cyclic"));
+            solver.set("epochs", jnum(epochs as f64));
+            solver.set("shuffle", Json::Bool(shuffle));
+        }
+        SolverSpec::Jacobi { sweeps, beta: b } => {
+            solver.set("kind", jstr("jacobi"));
+            solver.set("sweeps", jnum(sweeps as f64));
+            beta = b;
+        }
+    }
+
+    Frame::new("init")
+        .set_num("id", id as f64)
+        .set_num("k", spec.k as f64)
+        .set_num("n", spec.n_global as f64)
+        .set_num("d", block.d() as f64)
+        .set_num("n_local", len as f64)
+        .set_str("loss", spec.loss.name())
+        .set_json("solver", solver)
+        .with_f64s(
+            "par",
+            vec![spec.lambda, spec.sigma_prime, mu, epochs_f, beta],
+        )
+        .with_f64s("y", block.y().to_vec())
+        .with_f64s("nr", block.norms_sq().to_vec())
+        .with_f64s("v", values)
+        .with_u64s("ip", ip)
+        .with_u64s("ix", ix)
+        .with_u64s("seed", vec![Worker::round_seed(cfg.seed, 0, id)])
+}
+
+// ---------------------------------------------------------------------
+// Leader side: SocketExecutor
+// ---------------------------------------------------------------------
+
+/// Multi-process executor: K worker processes over sockets. See the
+/// module docs for the protocol and failure contract.
+pub struct SocketExecutor {
+    k: usize,
+    conns: Vec<Option<Conn>>,
+    children: Vec<Option<Child>>,
+    results: Vec<WorkerResult>,
+    /// Global row indices per worker (for `load_alpha` scatter).
+    parts: Vec<Vec<usize>>,
+    solver_name: String,
+    round_timeout: Option<Duration>,
+    /// Unix socket path to unlink on drop.
+    sock_path: Option<PathBuf>,
+}
+
+impl SocketExecutor {
+    /// Spawn and handshake K worker processes, one per local block. Any
+    /// failure — no worker binary, a child dying before its handshake, a
+    /// protocol mismatch — returns a [`PoolError`] naming the worker, and
+    /// already-spawned children are reaped.
+    pub fn spawn(
+        blocks: &[LocalBlock],
+        spec: SubproblemSpec,
+        cfg: &CocoaConfig,
+    ) -> Result<SocketExecutor, PoolError> {
+        let k = blocks.len();
+        assert!(k > 0, "cannot build an empty socket executor");
+        let results = blocks
+            .iter()
+            .enumerate()
+            .map(|(i, b)| WorkerResult::with_dims(i, b.n_local(), b.d()))
+            .collect();
+        let parts = blocks.iter().map(|b| b.global_idx.clone()).collect();
+        let mut exec = SocketExecutor {
+            k,
+            conns: (0..k).map(|_| None).collect(),
+            children: (0..k).map(|_| None).collect(),
+            results,
+            parts,
+            solver_name: String::new(),
+            round_timeout: cfg.socket.round_timeout,
+            sock_path: None,
+        };
+        // On error the partially-built executor is dropped here, which
+        // reaps any children already spawned and unlinks the socket.
+        exec.handshake(blocks, &spec, cfg)?;
+        Ok(exec)
+    }
+
+    fn handshake(
+        &mut self,
+        blocks: &[LocalBlock],
+        spec: &SubproblemSpec,
+        cfg: &CocoaConfig,
+    ) -> Result<(), PoolError> {
+        let k = self.k;
+        let bin = cfg
+            .socket
+            .worker_bin
+            .clone()
+            .or_else(|| std::env::var_os("COCOA_WORKER_BIN").map(PathBuf::from))
+            .or_else(|| std::env::current_exe().ok())
+            .ok_or_else(|| spawn_err(0, "cannot locate a cocoa binary for worker processes"))?;
+
+        let (listener, addr) = match &cfg.socket.tcp_addr {
+            Some(tcp) => {
+                let l = TcpListener::bind(tcp)
+                    .map_err(|e| spawn_err(0, &format!("bind {tcp:?} failed: {e}")))?;
+                let local = l
+                    .local_addr()
+                    .map_err(|e| spawn_err(0, &format!("local_addr failed: {e}")))?;
+                (Listener::Tcp(l), format!("tcp:{local}"))
+            }
+            None => {
+                #[cfg(unix)]
+                {
+                    let path = std::env::temp_dir().join(format!(
+                        "cocoa-{}-{}.sock",
+                        std::process::id(),
+                        SOCKET_COUNTER.fetch_add(1, Ordering::Relaxed)
+                    ));
+                    let _ = std::fs::remove_file(&path);
+                    let l = UnixListener::bind(&path).map_err(|e| {
+                        spawn_err(0, &format!("bind {} failed: {e}", path.display()))
+                    })?;
+                    self.sock_path = Some(path.clone());
+                    (Listener::Unix(l), path.display().to_string())
+                }
+                #[cfg(not(unix))]
+                {
+                    return Err(spawn_err(
+                        0,
+                        "unix sockets unsupported on this platform; set socket.tcp_addr",
+                    ));
+                }
+            }
+        };
+
+        for (i, child) in self.children.iter_mut().enumerate() {
+            let spawned = Command::new(&bin)
+                .arg("worker")
+                .arg("--connect")
+                .arg(&addr)
+                .arg("--worker")
+                .arg(i.to_string())
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .spawn()
+                .map_err(|e| spawn_err(i, &format!("spawn {} failed: {e}", bin.display())))?;
+            *child = Some(spawned);
+        }
+
+        // Accept-poll loop: take hellos as they arrive, failing fast when
+        // a not-yet-connected child has already exited.
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| spawn_err(0, &format!("listener setup failed: {e}")))?;
+        let deadline = Instant::now() + cfg.socket.handshake_timeout;
+        let mut connected = 0usize;
+        while connected < k {
+            for id in 0..k {
+                if self.conns[id].is_some() {
+                    continue;
+                }
+                if let Some(status) = self.child_status(id) {
+                    return Err(spawn_err(
+                        id,
+                        &format!("worker process exited before handshake ({status})"),
+                    ));
+                }
+            }
+            if Instant::now() > deadline {
+                let failed = (0..k)
+                    .filter(|&id| self.conns[id].is_none())
+                    .map(|id| {
+                        (
+                            id,
+                            format!(
+                                "no handshake within {:?}",
+                                cfg.socket.handshake_timeout
+                            ),
+                        )
+                    })
+                    .collect();
+                return Err(PoolError { failed });
+            }
+            match listener.accept() {
+                Ok(stream) => {
+                    self.take_hello(stream, cfg.socket.handshake_timeout)
+                        .map_err(|msg| spawn_err(0, &format!("handshake rejected: {msg}")))?;
+                    connected += 1;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(spawn_err(0, &format!("accept failed: {e}"))),
+            }
+        }
+
+        // Fan out inits, then gather readys in id order.
+        for id in 0..k {
+            let frame = init_frame(&blocks[id], spec, cfg, id);
+            let res = self.conns[id].as_mut().expect("connected above").send(&frame);
+            if let Err(e) = res {
+                return Err(spawn_err(id, &format!("init send failed: {e}")));
+            }
+        }
+        for id in 0..k {
+            let reply = self.conns[id]
+                .as_mut()
+                .expect("connected above")
+                .recv()
+                .map_err(|e| {
+                    let extra = self.child_status(id).map(|s| format!(" ({s})"));
+                    spawn_err(
+                        id,
+                        &format!("ready recv failed: {e}{}", extra.unwrap_or_default()),
+                    )
+                })?;
+            if reply.msg_type() != "ready" {
+                return Err(spawn_err(
+                    id,
+                    &format!("expected ready, got {:?}", reply.msg_type()),
+                ));
+            }
+            if id == 0 {
+                self.solver_name = reply.opt_str("solver").unwrap_or("").to_string();
+            }
+        }
+        for conn in self.conns.iter().flatten() {
+            conn.set_read_timeout(self.round_timeout)
+                .map_err(|e| spawn_err(0, &format!("set timeout failed: {e}")))?;
+        }
+        Ok(())
+    }
+
+    /// Read and validate one hello on a freshly-accepted stream, filing
+    /// the connection under the worker id it claims.
+    fn take_hello(&mut self, stream: Stream, timeout: Duration) -> Result<usize, String> {
+        stream
+            .set_nonblocking(false)
+            .and_then(|()| stream.set_read_timeout(Some(timeout)))
+            .map_err(|e| format!("socket setup failed: {e}"))?;
+        let mut conn = Conn::new(stream).map_err(|e| format!("socket clone failed: {e}"))?;
+        let hello = conn.recv().map_err(|e| format!("hello recv failed: {e}"))?;
+        let id = validate_hello(&hello, self.k)?;
+        if self.conns[id].is_some() {
+            return Err(format!("duplicate hello for worker {id}"));
+        }
+        self.conns[id] = Some(conn);
+        Ok(id)
+    }
+
+    /// Exit status of worker `id`'s process, if it has terminated.
+    fn child_status(&mut self, id: usize) -> Option<String> {
+        let child = self.children.get_mut(id)?.as_mut()?;
+        match child.try_wait() {
+            Ok(Some(status)) => Some(format!("worker process exited: {status}")),
+            _ => None,
+        }
+    }
+
+    /// Annotate a connection-level failure with the child's exit status
+    /// when the process is gone — "connection reset" alone doesn't tell
+    /// an operator *why*.
+    fn describe_failure(&mut self, id: usize, base: String) -> String {
+        match self.child_status(id) {
+            Some(status) => format!("{base} ({status})"),
+            None => base,
+        }
+    }
+
+    fn recv_timeout_message(&self) -> String {
+        match self.round_timeout {
+            Some(t) => format!("no reply within {t:?}"),
+            None => "recv interrupted".to_string(),
+        }
+    }
+
+    /// Copy a validated `result` reply into the worker's slot; protocol
+    /// violations (wrong section lengths) are errors, not panics.
+    fn copy_result(&mut self, id: usize, reply: &Frame) -> Result<f64, String> {
+        let n_k = self.results[id].update.delta_alpha.len();
+        let d = self.results[id].update.delta_w.len();
+        let da = reply.f64s("da").map_err(|e| e.to_string())?;
+        let dw = reply.f64s("dw").map_err(|e| e.to_string())?;
+        let cs = reply.f64s("cs").map_err(|e| e.to_string())?;
+        let steps = reply.usize_field("steps").map_err(|e| e.to_string())?;
+        if da.len() != n_k || dw.len() != d {
+            return Err(format!(
+                "protocol error: result dims {}×{} do not match shard {n_k}×{d}",
+                da.len(),
+                dw.len()
+            ));
+        }
+        let slot = &mut self.results[id];
+        slot.update.delta_alpha.copy_from_slice(da);
+        slot.update.delta_w.copy_from_slice(dw);
+        slot.update.steps = steps;
+        slot.compute_s = cs.first().copied().unwrap_or(0.0);
+        Ok(slot.compute_s)
+    }
+
+    /// Kill worker `id`'s process, leaving its connection in place so the
+    /// next round observes the dead peer. Test hook for the
+    /// failure-injection suite.
+    pub fn kill_worker(&mut self, id: usize) {
+        if let Some(child) = self.children.get_mut(id).and_then(|c| c.as_mut()) {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+
+    /// Fan a frame out to every live connection; send failures drop the
+    /// connection and are reported against the worker. Returns the ids
+    /// whose send succeeded.
+    fn fan_out(&mut self, frame: &Frame, failed: &mut Vec<(usize, String)>) -> Vec<usize> {
+        let mut pending = Vec::with_capacity(self.k);
+        for id in 0..self.k {
+            let send_err = match self.conns[id].as_mut() {
+                None => Some("no connection (worker previously failed)".to_string()),
+                Some(conn) => conn.send(frame).err().map(|e| format!("send failed: {e}")),
+            };
+            match send_err {
+                None => pending.push(id),
+                Some(base) => {
+                    self.conns[id] = None;
+                    let msg = self.describe_failure(id, base);
+                    failed.push((id, msg));
+                }
+            }
+        }
+        pending
+    }
+}
+
+fn spawn_err(id: usize, msg: &str) -> PoolError {
+    PoolError {
+        failed: vec![(id, msg.to_string())],
+    }
+}
+
+impl Executor for SocketExecutor {
+    fn kind(&self) -> &'static str {
+        "socket"
+    }
+
+    fn solver_name(&self) -> String {
+        self.solver_name.clone()
+    }
+
+    fn run_round(&mut self, w: &[f64], gamma: f64) -> Result<RoundTiming, PoolError> {
+        let t0 = Instant::now();
+        let mut failed: Vec<(usize, String)> = Vec::new();
+        let frame = Frame::new("round")
+            .with_f64s("g", vec![gamma])
+            .with_f64s("w", w.to_vec());
+        let pending = self.fan_out(&frame, &mut failed);
+        let mut max_compute = 0.0f64;
+        for id in pending {
+            let recv = self.conns[id].as_mut().expect("pending ids are live").recv();
+            match recv {
+                Err(e) => {
+                    let base = if e.is_timeout() {
+                        self.recv_timeout_message()
+                    } else {
+                        format!("recv failed: {e}")
+                    };
+                    self.conns[id] = None;
+                    let msg = self.describe_failure(id, base);
+                    failed.push((id, msg));
+                }
+                Ok(reply) => {
+                    if reply.msg_type() != "result" {
+                        self.conns[id] = None;
+                        failed.push((
+                            id,
+                            format!(
+                                "protocol error: expected result, got {:?}",
+                                reply.msg_type()
+                            ),
+                        ));
+                    } else if let Some(p) = reply.opt_str("panic") {
+                        // In-band panic report: the process survives, as a
+                        // pooled worker thread would.
+                        failed.push((id, p.to_string()));
+                    } else {
+                        match self.copy_result(id, &reply) {
+                            Ok(cs) => max_compute = max_compute.max(cs),
+                            Err(msg) => {
+                                self.conns[id] = None;
+                                failed.push((id, msg));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if !failed.is_empty() {
+            failed.sort_by_key(|f| f.0);
+            return Err(PoolError { failed });
+        }
+        let barrier_s = (t0.elapsed().as_secs_f64() - max_compute).max(0.0);
+        Ok(RoundTiming {
+            max_compute_s: max_compute,
+            barrier_s,
+        })
+    }
+
+    fn eval_partials(&mut self, w: &[f64]) -> Result<Vec<CertPartial>, PoolError> {
+        let mut failed: Vec<(usize, String)> = Vec::new();
+        let frame = Frame::new("eval").with_f64s("w", w.to_vec());
+        let pending = self.fan_out(&frame, &mut failed);
+        let mut partials = vec![CertPartial::default(); self.k];
+        for id in pending {
+            let recv = self.conns[id].as_mut().expect("pending ids are live").recv();
+            match recv {
+                Err(e) => {
+                    let base = if e.is_timeout() {
+                        self.recv_timeout_message()
+                    } else {
+                        format!("recv failed: {e}")
+                    };
+                    self.conns[id] = None;
+                    let msg = self.describe_failure(id, base);
+                    failed.push((id, msg));
+                }
+                Ok(reply) => {
+                    if reply.msg_type() != "cert" {
+                        self.conns[id] = None;
+                        failed.push((
+                            id,
+                            format!(
+                                "protocol error: expected cert, got {:?}",
+                                reply.msg_type()
+                            ),
+                        ));
+                    } else if let Some(p) = reply.opt_str("panic") {
+                        failed.push((id, p.to_string()));
+                    } else {
+                        match reply.f64s("cp") {
+                            Ok(cp) if cp.len() == 2 => {
+                                partials[id] = CertPartial {
+                                    loss_sum: cp[0],
+                                    conj_sum: cp[1],
+                                };
+                            }
+                            Ok(cp) => {
+                                self.conns[id] = None;
+                                failed.push((
+                                    id,
+                                    format!(
+                                        "protocol error: cert partial has {} values",
+                                        cp.len()
+                                    ),
+                                ));
+                            }
+                            Err(e) => {
+                                self.conns[id] = None;
+                                failed.push((id, e.to_string()));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if !failed.is_empty() {
+            failed.sort_by_key(|f| f.0);
+            return Err(PoolError { failed });
+        }
+        Ok(partials)
+    }
+
+    fn result(&self, k: usize) -> &WorkerResult {
+        &self.results[k]
+    }
+
+    fn load_alpha(&mut self, alpha: &[f64]) {
+        for id in 0..self.k {
+            let local: Vec<f64> = self.parts[id].iter().map(|&gi| alpha[gi]).collect();
+            let frame = Frame::new("alpha").with_f64s("a", local);
+            let dead = match self.conns[id].as_mut() {
+                None => false,
+                Some(conn) => conn.send(&frame).is_err(),
+            };
+            if dead {
+                // Mirror the pool's `let _ = tx.send(...)`: a dead worker
+                // is reported at the next round, not here.
+                self.conns[id] = None;
+            }
+        }
+    }
+}
+
+impl Drop for SocketExecutor {
+    fn drop(&mut self) {
+        let bye = Frame::new("shutdown");
+        for conn in self.conns.iter_mut().flatten() {
+            let _ = conn.send(&bye);
+        }
+        for conn in self.conns.iter_mut() {
+            *conn = None; // close the sockets
+        }
+        let deadline = Instant::now() + Duration::from_secs(2);
+        for child in self.children.iter_mut().flatten() {
+            loop {
+                match child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    _ => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some(p) = &self.sock_path {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker side: `cocoa worker` entry point
+// ---------------------------------------------------------------------
+
+/// Entry point for the `cocoa worker` CLI mode. Returns the process exit
+/// code; errors print to stderr. Never panics on malformed input — a bad
+/// init or a broken stream is a diagnostic and exit code 1.
+pub fn worker_main(args: &Args) -> i32 {
+    match run_worker(args) {
+        Ok(code) => code,
+        Err(msg) => {
+            eprintln!("cocoa worker: {msg}");
+            1
+        }
+    }
+}
+
+fn run_worker(args: &Args) -> Result<i32, String> {
+    let addr = args
+        .get_opt("connect")
+        .ok_or("missing --connect <address>")?
+        .to_string();
+    let id = args
+        .get_opt("worker")
+        .ok_or("missing --worker <id>")?
+        .parse::<usize>()
+        .map_err(|e| format!("bad --worker: {e}"))?;
+    let stream = connect(&addr)?;
+    let mut conn = Conn::new(stream).map_err(|e| format!("socket setup failed: {e}"))?;
+    conn.send(&hello_frame(id))
+        .map_err(|e| format!("hello send failed: {e}"))?;
+    let init = conn.recv().map_err(|e| format!("init recv failed: {e}"))?;
+    let (worker, spec, d) = build_worker(&init, id)?;
+    let ready = Frame::new("ready")
+        .set_num("worker", id as f64)
+        .set_str("solver", &worker.solver.name());
+    conn.send(&ready)
+        .map_err(|e| format!("ready send failed: {e}"))?;
+    serve(&mut conn, worker, spec, d)
+}
+
+/// Integral field out of a solver JSON object, rejecting hostile values.
+fn obj_usize(obj: &Json, key: &str) -> Result<usize, String> {
+    let v = obj
+        .get(key)
+        .and_then(|x| x.as_f64())
+        .ok_or_else(|| format!("init solver field {key:?} missing or not a number"))?;
+    if !v.is_finite() || v < 0.0 || v.fract() != 0.0 {
+        return Err(format!("init solver field {key:?} invalid: {v}"));
+    }
+    Ok(v as usize)
+}
+
+/// Decode and validate an init frame into a ready-to-run [`Worker`].
+/// Every length and index is checked before any allocation-by-trust:
+/// a malformed CSR from a confused (or hostile) leader is an error,
+/// never an out-of-bounds panic later in the solve.
+fn build_worker(
+    init: &Frame,
+    claimed_id: usize,
+) -> Result<(Worker, SubproblemSpec, usize), String> {
+    let err = |e: WireError| e.to_string();
+    if init.msg_type() != "init" {
+        return Err(format!("expected init, got {:?}", init.msg_type()));
+    }
+    let id = init.usize_field("id").map_err(err)?;
+    if id != claimed_id {
+        return Err(format!("init addressed to worker {id}, this is {claimed_id}"));
+    }
+    let k = init.usize_field("k").map_err(err)?;
+    let n = init.usize_field("n").map_err(err)?;
+    let d = init.usize_field("d").map_err(err)?;
+    let n_local = init.usize_field("n_local").map_err(err)?;
+    let par = init.f64s("par").map_err(err)?;
+    if par.len() != 5 {
+        return Err(format!("init params have {} slots, expected 5", par.len()));
+    }
+    let (lambda, sigma_prime, mu, epochs_f, beta) = (par[0], par[1], par[2], par[3], par[4]);
+
+    let loss = match init.str_field("loss").map_err(err)? {
+        "hinge" => Loss::Hinge,
+        "smoothed_hinge" => Loss::SmoothedHinge { mu },
+        "logistic" => Loss::Logistic,
+        "squared" => Loss::Squared,
+        "absolute" => Loss::Absolute,
+        other => return Err(format!("unknown loss {other:?}")),
+    };
+
+    let solver_obj = init.get("solver").ok_or("init missing solver object")?;
+    let spec_solver = match solver_obj.get("kind").and_then(|j| j.as_str()) {
+        Some("sdca") => SolverSpec::Sdca {
+            h: obj_usize(solver_obj, "h")?,
+        },
+        Some("sdca_epochs") => SolverSpec::SdcaEpochs { epochs: epochs_f },
+        Some("cyclic") => SolverSpec::Cyclic {
+            epochs: obj_usize(solver_obj, "epochs")?,
+            shuffle: solver_obj
+                .get("shuffle")
+                .and_then(|j| j.as_bool())
+                .ok_or("init solver field \"shuffle\" missing")?,
+        },
+        Some("jacobi") => SolverSpec::Jacobi {
+            sweeps: obj_usize(solver_obj, "sweeps")?,
+            beta,
+        },
+        other => return Err(format!("unknown solver kind {other:?}")),
+    };
+
+    let y = init.f64s("y").map_err(err)?;
+    let nr = init.f64s("nr").map_err(err)?;
+    let values = init.f64s("v").map_err(err)?;
+    let ip = init.u64s("ip").map_err(err)?;
+    let ix = init.u64s("ix").map_err(err)?;
+    let seed = *init
+        .u64s("seed")
+        .map_err(err)?
+        .first()
+        .ok_or("init seed section empty")?;
+
+    if y.len() != n_local || nr.len() != n_local {
+        return Err(format!(
+            "init shard dims inconsistent: n_local={n_local}, y={}, norms={}",
+            y.len(),
+            nr.len()
+        ));
+    }
+    if n_local > n {
+        return Err(format!("init n_local={n_local} exceeds n={n}"));
+    }
+    if ip.len() != n_local + 1 {
+        return Err(format!(
+            "init indptr has {} entries, expected {}",
+            ip.len(),
+            n_local + 1
+        ));
+    }
+    if ip.first() != Some(&0) {
+        return Err("init indptr does not start at 0".to_string());
+    }
+    if ip.windows(2).any(|pair| pair[0] > pair[1]) {
+        return Err("init indptr is not monotone".to_string());
+    }
+    let nnz = usize::try_from(*ip.last().unwrap())
+        .map_err(|_| "init CSR nnz overflows".to_string())?;
+    if nnz != values.len() || nnz != ix.len() {
+        return Err(format!(
+            "init CSR nnz mismatch: indptr says {nnz}, values={}, indices={}",
+            values.len(),
+            ix.len()
+        ));
+    }
+    if d > u32::MAX as usize {
+        return Err(format!("init d={d} exceeds index width"));
+    }
+    if ix.iter().any(|&c| c >= d as u64) {
+        return Err(format!("init column index out of range for d={d}"));
+    }
+
+    let x = CsrMatrix {
+        rows: n_local,
+        cols: d,
+        indptr: ip.iter().map(|&p| p as usize).collect(),
+        indices: ix.iter().map(|&c| c as u32).collect(),
+        values: values.to_vec(),
+    };
+    // Construct the dataset literally: the shipped row norms are the
+    // leader's cached values, and recomputing them could differ in the
+    // last bit and break the cross-executor determinism invariant.
+    let ds = Dataset {
+        x,
+        y: y.to_vec(),
+        row_norms_sq: nr.to_vec(),
+        name: format!("wire-shard-{id}"),
+    };
+    let block = LocalBlock::view(Arc::new(ds), 0, n_local, (0..n_local).collect());
+    let solver = make_solver(&spec_solver, n_local, seed);
+    let spec = SubproblemSpec {
+        loss,
+        lambda,
+        n_global: n,
+        sigma_prime,
+        k,
+    };
+    Ok((Worker::new(id, block, solver), spec, d))
+}
+
+/// Serve round/eval/alpha requests until the leader shuts down or the
+/// connection closes. A solver panic is caught and reported in-band; the
+/// process keeps serving, like a pooled worker thread would.
+fn serve(
+    conn: &mut Conn,
+    mut worker: Worker,
+    spec: SubproblemSpec,
+    d: usize,
+) -> Result<i32, String> {
+    let id = worker.id;
+    let mut scratch = WorkerResult::with_dims(id, worker.block.n_local(), d);
+    loop {
+        let frame = match conn.recv() {
+            Ok(f) => f,
+            Err(WireError::Closed) => return Ok(0), // leader gone — clean exit
+            Err(e) => return Err(format!("recv failed: {e}")),
+        };
+        match frame.msg_type() {
+            "round" => {
+                let gamma = *frame
+                    .f64s("g")
+                    .map_err(|e| e.to_string())?
+                    .first()
+                    .ok_or("round frame has empty gamma section")?;
+                let w = frame.f64s("w").map_err(|e| e.to_string())?;
+                if w.len() != d {
+                    return Err(format!("round w has {} entries, expected {d}", w.len()));
+                }
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    worker.round_into(w, &spec, &mut scratch);
+                    // Line 5 of Algorithm 1: the worker owns its α_[k].
+                    worker.apply(gamma, &scratch.update.delta_alpha);
+                }));
+                let mut reply = Frame::new("result")
+                    .set_num("id", id as f64)
+                    .set_num("steps", scratch.update.steps as f64);
+                if let Err(payload) = outcome {
+                    reply = reply.set_str("panic", &panic_message(payload.as_ref()));
+                }
+                reply = reply
+                    .with_f64s("da", scratch.update.delta_alpha.clone())
+                    .with_f64s("dw", scratch.update.delta_w.clone())
+                    .with_f64s("cs", vec![scratch.compute_s]);
+                conn.send(&reply)
+                    .map_err(|e| format!("result send failed: {e}"))?;
+            }
+            "eval" => {
+                let w = frame.f64s("w").map_err(|e| e.to_string())?;
+                if w.len() != d {
+                    return Err(format!("eval w has {} entries, expected {d}", w.len()));
+                }
+                let outcome = catch_unwind(AssertUnwindSafe(|| worker.eval_partial(&spec, w)));
+                let reply = match outcome {
+                    Ok(p) => Frame::new("cert")
+                        .set_num("id", id as f64)
+                        .with_f64s("cp", vec![p.loss_sum, p.conj_sum]),
+                    Err(payload) => Frame::new("cert")
+                        .set_num("id", id as f64)
+                        .set_str("panic", &panic_message(payload.as_ref()))
+                        .with_f64s("cp", vec![0.0, 0.0]),
+                };
+                conn.send(&reply)
+                    .map_err(|e| format!("cert send failed: {e}"))?;
+            }
+            "alpha" => {
+                let a = frame.f64s("a").map_err(|e| e.to_string())?;
+                if a.len() != worker.alpha_local.len() {
+                    return Err(format!(
+                        "alpha load has {} entries, expected {}",
+                        a.len(),
+                        worker.alpha_local.len()
+                    ));
+                }
+                worker.alpha_local.copy_from_slice(a);
+            }
+            "shutdown" => return Ok(0),
+            other => return Err(format!("unexpected message type {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_hello_accepts_good_hello() {
+        assert_eq!(validate_hello(&hello_frame(2), 4).unwrap(), 2);
+    }
+
+    #[test]
+    fn validate_hello_rejects_bad_magic() {
+        let f = Frame::new("hello")
+            .set_str("magic", "not-cocoa")
+            .set_num("version", WIRE_VERSION)
+            .set_num("worker", 0.0);
+        assert!(validate_hello(&f, 4).unwrap_err().contains("magic"));
+    }
+
+    #[test]
+    fn validate_hello_rejects_version_mismatch() {
+        let f = Frame::new("hello")
+            .set_str("magic", WIRE_MAGIC)
+            .set_num("version", 99.0)
+            .set_num("worker", 0.0);
+        assert!(validate_hello(&f, 4).unwrap_err().contains("version"));
+    }
+
+    #[test]
+    fn validate_hello_rejects_out_of_range_and_hostile_ids() {
+        assert!(validate_hello(&hello_frame(4), 4).unwrap_err().contains("range"));
+        let f = Frame::new("hello")
+            .set_str("magic", WIRE_MAGIC)
+            .set_num("version", WIRE_VERSION)
+            .set_num("worker", -1.0);
+        assert!(validate_hello(&f, 4).is_err());
+    }
+
+    #[test]
+    fn validate_hello_rejects_wrong_message_type() {
+        let f = Frame::new("round");
+        assert!(validate_hello(&f, 4).unwrap_err().contains("hello"));
+    }
+
+    #[test]
+    fn build_worker_rejects_non_monotone_indptr() {
+        let mut init = base_init();
+        init = replace_u64s(init, "ip", vec![0, 3, 2]);
+        assert!(build_worker(&init, 0).unwrap_err().contains("monotone"));
+    }
+
+    #[test]
+    fn build_worker_rejects_out_of_range_column() {
+        let mut init = base_init();
+        init = replace_u64s(init, "ix", vec![0, 1, 99]);
+        assert!(build_worker(&init, 0).unwrap_err().contains("column index"));
+    }
+
+    #[test]
+    fn build_worker_accepts_well_formed_init() {
+        let (worker, spec, d) = build_worker(&base_init(), 0).expect("good init");
+        assert_eq!(worker.id, 0);
+        assert_eq!(worker.block.n_local(), 2);
+        assert_eq!(d, 3);
+        assert_eq!(spec.k, 2);
+        assert_eq!(spec.loss, Loss::Hinge);
+    }
+
+    /// A tiny well-formed init for worker 0: n_local=2, d=3, nnz=3.
+    fn base_init() -> Frame {
+        let mut solver = Json::obj();
+        solver.set("kind", jstr("sdca"));
+        solver.set("h", jnum(1.0));
+        Frame::new("init")
+            .set_num("id", 0.0)
+            .set_num("k", 2.0)
+            .set_num("n", 4.0)
+            .set_num("d", 3.0)
+            .set_num("n_local", 2.0)
+            .set_str("loss", "hinge")
+            .set_json("solver", solver)
+            .with_f64s("par", vec![0.01, 2.0, 0.0, 0.0, 0.0])
+            .with_f64s("y", vec![1.0, -1.0])
+            .with_f64s("nr", vec![1.25, 0.5])
+            .with_f64s("v", vec![1.0, 0.5, -0.5])
+            .with_u64s("ip", vec![0, 2, 3])
+            .with_u64s("ix", vec![0, 2, 1])
+            .with_u64s("seed", vec![42])
+    }
+
+    /// Rebuild `frame` with one u64 section swapped out (Frames are
+    /// append-only by design; tests rebuild through the wire instead).
+    fn replace_u64s(frame: Frame, name: &str, v: Vec<u64>) -> Frame {
+        let mut buf = Vec::new();
+        wire::write_frame(&mut buf, &frame).unwrap();
+        let decoded = wire::read_frame(&mut buf.as_slice()).unwrap();
+        // Re-encode every section except the replaced one.
+        let mut out = Frame::new("init");
+        out = copy_headers(&decoded, out);
+        for sec in ["y", "nr", "v"] {
+            out = out.with_f64s(sec, decoded.f64s(sec).unwrap().to_vec());
+        }
+        out = out.with_f64s("par", decoded.f64s("par").unwrap().to_vec());
+        for sec in ["ip", "ix", "seed"] {
+            if sec == name {
+                out = out.with_u64s(sec, v.clone());
+            } else {
+                out = out.with_u64s(sec, decoded.u64s(sec).unwrap().to_vec());
+            }
+        }
+        out
+    }
+
+    fn copy_headers(from: &Frame, mut to: Frame) -> Frame {
+        for key in ["id", "k", "n", "d", "n_local"] {
+            to = to.set_num(key, from.num(key).unwrap());
+        }
+        to = to.set_str("loss", from.str_field("loss").unwrap());
+        to.set_json("solver", from.get("solver").unwrap().clone())
+    }
+}

@@ -1,0 +1,593 @@
+//! Length-prefixed wire format for the socket executor.
+//!
+//! Every message is a single *frame*:
+//!
+//! ```text
+//! [u32 BE total_len] [u32 BE header_len] [header JSON] [binary sections]
+//! ```
+//!
+//! `total_len` counts everything after the first four bytes. The header is
+//! compact JSON (see [`crate::util::json`]) carrying small scalar fields
+//! plus a section manifest under the reserved key `"sec"`: a list of
+//! `[name, kind, len]` entries describing the binary payload that follows,
+//! in order. Numeric payloads (`w`, `Δα`, `Δw`, CSR arrays, …) ride as raw
+//! little-endian 8-byte words — `f64::to_bits` for floats, plain `u64` for
+//! indices — so values round-trip *bit-exactly*, including NaN payloads,
+//! infinities, and signed zeros that JSON would mangle.
+//!
+//! The reader is written for hostile input: truncated frames, oversized
+//! length prefixes, mid-message EOF, garbage headers, and section manifests
+//! that overrun the frame all surface as typed [`WireError`]s — never a
+//! panic, and never an unbounded read.
+
+use std::io::{ErrorKind, Read, Write};
+
+use crate::util::json::{jarr, jnum, jstr, Json};
+
+/// Hard ceiling on a single frame (1 GiB). A corrupt or malicious length
+/// prefix must not make the leader try to allocate 4 GiB.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Magic string exchanged in the hello handshake.
+pub const WIRE_MAGIC: &str = "cocoa-wire";
+
+/// Wire protocol version; bumped on any incompatible frame change.
+pub const WIRE_VERSION: f64 = 1.0;
+
+/// Typed errors for frame encoding/decoding and socket I/O.
+#[derive(Debug)]
+pub enum WireError {
+    /// Underlying I/O failure (includes read timeouts).
+    Io(std::io::Error),
+    /// Clean EOF at a frame boundary: the peer closed the connection.
+    Closed,
+    /// EOF in the middle of a frame: `got` of `expected` bytes arrived.
+    Truncated { expected: usize, got: usize },
+    /// Declared frame length exceeds [`MAX_FRAME_BYTES`].
+    TooLarge { len: usize },
+    /// Header is not valid UTF-8 / JSON, or a required field is missing
+    /// or has the wrong type.
+    Header(String),
+    /// Section manifest is inconsistent with the binary payload.
+    Section(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "i/o error: {e}"),
+            WireError::Closed => write!(f, "connection closed by peer"),
+            WireError::Truncated { expected, got } => {
+                write!(f, "truncated frame: expected {expected} bytes, got {got}")
+            }
+            WireError::TooLarge { len } => {
+                write!(f, "frame length {len} exceeds limit {MAX_FRAME_BYTES}")
+            }
+            WireError::Header(msg) => write!(f, "bad frame header: {msg}"),
+            WireError::Section(msg) => write!(f, "bad frame section: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+impl WireError {
+    /// True when the error is a read timeout rather than a dead peer.
+    pub fn is_timeout(&self) -> bool {
+        matches!(self, WireError::Io(e)
+            if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut))
+    }
+}
+
+/// One binary section: a named vector of 8-byte words.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Section {
+    F64(Vec<f64>),
+    U64(Vec<u64>),
+}
+
+impl Section {
+    fn kind(&self) -> &'static str {
+        match self {
+            Section::F64(_) => "f",
+            Section::U64(_) => "u",
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Section::F64(v) => v.len(),
+            Section::U64(v) => v.len(),
+        }
+    }
+}
+
+/// A decoded (or to-be-encoded) message: JSON header + binary sections.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    header: Json,
+    sections: Vec<(String, Section)>,
+}
+
+impl Frame {
+    /// Start a frame whose header carries `{"t": msg_type}`.
+    pub fn new(msg_type: &str) -> Frame {
+        let mut header = Json::obj();
+        header.set("t", jstr(msg_type));
+        Frame {
+            header,
+            sections: Vec::new(),
+        }
+    }
+
+    /// Set a numeric header field.
+    pub fn set_num(mut self, key: &str, v: f64) -> Frame {
+        self.header.set(key, jnum(v));
+        self
+    }
+
+    /// Set a string header field.
+    pub fn set_str(mut self, key: &str, v: &str) -> Frame {
+        self.header.set(key, jstr(v));
+        self
+    }
+
+    /// Set an arbitrary JSON header field.
+    pub fn set_json(mut self, key: &str, v: Json) -> Frame {
+        self.header.set(key, v);
+        self
+    }
+
+    /// Append a named `f64` section (bit-exact transport).
+    pub fn with_f64s(mut self, name: &str, v: Vec<f64>) -> Frame {
+        self.sections.push((name.to_string(), Section::F64(v)));
+        self
+    }
+
+    /// Append a named `u64` section.
+    pub fn with_u64s(mut self, name: &str, v: Vec<u64>) -> Frame {
+        self.sections.push((name.to_string(), Section::U64(v)));
+        self
+    }
+
+    /// The message type tag (`"t"` header field), or `""` if absent.
+    pub fn msg_type(&self) -> &str {
+        self.header
+            .get("t")
+            .and_then(|j| j.as_str())
+            .unwrap_or("")
+    }
+
+    /// Required numeric header field.
+    pub fn num(&self, key: &str) -> Result<f64, WireError> {
+        self.header
+            .get(key)
+            .and_then(|j| j.as_f64())
+            .ok_or_else(|| WireError::Header(format!("missing numeric field {key:?}")))
+    }
+
+    /// Required non-negative integral header field. Rejects NaN, negative,
+    /// and fractional values instead of truncating them.
+    pub fn usize_field(&self, key: &str) -> Result<usize, WireError> {
+        let v = self.num(key)?;
+        if !v.is_finite() || v < 0.0 || v.fract() != 0.0 || v > 9.007_199_254_740_992e15 {
+            return Err(WireError::Header(format!(
+                "field {key:?} is not a valid index: {v}"
+            )));
+        }
+        Ok(v as usize)
+    }
+
+    /// Required string header field.
+    pub fn str_field(&self, key: &str) -> Result<&str, WireError> {
+        self.header
+            .get(key)
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| WireError::Header(format!("missing string field {key:?}")))
+    }
+
+    /// Optional string header field.
+    pub fn opt_str(&self, key: &str) -> Option<&str> {
+        self.header.get(key).and_then(|j| j.as_str())
+    }
+
+    /// Optional JSON header field.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.header.get(key)
+    }
+
+    /// Required `f64` section by name.
+    pub fn f64s(&self, name: &str) -> Result<&[f64], WireError> {
+        for (n, s) in &self.sections {
+            if n == name {
+                return match s {
+                    Section::F64(v) => Ok(v),
+                    Section::U64(_) => Err(WireError::Section(format!(
+                        "section {name:?} is u64, expected f64"
+                    ))),
+                };
+            }
+        }
+        Err(WireError::Section(format!("missing f64 section {name:?}")))
+    }
+
+    /// Required `u64` section by name.
+    pub fn u64s(&self, name: &str) -> Result<&[u64], WireError> {
+        for (n, s) in &self.sections {
+            if n == name {
+                return match s {
+                    Section::U64(v) => Ok(v),
+                    Section::F64(_) => Err(WireError::Section(format!(
+                        "section {name:?} is f64, expected u64"
+                    ))),
+                };
+            }
+        }
+        Err(WireError::Section(format!("missing u64 section {name:?}")))
+    }
+}
+
+/// Serialize one frame to `w`. The section manifest is injected into the
+/// header at write time, so callers never maintain it by hand.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<(), WireError> {
+    let mut header = frame.header.clone();
+    let manifest: Vec<Json> = frame
+        .sections
+        .iter()
+        .map(|(name, s)| jarr(vec![jstr(name), jstr(s.kind()), jnum(s.len() as f64)]))
+        .collect();
+    header.set("sec", jarr(manifest));
+    let header_bytes = header.to_string_compact().into_bytes();
+
+    let words: usize = frame.sections.iter().map(|(_, s)| s.len()).sum();
+    let total_len = 4 + header_bytes.len() + 8 * words;
+    if total_len > MAX_FRAME_BYTES {
+        return Err(WireError::TooLarge { len: total_len });
+    }
+    w.write_all(&(total_len as u32).to_be_bytes())?;
+    w.write_all(&(header_bytes.len() as u32).to_be_bytes())?;
+    w.write_all(&header_bytes)?;
+    for (_, s) in &frame.sections {
+        match s {
+            Section::F64(v) => {
+                for x in v {
+                    w.write_all(&x.to_bits().to_le_bytes())?;
+                }
+            }
+            Section::U64(v) => {
+                for x in v {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read exactly `buf.len()` bytes. EOF before the first byte of a frame is
+/// a clean [`WireError::Closed`] when `at_frame_start`; EOF mid-way is
+/// [`WireError::Truncated`].
+fn read_exact_prefix<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    at_frame_start: bool,
+) -> Result<(), WireError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return if got == 0 && at_frame_start {
+                    Err(WireError::Closed)
+                } else {
+                    Err(WireError::Truncated {
+                        expected: buf.len(),
+                        got,
+                    })
+                };
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Read and decode one frame from `r`.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+    let mut len_buf = [0u8; 4];
+    read_exact_prefix(r, &mut len_buf, true)?;
+    let total_len = u32::from_be_bytes(len_buf) as usize;
+    if total_len > MAX_FRAME_BYTES {
+        return Err(WireError::TooLarge { len: total_len });
+    }
+    if total_len < 4 {
+        return Err(WireError::Header(format!(
+            "frame length {total_len} too short for a header"
+        )));
+    }
+    let mut body = vec![0u8; total_len];
+    read_exact_prefix(r, &mut body, false)?;
+
+    let header_len = u32::from_be_bytes([body[0], body[1], body[2], body[3]]) as usize;
+    let payload = &body[4..];
+    if header_len > payload.len() {
+        return Err(WireError::Header(format!(
+            "header length {header_len} exceeds frame payload {}",
+            payload.len()
+        )));
+    }
+    let header_str = std::str::from_utf8(&payload[..header_len])
+        .map_err(|e| WireError::Header(format!("header is not UTF-8: {e}")))?;
+    let header = Json::parse(header_str).map_err(WireError::Header)?;
+
+    let mut sections = Vec::new();
+    let mut off = header_len;
+    let manifest = header
+        .get("sec")
+        .and_then(|j| j.as_arr())
+        .ok_or_else(|| WireError::Header("missing section manifest \"sec\"".to_string()))?;
+    for entry in manifest {
+        let fields = entry
+            .as_arr()
+            .ok_or_else(|| WireError::Section("manifest entry is not an array".to_string()))?;
+        if fields.len() != 3 {
+            return Err(WireError::Section(format!(
+                "manifest entry has {} fields, expected 3",
+                fields.len()
+            )));
+        }
+        let name = fields[0]
+            .as_str()
+            .ok_or_else(|| WireError::Section("section name is not a string".to_string()))?;
+        let kind = fields[1]
+            .as_str()
+            .ok_or_else(|| WireError::Section("section kind is not a string".to_string()))?;
+        let len_f = fields[2]
+            .as_f64()
+            .ok_or_else(|| WireError::Section("section length is not a number".to_string()))?;
+        if !len_f.is_finite() || len_f < 0.0 || len_f.fract() != 0.0 {
+            return Err(WireError::Section(format!(
+                "section {name:?} has invalid length {len_f}"
+            )));
+        }
+        let len = len_f as usize;
+        let bytes = len
+            .checked_mul(8)
+            .ok_or_else(|| WireError::Section(format!("section {name:?} length overflows")))?;
+        let end = off
+            .checked_add(bytes)
+            .ok_or_else(|| WireError::Section(format!("section {name:?} offset overflows")))?;
+        if end > payload.len() {
+            return Err(WireError::Section(format!(
+                "section {name:?} ({bytes} bytes) overruns frame payload"
+            )));
+        }
+        let raw = &payload[off..end];
+        let section = match kind {
+            "f" => Section::F64(
+                raw.chunks_exact(8)
+                    .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+                    .collect(),
+            ),
+            "u" => Section::U64(
+                raw.chunks_exact(8)
+                    .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            other => {
+                return Err(WireError::Section(format!(
+                    "section {name:?} has unknown kind {other:?}"
+                )));
+            }
+        };
+        sections.push((name.to_string(), section));
+        off = end;
+    }
+    if off != payload.len() {
+        return Err(WireError::Section(format!(
+            "{} trailing bytes after last section",
+            payload.len() - off
+        )));
+    }
+    Ok(Frame { header, sections })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, frame).expect("encode");
+        read_frame(&mut buf.as_slice()).expect("decode")
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact_for_special_floats() {
+        let specials = vec![
+            0.0,
+            -0.0,
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MIN_POSITIVE / 2.0, // subnormal
+            1.0 + f64::EPSILON,
+            -1e308,
+        ];
+        let bits: Vec<u64> = specials.iter().map(|v| v.to_bits()).collect();
+        let frame = Frame::new("round")
+            .set_num("id", 3.0)
+            .with_f64s("w", specials)
+            .with_u64s("ix", vec![0, 1, u64::MAX]);
+        let back = roundtrip(&frame);
+        assert_eq!(back.msg_type(), "round");
+        assert_eq!(back.num("id").unwrap(), 3.0);
+        let got: Vec<u64> = back.f64s("w").unwrap().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, bits, "f64 section must round-trip bit-exactly");
+        assert_eq!(back.u64s("ix").unwrap(), &[0, 1, u64::MAX]);
+    }
+
+    #[test]
+    fn empty_reader_is_closed_not_truncated() {
+        let empty: &[u8] = &[];
+        match read_frame(&mut &empty[..]) {
+            Err(WireError::Closed) => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_length_prefix_is_truncated() {
+        let partial: &[u8] = &[0, 0];
+        match read_frame(&mut &partial[..]) {
+            Err(WireError::Truncated { expected: 4, got: 2 }) => {}
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mid_message_eof_is_truncated() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::new("eval").with_f64s("w", vec![1.0; 16])).unwrap();
+        let cut = &buf[..buf.len() / 2];
+        match read_frame(&mut &cut[..]) {
+            Err(WireError::Truncated { .. }) => {}
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_without_allocating() {
+        let hostile = u32::MAX.to_be_bytes();
+        match read_frame(&mut &hostile[..]) {
+            Err(WireError::TooLarge { len }) => assert_eq!(len, u32::MAX as usize),
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn garbage_header_is_header_error() {
+        let header = b"not json";
+        let total = 4 + header.len();
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(total as u32).to_be_bytes());
+        buf.extend_from_slice(&(header.len() as u32).to_be_bytes());
+        buf.extend_from_slice(header);
+        match read_frame(&mut &buf[..]) {
+            Err(WireError::Header(_)) => {}
+            other => panic!("expected Header, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn header_len_exceeding_frame_is_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&8u32.to_be_bytes()); // total_len = 8 → 4 payload bytes
+        buf.extend_from_slice(&100u32.to_be_bytes()); // header_len = 100 > 4
+        buf.extend_from_slice(&[0u8; 4]);
+        match read_frame(&mut &buf[..]) {
+            Err(WireError::Header(_)) => {}
+            other => panic!("expected Header, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn section_overrun_is_rejected() {
+        // Manifest claims 1000 f64 words, but the frame carries none.
+        let header = r#"{"sec":[["w","f",1000]],"t":"round"}"#.as_bytes();
+        let total = 4 + header.len();
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(total as u32).to_be_bytes());
+        buf.extend_from_slice(&(header.len() as u32).to_be_bytes());
+        buf.extend_from_slice(header);
+        match read_frame(&mut &buf[..]) {
+            Err(WireError::Section(_)) => {}
+            other => panic!("expected Section, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let header = r#"{"sec":[],"t":"round"}"#.as_bytes();
+        let total = 4 + header.len() + 8;
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(total as u32).to_be_bytes());
+        buf.extend_from_slice(&(header.len() as u32).to_be_bytes());
+        buf.extend_from_slice(header);
+        buf.extend_from_slice(&[0u8; 8]); // 8 bytes no manifest entry claims
+        match read_frame(&mut &buf[..]) {
+            Err(WireError::Section(_)) => {}
+            other => panic!("expected Section, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_section_kind_is_rejected() {
+        let header = r#"{"sec":[["w","x",1]],"t":"round"}"#.as_bytes();
+        let total = 4 + header.len() + 8;
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(total as u32).to_be_bytes());
+        buf.extend_from_slice(&(header.len() as u32).to_be_bytes());
+        buf.extend_from_slice(header);
+        buf.extend_from_slice(&[0u8; 8]);
+        match read_frame(&mut &buf[..]) {
+            Err(WireError::Section(_)) => {}
+            other => panic!("expected Section, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_manifest_is_header_error() {
+        let header = r#"{"t":"round"}"#.as_bytes();
+        let total = 4 + header.len();
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(total as u32).to_be_bytes());
+        buf.extend_from_slice(&(header.len() as u32).to_be_bytes());
+        buf.extend_from_slice(header);
+        match read_frame(&mut &buf[..]) {
+            Err(WireError::Header(_)) => {}
+            other => panic!("expected Header, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fractional_section_length_is_rejected() {
+        let header = r#"{"sec":[["w","f",1.5]],"t":"round"}"#.as_bytes();
+        let total = 4 + header.len() + 16;
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(total as u32).to_be_bytes());
+        buf.extend_from_slice(&(header.len() as u32).to_be_bytes());
+        buf.extend_from_slice(header);
+        buf.extend_from_slice(&[0u8; 16]);
+        match read_frame(&mut &buf[..]) {
+            Err(WireError::Section(_)) => {}
+            other => panic!("expected Section, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn usize_field_rejects_hostile_values() {
+        let f = Frame::new("init")
+            .set_num("neg", -1.0)
+            .set_num("frac", 1.5)
+            .set_num("ok", 42.0);
+        assert!(f.usize_field("neg").is_err());
+        assert!(f.usize_field("frac").is_err());
+        assert!(f.usize_field("missing").is_err());
+        assert_eq!(f.usize_field("ok").unwrap(), 42);
+    }
+
+    #[test]
+    fn timeout_detection() {
+        let timeout = WireError::Io(std::io::Error::new(ErrorKind::WouldBlock, "t"));
+        assert!(timeout.is_timeout());
+        assert!(!WireError::Closed.is_timeout());
+    }
+}

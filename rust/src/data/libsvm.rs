@@ -15,6 +15,10 @@ use std::path::Path;
 pub enum LibsvmError {
     Io(std::io::Error),
     Parse { line: usize, msg: String },
+    /// A non-finite label or value on the way in (parse) or out (save).
+    /// The text format cannot round-trip NaN/Inf losslessly through every
+    /// reader, so both directions refuse them.
+    NonFinite { line: usize, msg: String },
 }
 
 impl std::fmt::Display for LibsvmError {
@@ -22,6 +26,9 @@ impl std::fmt::Display for LibsvmError {
         match self {
             LibsvmError::Io(e) => write!(f, "io error: {e}"),
             LibsvmError::Parse { line, msg } => write!(f, "line {line}: {msg}"),
+            LibsvmError::NonFinite { line, msg } => {
+                write!(f, "line {line}: non-finite {msg}")
+            }
         }
     }
 }
@@ -62,6 +69,15 @@ pub fn parse_str(text: &str, expected_dim: Option<usize>) -> Result<Dataset, Lib
             line: lineno + 1,
             msg: format!("bad label {label_tok:?}: {e}"),
         })?;
+        // Rust's f64 parser accepts "inf"/"nan" spellings, which would
+        // otherwise poison the loss evaluations much later with no line
+        // number attached.
+        if !label.is_finite() {
+            return Err(LibsvmError::NonFinite {
+                line: lineno + 1,
+                msg: format!("label {label_tok:?}"),
+            });
+        }
         let mut row = Vec::new();
         for tok in parts {
             let (idx_s, val_s) = tok.split_once(':').ok_or_else(|| LibsvmError::Parse {
@@ -82,6 +98,12 @@ pub fn parse_str(text: &str, expected_dim: Option<usize>) -> Result<Dataset, Lib
                 line: lineno + 1,
                 msg: format!("bad value {val_s:?}: {e}"),
             })?;
+            if !val.is_finite() {
+                return Err(LibsvmError::NonFinite {
+                    line: lineno + 1,
+                    msg: format!("value {val_s:?} at index {idx}"),
+                });
+            }
             let col = idx - 1;
             if let Some(d) = expected_dim {
                 if col >= d {
@@ -93,6 +115,17 @@ pub fn parse_str(text: &str, expected_dim: Option<usize>) -> Result<Dataset, Lib
             }
             max_col = max_col.max(col);
             row.push((col, val));
+        }
+        // Duplicate indices within a row are ambiguous (sum? last wins?)
+        // and every downstream CSR assumes strictly increasing columns —
+        // reject them here with the offending line attached.
+        let mut cols: Vec<usize> = row.iter().map(|&(c, _)| c).collect();
+        cols.sort_unstable();
+        if let Some(w) = cols.windows(2).find(|w| w[0] == w[1]) {
+            return Err(LibsvmError::Parse {
+                line: lineno + 1,
+                msg: format!("duplicate feature index {}", w[0] + 1),
+            });
         }
         rows.push(row);
         labels.push(label);
@@ -114,21 +147,42 @@ pub fn load(path: &Path, expected_dim: Option<usize>) -> Result<Dataset, LibsvmE
     Ok(ds)
 }
 
-/// Write a dataset in LibSVM format.
+/// Write a dataset in LibSVM format. Non-finite labels or values are
+/// refused ([`LibsvmError::NonFinite`]) rather than written: the text
+/// format has no portable NaN/Inf spelling, so such a file would fail —
+/// or worse, silently misparse — on the next reader.
 pub fn save(ds: &Dataset, path: &Path) -> Result<(), LibsvmError> {
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
     for i in 0..ds.n() {
+        if !ds.y[i].is_finite() {
+            return Err(LibsvmError::NonFinite {
+                line: i + 1,
+                msg: format!("label {}", ds.y[i]),
+            });
+        }
         write!(f, "{}", format_num(ds.y[i]))?;
         let (idx, vals) = ds.x.row(i);
         for (j, &c) in idx.iter().enumerate() {
+            if !vals[j].is_finite() {
+                return Err(LibsvmError::NonFinite {
+                    line: i + 1,
+                    msg: format!("value {} at index {}", vals[j], c as usize + 1),
+                });
+            }
             write!(f, " {}:{}", c as usize + 1, format_num(vals[j]))?;
         }
         writeln!(f)?;
     }
+    f.flush()?;
     Ok(())
 }
 
 fn format_num(v: f64) -> String {
+    // `(-0.0) as i64` is 0, so the integer fast path below would turn a
+    // negative-zero label into "0" and break bit-exact round-trips.
+    if v == 0.0 && v.is_sign_negative() {
+        return "-0".to_string();
+    }
     if v == v.trunc() && v.abs() < 1e15 {
         format!("{}", v as i64)
     } else {
@@ -175,6 +229,79 @@ mod tests {
         assert!(parse_str("1 5:1\n", Some(3)).is_err());
         let ds = parse_str("1 2:1\n", Some(10)).unwrap();
         assert_eq!(ds.d(), 10);
+    }
+
+    #[test]
+    fn rejects_duplicate_feature_index_with_line_number() {
+        let err = parse_str("1 1:1\n-1 2:1 3:4 2:3\n", None).unwrap_err();
+        match err {
+            LibsvmError::Parse { line, msg } => {
+                assert_eq!(line, 2);
+                assert!(msg.contains("duplicate feature index 2"), "{msg}");
+            }
+            other => panic!("expected Parse, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_non_finite_input() {
+        assert!(matches!(
+            parse_str("1 1:inf\n", None),
+            Err(LibsvmError::NonFinite { line: 1, .. })
+        ));
+        assert!(matches!(
+            parse_str("1 1:1\nnan 1:1\n", None),
+            Err(LibsvmError::NonFinite { line: 2, .. })
+        ));
+    }
+
+    #[test]
+    fn save_refuses_non_finite_state() {
+        let dir = std::env::temp_dir().join("cocoa_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("nonfinite.svm");
+        let bad_label = Dataset::new(
+            "bad",
+            CsrMatrix::from_rows(1, &[vec![(0, 1.0)]]),
+            vec![f64::NAN],
+        );
+        assert!(matches!(
+            save(&bad_label, &path),
+            Err(LibsvmError::NonFinite { line: 1, .. })
+        ));
+        let bad_value = Dataset::new(
+            "bad",
+            CsrMatrix::from_rows(2, &[vec![(1, f64::INFINITY)]]),
+            vec![1.0],
+        );
+        let err = save(&bad_value, &path).unwrap_err();
+        assert!(err.to_string().contains("index 2"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn negative_zero_label_roundtrips() {
+        // `(-0.0) as i64 == 0`, so without the sign check format_num
+        // would write "-0.0" as "0" and lose the sign bit.
+        assert_eq!(format_num(-0.0), "-0");
+        assert_eq!(format_num(0.0), "0");
+        let dir = std::env::temp_dir().join("cocoa_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("negzero.svm");
+        let ds = Dataset::new(
+            "nz",
+            CsrMatrix::from_rows(1, &[vec![(0, 1.0)], vec![(0, 2.0)]]),
+            vec![-0.0, 1.0],
+        );
+        save(&ds, &path).unwrap();
+        let back = load(&path, None).unwrap();
+        assert_eq!(
+            back.y[0].to_bits(),
+            (-0.0f64).to_bits(),
+            "-0.0 label lost its sign bit through save/load"
+        );
+        assert_eq!(back.y[1], 1.0);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

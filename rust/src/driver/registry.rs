@@ -8,7 +8,7 @@ use crate::baselines::minibatch_sdca::{MiniBatchSdca, MiniBatchSdcaConfig};
 use crate::baselines::minibatch_sgd::{MiniBatchSgd, MiniBatchSgdConfig};
 use crate::baselines::one_shot::{OneShot as OneShotAveraging, OneShotConfig};
 use crate::baselines::serial_sdca::{SerialSdca, SerialSdcaConfig};
-use crate::coordinator::{CocoaConfig, SolverSpec, Trainer};
+use crate::coordinator::{CocoaConfig, ExecutorChoice, SolverSpec, Trainer};
 use crate::data::Partition;
 use crate::driver::Method;
 use crate::objective::Problem;
@@ -95,6 +95,9 @@ pub struct BuildOpts {
     pub sigma_prime: Option<f64>,
     /// Pooled-thread vs sequential execution (CoCoA variants only).
     pub parallel: bool,
+    /// Which runtime executes the local solves (CoCoA variants only);
+    /// `Auto` honours `parallel`.
+    pub executor: ExecutorChoice,
     /// Mini-batch size per worker per round (mb-sgd / mb-sdca).
     pub batch_per_worker: usize,
     /// Aggregation scaling β (mb-sdca).
@@ -113,6 +116,7 @@ impl BuildOpts {
             epochs: 1.0,
             sigma_prime: None,
             parallel: true,
+            executor: ExecutorChoice::Auto,
             batch_per_worker: 16,
             beta: 1.0,
             rho: 1.0,
@@ -143,7 +147,8 @@ pub fn build_method(
                 CocoaConfig::cocoa(opts.k, problem.loss, problem.lambda, solver)
             }
             .with_seed(opts.seed)
-            .with_parallel(opts.parallel);
+            .with_parallel(opts.parallel)
+            .with_executor(opts.executor);
             if let Some(sp) = opts.sigma_prime {
                 cfg = cfg.with_sigma_prime(sp);
             }

@@ -36,19 +36,32 @@
 //!
 //! ## Execution model
 //!
-//! [`coordinator::Trainer::new`] spawns the simulated cluster **once**: K
-//! long-lived worker threads ([`coordinator::pool::PooledExecutor`]),
-//! each owning its data-shard view, its α_[k] slice, and its solver
-//! state. Every outer round the leader publishes a `w` snapshot to a
-//! shared broadcast buffer, kicks the workers over bounded channels, and
-//! gathers their Δ-updates into per-worker scratch buffers that ping-pong
-//! between leader and workers — the steady-state round loop performs zero
-//! thread spawns and zero result allocations. With `cfg.parallel = false`
-//! (or K = 1, or non-thread-safe solvers such as the PJRT-backed one) the
-//! same rounds run on the in-process
-//! [`coordinator::pool::SequentialExecutor`]; both executors produce
-//! bit-identical trajectories (seeded per-worker solver streams +
-//! worker-id-ordered reduce), which `rust/tests/determinism.rs` locks in.
+//! [`coordinator::Trainer::new`] spawns the cluster **once**, on one of
+//! three interchangeable runtimes ([`coordinator::ExecutorChoice`]):
+//!
+//! * **Pooled threads** ([`coordinator::pool::PooledExecutor`], the
+//!   default for K > 1): K long-lived worker threads, each owning its
+//!   data-shard view, its α_[k] slice, and its solver state. The leader
+//!   publishes a `w` snapshot to a shared broadcast buffer, kicks workers
+//!   over bounded channels, and gathers Δ-updates into per-worker scratch
+//!   that ping-pongs between leader and workers — zero thread spawns and
+//!   zero result allocations per steady-state round.
+//! * **Sequential in-process**
+//!   ([`coordinator::pool::SequentialExecutor`]; `cfg.parallel = false`,
+//!   K = 1, or non-thread-safe solvers such as the PJRT-backed one): the
+//!   same rounds, one worker after another on the leader thread.
+//! * **Socket processes**
+//!   ([`coordinator::socket::SocketExecutor`]; `--executor socket`): K
+//!   real worker *processes* (`cocoa worker`) connected over Unix domain
+//!   sockets (TCP optional), exchanging rounds in a dependency-free
+//!   length-prefixed wire format ([`coordinator::wire`]) whose binary f64
+//!   sections preserve every bit. Dead workers, handshake mismatches,
+//!   and round timeouts surface as [`coordinator::PoolError`]s naming
+//!   the workers — a failed round is an error, never a hang.
+//!
+//! All three produce bit-identical trajectories (seeded per-worker solver
+//! streams + worker-id-ordered reduce + bit-exact shard transport), which
+//! `rust/tests/determinism.rs` locks in as a three-way invariant.
 //!
 //! ## Distributed duality-gap certificates
 //!
@@ -135,7 +148,7 @@ pub mod util;
 /// The most common imports in one place.
 pub mod prelude {
     pub use crate::coordinator::{
-        Aggregation, CocoaConfig, History, SolverSpec, StopReason, Trainer,
+        Aggregation, CocoaConfig, ExecutorChoice, History, SolverSpec, StopReason, Trainer,
     };
     pub use crate::data::{Dataset, Partition};
     pub use crate::driver::{

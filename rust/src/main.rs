@@ -7,6 +7,7 @@
 //!   sigma        report partition constants σ_k, σ, and the Table-1 ratio
 //!   experiment   regenerate a paper table/figure: table1|table2|fig1|fig2|fig3|rates|all
 //!   artifacts-check   load + smoke-run the AOT artifacts via PJRT
+//!   worker       internal: socket-executor worker process (spawned by the leader)
 //!
 //! Run `cocoa help` for flags.
 
@@ -28,6 +29,7 @@ fn main() {
         "sigma" => cmd_sigma(&args),
         "experiment" => cocoa::experiments::run_from_cli(&args),
         "artifacts-check" => cmd_artifacts_check(&args),
+        "worker" => cocoa::coordinator::socket::worker_main(&args),
         "help" | "--help" => {
             print_help();
             0
@@ -55,6 +57,7 @@ SUBCOMMANDS
                    --scale <dataset downscale> --seed <s>
                    CoCoA variants: --sigma-prime <σ'> --epochs <local epochs>
                                    --parallel <true|false>  (--variant <plus|avg> still accepted)
+                                   --executor <auto|sequential|pooled|socket>  (socket = worker processes)
                    mb-* variants:  --batch <per-worker batch size>  (mb-sdca: --beta <scaling>)
                    admm:           --rho <penalty> --local-iters <inner steps>
                    History streams to results/train/<method>_<dataset>.csv while running.
@@ -62,6 +65,7 @@ SUBCOMMANDS
   sigma            --dataset <name> --scale <s> --ks 16,32,64 --seed <s>
   experiment       table1|table2|fig1|fig2|fig3|rates|ablation|all  [--quick] [--scale s]
   artifacts-check  --artifacts <dir>
+  worker           internal: spawned by the socket executor (--connect <addr> --worker <id>)
 
 GLOBAL FLAGS
   --log <error|warn|info|debug|trace>   (or COCOA_LOG env var)
@@ -129,6 +133,10 @@ fn cmd_train(args: &Args) -> i32 {
     };
     opts.epochs = args.get_f64("epochs", epochs_default);
     opts.parallel = args.get_bool("parallel", true);
+    if let Some(ex) = args.get_opt("executor") {
+        opts.executor = ExecutorChoice::parse(ex)
+            .unwrap_or_else(|| panic!("unknown --executor {ex:?} (auto|sequential|pooled|socket)"));
+    }
     opts.batch_per_worker = args.get_usize("batch", 16);
     opts.beta = args.get_f64("beta", 1.0);
     opts.rho = args.get_f64("rho", 1.0);

@@ -10,7 +10,9 @@
 //! p50, p95, and min. `black_box` prevents the optimizer from deleting the
 //! measured work.
 
+use crate::util::json::{jarr, jnum, jobj, jstr, Json};
 use std::hint::black_box as std_black_box;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 pub fn black_box<T>(x: T) -> T {
@@ -88,6 +90,59 @@ impl Bench {
         self.results.last().unwrap()
     }
 
+    /// Machine-readable form of the suite: one object per case with the
+    /// summary statistics in seconds, plus the sampling configuration so
+    /// a CI artifact is self-describing.
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("suite", jstr(&self.suite)),
+            ("warmup", jnum(self.warmup as f64)),
+            ("samples", jnum(self.samples as f64)),
+            (
+                "cases",
+                jarr(
+                    self.results
+                        .iter()
+                        .map(|r| {
+                            jobj(vec![
+                                ("name", jstr(&r.name)),
+                                ("mean_s", jnum(r.mean().as_secs_f64())),
+                                ("p50_s", jnum(r.percentile(0.5).as_secs_f64())),
+                                ("p95_s", jnum(r.percentile(0.95).as_secs_f64())),
+                                ("min_s", jnum(r.min().as_secs_f64())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write [`Bench::to_json`] to `path` (creating parent directories).
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string_compact())
+    }
+
+    /// Honour the `BENCH_JSON` env var: when set, write the JSON report
+    /// there. CI points this at an artifact path; local runs that leave
+    /// it unset pay nothing.
+    pub fn maybe_write_json_env(&self) {
+        if let Ok(path) = std::env::var("BENCH_JSON") {
+            if path.is_empty() {
+                return;
+            }
+            match self.write_json(Path::new(&path)) {
+                Ok(()) => println!("bench json written to {path}"),
+                Err(e) => eprintln!("warning: cannot write bench json to {path}: {e}"),
+            }
+        }
+    }
+
     pub fn report(&self) {
         println!("\n== bench suite: {} ==", self.suite);
         println!(
@@ -145,6 +200,43 @@ mod tests {
         assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
         assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.50ms");
         assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+
+    #[test]
+    fn json_report_carries_all_cases() {
+        let mut b = Bench::new("json").with_samples(2);
+        b.warmup = 0;
+        b.run("a", || black_box(1 + 1));
+        b.run("b", || black_box(2 + 2));
+        let j = b.to_json();
+        assert_eq!(j.get("suite").and_then(|v| v.as_str()), Some("json"));
+        let cases = j.get("cases").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(cases.len(), 2);
+        for (case, name) in cases.iter().zip(["a", "b"]) {
+            assert_eq!(case.get("name").and_then(|v| v.as_str()), Some(name));
+            for stat in ["mean_s", "p50_s", "p95_s", "min_s"] {
+                let v = case.get(stat).and_then(|v| v.as_f64()).unwrap();
+                assert!(v.is_finite() && v >= 0.0, "{name}.{stat} = {v}");
+            }
+        }
+        // And the compact text parses back.
+        let text = j.to_string_compact();
+        assert!(Json::parse(&text).is_ok(), "unparseable: {text}");
+    }
+
+    #[test]
+    fn write_json_creates_parents() {
+        let dir = std::env::temp_dir().join("cocoa_bench_json_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("nested").join("bench.json");
+        let mut b = Bench::new("disk").with_samples(1);
+        b.warmup = 0;
+        b.run("only", || black_box(0));
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("suite").and_then(|v| v.as_str()), Some("disk"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -44,9 +44,38 @@ fn help_lists_subcommands() {
     let bin = require_bin!();
     let (code, stdout, _) = run(&bin, &["help"]);
     assert_eq!(code, 0);
-    for sub in ["train", "gen-data", "sigma", "experiment", "artifacts-check"] {
+    for sub in ["train", "gen-data", "sigma", "experiment", "artifacts-check", "worker"] {
         assert!(stdout.contains(sub), "help missing {sub}");
     }
+}
+
+#[test]
+fn train_socket_executor_runs() {
+    // End-to-end through the CLI: the leader spawns `cocoa worker`
+    // processes (resolved via current_exe) and trains over sockets.
+    let bin = require_bin!();
+    let (code, stdout, stderr) = run(
+        &bin,
+        &[
+            "train", "--dataset", "covtype", "--scale", "4000", "--k", "2", "--lambda", "1e-2",
+            "--rounds", "3", "--gap-tol", "0", "--executor", "socket",
+        ],
+    );
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("stopped"), "{stdout}");
+}
+
+#[test]
+fn train_unknown_executor_fails() {
+    let bin = require_bin!();
+    let (code, _, stderr) = run(
+        &bin,
+        &[
+            "train", "--dataset", "covtype", "--scale", "4000", "--executor", "warp-drive",
+        ],
+    );
+    assert_ne!(code, 0);
+    assert!(stderr.contains("unknown --executor"), "{stderr}");
 }
 
 #[test]

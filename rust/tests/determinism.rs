@@ -1,12 +1,14 @@
-//! Determinism suite for the persistent worker-pool runtime: with a fixed
-//! seed, the pooled-parallel and sequential executors must produce
+//! Determinism suite for the trainer runtimes: with a fixed seed, the
+//! pooled-thread, sequential, and socket-process executors must produce
 //! **bit-identical** trajectories — gap records, the global dual iterate
 //! α, and the shared primal vector w — for both aggregation regimes of
 //! the paper (CoCoA: γ=1/K, σ'=1; CoCoA+: γ=1, σ'=K).
 //!
 //! This is what makes the pool's scratch reuse safe to rely on: any
 //! cross-round buffer contamination, scheduling-order dependence, or
-//! misrouted reduce would break bit-identity within a few rounds.
+//! misrouted reduce would break bit-identity within a few rounds. For the
+//! socket executor it additionally proves the wire format is bit-exact:
+//! a single f64 rounded in transit would diverge the trajectory.
 
 use cocoa::data::partition::{contiguous, random_balanced};
 use cocoa::data::synth::{generate, SynthConfig};
@@ -30,6 +32,28 @@ fn build(k: usize, plus: bool, parallel: bool, seed: u64) -> Trainer {
     .with_gap_tol(1e-14)
     .with_seed(seed)
     .with_parallel(parallel);
+    Trainer::new(problem, part, cfg)
+}
+
+/// Same problem/partition/config as [`build`], but executed by K worker
+/// *processes* over the wire protocol.
+fn build_socket(k: usize, plus: bool, seed: u64) -> Trainer {
+    let n = 96;
+    let d = 12;
+    let data = generate(&SynthConfig::new("det", n, d).seed(7));
+    let part = random_balanced(n, k, 3);
+    let problem = Problem::new(data, Loss::Hinge, 0.01);
+    let solver = SolverSpec::SdcaEpochs { epochs: 1.0 };
+    let cfg = if plus {
+        CocoaConfig::cocoa_plus(k, Loss::Hinge, 0.01, solver)
+    } else {
+        CocoaConfig::cocoa(k, Loss::Hinge, 0.01, solver)
+    }
+    .with_rounds(ROUNDS)
+    .with_gap_tol(1e-14)
+    .with_seed(seed)
+    .with_executor(ExecutorChoice::Socket)
+    .with_socket_worker_bin(env!("CARGO_BIN_EXE_cocoa"));
     Trainer::new(problem, part, cfg)
 }
 
@@ -66,6 +90,37 @@ fn pooled_matches_sequential_cocoa_plus() {
 fn pooled_matches_sequential_cocoa() {
     // γ = 1/K, σ' = 1 — the conservative averaging regime (Remark 12).
     assert_bit_identical(4, false, 42);
+}
+
+/// The tentpole invariant: sequential ≡ pooled ≡ socket, bit for bit.
+fn assert_three_way_identical(k: usize, plus: bool, seed: u64) {
+    let socket = build_socket(k, plus, seed);
+    assert_eq!(socket.executor_kind(), "socket");
+    let (gaps_x, alpha_x, w_x) = trajectory(socket);
+    let (gaps_s, alpha_s, w_s) = trajectory(build(k, plus, false, seed));
+    let variant = if plus { "cocoa+" } else { "cocoa" };
+    assert_eq!(
+        gaps_x, gaps_s,
+        "{variant} K={k}: socket gap trajectory diverged from sequential"
+    );
+    assert_eq!(alpha_x, alpha_s, "{variant} K={k}: socket α diverged");
+    assert_eq!(w_x, w_s, "{variant} K={k}: socket w diverged");
+    // sequential ≡ pooled is covered above; close the triangle anyway so
+    // this one test names the invariant end to end.
+    let (gaps_p, alpha_p, w_p) = trajectory(build(k, plus, true, seed));
+    assert_eq!(gaps_x, gaps_p, "{variant} K={k}: socket diverged from pooled");
+    assert_eq!(alpha_x, alpha_p);
+    assert_eq!(w_x, w_p);
+}
+
+#[test]
+fn socket_matches_in_process_cocoa_plus() {
+    assert_three_way_identical(4, true, 42);
+}
+
+#[test]
+fn socket_matches_in_process_cocoa() {
+    assert_three_way_identical(4, false, 42);
 }
 
 #[test]

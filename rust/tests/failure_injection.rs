@@ -271,6 +271,198 @@ fn mismatched_partition_rejected() {
     assert!(res.is_err());
 }
 
+// ---------------------------------------------------------------------
+// Socket executor: real worker *processes* misbehaving. Every failure
+// here must surface as a typed PoolError naming the worker — never a
+// hang, never a leader-side panic.
+// ---------------------------------------------------------------------
+
+mod socket_failures {
+    use super::*;
+    use cocoa::coordinator::pool::Executor;
+    use cocoa::coordinator::socket::SocketExecutor;
+    use cocoa::subproblem::{LocalBlock, SubproblemSpec};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    /// Blocks + spec + a socket-ready config over the shared
+    /// failure-injection problem (n=60, K=3, d=6).
+    fn socket_parts() -> (Vec<LocalBlock>, SubproblemSpec, CocoaConfig) {
+        let (p, part) = problem(60);
+        let layout = part.apply_permutation(Arc::clone(&p.data));
+        let blocks = LocalBlock::from_layout(&layout);
+        let spec = SubproblemSpec {
+            loss: Loss::Hinge,
+            lambda: 1e-2,
+            n_global: 60,
+            sigma_prime: 3.0,
+            k: 3,
+        };
+        let mut cfg = CocoaConfig::cocoa_plus(
+            3,
+            Loss::Hinge,
+            1e-2,
+            SolverSpec::SdcaEpochs { epochs: 1.0 },
+        )
+        .with_executor(ExecutorChoice::Socket)
+        .with_socket_worker_bin(env!("CARGO_BIN_EXE_cocoa"));
+        cfg.socket.round_timeout = Some(Duration::from_secs(20));
+        (blocks, spec, cfg)
+    }
+
+    #[test]
+    fn killed_worker_is_named_and_executor_keeps_erroring() {
+        let (blocks, spec, cfg) = socket_parts();
+        let mut exec = SocketExecutor::spawn(&blocks, spec, &cfg).expect("spawn workers");
+        assert_eq!(exec.kind(), "socket");
+        let w = vec![0.0; 6];
+        exec.run_round(&w, 1.0).expect("healthy round must succeed");
+
+        exec.kill_worker(1);
+        let err = exec
+            .run_round(&w, 1.0)
+            .expect_err("a dead worker must fail the round");
+        assert!(
+            err.failed.iter().any(|(id, _)| *id == 1),
+            "worker 1 not named: {err}"
+        );
+        assert!(
+            err.failed.iter().all(|(id, _)| *id == 1),
+            "healthy workers wrongly blamed: {err}"
+        );
+        // The executor stays answerable: further rounds and certificate
+        // evaluations are errors, not hangs.
+        assert!(exec.run_round(&w, 1.0).is_err());
+        assert!(exec.eval_partials(&w).is_err());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn worker_binary_that_never_handshakes_fails_fast() {
+        // /bin/true exits immediately without connecting: spawn must
+        // detect the dead child well before the handshake timeout.
+        let (blocks, spec, mut cfg) = socket_parts();
+        cfg.socket.worker_bin = Some("/bin/true".into());
+        cfg.socket.handshake_timeout = Duration::from_secs(60);
+        let t0 = Instant::now();
+        let err = SocketExecutor::spawn(&blocks, spec, &cfg)
+            .expect_err("/bin/true cannot complete the handshake");
+        assert!(
+            err.to_string().contains("before handshake"),
+            "unexpected failure mode: {err}"
+        );
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "fail-fast took {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn worker_process_rejects_malformed_init_and_exits() {
+        use cocoa::coordinator::socket::validate_hello;
+        use cocoa::coordinator::wire;
+        use cocoa::util::json::{jnum, jstr, Json};
+        use std::os::unix::net::UnixListener;
+        use std::process::{Command, Stdio};
+
+        // Act as a (confused) leader: accept the worker's hello, then
+        // send an init whose CSR indptr is not monotone. The worker must
+        // reject it as a typed error and exit nonzero — not index out of
+        // bounds later in the solve, and not hang waiting for rounds.
+        let sock = std::env::temp_dir().join(format!("cocoa-fi-{}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&sock);
+        let listener = UnixListener::bind(&sock).expect("bind test socket");
+        let mut child = Command::new(env!("CARGO_BIN_EXE_cocoa"))
+            .arg("worker")
+            .arg("--connect")
+            .arg(&sock)
+            .arg("--worker")
+            .arg("0")
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn worker");
+        let (stream, _) = listener.accept().expect("worker connects");
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let hello = wire::read_frame(&mut &stream).expect("hello frame");
+        assert_eq!(validate_hello(&hello, 1).expect("well-formed hello"), 0);
+
+        let mut solver = Json::obj();
+        solver.set("kind", jstr("sdca"));
+        solver.set("h", jnum(1.0));
+        let bad = wire::Frame::new("init")
+            .set_num("id", 0.0)
+            .set_num("k", 1.0)
+            .set_num("n", 2.0)
+            .set_num("d", 3.0)
+            .set_num("n_local", 2.0)
+            .set_str("loss", "hinge")
+            .set_json("solver", solver)
+            .with_f64s("par", vec![0.01, 1.0, 0.0, 0.0, 0.0])
+            .with_f64s("y", vec![1.0, -1.0])
+            .with_f64s("nr", vec![1.0, 1.0])
+            .with_f64s("v", vec![1.0, 0.5, -0.5])
+            .with_u64s("ip", vec![0, 3, 2]) // not monotone
+            .with_u64s("ix", vec![0, 1, 2])
+            .with_u64s("seed", vec![42]);
+        wire::write_frame(&mut &stream, &bad).expect("send bad init");
+
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let status = loop {
+            if let Some(st) = child.try_wait().unwrap() {
+                break st;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "worker did not exit on malformed init"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        };
+        assert!(
+            !status.success(),
+            "malformed init must exit nonzero, got {status}"
+        );
+        let _ = std::fs::remove_file(&sock);
+    }
+}
+
+#[test]
+fn truncated_checkpoint_file_rejected() {
+    use cocoa::coordinator::checkpoint::{Checkpoint, CheckpointError};
+    // A checkpoint file cut off mid-write (the classic crash-during-save)
+    // must come back as a Parse error from load — never a panic, and
+    // never a half-restored trainer.
+    let (p, part) = problem(60);
+    let cfg = CocoaConfig::cocoa_plus(
+        3,
+        Loss::Hinge,
+        1e-2,
+        SolverSpec::SdcaEpochs { epochs: 1.0 },
+    )
+    .with_rounds(5)
+    .with_parallel(false);
+    let mut t = Trainer::new(p, part, cfg);
+    t.round();
+    let ck = Checkpoint::capture(&t);
+    let dir = std::env::temp_dir().join("cocoa_fi_ck");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("truncated.json");
+    ck.save(&path).unwrap();
+    let full = std::fs::read_to_string(&path).unwrap();
+    // The compact JSON is pure ASCII, so any byte cut is a char cut.
+    std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+    match Checkpoint::load(&path) {
+        Err(CheckpointError::Parse(_)) => {}
+        other => panic!("truncated checkpoint must be a Parse error, got {other:?}"),
+    }
+    std::fs::remove_file(&path).ok();
+}
+
 #[test]
 fn recovery_after_transient_bad_round_via_checkpoint() {
     use cocoa::coordinator::checkpoint::Checkpoint;
