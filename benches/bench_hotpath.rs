@@ -4,9 +4,10 @@
 
 use cocoa::data::partition::random_balanced;
 use cocoa::data::synth::{generate, SynthConfig};
-use cocoa::linalg::{dense, power_iter};
+use cocoa::linalg::{dense, power_iter, CsrMatrix};
 use cocoa::objective::Problem;
 use cocoa::prelude::*;
+use cocoa::serve::Model;
 use cocoa::solver::sdca::SdcaSolver;
 use cocoa::solver::{LocalSolveCtx, LocalSolver};
 use cocoa::subproblem::{LocalBlock, SubproblemSpec};
@@ -136,6 +137,46 @@ fn main() {
     });
     b.run("certificates_socket_k8_n8192_d256", || {
         black_box(socket.eval().gap)
+    });
+
+    // ---- serving predict path (`cocoa serve` per-request cost) ----------
+    // What one POST /predict pays: untrusted (col, val) pairs → validated
+    // CSR row (sort, merge, zero-drop) → two-lane dot → loss link. The
+    // row_dot+link line isolates the scoring kernel from row construction.
+    let d = 1024usize;
+    let model = Model {
+        loss: Loss::Logistic,
+        lambda: 1e-3,
+        n_train: 0,
+        k: 1,
+        w: (0..d).map(|i| (i as f64 * 0.37).sin()).collect(),
+        alpha: vec![],
+        source: "bench".into(),
+    };
+    // 64 nnz, deliberately unsorted (stride-533 walk over 1024 columns)
+    let pairs: Vec<(usize, f64)> = (0..64)
+        .map(|i| ((i * 533 + 17) % d, (i as f64 * 0.13).cos()))
+        .collect();
+    b.run("serve_predict_single_64nnz_d1024", || {
+        black_box(model.predict_pairs(&pairs).unwrap().score)
+    });
+    let row = CsrMatrix::row_from_pairs(d, &pairs).unwrap();
+    b.run("serve_row_dot_link_64nnz_d1024", || {
+        black_box(model.prediction_from_score(row.row_dot(0, &model.w)).value)
+    });
+    let batch: Vec<Vec<(usize, f64)>> = (0..64)
+        .map(|r| {
+            (0..64)
+                .map(|i| ((i * 533 + 17 * (r + 1)) % d, (i as f64 * 0.13 + r as f64).cos()))
+                .collect()
+        })
+        .collect();
+    b.run("serve_predict_batch64_64nnz_d1024", || {
+        let mut acc = 0.0;
+        for p in &batch {
+            acc += model.predict_pairs(p).unwrap().score;
+        }
+        black_box(acc)
     });
 
     b.report();

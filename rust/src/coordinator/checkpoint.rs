@@ -5,6 +5,7 @@
 
 use crate::coordinator::Trainer;
 use crate::util::json::{jarr, jnum, jobj, jstr, Json};
+use std::borrow::Cow;
 use std::path::Path;
 
 #[derive(Debug)]
@@ -54,19 +55,43 @@ pub struct Checkpoint {
     pub w: Vec<f64>,
 }
 
-impl Checkpoint {
-    pub fn capture(trainer: &Trainer) -> Checkpoint {
-        Checkpoint {
+/// A borrowed view of checkpointable trainer state — what
+/// [`Checkpoint::capture`] used to clone eagerly. Serialization runs off
+/// this view, so *saving* a trainer's state copies nothing: `w` is always
+/// borrowed, and `alpha` is borrowed whenever the shard layout kept the
+/// caller's row order (contiguous partitions). Only a permuted layout
+/// forces the one gather back into caller order (`Cow::Owned`), because
+/// the on-disk format stores α layout-independently.
+pub struct CheckpointView<'a> {
+    pub n: usize,
+    pub d: usize,
+    pub k: usize,
+    pub lambda: f64,
+    pub loss: &'a str,
+    pub alpha: Cow<'a, [f64]>,
+    pub w: &'a [f64],
+}
+
+impl<'a> CheckpointView<'a> {
+    pub fn capture(trainer: &'a Trainer) -> CheckpointView<'a> {
+        let alpha = if trainer.rows.is_identity() {
+            Cow::Borrowed(trainer.alpha.as_slice())
+        } else {
+            Cow::Owned(trainer.alpha_original())
+        };
+        CheckpointView {
             n: trainer.problem.n(),
             d: trainer.problem.d(),
             k: trainer.cfg.k,
             lambda: trainer.cfg.lambda,
-            loss: trainer.cfg.loss.name().to_string(),
-            alpha: trainer.alpha_original(),
-            w: trainer.w.clone(),
+            loss: trainer.cfg.loss.name(),
+            alpha,
+            w: &trainer.w,
         }
     }
 
+    /// The one checkpoint serializer: [`Checkpoint::to_json`] routes its
+    /// owned buffers through here, so the two capture paths cannot drift.
     pub fn to_json(&self) -> Json {
         jobj(vec![
             ("version", jnum(1.0)),
@@ -74,10 +99,53 @@ impl Checkpoint {
             ("d", jnum(self.d as f64)),
             ("k", jnum(self.k as f64)),
             ("lambda", jnum(self.lambda)),
-            ("loss", jstr(&self.loss)),
+            ("loss", jstr(self.loss)),
             ("alpha", jarr(self.alpha.iter().map(|&v| jnum(v)).collect())),
             ("w", jarr(self.w.iter().map(|&v| jnum(v)).collect())),
         ])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), CheckpointError> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string_compact())?;
+        Ok(())
+    }
+
+    /// Materialize an owned [`Checkpoint`] (the restore-path object).
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            n: self.n,
+            d: self.d,
+            k: self.k,
+            lambda: self.lambda,
+            loss: self.loss.to_string(),
+            alpha: self.alpha.to_vec(),
+            w: self.w.to_vec(),
+        }
+    }
+}
+
+impl Checkpoint {
+    pub fn capture(trainer: &Trainer) -> Checkpoint {
+        CheckpointView::capture(trainer).to_checkpoint()
+    }
+
+    fn view(&self) -> CheckpointView<'_> {
+        CheckpointView {
+            n: self.n,
+            d: self.d,
+            k: self.k,
+            lambda: self.lambda,
+            loss: &self.loss,
+            alpha: Cow::Borrowed(&self.alpha),
+            w: &self.w,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        self.view().to_json()
     }
 
     pub fn from_json(j: &Json) -> Result<Checkpoint, CheckpointError> {
@@ -134,11 +202,7 @@ impl Checkpoint {
     }
 
     pub fn save(&self, path: &Path) -> Result<(), CheckpointError> {
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
-        }
-        std::fs::write(path, self.to_json().to_string_compact())?;
-        Ok(())
+        self.view().save(path)
     }
 
     pub fn load(path: &Path) -> Result<Checkpoint, CheckpointError> {
@@ -273,6 +337,65 @@ mod tests {
         let db = b.problem.dual_value(&b.alpha, &b.w);
         assert!((da - db).abs() < 5e-3, "{da} vs {db}");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn view_serialization_is_byte_identical_to_owned_capture() {
+        // The zero-copy view and the owned capture must write the same
+        // bytes — same JSON text and same file contents — or a resumed
+        // run could depend on which capture path produced its checkpoint.
+        let mut t = trainer();
+        for _ in 0..3 {
+            t.round();
+        }
+        let owned = Checkpoint::capture(&t);
+        let view = CheckpointView::capture(&t);
+        assert_eq!(
+            view.to_json().to_string_compact(),
+            owned.to_json().to_string_compact()
+        );
+        let p_owned = std::env::temp_dir().join("cocoa_ck_owned.json");
+        let p_view = std::env::temp_dir().join("cocoa_ck_view.json");
+        owned.save(&p_owned).unwrap();
+        view.save(&p_view).unwrap();
+        assert_eq!(
+            std::fs::read(&p_owned).unwrap(),
+            std::fs::read(&p_view).unwrap(),
+            "view save differs from owned save on disk"
+        );
+        // and the view round-trips into an equal owned checkpoint
+        assert_eq!(view.to_checkpoint(), owned);
+        std::fs::remove_file(&p_owned).ok();
+        std::fs::remove_file(&p_view).ok();
+    }
+
+    #[test]
+    fn view_borrows_alpha_when_layout_keeps_caller_order() {
+        // Contiguous partitions keep the identity row permutation, so the
+        // view must not gather (Cow::Borrowed); a random partition
+        // permutes rows and needs the one gather back (Cow::Owned).
+        let data = generate(&SynthConfig::new("ck", 80, 8).seed(1));
+        let part = crate::data::partition::contiguous(80, 4);
+        let problem = Problem::new(data, Loss::Hinge, 1e-2);
+        let cfg = CocoaConfig::cocoa_plus(
+            4,
+            Loss::Hinge,
+            1e-2,
+            SolverSpec::SdcaEpochs { epochs: 1.0 },
+        )
+        .with_rounds(50)
+        .with_parallel(false);
+        let t = Trainer::new(problem, part, cfg);
+        assert!(matches!(
+            CheckpointView::capture(&t).alpha,
+            std::borrow::Cow::Borrowed(_)
+        ));
+
+        let t2 = trainer(); // random_balanced → permuted layout
+        assert!(matches!(
+            CheckpointView::capture(&t2).alpha,
+            std::borrow::Cow::Owned(_)
+        ));
     }
 
     #[test]

@@ -314,6 +314,37 @@ impl Trainer {
         self.rows.to_original(&self.alpha)
     }
 
+    /// Adopt a caller-row-order dual vector as the starting iterate and
+    /// recompute w = Aα/(λn) against *this* trainer's data — the
+    /// warm-start entry point for re-training on drifted data.
+    ///
+    /// Contrast with [`checkpoint::Checkpoint::restore`], which copies a
+    /// stored w and *verifies* it against α, rejecting any drift: here the
+    /// data may legitimately differ from what produced α (labels flipped,
+    /// features re-measured), so w is derived fresh and the (α, w) pair is
+    /// consistent by construction. Note α from old labels can start
+    /// dual-infeasible on the new rows — the first local solves clamp it
+    /// back into the feasible box, and callers driving this through a
+    /// [`Driver`] should allow an infinite initial gap
+    /// (`StopPolicy::with_divergence_gap(f64::INFINITY)`).
+    pub fn warm_start_from_alpha(&mut self, alpha_original: &[f64]) -> Result<(), String> {
+        if alpha_original.len() != self.problem.n() {
+            return Err(format!(
+                "warm-start α has {} entries, problem has n = {}",
+                alpha_original.len(),
+                self.problem.n()
+            ));
+        }
+        if alpha_original.iter().any(|v| !v.is_finite()) {
+            return Err("warm-start α contains non-finite values".into());
+        }
+        let layout_alpha = self.rows.to_permuted(alpha_original);
+        self.alpha.copy_from_slice(&layout_alpha);
+        self.problem.primal_from_dual(&self.alpha, &mut self.w);
+        self.sync_workers_from_alpha();
+        Ok(())
+    }
+
     /// Recompute w from α and report the max deviation from the maintained
     /// w (the coordinator's central invariant; ~0 up to float error).
     pub fn primal_consistency_error(&self) -> f64 {
@@ -391,6 +422,10 @@ impl Method for Trainer {
     fn train_error(&self) -> Option<f64> {
         Some(self.problem.data.classification_error(&self.w))
     }
+
+    fn checkpoint(&self) -> Option<checkpoint::Checkpoint> {
+        Some(checkpoint::Checkpoint::capture(self))
+    }
 }
 
 #[cfg(test)]
@@ -429,6 +464,49 @@ mod tests {
             "w drifted from Aα/(λn): {}",
             t.primal_consistency_error()
         );
+    }
+
+    #[test]
+    fn warm_start_adopts_alpha_and_recomputes_w() {
+        // Train one trainer, warm-start a fresh one (different partition
+        // seed → different internal layout) from its caller-order α: the
+        // adopted state must satisfy w = Aα/(λn) by construction and reach
+        // the workers, and a converged α must leave the warm trainer
+        // already near the optimum (the drift re-training story).
+        let mut src = trainer(4, |c| c.with_rounds(60).with_gap_tol(1e-4));
+        src.run();
+        let src_gap = src.eval().gap;
+        let alpha0 = src.alpha_original();
+
+        let p = problem(80, 10, 0.05, Loss::Hinge);
+        let part = random_balanced(80, 4, 99); // different permutation
+        let cfg = CocoaConfig::cocoa_plus(
+            4,
+            Loss::Hinge,
+            0.05,
+            SolverSpec::SdcaEpochs { epochs: 1.0 },
+        )
+        .with_rounds(50)
+        .with_parallel(false);
+        let mut warm = Trainer::new(p, part, cfg);
+        warm.warm_start_from_alpha(&alpha0).unwrap();
+        assert!(warm.primal_consistency_error() < 1e-12);
+        assert_eq!(warm.alpha_original(), alpha0, "layout gather lost α");
+        // same data + same (α, w) ⇒ same global gap, up to the different
+        // partition's partial-sum order
+        let gap = warm.eval().gap;
+        assert!(
+            (gap - src_gap).abs() < 1e-9,
+            "warm-start gap {gap} vs source gap {src_gap}"
+        );
+
+        // hostile warm starts are rejected without touching state
+        let before = warm.alpha.clone();
+        assert!(warm.warm_start_from_alpha(&alpha0[..10]).is_err());
+        let mut bad = alpha0.clone();
+        bad[0] = f64::NAN;
+        assert!(warm.warm_start_from_alpha(&bad).is_err());
+        assert_eq!(warm.alpha, before);
     }
 
     #[test]

@@ -78,15 +78,17 @@ impl Dataset {
         self.y.iter().filter(|&&v| v > 0.0).count() as f64 / self.y.len() as f64
     }
 
-    /// 0/1 error of a linear classifier w on this dataset.
+    /// 0/1 error of a linear classifier w on this dataset. The decision
+    /// boundary is [`crate::loss::misclassified`] — the same rule the
+    /// serving path's [`crate::loss::classify`] resolves, so trained
+    /// train-error and served labels can never drift apart.
     pub fn classification_error(&self, w: &[f64]) -> f64 {
         if self.n() == 0 {
             return 0.0;
         }
         let mut wrong = 0usize;
         for i in 0..self.n() {
-            let margin = self.y[i] * self.x.row_dot(i, w);
-            if margin <= 0.0 {
+            if crate::loss::misclassified(self.x.row_dot(i, w), self.y[i]) {
                 wrong += 1;
             }
         }

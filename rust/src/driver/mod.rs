@@ -93,6 +93,15 @@ pub trait Method {
     fn train_error(&self) -> Option<f64> {
         None
     }
+
+    /// A serializable snapshot of the optimizer state, for methods whose
+    /// full state is checkpointable (the CoCoA trainer: α *is* the
+    /// complete state). `None` for baselines that keep no restorable dual
+    /// state — `cocoa train --checkpoint-out` reports those as such
+    /// instead of writing a half-checkpoint.
+    fn checkpoint(&self) -> Option<crate::coordinator::checkpoint::Checkpoint> {
+        None
+    }
 }
 
 /// The Fig.-2 stopping rule: stop once the dual suboptimality

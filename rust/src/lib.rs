@@ -128,6 +128,18 @@
 //! [`driver::registry::build_method`] — the same path `cocoa train
 //! --method cocoa-plus|cocoa|mb-sgd|mb-sdca|one-shot|admm|serial-sdca`
 //! uses.
+//!
+//! ## Serving
+//!
+//! A trained model is one command away from an HTTP prediction service:
+//! `cocoa train … --checkpoint-out model.json` captures the full
+//! primal-dual state, and `cocoa serve --checkpoint model.json --addr
+//! 127.0.0.1:8080` serves it ([`serve`]) — `POST /predict` scores sparse
+//! feature vectors with the training-time kernel bit-for-bit, `/reload`
+//! hot-swaps checkpoints, and `/retrain` warm-starts the [`driver::Driver`]
+//! from the served α on drifted data without dropping traffic. The HTTP
+//! layer is hand-rolled on `std::net` with the same hostile-input
+//! discipline as the socket executor's wire format.
 
 pub mod baselines;
 pub mod coordinator;
@@ -140,6 +152,7 @@ pub mod objective;
 pub mod report;
 #[cfg(feature = "xla")]
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod subproblem;
 pub mod testing;

@@ -70,6 +70,51 @@ impl CsrMatrix {
         }
     }
 
+    /// Build a single-row matrix from one *untrusted* (column, value)
+    /// list — the serving-side constructor for client feature vectors.
+    /// Same semantics as [`CsrMatrix::from_rows`] (columns may be
+    /// unsorted, duplicates are summed left-to-right after a stable sort,
+    /// exact zeros are dropped), but hostile input surfaces as `Err`
+    /// instead of a panic: an out-of-range column or non-finite value
+    /// must cost the client a 4xx, never the server its life. Because the
+    /// merge order matches `from_rows` bit for bit, a served row scores
+    /// identically to the same row ingested at training time.
+    pub fn row_from_pairs(cols: usize, pairs: &[(usize, f64)]) -> Result<CsrMatrix, String> {
+        let mut scratch: Vec<(usize, f64)> = Vec::with_capacity(pairs.len());
+        for &(c, v) in pairs {
+            if c >= cols {
+                return Err(format!("feature index {c} out of range (d = {cols})"));
+            }
+            if !v.is_finite() {
+                return Err(format!("feature {c} has non-finite value {v}"));
+            }
+            scratch.push((c, v));
+        }
+        scratch.sort_by_key(|&(c, _)| c);
+        let mut indices = Vec::with_capacity(scratch.len());
+        let mut values = Vec::with_capacity(scratch.len());
+        let mut j = 0;
+        while j < scratch.len() {
+            let (c, mut v) = scratch[j];
+            j += 1;
+            while j < scratch.len() && scratch[j].0 == c {
+                v += scratch[j].1;
+                j += 1;
+            }
+            if v != 0.0 {
+                indices.push(c as u32);
+                values.push(v);
+            }
+        }
+        Ok(CsrMatrix {
+            rows: 1,
+            cols,
+            indptr: vec![0, indices.len()],
+            indices,
+            values,
+        })
+    }
+
     /// Build from a dense row-major matrix (used in tests and the XLA path).
     pub fn from_dense(rows: usize, cols: usize, data: &[f64]) -> CsrMatrix {
         assert_eq!(data.len(), rows * cols);
@@ -378,6 +423,35 @@ mod tests {
         assert_eq!(m.nnz(), 6);
         assert!((m.density() - 6.0 / 9.0).abs() < 1e-12);
         assert_eq!(m.row_nnz(1), 1);
+    }
+
+    #[test]
+    fn row_from_pairs_matches_from_rows_bitwise() {
+        // Unsorted with a duplicate column and an exact zero — the messy
+        // input a serving client is allowed to send.
+        let pairs = vec![(4usize, 0.5), (1, -2.0), (4, 0.25), (0, 1.5), (3, 0.0)];
+        let single = CsrMatrix::row_from_pairs(6, &pairs).unwrap();
+        let reference = CsrMatrix::from_rows(6, &[pairs]);
+        assert_eq!(single, reference);
+        let v = vec![0.5, 1.0, -1.0, 2.0, 4.0, 0.25];
+        assert_eq!(
+            single.row_dot(0, &v).to_bits(),
+            reference.row_dot(0, &v).to_bits()
+        );
+    }
+
+    #[test]
+    fn row_from_pairs_rejects_hostile_input_without_panicking() {
+        let err = CsrMatrix::row_from_pairs(3, &[(3, 1.0)]).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+        let err = CsrMatrix::row_from_pairs(3, &[(1, f64::NAN)]).unwrap_err();
+        assert!(err.contains("non-finite"), "{err}");
+        let err = CsrMatrix::row_from_pairs(3, &[(0, 1.0), (2, f64::INFINITY)]).unwrap_err();
+        assert!(err.contains("non-finite"), "{err}");
+        // empty features are a valid (all-zero) row, not an error
+        let empty = CsrMatrix::row_from_pairs(3, &[]).unwrap();
+        assert_eq!(empty.nnz(), 0);
+        assert_eq!(empty.row_dot(0, &[1.0, 2.0, 3.0]), 0.0);
     }
 
     #[test]

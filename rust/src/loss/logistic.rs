@@ -45,18 +45,23 @@ pub fn conjugate_neg(alpha: f64, y: f64) -> f64 {
     }
 }
 
-/// ℓ'(z) = −y / (1 + exp(yz)).
+/// σ(m) = 1 / (1 + exp(−m)), overflow-free on both tails. This is the
+/// serving link for logistic models — P(y = +1 | x) at score m = wᵀx —
+/// and the building block of [`subgradient`].
 #[inline]
-pub fn subgradient(z: f64, y: f64) -> f64 {
-    let m = y * z;
-    // sigmoid(-m) computed stably
-    let s = if m >= 0.0 {
-        let e = (-m).exp();
+pub fn sigmoid(m: f64) -> f64 {
+    if m <= 0.0 {
+        let e = m.exp();
         e / (1.0 + e)
     } else {
-        1.0 / (1.0 + m.exp())
-    };
-    -y * s
+        1.0 / (1.0 + (-m).exp())
+    }
+}
+
+/// ℓ'(z) = −y / (1 + exp(yz)) = −y·σ(−yz).
+#[inline]
+pub fn subgradient(z: f64, y: f64) -> f64 {
+    -y * sigmoid(-(y * z))
 }
 
 /// u with −u ∈ ∂ℓ(z).
@@ -113,6 +118,22 @@ mod tests {
         // large margins: loss → 0, no overflow
         assert!(value(1000.0, 1.0) < 1e-10);
         assert!(value(-1000.0, 1.0) > 999.0);
+    }
+
+    #[test]
+    fn sigmoid_is_stable_and_symmetric() {
+        assert_eq!(sigmoid(0.0), 0.5);
+        // extreme scores saturate without overflow/NaN
+        assert_eq!(sigmoid(1000.0), 1.0);
+        assert!(sigmoid(-1000.0) >= 0.0 && sigmoid(-1000.0) < 1e-300);
+        for zi in -40..=40 {
+            let z = zi as f64 * 0.25;
+            let s = sigmoid(z);
+            assert!((0.0..=1.0).contains(&s));
+            assert!((s + sigmoid(-z) - 1.0).abs() < 1e-15, "σ(z)+σ(−z)≠1 at z={z}");
+            // agrees with the naive formula where it is safe
+            assert!((s - 1.0 / (1.0 + (-z).exp())).abs() < 1e-15);
+        }
     }
 
     #[test]

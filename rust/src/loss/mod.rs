@@ -12,6 +12,31 @@ pub mod logistic;
 pub mod smoothed_hinge;
 pub mod squared;
 
+/// Hard ±1 decision for a raw score z = wᵀx — the serving-side
+/// classification rule. Strictly positive scores are the positive class;
+/// a zero score carries no evidence and falls to −1, consistent with
+/// [`misclassified`]'s convention that a zero margin is never counted as
+/// a correct classification.
+#[inline]
+pub fn classify(z: f64) -> f64 {
+    if z > 0.0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// Training-side 0/1 miss rule for true label y ∈ {−1, +1}: a row is
+/// correct only when the score lands strictly on the label's side
+/// (yz > 0). This and [`classify`] are the crate's one sign/threshold
+/// rule — `Dataset::classification_error` (hence every
+/// `Method::train_error`) and the serving path both resolve the z = 0
+/// boundary here rather than re-deriving it.
+#[inline]
+pub fn misclassified(z: f64, y: f64) -> bool {
+    y * z <= 0.0
+}
+
 /// Which convex loss to use. All methods are `#[inline]` match-dispatched,
 /// so the SDCA inner loop pays no dynamic-dispatch cost.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -109,6 +134,25 @@ impl Loss {
             Loss::Squared => squared::coordinate_delta(alpha, y, xv, coef),
             Loss::Absolute => absolute::coordinate_delta(alpha, y, xv, coef),
         }
+    }
+
+    /// The serving link: map a raw score z = wᵀx to the loss's natural
+    /// prediction — a hard ±1 label for the hinge family, the calibrated
+    /// probability P(y = +1 | x) for logistic, and the score itself for
+    /// the regression losses.
+    #[inline]
+    pub fn predict(&self, z: f64) -> f64 {
+        match self {
+            Loss::Hinge | Loss::SmoothedHinge { .. } => classify(z),
+            Loss::Logistic => logistic::sigmoid(z),
+            Loss::Squared | Loss::Absolute => z,
+        }
+    }
+
+    /// Whether [`Loss::predict`] outputs class decisions/probabilities
+    /// (true) rather than real-valued regression targets (false).
+    pub fn is_classification(&self) -> bool {
+        !matches!(self, Loss::Squared | Loss::Absolute)
     }
 
     /// Lipschitz constant L (Definition 1), if the loss is Lipschitz.
@@ -211,6 +255,58 @@ mod tests {
             }
         }
         assert!(Loss::Squared.value(0.0, 1.0) <= 1.0);
+    }
+
+    #[test]
+    fn classify_and_misclassified_share_one_boundary() {
+        assert_eq!(classify(0.7), 1.0);
+        assert_eq!(classify(-0.7), -1.0);
+        assert_eq!(classify(f64::MIN_POSITIVE), 1.0);
+        // zero score carries no evidence → negative class
+        assert_eq!(classify(0.0), -1.0);
+        assert_eq!(classify(-0.0), -1.0);
+        for &z in &[-2.0, -0.0, 0.0, 1e-300, 3.5] {
+            for &y in &[1.0, -1.0] {
+                // the two views of the same rule: wrong ⟺ label disagrees
+                // or the margin is exactly zero
+                assert_eq!(
+                    misclassified(z, y),
+                    classify(z) != y || z == 0.0,
+                    "z={z} y={y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn predict_links_per_loss() {
+        // hinge family: hard ±1 decision
+        for loss in [Loss::Hinge, Loss::SmoothedHinge { mu: 0.5 }] {
+            assert_eq!(loss.predict(2.5), 1.0);
+            assert_eq!(loss.predict(-0.1), -1.0);
+            assert_eq!(loss.predict(0.0), -1.0);
+            assert!(loss.is_classification());
+        }
+        // logistic: calibrated probability, monotone, agrees with classify
+        // on the strict side of the boundary (p > ½ ⟺ +1)
+        assert_eq!(Loss::Logistic.predict(0.0), 0.5);
+        assert!(Loss::Logistic.predict(3.0) > 0.5);
+        assert!(Loss::Logistic.predict(-3.0) < 0.5);
+        assert!((Loss::Logistic.predict(1.0) - 1.0 / (1.0 + (-1.0f64).exp())).abs() < 1e-15);
+        assert!(Loss::Logistic.is_classification());
+        for zi in -10..=10 {
+            let z = zi as f64 * 0.4;
+            let p = Loss::Logistic.predict(z);
+            assert!((0.0..=1.0).contains(&p));
+            assert_eq!(p > 0.5, classify(z) == 1.0 && z != 0.0);
+        }
+        // regression losses: identity link
+        for loss in [Loss::Squared, Loss::Absolute] {
+            for &z in &[-4.25, 0.0, 17.5] {
+                assert_eq!(loss.predict(z), z);
+            }
+            assert!(!loss.is_classification());
+        }
     }
 
     #[test]

@@ -7,12 +7,14 @@
 //!   sigma        report partition constants σ_k, σ, and the Table-1 ratio
 //!   experiment   regenerate a paper table/figure: table1|table2|fig1|fig2|fig3|rates|all
 //!   artifacts-check   load + smoke-run the AOT artifacts via PJRT
+//!   serve        HTTP prediction service from a training checkpoint
 //!   worker       internal: socket-executor worker process (spawned by the leader)
 //!
 //! Run `cocoa help` for flags.
 
 use cocoa::driver::{build_method, CsvStream, ProgressLog};
 use cocoa::prelude::*;
+use cocoa::serve::{serve, Model, ServeConfig};
 use cocoa::util::cli::Args;
 use cocoa::util::logging;
 
@@ -29,6 +31,7 @@ fn main() {
         "sigma" => cmd_sigma(&args),
         "experiment" => cocoa::experiments::run_from_cli(&args),
         "artifacts-check" => cmd_artifacts_check(&args),
+        "serve" => cmd_serve(&args),
         "worker" => cocoa::coordinator::socket::worker_main(&args),
         "help" | "--help" => {
             print_help();
@@ -60,11 +63,17 @@ SUBCOMMANDS
                                    --executor <auto|sequential|pooled|socket>  (socket = worker processes)
                    mb-* variants:  --batch <per-worker batch size>  (mb-sdca: --beta <scaling>)
                    admm:           --rho <penalty> --local-iters <inner steps>
+                   --checkpoint-out <path>   write the full primal-dual state (w, α) after
+                                             the run (cocoa-plus|cocoa only) for `serve`
                    History streams to results/train/<method>_<dataset>.csv while running.
   gen-data         --dataset <name> --scale <s> --seed <s> --out <path.svm>
   sigma            --dataset <name> --scale <s> --ks 16,32,64 --seed <s>
   experiment       table1|table2|fig1|fig2|fig3|rates|ablation|all  [--quick] [--scale s]
   artifacts-check  --artifacts <dir>
+  serve            --checkpoint <path> [--addr 127.0.0.1:8080] [--threads <n>]
+                   [--read-timeout-ms <ms>]
+                   HTTP prediction service: GET /healthz /metrics, POST /predict
+                   /reload /retrain /quit (see rustdoc for body shapes)
   worker           internal: spawned by the socket executor (--connect <addr> --worker <id>)
 
 GLOBAL FLAGS
@@ -232,6 +241,78 @@ fn cmd_train(args: &Args) -> i32 {
     if streamed {
         println!("history written to {}", out_path.display());
     }
+    if let Some(out) = args.get_opt("checkpoint-out") {
+        match method.checkpoint() {
+            Some(ck) => match ck.save(std::path::Path::new(out)) {
+                Ok(()) => println!("checkpoint written to {out}"),
+                Err(e) => {
+                    eprintln!("cannot write checkpoint to {out}: {e}");
+                    return 1;
+                }
+            },
+            None => {
+                eprintln!(
+                    "--checkpoint-out: --method {} has no checkpointable dual state \
+                     (use cocoa-plus or cocoa)",
+                    method_name.as_str()
+                );
+                return 2;
+            }
+        }
+    }
+    0
+}
+
+/// `cocoa serve`: load a checkpoint, rebuild the model, and serve
+/// predictions over HTTP until `POST /quit`.
+fn cmd_serve(args: &Args) -> i32 {
+    let Some(ck_path) = args.get_opt("checkpoint") else {
+        eprintln!(
+            "serve needs --checkpoint <path> (produce one with `cocoa train --checkpoint-out`)"
+        );
+        return 2;
+    };
+    let ck = match cocoa::coordinator::checkpoint::Checkpoint::load(std::path::Path::new(ck_path)) {
+        Ok(ck) => ck,
+        Err(e) => {
+            eprintln!("cannot load checkpoint {ck_path}: {e}");
+            return 1;
+        }
+    };
+    let model = match Model::from_checkpoint(ck, ck_path) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("checkpoint {ck_path} is not servable: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "model: loss={} d={} n_train={} lambda={} ({})",
+        model.loss.name(),
+        model.d(),
+        model.n_train,
+        model.lambda,
+        model.source
+    );
+    let mut cfg = ServeConfig::new(&args.get_str("addr", "127.0.0.1:8080"));
+    cfg.threads = args.get_usize("threads", cfg.threads).max(1);
+    let timeout_ms = args.get_u64("read-timeout-ms", cfg.read_timeout.as_millis() as u64);
+    cfg.read_timeout = std::time::Duration::from_millis(timeout_ms.max(1));
+    let handle = match serve(model, cfg) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("cannot bind server: {e}");
+            return 1;
+        }
+    };
+    // Tests and scripts parse this line for the actual port (--addr
+    // host:0 lets the kernel pick); stdout is line-buffered even piped.
+    println!(
+        "serving on http://{}/  (GET /healthz /metrics; POST /predict /reload /retrain /quit)",
+        handle.addr()
+    );
+    handle.wait();
+    println!("server stopped");
     0
 }
 

@@ -1,0 +1,426 @@
+//! Minimal HTTP/1.1 framing for `cocoa serve` — request parser and
+//! response writer, dependency-free, built with the wire.rs hostile-input
+//! discipline: hard size caps, typed errors, per-read socket timeouts
+//! surfaced as [`HttpError::Timeout`], and a wall-clock parse budget so a
+//! byte-dripping peer cannot hold a worker hostage. A malformed request
+//! costs the client one 4xx response and its connection — never a hang,
+//! never the server.
+//!
+//! Scope is deliberately one rung above the wire format and far below a
+//! general web server: one request per connection (`Connection: close`),
+//! declared `Content-Length` bodies only (chunked transfer encoding is
+//! rejected), JSON payloads handled by `util::json` at the router layer.
+
+use std::io::{ErrorKind, Read, Write};
+use std::time::{Duration, Instant};
+
+/// Cap on the request line + header block. 16 KiB fits any sane client;
+/// anything larger is a header bomb and gets 431.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Default cap on a declared request body (4 MiB bounds predict batches).
+pub const DEFAULT_MAX_BODY_BYTES: usize = 4 << 20;
+
+/// Framing limits enforced while reading one request.
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    pub max_head_bytes: usize,
+    pub max_body_bytes: usize,
+    /// Wall-clock budget for parsing one full request: catches peers that
+    /// drip bytes just fast enough to defeat the per-read socket timeout.
+    pub parse_budget: Duration,
+}
+
+impl Default for Limits {
+    fn default() -> Limits {
+        Limits {
+            max_head_bytes: MAX_HEAD_BYTES,
+            max_body_bytes: DEFAULT_MAX_BODY_BYTES,
+            parse_budget: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Typed request-framing failures, in the spirit of `wire::WireError`.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Clean EOF before the first request byte (client connected and left).
+    Closed,
+    /// Peer stopped mid-request.
+    Truncated,
+    /// Request line, headers, or body don't parse.
+    Malformed(String),
+    /// A size cap was exceeded; `what` names which ("head" or "body").
+    TooLarge {
+        what: &'static str,
+        len: usize,
+        limit: usize,
+    },
+    /// A read timed out (stalled or byte-dripping peer).
+    Timeout,
+    Io(std::io::Error),
+}
+
+impl HttpError {
+    /// Status code for the error response; `None` means the peer is gone
+    /// (or the transport failed) and no response should be attempted.
+    pub fn status(&self) -> Option<u16> {
+        match self {
+            HttpError::Malformed(_) | HttpError::Truncated => Some(400),
+            HttpError::TooLarge { what: "head", .. } => Some(431),
+            HttpError::TooLarge { .. } => Some(413),
+            HttpError::Timeout => Some(408),
+            HttpError::Closed | HttpError::Io(_) => None,
+        }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Closed => write!(f, "connection closed before a request"),
+            HttpError::Truncated => write!(f, "connection closed mid-request"),
+            HttpError::Malformed(msg) => write!(f, "malformed request: {msg}"),
+            HttpError::TooLarge { what, len, limit } => {
+                write!(f, "request {what} too large: {len} bytes (limit {limit})")
+            }
+            HttpError::Timeout => write!(f, "timed out reading request"),
+            HttpError::Io(e) => write!(f, "io error reading request: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// One parsed request. Header names are lowercased at parse time.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Target path with any `?query` suffix stripped.
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup (pass the name in lowercase).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// The body as UTF-8 text, or a 400-worthy error.
+    pub fn body_str(&self) -> Result<&str, HttpError> {
+        std::str::from_utf8(&self.body)
+            .map_err(|_| HttpError::Malformed("body is not valid UTF-8".into()))
+    }
+}
+
+fn read_byte<R: Read>(r: &mut R) -> Result<Option<u8>, HttpError> {
+    let mut b = [0u8; 1];
+    loop {
+        match r.read(&mut b) {
+            Ok(0) => return Ok(None),
+            Ok(_) => return Ok(Some(b[0])),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                return Err(HttpError::Timeout)
+            }
+            Err(e) => return Err(HttpError::Io(e)),
+        }
+    }
+}
+
+/// Read and parse exactly one request, enforcing every limit in `limits`.
+/// The head is read byte-by-byte (wrap the stream in a `BufReader`), the
+/// body in bulk after its declared length passes the cap — an oversized
+/// declaration is rejected *before* any allocation.
+pub fn read_request<R: Read>(r: &mut R, limits: &Limits) -> Result<Request, HttpError> {
+    let t0 = Instant::now();
+    let mut head: Vec<u8> = Vec::with_capacity(256);
+    loop {
+        if head.len() >= limits.max_head_bytes {
+            return Err(HttpError::TooLarge {
+                what: "head",
+                len: head.len(),
+                limit: limits.max_head_bytes,
+            });
+        }
+        if t0.elapsed() > limits.parse_budget {
+            return Err(HttpError::Timeout);
+        }
+        match read_byte(r)? {
+            None if head.is_empty() => return Err(HttpError::Closed),
+            None => return Err(HttpError::Truncated),
+            Some(b) => head.push(b),
+        }
+        if head.ends_with(b"\r\n\r\n") {
+            break;
+        }
+    }
+    let text = std::str::from_utf8(&head[..head.len() - 4])
+        .map_err(|_| HttpError::Malformed("header bytes are not UTF-8".into()))?;
+    let mut lines = text.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+        _ => {
+            return Err(HttpError::Malformed(format!(
+                "bad request line {request_line:?}"
+            )))
+        }
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Malformed(format!(
+            "unsupported protocol {version:?}"
+        )));
+    }
+    let path = target.split('?').next().unwrap_or(target).to_string();
+    let mut headers = Vec::new();
+    for line in lines {
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::Malformed(format!("bad header line {line:?}")))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let mut req = Request {
+        method: method.to_string(),
+        path,
+        headers,
+        body: Vec::new(),
+    };
+    if req.header("transfer-encoding").is_some() {
+        return Err(HttpError::Malformed(
+            "chunked transfer encoding unsupported (send Content-Length)".into(),
+        ));
+    }
+    let len = match req.header("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| HttpError::Malformed(format!("bad Content-Length {v:?}")))?,
+    };
+    if len > limits.max_body_bytes {
+        return Err(HttpError::TooLarge {
+            what: "body",
+            len,
+            limit: limits.max_body_bytes,
+        });
+    }
+    if len > 0 {
+        let mut body = vec![0u8; len];
+        let mut filled = 0;
+        while filled < len {
+            if t0.elapsed() > limits.parse_budget {
+                return Err(HttpError::Timeout);
+            }
+            match r.read(&mut body[filled..]) {
+                Ok(0) => return Err(HttpError::Truncated),
+                Ok(k) => filled += k,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    return Err(HttpError::Timeout)
+                }
+                Err(e) => return Err(HttpError::Io(e)),
+            }
+        }
+        req.body = body;
+    }
+    Ok(req)
+}
+
+/// The standard reason phrase for the statuses the router emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// One response, always a JSON body, always `Connection: close`.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub body: String,
+}
+
+impl Response {
+    pub fn json(status: u16, body: crate::util::json::Json) -> Response {
+        Response {
+            status,
+            body: body.to_string_compact(),
+        }
+    }
+
+    pub fn error(status: u16, msg: &str) -> Response {
+        Response::json(
+            status,
+            crate::util::json::jobj(vec![("error", crate::util::json::jstr(msg))]),
+        )
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            self.status,
+            reason(self.status),
+            self.body.len(),
+            self.body
+        )?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(bytes: &[u8]) -> Result<Request, HttpError> {
+        read_request(&mut Cursor::new(bytes.to_vec()), &Limits::default())
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = parse(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.header("host"), Some("x"));
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_with_body_and_query_strip() {
+        let req = parse(
+            b"POST /predict?debug=1 HTTP/1.1\r\nContent-Length: 7\r\nX-Thing: a b\r\n\r\n{\"x\":1}",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/predict");
+        assert_eq!(req.header("x-thing"), Some("a b"));
+        assert_eq!(req.body_str().unwrap(), "{\"x\":1}");
+    }
+
+    #[test]
+    fn garbage_request_line_is_malformed() {
+        for bad in [
+            &b"FROB\r\n\r\n"[..],
+            b" / HTTP/1.1\r\n\r\n",
+            b"GET /x SPDY/3\r\n\r\n",
+            b"GET /x HTTP/1.1 extra\r\n\r\n",
+        ] {
+            match parse(bad) {
+                Err(HttpError::Malformed(_)) => {}
+                other => panic!("{bad:?} → {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn header_without_colon_is_malformed() {
+        assert!(matches!(
+            parse(b"GET / HTTP/1.1\r\nnocolonhere\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn empty_and_truncated_streams_are_typed() {
+        assert!(matches!(parse(b""), Err(HttpError::Closed)));
+        assert!(matches!(
+            parse(b"GET / HTTP/1.1\r\nHost:"),
+            Err(HttpError::Truncated)
+        ));
+        // declared body longer than what arrives
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc"),
+            Err(HttpError::Truncated)
+        ));
+    }
+
+    #[test]
+    fn oversized_head_is_431_worthy() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        raw.extend(vec![b'a'; MAX_HEAD_BYTES + 10]);
+        match parse(&raw) {
+            Err(e @ HttpError::TooLarge { what: "head", .. }) => {
+                assert_eq!(e.status(), Some(431))
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_declared_body_rejected_before_allocation() {
+        let raw = format!(
+            "POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            usize::MAX / 2
+        );
+        match parse(raw.as_bytes()) {
+            Err(e @ HttpError::TooLarge { what: "body", .. }) => {
+                assert_eq!(e.status(), Some(413))
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_content_length_and_chunked_are_malformed() {
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: -3\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn response_writer_emits_framed_json() {
+        let mut out = Vec::new();
+        Response::error(404, "no such endpoint")
+            .write_to(&mut out)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"), "{text}");
+        assert!(text.contains("Content-Type: application/json\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        let body = text.split("\r\n\r\n").nth(1).unwrap();
+        assert_eq!(body, "{\"error\":\"no such endpoint\"}");
+        assert!(text.contains(&format!("Content-Length: {}\r\n", body.len())));
+    }
+
+    #[test]
+    fn error_statuses_map_to_4xx_never_5xx() {
+        let cases: Vec<HttpError> = vec![
+            HttpError::Malformed("x".into()),
+            HttpError::Truncated,
+            HttpError::Timeout,
+            HttpError::TooLarge {
+                what: "body",
+                len: 9,
+                limit: 1,
+            },
+        ];
+        for e in cases {
+            let s = e.status().unwrap();
+            assert!((400..500).contains(&s), "{e} → {s}");
+        }
+        assert_eq!(HttpError::Closed.status(), None);
+    }
+}

@@ -1,0 +1,224 @@
+//! Lock-free serving metrics: request counters, status classes, an
+//! in-flight gauge (RAII guard so a panicking handler still decrements),
+//! and a fixed log-spaced latency histogram. Everything is relaxed
+//! atomics — recording must cost the predict hot path nanoseconds — and
+//! `GET /metrics` renders a consistent-enough JSON snapshot.
+
+use crate::util::json::{jarr, jnum, jobj, jstr, Json};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Histogram bucket upper bounds in microseconds (log-spaced); a final
+/// implicit +∞ bucket catches the rest. Fixed buckets keep recording a
+/// single atomic increment.
+pub const BUCKET_US: [u64; 10] = [
+    50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 100_000, 1_000_000,
+];
+
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    in_flight: AtomicU64,
+    requests_total: AtomicU64,
+    responses_2xx: AtomicU64,
+    responses_4xx: AtomicU64,
+    responses_5xx: AtomicU64,
+    predictions_total: AtomicU64,
+    reloads_total: AtomicU64,
+    retrains_total: AtomicU64,
+    latency_buckets: [AtomicU64; BUCKET_US.len() + 1],
+    latency_sum_us: AtomicU64,
+    latency_count: AtomicU64,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            in_flight: AtomicU64::new(0),
+            requests_total: AtomicU64::new(0),
+            responses_2xx: AtomicU64::new(0),
+            responses_4xx: AtomicU64::new(0),
+            responses_5xx: AtomicU64::new(0),
+            predictions_total: AtomicU64::new(0),
+            reloads_total: AtomicU64::new(0),
+            retrains_total: AtomicU64::new(0),
+            latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            latency_sum_us: AtomicU64::new(0),
+            latency_count: AtomicU64::new(0),
+        }
+    }
+
+    /// Mark one request in flight; the returned guard decrements the
+    /// gauge on drop, so an unwinding handler cannot leak an in-flight.
+    pub fn begin(&self) -> InFlight<'_> {
+        self.requests_total.fetch_add(1, Ordering::Relaxed);
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+        InFlight { metrics: self }
+    }
+
+    /// Record the response status class and end-to-end handler latency.
+    pub fn record_response(&self, status: u16, elapsed: Duration) {
+        let class = match status {
+            200..=299 => &self.responses_2xx,
+            400..=499 => &self.responses_4xx,
+            _ => &self.responses_5xx,
+        };
+        class.fetch_add(1, Ordering::Relaxed);
+        let us = elapsed.as_micros().min(u128::from(u64::MAX)) as u64;
+        let idx = BUCKET_US.partition_point(|&le| us > le);
+        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+        self.latency_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_predictions(&self, count: u64) {
+        self.predictions_total.fetch_add(count, Ordering::Relaxed);
+    }
+
+    pub fn record_reload(&self) {
+        self.reloads_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_retrain(&self) {
+        self.retrains_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    pub fn requests_total(&self) -> u64 {
+        self.requests_total.load(Ordering::Relaxed)
+    }
+
+    /// The `GET /metrics` snapshot. Counters are read relaxed and
+    /// independently — momentarily inconsistent under load, monotone
+    /// per-counter, which is all a scraper needs.
+    pub fn to_json(&self) -> Json {
+        let load = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
+        let buckets: Vec<Json> = self
+            .latency_buckets
+            .iter()
+            .enumerate()
+            .map(|(i, count)| {
+                let le = if i < BUCKET_US.len() {
+                    jnum(BUCKET_US[i] as f64)
+                } else {
+                    jstr("inf")
+                };
+                jobj(vec![("le_us", le), ("count", jnum(load(count)))])
+            })
+            .collect();
+        jobj(vec![
+            ("uptime_s", jnum(self.started.elapsed().as_secs_f64())),
+            ("in_flight", jnum(load(&self.in_flight))),
+            ("requests_total", jnum(load(&self.requests_total))),
+            (
+                "responses",
+                jobj(vec![
+                    ("2xx", jnum(load(&self.responses_2xx))),
+                    ("4xx", jnum(load(&self.responses_4xx))),
+                    ("5xx", jnum(load(&self.responses_5xx))),
+                ]),
+            ),
+            ("predictions_total", jnum(load(&self.predictions_total))),
+            ("reloads_total", jnum(load(&self.reloads_total))),
+            ("retrains_total", jnum(load(&self.retrains_total))),
+            (
+                "latency",
+                jobj(vec![
+                    ("buckets", jarr(buckets)),
+                    ("sum_us", jnum(load(&self.latency_sum_us))),
+                    ("count", jnum(load(&self.latency_count))),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// RAII in-flight guard returned by [`Metrics::begin`].
+pub struct InFlight<'a> {
+    metrics: &'a Metrics,
+}
+
+impl Drop for InFlight<'_> {
+    fn drop(&mut self) {
+        self.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauge_track_requests() {
+        let m = Metrics::new();
+        {
+            let _g = m.begin();
+            let _g2 = m.begin();
+            assert_eq!(m.in_flight(), 2);
+        }
+        assert_eq!(m.in_flight(), 0, "guards must decrement on drop");
+        assert_eq!(m.requests_total(), 2);
+        m.record_response(200, Duration::from_micros(80));
+        m.record_response(404, Duration::from_micros(3));
+        m.record_response(500, Duration::from_millis(20));
+        let j = m.to_json();
+        let resp = j.get("responses").unwrap();
+        assert_eq!(resp.get("2xx").unwrap().as_f64(), Some(1.0));
+        assert_eq!(resp.get("4xx").unwrap().as_f64(), Some(1.0));
+        assert_eq!(resp.get("5xx").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            j.get("latency").unwrap().get("count").unwrap().as_f64(),
+            Some(3.0)
+        );
+    }
+
+    #[test]
+    fn histogram_places_latencies_in_right_buckets() {
+        let m = Metrics::new();
+        // 80µs → bucket le=100; 3µs → le=50; exactly 50µs → le=50 (≤ is
+        // inclusive); 2s → overflow bucket
+        m.record_response(200, Duration::from_micros(80));
+        m.record_response(200, Duration::from_micros(3));
+        m.record_response(200, Duration::from_micros(50));
+        m.record_response(200, Duration::from_secs(2));
+        let j = m.to_json();
+        let buckets = j
+            .get("latency")
+            .unwrap()
+            .get("buckets")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|b| b.get("count").unwrap().as_f64().unwrap())
+            .collect::<Vec<_>>();
+        assert_eq!(buckets.len(), BUCKET_US.len() + 1);
+        assert_eq!(buckets[0], 2.0, "le=50µs bucket: {buckets:?}");
+        assert_eq!(buckets[1], 1.0, "le=100µs bucket: {buckets:?}");
+        assert_eq!(buckets[BUCKET_US.len()], 1.0, "+∞ bucket: {buckets:?}");
+    }
+
+    #[test]
+    fn prediction_and_admin_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_predictions(64);
+        m.record_predictions(1);
+        m.record_reload();
+        m.record_retrain();
+        let j = m.to_json();
+        assert_eq!(j.get("predictions_total").unwrap().as_f64(), Some(65.0));
+        assert_eq!(j.get("reloads_total").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("retrains_total").unwrap().as_f64(), Some(1.0));
+        assert!(j.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+    }
+}

@@ -1,0 +1,44 @@
+//! `cocoa serve` — a dependency-free checkpoint-to-inference HTTP
+//! subsystem.
+//!
+//! A [`Checkpoint`](crate::coordinator::checkpoint::Checkpoint) written
+//! by `cocoa train --checkpoint-out` holds the full primal-dual state
+//! (w, α); this module turns one into a live prediction service over
+//! plain `std::net` — no HTTP crate, no async runtime, mirroring the
+//! repo-wide zero-dependency rule. The served score is **bit-identical**
+//! to training-time evaluation: client feature pairs go through the same
+//! CSR construction and the same two-lane dot kernel the trainer uses.
+//!
+//! Endpoints (all bodies JSON, responses `Connection: close`):
+//!
+//! | method | path       | purpose                                        |
+//! |--------|------------|------------------------------------------------|
+//! | GET    | `/healthz` | liveness + model shape (loss, d, n, λ, source) |
+//! | GET    | `/metrics` | counters, latency histogram, in-flight gauge   |
+//! | POST   | `/predict` | score `{"features": [[i, v], ...]}` or batch `{"rows": [...]}` |
+//! | POST   | `/reload`  | hot-swap to `{"checkpoint": "<path>"}`         |
+//! | POST   | `/retrain` | warm-start the Driver on `{"data": "<path.svm>"}` drift data |
+//! | POST   | `/quit`    | graceful shutdown (drain, join, exit)          |
+//!
+//! Wire discipline follows `worker/wire.rs`: hard size caps on head and
+//! body (431/413), a wall-clock parse budget and socket read timeouts
+//! (408), and typed 4xx for malformed requests — hostile input can cost
+//! one response, never a worker thread and never a hang. `/reload` and
+//! `/retrain` build the replacement model aside and swap an `Arc`, so
+//! in-flight requests finish on the model they started with; `/retrain`
+//! warm-starts from the served α
+//! ([`Trainer::warm_start_from_alpha`](crate::coordinator::Trainer::warm_start_from_alpha))
+//! while the other workers keep serving.
+//!
+//! Pure std cannot install signal handlers, so SIGTERM is the blunt
+//! path; orchestration wanting a drained shutdown POSTs `/quit`.
+
+pub mod http;
+pub mod metrics;
+pub mod predict;
+pub mod router;
+pub mod server;
+
+pub use http::{HttpError, Request, Response};
+pub use predict::{Model, Prediction};
+pub use server::{serve, ServeConfig, ServerHandle};

@@ -1,0 +1,258 @@
+//! Checkpoint → servable model: validate a [`Checkpoint`] into a
+//! [`Model`] and score sparse client feature vectors with *exactly* the
+//! training-time computation — the same CSR construction
+//! ([`CsrMatrix::row_from_pairs`]: sort, merge duplicates, drop zeros)
+//! and the same two-lane [`CsrMatrix::row_dot`] kernel — so a served
+//! score is bit-identical to what the trainer's own evaluation would
+//! produce for that row. The link on top is [`Loss::predict`]: hard ±1
+//! for the hinge family, σ(z) for logistic, identity for regression.
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::linalg::CsrMatrix;
+use crate::loss::{classify, Loss};
+use crate::util::json::{jnum, jobj, Json};
+
+/// An immutable, fully validated model. The server hands these out
+/// behind an `Arc` swap, so /reload and /retrain replace the whole model
+/// atomically while in-flight requests finish on the one they started
+/// with. `alpha` rides along (in caller row order) because it is the
+/// complete optimizer state — /retrain warm-starts the Driver from it.
+#[derive(Debug)]
+pub struct Model {
+    pub loss: Loss,
+    pub lambda: f64,
+    /// Rows the checkpointed α was trained on (drift data must match).
+    pub n_train: usize,
+    /// Worker count the checkpoint was trained with (retrain default).
+    pub k: usize,
+    pub w: Vec<f64>,
+    pub alpha: Vec<f64>,
+    /// Where this model came from (checkpoint path or "retrain:<data>").
+    pub source: String,
+}
+
+impl Model {
+    /// Validate a checkpoint into a servable model. Everything a hostile
+    /// or truncated checkpoint could get wrong is rejected here, once,
+    /// so the predict hot path never re-checks.
+    pub fn from_checkpoint(ck: Checkpoint, source: &str) -> Result<Model, String> {
+        let loss = Loss::parse(&ck.loss)
+            .ok_or_else(|| format!("checkpoint has unknown loss {:?}", ck.loss))?;
+        if ck.w.len() != ck.d {
+            return Err(format!(
+                "checkpoint w has {} entries, header says d = {}",
+                ck.w.len(),
+                ck.d
+            ));
+        }
+        if ck.alpha.len() != ck.n {
+            return Err(format!(
+                "checkpoint α has {} entries, header says n = {}",
+                ck.alpha.len(),
+                ck.n
+            ));
+        }
+        if ck.d == 0 {
+            return Err("checkpoint has d = 0 (nothing to score)".into());
+        }
+        if !ck.lambda.is_finite() || ck.lambda <= 0.0 {
+            return Err(format!("checkpoint λ must be positive, got {}", ck.lambda));
+        }
+        if ck.alpha.iter().chain(ck.w.iter()).any(|v| !v.is_finite()) {
+            return Err("checkpoint contains non-finite values".into());
+        }
+        Ok(Model {
+            loss,
+            lambda: ck.lambda,
+            n_train: ck.n,
+            k: ck.k,
+            w: ck.w,
+            alpha: ck.alpha,
+            source: source.to_string(),
+        })
+    }
+
+    /// Feature dimension d (the length a dense input would have).
+    pub fn d(&self) -> usize {
+        self.w.len()
+    }
+
+    /// Score one sparse feature vector given as *untrusted* (index,
+    /// value) pairs — unsorted and duplicated columns are fine, an
+    /// out-of-range index or non-finite value is a client error.
+    pub fn predict_pairs(&self, pairs: &[(usize, f64)]) -> Result<Prediction, String> {
+        let row = CsrMatrix::row_from_pairs(self.d(), pairs)?;
+        Ok(self.prediction_from_score(row.row_dot(0, &self.w)))
+    }
+
+    /// The served quantities for a raw score z = wᵀx.
+    pub fn prediction_from_score(&self, score: f64) -> Prediction {
+        Prediction {
+            score,
+            value: self.loss.predict(score),
+            label: if self.loss.is_classification() {
+                Some(classify(score))
+            } else {
+                None
+            },
+        }
+    }
+}
+
+/// One prediction: the raw score wᵀx, the loss's link output
+/// ([`Loss::predict`]), and — for classification losses — the hard ±1
+/// decision from the shared [`classify`] rule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Prediction {
+    pub score: f64,
+    pub value: f64,
+    pub label: Option<f64>,
+}
+
+impl Prediction {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("score", jnum(self.score)), ("prediction", jnum(self.value))];
+        if let Some(label) = self.label {
+            fields.push(("label", jnum(label)));
+        }
+        jobj(fields)
+    }
+}
+
+/// Parse one feature vector from its JSON form: an array of
+/// `[index, value]` pairs (the sparse libsvm-like shape). Indices get the
+/// checkpoint-grade dimension discipline — finite, non-negative,
+/// integral, ≤ 2⁵³ — before the cast; values are validated downstream by
+/// `row_from_pairs`.
+pub fn parse_features(j: &Json) -> Result<Vec<(usize, f64)>, String> {
+    let arr = j
+        .as_arr()
+        .ok_or("features must be an array of [index, value] pairs")?;
+    let mut pairs = Vec::with_capacity(arr.len());
+    for (i, entry) in arr.iter().enumerate() {
+        let pair = entry
+            .as_arr()
+            .filter(|p| p.len() == 2)
+            .ok_or_else(|| format!("feature {i} is not an [index, value] pair"))?;
+        let idx = pair[0]
+            .as_f64()
+            .ok_or_else(|| format!("feature {i} index is not a number"))?;
+        if !idx.is_finite() || idx < 0.0 || idx.fract() != 0.0 || idx > (1u64 << 53) as f64 {
+            return Err(format!("feature {i} index {idx} is not a valid column"));
+        }
+        let val = pair[1]
+            .as_f64()
+            .ok_or_else(|| format!("feature {i} value is not a number"))?;
+        pairs.push((idx as usize, val));
+    }
+    Ok(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(loss: Loss) -> Model {
+        Model {
+            loss,
+            lambda: 1e-2,
+            n_train: 0,
+            k: 1,
+            w: vec![0.5, -1.0, 0.0, 2.0],
+            alpha: vec![],
+            source: "test".into(),
+        }
+    }
+
+    fn ck(loss: &str) -> Checkpoint {
+        Checkpoint {
+            n: 2,
+            d: 3,
+            k: 1,
+            lambda: 1e-2,
+            loss: loss.into(),
+            alpha: vec![0.1, -0.2],
+            w: vec![1.0, 0.0, -1.0],
+        }
+    }
+
+    #[test]
+    fn from_checkpoint_validates_everything_once() {
+        assert!(Model::from_checkpoint(ck("hinge"), "p").is_ok());
+        let mut bad = ck("frobnicate");
+        assert!(Model::from_checkpoint(bad, "p").is_err());
+        bad = ck("hinge");
+        bad.w.pop();
+        assert!(Model::from_checkpoint(bad, "p").is_err());
+        bad = ck("hinge");
+        bad.alpha.push(0.0);
+        assert!(Model::from_checkpoint(bad, "p").is_err());
+        bad = ck("hinge");
+        bad.lambda = -1.0;
+        assert!(Model::from_checkpoint(bad, "p").is_err());
+        bad = ck("hinge");
+        bad.w[0] = f64::NAN;
+        assert!(Model::from_checkpoint(bad, "p").is_err());
+    }
+
+    #[test]
+    fn predict_pairs_scores_unsorted_input_like_training() {
+        let m = model(Loss::Hinge);
+        // unsorted + duplicate column: (3, 1.0+0.5), (0, 2.0) → z = 2·0.5 + 1.5·2.0 = 4.0
+        let p = m.predict_pairs(&[(3, 1.0), (0, 2.0), (3, 0.5)]).unwrap();
+        assert_eq!(p.score, 4.0);
+        assert_eq!(p.value, 1.0);
+        assert_eq!(p.label, Some(1.0));
+        // out-of-range column is a client error, not a panic
+        assert!(m.predict_pairs(&[(4, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn links_follow_the_loss() {
+        let z = -0.75;
+        let hinge = model(Loss::Hinge).prediction_from_score(z);
+        assert_eq!(hinge.value, -1.0);
+        assert_eq!(hinge.label, Some(-1.0));
+        let logistic = model(Loss::Logistic).prediction_from_score(z);
+        assert_eq!(logistic.value, Loss::Logistic.predict(z));
+        assert!(logistic.value < 0.5);
+        assert_eq!(logistic.label, Some(-1.0));
+        let squared = model(Loss::Squared).prediction_from_score(z);
+        assert_eq!(squared.value, z);
+        assert_eq!(squared.label, None, "regression serves no label");
+    }
+
+    #[test]
+    fn prediction_json_shape() {
+        let j = model(Loss::Logistic).prediction_from_score(0.0).to_json();
+        assert_eq!(j.get("score").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("prediction").unwrap().as_f64(), Some(0.5));
+        assert_eq!(j.get("label").unwrap().as_f64(), Some(-1.0));
+        let j = model(Loss::Absolute).prediction_from_score(1.5).to_json();
+        assert!(j.get("label").is_none());
+    }
+
+    #[test]
+    fn parse_features_rejects_hostile_shapes() {
+        let ok = Json::parse("[[0, 1.5], [3, -2]]").unwrap();
+        assert_eq!(parse_features(&ok).unwrap(), vec![(0, 1.5), (3, -2.0)]);
+        for bad in [
+            "{\"0\": 1}",          // not an array
+            "[[0]]",               // not a pair
+            "[[0, 1, 2]]",         // triple
+            "[[\"a\", 1]]",        // index not a number
+            "[[0.5, 1]]",          // fractional index
+            "[[-1, 1]]",           // negative index
+            "[[1e300, 1]]",        // absurd index
+            "[[0, null]]",         // value not a number
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(parse_features(&j).is_err(), "accepted {bad}");
+        }
+        // empty feature list is a legal all-zeros row
+        assert_eq!(
+            parse_features(&Json::parse("[]").unwrap()).unwrap(),
+            Vec::<(usize, f64)>::new()
+        );
+    }
+}

@@ -1,0 +1,457 @@
+//! Request routing and endpoint handlers for `cocoa serve`.
+//!
+//! The shared [`AppState`] holds the servable [`Model`] behind an
+//! `RwLock<Arc<Model>>`: the predict path clones the `Arc` (two atomic
+//! ops) and never blocks on admin work, while `/reload` and `/retrain`
+//! build a complete replacement model off to the side and swap it in
+//! atomically — in-flight requests finish on the model they started
+//! with. Admin endpoints serialize through a `try_lock` (a second
+//! concurrent reload/retrain gets 409, not a queue), and `/retrain` runs
+//! the full [`Driver`] warm-start loop inside the handling worker thread
+//! while the other workers keep serving the old weights.
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::{CocoaConfig, SolverSpec, StopReason, Trainer};
+use crate::data::partition::random_balanced;
+use crate::driver::{Driver, StopPolicy};
+use crate::objective::Problem;
+use crate::serve::http::{Request, Response};
+use crate::serve::metrics::Metrics;
+use crate::serve::predict::{parse_features, Model};
+use crate::util::json::{jarr, jnum, jobj, jstr, Json};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock, TryLockError};
+
+/// State shared by the accept loop and every worker thread.
+pub struct AppState {
+    model: RwLock<Arc<Model>>,
+    pub metrics: Metrics,
+    quit: AtomicBool,
+    /// Serializes the model-replacing endpoints (/reload, /retrain).
+    admin: Mutex<()>,
+}
+
+impl AppState {
+    pub fn new(model: Model) -> AppState {
+        AppState {
+            model: RwLock::new(Arc::new(model)),
+            metrics: Metrics::new(),
+            quit: AtomicBool::new(false),
+            admin: Mutex::new(()),
+        }
+    }
+
+    /// The current model. Cheap (Arc clone under a read lock); the caller
+    /// keeps serving this model even if an admin swap lands mid-request.
+    pub fn model(&self) -> Arc<Model> {
+        // A poisoned lock means some handler panicked *while swapping*;
+        // the stored Arc is still a complete model, so serve it rather
+        // than taking the whole server down.
+        match self.model.read() {
+            Ok(g) => Arc::clone(&g),
+            Err(poisoned) => Arc::clone(&poisoned.into_inner()),
+        }
+    }
+
+    fn swap_model(&self, m: Model) {
+        let new = Arc::new(m);
+        match self.model.write() {
+            Ok(mut g) => *g = new,
+            Err(poisoned) => *poisoned.into_inner() = new,
+        }
+    }
+
+    pub fn request_quit(&self) {
+        self.quit.store(true, Ordering::SeqCst);
+    }
+
+    pub fn quit_requested(&self) -> bool {
+        self.quit.load(Ordering::SeqCst)
+    }
+}
+
+/// Dispatch one parsed request. Pure: all I/O besides handler side
+/// effects (checkpoint loads, retraining) happens in the server layer.
+pub fn route(state: &AppState, req: &Request) -> Response {
+    const ENDPOINTS: [&str; 6] = [
+        "/healthz", "/metrics", "/predict", "/reload", "/retrain", "/quit",
+    ];
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => healthz(state),
+        ("GET", "/metrics") => Response::json(200, state.metrics.to_json()),
+        ("POST", "/predict") => predict(state, req),
+        ("POST", "/reload") => reload(state, req),
+        ("POST", "/retrain") => retrain(state, req),
+        ("POST", "/quit") => {
+            state.request_quit();
+            Response::json(200, jobj(vec![("status", jstr("shutting down"))]))
+        }
+        (_, path) if ENDPOINTS.contains(&path) => Response::error(405, "method not allowed"),
+        _ => Response::error(404, "no such endpoint"),
+    }
+}
+
+fn healthz(state: &AppState) -> Response {
+    let model = state.model();
+    Response::json(
+        200,
+        jobj(vec![
+            ("status", jstr("ok")),
+            ("loss", jstr(model.loss.name())),
+            ("d", jnum(model.d() as f64)),
+            ("n_train", jnum(model.n_train as f64)),
+            ("lambda", jnum(model.lambda)),
+            ("model", jstr(&model.source)),
+        ]),
+    )
+}
+
+fn parse_json_body(req: &Request) -> Result<Json, Response> {
+    let text = req
+        .body_str()
+        .map_err(|e| Response::error(400, &e.to_string()))?;
+    if text.trim().is_empty() {
+        return Err(Response::error(400, "request body must be a JSON object"));
+    }
+    Json::parse(text).map_err(|e| Response::error(400, &format!("body is not valid JSON: {e}")))
+}
+
+fn predict(state: &AppState, req: &Request) -> Response {
+    let body = match parse_json_body(req) {
+        Ok(j) => j,
+        Err(resp) => return resp,
+    };
+    let model = state.model();
+    if let Some(rows) = body.get("rows") {
+        // batch shape: {"rows": [[[idx, val], ...], ...]}
+        let rows = match rows.as_arr() {
+            Some(r) => r,
+            None => return Response::error(400, "rows must be an array of feature vectors"),
+        };
+        let mut preds = Vec::with_capacity(rows.len());
+        for (i, row) in rows.iter().enumerate() {
+            match parse_features(row).and_then(|p| model.predict_pairs(&p)) {
+                Ok(pred) => preds.push(pred.to_json()),
+                Err(e) => return Response::error(400, &format!("row {i}: {e}")),
+            }
+        }
+        state.metrics.record_predictions(preds.len() as u64);
+        Response::json(
+            200,
+            jobj(vec![("count", jnum(preds.len() as f64)), ("predictions", jarr(preds))]),
+        )
+    } else if let Some(features) = body.get("features") {
+        // single shape: {"features": [[idx, val], ...]}
+        match parse_features(features).and_then(|p| model.predict_pairs(&p)) {
+            Ok(pred) => {
+                state.metrics.record_predictions(1);
+                Response::json(200, pred.to_json())
+            }
+            Err(e) => Response::error(400, &e),
+        }
+    } else {
+        Response::error(400, "body needs \"features\" (single) or \"rows\" (batch)")
+    }
+}
+
+/// Take the admin lock without blocking; a second in-flight admin
+/// operation is a client-visible 409, never a queued surprise.
+fn admin_guard(state: &AppState) -> Result<std::sync::MutexGuard<'_, ()>, Response> {
+    match state.admin.try_lock() {
+        Ok(g) => Ok(g),
+        Err(TryLockError::WouldBlock) => Err(Response::error(
+            409,
+            "another reload/retrain is in progress",
+        )),
+        // a panicked admin handler left no partial state (swap is atomic)
+        Err(TryLockError::Poisoned(p)) => Ok(p.into_inner()),
+    }
+}
+
+fn reload(state: &AppState, req: &Request) -> Response {
+    let body = match parse_json_body(req) {
+        Ok(j) => j,
+        Err(resp) => return resp,
+    };
+    let path = match body.get("checkpoint").and_then(|v| v.as_str()) {
+        Some(p) => p.to_string(),
+        None => return Response::error(400, "body needs {\"checkpoint\": \"<path>\"}"),
+    };
+    let _admin = match admin_guard(state) {
+        Ok(g) => g,
+        Err(resp) => return resp,
+    };
+    let loaded = Checkpoint::load(Path::new(&path))
+        .map_err(|e| e.to_string())
+        .and_then(|ck| Model::from_checkpoint(ck, &path));
+    match loaded {
+        Ok(model) => {
+            let (d, loss) = (model.d(), model.loss.name());
+            state.swap_model(model);
+            state.metrics.record_reload();
+            Response::json(
+                200,
+                jobj(vec![
+                    ("status", jstr("reloaded")),
+                    ("model", jstr(&path)),
+                    ("loss", jstr(loss)),
+                    ("d", jnum(d as f64)),
+                ]),
+            )
+        }
+        Err(e) => Response::error(400, &format!("cannot load checkpoint {path}: {e}")),
+    }
+}
+
+fn usize_field(body: &Json, name: &str, default: usize) -> Result<usize, String> {
+    match body.get(name) {
+        None => Ok(default),
+        Some(v) => {
+            let x = v.as_f64().ok_or_else(|| format!("{name} must be a number"))?;
+            if !x.is_finite() || x < 0.0 || x.fract() != 0.0 || x > (1u64 << 53) as f64 {
+                return Err(format!("{name} must be a non-negative integer, got {x}"));
+            }
+            Ok(x as usize)
+        }
+    }
+}
+
+fn f64_field(body: &Json, name: &str, default: f64) -> Result<f64, String> {
+    match body.get(name) {
+        None => Ok(default),
+        Some(v) => {
+            let x = v.as_f64().ok_or_else(|| format!("{name} must be a number"))?;
+            if !x.is_finite() || x < 0.0 {
+                return Err(format!("{name} must be finite and ≥ 0, got {x}"));
+            }
+            Ok(x)
+        }
+    }
+}
+
+/// Validate the /retrain knobs: (rounds, gap_tol, k, seed, epochs).
+fn retrain_params(body: &Json, model: &Model) -> Result<(usize, f64, usize, u64, f64), String> {
+    let rounds = usize_field(body, "rounds", 50)?;
+    let gap_tol = f64_field(body, "gap_tol", 1e-4)?;
+    let k = usize_field(body, "k", model.k.max(1))?;
+    let seed = usize_field(body, "seed", 42)?;
+    let epochs = f64_field(body, "epochs", 1.0)?;
+    if rounds == 0 {
+        return Err("rounds must be ≥ 1".to_string());
+    }
+    if k == 0 || k > model.n_train {
+        return Err(format!("k must be in 1..={}, got {k}", model.n_train));
+    }
+    if epochs <= 0.0 {
+        return Err("epochs must be > 0".to_string());
+    }
+    Ok((rounds, gap_tol, k, seed as u64, epochs))
+}
+
+/// Warm-start re-training on drift data: load the libsvm file, adopt the
+/// served model's α as the starting dual iterate (recomputing w against
+/// the *new* data), continue the [`Driver`], and swap the result in.
+/// Serving never stops — every other worker keeps answering /predict
+/// from the old `Arc` until the final swap. The initial α may be
+/// dual-infeasible on drifted labels, so the stop policy allows an
+/// infinite starting gap (the first local solves clamp α back into the
+/// feasible box).
+fn retrain(state: &AppState, req: &Request) -> Response {
+    let body = match parse_json_body(req) {
+        Ok(j) => j,
+        Err(resp) => return resp,
+    };
+    let data_path = match body.get("data").and_then(|v| v.as_str()) {
+        Some(p) => p.to_string(),
+        None => {
+            return Response::error(
+                400,
+                "body needs {\"data\": \"<path.svm>\"} (plus optional rounds/gap_tol/k/seed/epochs)",
+            )
+        }
+    };
+    let model = state.model();
+    let (rounds, gap_tol, k, seed, epochs) = match retrain_params(&body, &model) {
+        Ok(v) => v,
+        Err(e) => return Response::error(400, &e),
+    };
+    let _admin = match admin_guard(state) {
+        Ok(g) => g,
+        Err(resp) => return resp,
+    };
+    let data = match crate::data::libsvm::load(Path::new(&data_path), Some(model.d())) {
+        Ok(d) => d,
+        Err(e) => return Response::error(400, &format!("cannot load {data_path}: {e}")),
+    };
+    if data.n() != model.n_train {
+        return Response::error(
+            400,
+            &format!(
+                "drift data has n = {}, model α has n = {} (warm start needs one α per row)",
+                data.n(),
+                model.n_train
+            ),
+        );
+    }
+    let n = data.n();
+    let problem = Problem::new(data, model.loss, model.lambda);
+    let partition = random_balanced(n, k, seed);
+    let cfg = CocoaConfig::cocoa_plus(
+        k,
+        model.loss,
+        model.lambda,
+        SolverSpec::SdcaEpochs { epochs },
+    )
+    .with_rounds(rounds)
+    .with_gap_tol(gap_tol)
+    .with_seed(seed);
+    let mut trainer = Trainer::new(problem, partition, cfg);
+    if let Err(e) = trainer.warm_start_from_alpha(&model.alpha) {
+        return Response::error(500, &format!("warm start failed: {e}"));
+    }
+    let stop = StopPolicy::new(rounds)
+        .with_gap_tol(gap_tol)
+        .with_divergence_gap(f64::INFINITY);
+    let history = Driver::new(stop).run(&mut trainer);
+    if history.stop == StopReason::Diverged {
+        return Response::error(
+            500,
+            &format!("retraining diverged (gap {})", history.final_gap()),
+        );
+    }
+    let train_error = trainer.problem.data.classification_error(&trainer.w);
+    let retrained = Checkpoint::capture(&trainer);
+    let source = format!("retrain:{data_path}");
+    let new_model = match Model::from_checkpoint(retrained, &source) {
+        Ok(m) => m,
+        Err(e) => return Response::error(500, &format!("retrained model invalid: {e}")),
+    };
+    state.swap_model(new_model);
+    state.metrics.record_retrain();
+    Response::json(
+        200,
+        jobj(vec![
+            ("status", jstr("retrained")),
+            ("model", jstr(&source)),
+            ("rounds_run", jnum(history.rounds_run() as f64)),
+            ("stop", jstr(history.stop.as_str())),
+            ("final_gap", jnum(history.final_gap())),
+            ("train_error", jnum(train_error)),
+        ]),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::Loss;
+
+    fn state() -> AppState {
+        AppState::new(Model {
+            loss: Loss::Hinge,
+            lambda: 1e-2,
+            n_train: 4,
+            k: 2,
+            w: vec![1.0, -2.0, 0.5],
+            alpha: vec![0.0; 4],
+            source: "test-ck.json".into(),
+        })
+    }
+
+    fn req(method: &str, path: &str, body: &str) -> Request {
+        Request {
+            method: method.into(),
+            path: path.into(),
+            headers: vec![],
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    fn body_json(resp: &Response) -> Json {
+        Json::parse(&resp.body).unwrap()
+    }
+
+    #[test]
+    fn routes_by_method_and_path() {
+        let s = state();
+        assert_eq!(route(&s, &req("GET", "/healthz", "")).status, 200);
+        assert_eq!(route(&s, &req("GET", "/metrics", "")).status, 200);
+        assert_eq!(route(&s, &req("GET", "/predict", "")).status, 405);
+        assert_eq!(route(&s, &req("POST", "/healthz", "")).status, 405);
+        assert_eq!(route(&s, &req("GET", "/nope", "")).status, 404);
+        assert!(!s.quit_requested());
+        assert_eq!(route(&s, &req("POST", "/quit", "")).status, 200);
+        assert!(s.quit_requested());
+    }
+
+    #[test]
+    fn healthz_reports_model_shape() {
+        let s = state();
+        let j = body_json(&route(&s, &req("GET", "/healthz", "")));
+        assert_eq!(j.get("status").unwrap().as_str(), Some("ok"));
+        assert_eq!(j.get("loss").unwrap().as_str(), Some("hinge"));
+        assert_eq!(j.get("d").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("model").unwrap().as_str(), Some("test-ck.json"));
+    }
+
+    #[test]
+    fn predict_single_and_batch() {
+        let s = state();
+        let resp = route(&s, &req("POST", "/predict", "{\"features\": [[0, 2.0], [2, 2.0]]}"));
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        let j = body_json(&resp);
+        assert_eq!(j.get("score").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("label").unwrap().as_f64(), Some(1.0));
+
+        let resp = route(&s, &req("POST", "/predict", "{\"rows\": [[[0, 1.0]], [[1, 1.0]], []]}"));
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        let j = body_json(&resp);
+        assert_eq!(j.get("count").unwrap().as_f64(), Some(3.0));
+        let preds = j.get("predictions").unwrap().as_arr().unwrap();
+        assert_eq!(preds[0].get("label").unwrap().as_f64(), Some(1.0));
+        assert_eq!(preds[1].get("label").unwrap().as_f64(), Some(-1.0));
+        // the all-zeros row classifies negative under the shared tie rule
+        assert_eq!(preds[2].get("label").unwrap().as_f64(), Some(-1.0));
+        assert_eq!(s.metrics.to_json().get("predictions_total").unwrap().as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn predict_rejects_bad_bodies_with_400() {
+        let s = state();
+        for body in [
+            "",
+            "not json",
+            "{\"wrong\": 1}",
+            "{\"features\": 7}",
+            "{\"features\": [[9, 1.0]]}", // out of range (d = 3)
+            "{\"rows\": 5}",
+            "{\"rows\": [[[0, 1]], [[99, 1]]]}",
+        ] {
+            let resp = route(&s, &req("POST", "/predict", body));
+            assert_eq!(resp.status, 400, "body {body:?} → {}", resp.body);
+        }
+    }
+
+    #[test]
+    fn reload_missing_file_is_client_error() {
+        let s = state();
+        let resp = route(&s, &req("POST", "/reload", "{\"checkpoint\": \"/no/such\"}"));
+        assert_eq!(resp.status, 400, "{}", resp.body);
+        let resp = route(&s, &req("POST", "/reload", "{}"));
+        assert_eq!(resp.status, 400);
+    }
+
+    #[test]
+    fn retrain_validates_request_before_training() {
+        let s = state();
+        let resp = route(&s, &req("POST", "/retrain", "{}"));
+        assert_eq!(resp.status, 400);
+        let resp = route(&s, &req("POST", "/retrain", "{\"data\": \"x.svm\", \"rounds\": 1.5}"));
+        assert_eq!(resp.status, 400, "{}", resp.body);
+        let resp = route(&s, &req("POST", "/retrain", "{\"data\": \"x.svm\", \"k\": 99}"));
+        assert_eq!(resp.status, 400, "{}", resp.body);
+        let resp = route(&s, &req("POST", "/retrain", "{\"data\": \"/no/such.svm\"}"));
+        assert_eq!(resp.status, 400, "{}", resp.body);
+    }
+}

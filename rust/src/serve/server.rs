@@ -1,0 +1,230 @@
+//! TCP front end for `cocoa serve`: a bounded accept loop feeding a
+//! fixed worker pool, patterned on the PR 1 pooled executor (named
+//! threads, bounded handoff queue, deterministic shutdown, never a
+//! hang). Each connection is one request/response exchange
+//! (`Connection: close`); workers apply the wire limits from
+//! [`crate::serve::http`] so a hostile or stalled client costs at most
+//! one worker for one read-timeout, never the server.
+//!
+//! Shutdown is cooperative: `POST /quit` (or [`ServerHandle::shutdown`])
+//! sets the quit flag, the accept thread notices within one poll tick
+//! and drops the queue sender, and the workers drain what was already
+//! accepted and exit. Pure-std cannot install a SIGTERM handler, so
+//! orchestration that wants a graceful stop POSTs `/quit`; SIGTERM still
+//! kills the process, it just skips the drain.
+
+use crate::serve::http::{
+    read_request, HttpError, Limits, Response, DEFAULT_MAX_BODY_BYTES, MAX_HEAD_BYTES,
+};
+use crate::serve::predict::Model;
+use crate::serve::router::{route, AppState};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Poll interval of the non-blocking accept loop. Short enough that
+/// `/quit` feels immediate, long enough to stay invisible in a profile.
+const ACCEPT_POLL: Duration = Duration::from_millis(2);
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address, e.g. `127.0.0.1:8080` (port 0 picks a free port).
+    pub addr: String,
+    /// Worker threads handling connections.
+    pub threads: usize,
+    /// Accepted-but-unhandled connections the queue will hold before the
+    /// accept thread itself blocks (natural backpressure).
+    pub queue_depth: usize,
+    /// Per-socket read/write timeout; a stalled client is cut off here.
+    pub read_timeout: Duration,
+    /// Largest request body a client may declare.
+    pub max_body_bytes: usize,
+}
+
+impl ServeConfig {
+    pub fn new(addr: &str) -> ServeConfig {
+        let threads = thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4)
+            .clamp(2, 16);
+        ServeConfig {
+            addr: addr.to_string(),
+            threads,
+            queue_depth: 256,
+            read_timeout: Duration::from_secs(5),
+            max_body_bytes: DEFAULT_MAX_BODY_BYTES,
+        }
+    }
+}
+
+/// Bind, spawn the pool, and return immediately. The caller owns the
+/// [`ServerHandle`]; dropping it shuts the server down.
+pub fn serve(model: Model, cfg: ServeConfig) -> std::io::Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let state = Arc::new(AppState::new(model));
+    let (tx, rx) = mpsc::sync_channel::<TcpStream>(cfg.queue_depth);
+    let rx = Arc::new(Mutex::new(rx));
+
+    let mut workers = Vec::with_capacity(cfg.threads);
+    for id in 0..cfg.threads {
+        let rx = Arc::clone(&rx);
+        let state = Arc::clone(&state);
+        let read_timeout = cfg.read_timeout;
+        let max_body = cfg.max_body_bytes;
+        let handle = thread::Builder::new()
+            .name(format!("serve-worker-{id}"))
+            .spawn(move || loop {
+                // Hold the receiver lock only for the dequeue, never
+                // while handling: the scoped block drops the guard.
+                let conn = { rx.lock().unwrap_or_else(|e| e.into_inner()).recv() };
+                match conn {
+                    Ok(stream) => handle_connection(stream, &state, read_timeout, max_body),
+                    // sender gone: accept loop exited, we are draining out
+                    Err(_) => break,
+                }
+            })
+            .expect("spawn serve worker");
+        workers.push(handle);
+    }
+
+    let accept_state = Arc::clone(&state);
+    let accept = thread::Builder::new()
+        .name("serve-accept".to_string())
+        .spawn(move || {
+            while !accept_state.quit_requested() {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        // SyncSender blocks when the queue is full —
+                        // exactly the backpressure we want. Err means
+                        // every worker is gone; nothing left to do.
+                        if tx.send(stream).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        thread::sleep(ACCEPT_POLL);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(e) => {
+                        // Transient accept failures (EMFILE under load)
+                        // must not kill the loop; back off and retry.
+                        eprintln!("serve: accept error: {e}");
+                        thread::sleep(ACCEPT_POLL * 10);
+                    }
+                }
+            }
+            // tx drops here; workers drain the queue and exit.
+        })
+        .expect("spawn serve accept loop");
+
+    Ok(ServerHandle {
+        addr,
+        state,
+        accept: Some(accept),
+        workers,
+    })
+}
+
+/// One connection, one exchange: parse under the wire limits, route,
+/// reply, close. Every early return leaves the connection dropped and
+/// the in-flight gauge decremented (RAII guard).
+fn handle_connection(
+    stream: TcpStream,
+    state: &Arc<AppState>,
+    read_timeout: Duration,
+    max_body: usize,
+) {
+    let _guard = state.metrics.begin();
+    let t0 = Instant::now();
+    if stream.set_nonblocking(false).is_err()
+        || stream.set_read_timeout(Some(read_timeout)).is_err()
+        || stream.set_write_timeout(Some(read_timeout)).is_err()
+    {
+        return;
+    }
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    let limits = Limits {
+        max_head_bytes: MAX_HEAD_BYTES,
+        max_body_bytes: max_body,
+        // the parse budget spans several socket reads; give it headroom
+        parse_budget: read_timeout.saturating_mul(4),
+    };
+    let response = match read_request(&mut reader, &limits) {
+        // A handler panic (it should never happen — route() validates
+        // everything) costs one 500 response, not a worker thread.
+        Ok(req) => match catch_unwind(AssertUnwindSafe(|| route(state, &req))) {
+            Ok(resp) => resp,
+            Err(_) => Response::error(500, "internal error"),
+        },
+        Err(HttpError::Closed) => return,
+        Err(e) => match e.status() {
+            Some(status) => Response::error(status, &e.to_string()),
+            None => return,
+        },
+    };
+    state.metrics.record_response(response.status, t0.elapsed());
+    // Client may already be gone; that is its problem, not ours.
+    let _ = response.write_to(&mut writer);
+    let _ = writer.flush();
+}
+
+/// Owner of a running server: its bound address, shared state, and every
+/// thread. Joining is idempotent and ordered — accept thread first (its
+/// exit drops the queue sender), then the workers (they drain and see
+/// the disconnect).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    state: Arc<AppState>,
+    accept: Option<thread::JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The actual bound address (resolves port 0 to the kernel's pick).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The shared state, for tests and embedders that want to inspect
+    /// metrics or request shutdown without a socket round-trip.
+    pub fn state(&self) -> &Arc<AppState> {
+        &self.state
+    }
+
+    /// Block until the server stops on its own (`POST /quit`).
+    pub fn wait(mut self) {
+        self.join_all();
+    }
+
+    /// Request shutdown and block until every thread has exited.
+    pub fn shutdown(mut self) {
+        self.state.request_quit();
+        self.join_all();
+    }
+
+    fn join_all(&mut self) {
+        if let Some(accept) = self.accept.take() {
+            let _ = accept.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.state.request_quit();
+        self.join_all();
+    }
+}

@@ -44,7 +44,7 @@ fn help_lists_subcommands() {
     let bin = require_bin!();
     let (code, stdout, _) = run(&bin, &["help"]);
     assert_eq!(code, 0);
-    for sub in ["train", "gen-data", "sigma", "experiment", "artifacts-check", "worker"] {
+    for sub in ["train", "gen-data", "sigma", "experiment", "artifacts-check", "serve", "worker"] {
         assert!(stdout.contains(sub), "help missing {sub}");
     }
 }
@@ -208,4 +208,86 @@ fn experiment_unknown_name_fails() {
     let (code, _, stderr) = run(&bin, &["experiment", "fig9"]);
     assert_eq!(code, 2);
     assert!(stderr.contains("unknown experiment"));
+}
+
+/// Minimal HTTP/1.1 exchange for the serve tests (one shot, close).
+fn http1(addr: &str, method: &str, path: &str) -> (u16, String) {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(std::time::Duration::from_secs(30))).unwrap();
+    let head = format!("{method} {path} HTTP/1.1\r\nConnection: close\r\n\r\n");
+    s.write_all(head.as_bytes()).unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let status = buf.split_whitespace().nth(1).unwrap().parse().unwrap();
+    (status, buf)
+}
+
+#[test]
+fn serve_cli_end_to_end() {
+    use std::io::BufRead;
+    let bin = require_bin!();
+    let ck = std::env::temp_dir().join("cocoa_cli_serve_ck.json");
+    let ck_s = ck.to_str().unwrap();
+    let (code, stdout, stderr) = run(
+        &bin,
+        &[
+            "train", "--dataset", "covtype", "--scale", "3000", "--k", "2", "--lambda", "1e-2",
+            "--rounds", "5", "--gap-tol", "0", "--checkpoint-out", ck_s,
+        ],
+    );
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(stdout.contains("checkpoint written"), "{stdout}");
+
+    // Port 0: the CLI must announce the real bound address on stdout.
+    let mut child = Command::new(&bin)
+        .args(["serve", "--checkpoint", ck_s, "--addr", "127.0.0.1:0"])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn cocoa serve");
+    let mut lines = std::io::BufReader::new(child.stdout.take().unwrap()).lines();
+    let addr = loop {
+        let line = lines.next().expect("serve exited before announcing").unwrap();
+        if let Some(rest) = line.strip_prefix("serving on http://") {
+            let host = rest.split_whitespace().next().unwrap();
+            break host.trim_end_matches('/').to_string();
+        }
+    };
+    let (status, body) = http1(&addr, "GET", "/healthz");
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"status\":\"ok\""), "{body}");
+    let (status, _) = http1(&addr, "POST", "/quit");
+    assert_eq!(status, 200);
+    let exit = child.wait().expect("wait on serve");
+    assert!(exit.success(), "serve must exit 0 after /quit");
+    let rest: Vec<String> = lines.map(|l| l.unwrap()).collect();
+    assert!(rest.iter().any(|l| l.contains("server stopped")), "{rest:?}");
+    std::fs::remove_file(&ck).ok();
+}
+
+#[test]
+fn serve_missing_checkpoint_fails() {
+    let bin = require_bin!();
+    let (code, _, stderr) = run(&bin, &["serve", "--checkpoint", "/no/such/ck.json"]);
+    assert_eq!(code, 1);
+    assert!(stderr.contains("cannot load checkpoint"), "{stderr}");
+    let (code, _, stderr) = run(&bin, &["serve"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("--checkpoint"), "{stderr}");
+}
+
+#[test]
+fn checkpoint_out_rejects_primal_only_methods() {
+    let bin = require_bin!();
+    let out = std::env::temp_dir().join("cocoa_cli_no_ck.json");
+    let (code, _, stderr) = run(
+        &bin,
+        &[
+            "train", "--dataset", "covtype", "--scale", "3000", "--k", "2", "--rounds", "2",
+            "--method", "mb-sgd", "--checkpoint-out", out.to_str().unwrap(),
+        ],
+    );
+    assert_eq!(code, 2, "stderr: {stderr}");
+    assert!(stderr.contains("no checkpointable dual state"), "{stderr}");
+    assert!(!out.exists(), "no checkpoint file may be written");
 }

@@ -1,0 +1,399 @@
+//! End-to-end tests for `cocoa serve`: real TCP traffic against a real
+//! trained model. The load-bearing invariants:
+//!
+//! * served scores are **bit-identical** to leader-side evaluation (same
+//!   CSR row construction, same dot kernel, and f64 → JSON → f64 is
+//!   exact because the writer emits shortest-roundtrip decimals);
+//! * ≥ 64 concurrent connections complete with zero drops and zero
+//!   hangs;
+//! * hostile input gets a typed 4xx and the server keeps serving;
+//! * `/reload` and `/retrain` swap models without failing in-flight
+//!   requests, and `/retrain` reproduces an identically-configured local
+//!   warm-start run bit-for-bit (the determinism invariant, extended to
+//!   the serving path).
+
+use cocoa::coordinator::checkpoint::Checkpoint;
+use cocoa::data::synth::{generate, SynthConfig};
+use cocoa::prelude::*;
+use cocoa::serve::{serve, Model, ServeConfig, ServerHandle};
+use cocoa::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+const N: usize = 200;
+const D: usize = 16;
+const K: usize = 4;
+const LAMBDA: f64 = 1e-2;
+
+/// Train a model on the deterministic synth problem `name` and capture
+/// its full primal-dual state. The returned dataset is the caller-order
+/// original the checkpointed α refers to.
+fn trained_with(loss: Loss, name: &str, rounds: usize) -> (Dataset, Checkpoint) {
+    let data = generate(&SynthConfig::new(name, N, D).seed(7));
+    let problem = Problem::new(data.clone(), loss, LAMBDA);
+    let part = cocoa::data::partition::random_balanced(N, K, 5);
+    let cfg = CocoaConfig::cocoa_plus(K, loss, LAMBDA, SolverSpec::SdcaEpochs { epochs: 1.0 })
+        .with_rounds(rounds)
+        .with_gap_tol(0.0)
+        .with_seed(11)
+        .with_parallel(false);
+    let mut trainer = Trainer::new(problem, part, cfg);
+    Driver::new(StopPolicy::new(rounds).with_gap_tol(0.0)).run(&mut trainer);
+    (data, Checkpoint::capture(&trainer))
+}
+
+fn start(loss: Loss, name: &str) -> (Dataset, Checkpoint, ServerHandle) {
+    let (data, ck) = trained_with(loss, name, 30);
+    let model = Model::from_checkpoint(ck.clone(), name).expect("checkpoint is servable");
+    let handle = serve(model, ServeConfig::new("127.0.0.1:0")).expect("bind");
+    (data, ck, handle)
+}
+
+/// One HTTP exchange over a fresh connection; returns (status, body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let raw = format!(
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    try_raw(addr, raw.as_bytes()).expect("request should get a response")
+}
+
+/// Send raw bytes, read to EOF, parse the status line and body. Io
+/// errors surface as Err so hostile-input tests can tolerate resets.
+fn try_raw(addr: SocketAddr, raw: &[u8]) -> std::io::Result<(u16, String)> {
+    let mut s = TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let _ = s.write_all(raw);
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf)?;
+    let text = String::from_utf8_lossy(&buf).into_owned();
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|t| t.parse().ok())
+        .unwrap_or_else(|| panic!("no status line in {text:?}"));
+    let body = text
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    Ok((status, body))
+}
+
+fn row_pairs(data: &Dataset, i: usize) -> Vec<(usize, f64)> {
+    (data.x.indptr[i]..data.x.indptr[i + 1])
+        .map(|j| (data.x.indices[j] as usize, data.x.values[j]))
+        .collect()
+}
+
+/// Render pairs as the /predict JSON feature shape. f64 `Display` is
+/// shortest-roundtrip, so the value survives the wire bit-for-bit.
+fn features_json(pairs: &[(usize, f64)]) -> String {
+    let items: Vec<String> = pairs.iter().map(|(c, v)| format!("[{c}, {v}]")).collect();
+    format!("[{}]", items.join(", "))
+}
+
+fn predict_body(data: &Dataset, i: usize) -> String {
+    format!("{{\"features\": {}}}", features_json(&row_pairs(data, i)))
+}
+
+fn tmp_path(stem: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("cocoa_serve_{stem}_{}", std::process::id()))
+}
+
+#[test]
+fn served_hinge_predictions_match_training_bit_for_bit() {
+    let (data, ck, handle) = start(Loss::Hinge, "serve-hinge");
+    let addr = handle.addr();
+    let mut served_wrong = 0usize;
+    for i in 0..data.n() {
+        let z = data.x.row_dot(i, &ck.w);
+        assert!(z != 0.0, "row {i} sits exactly on the boundary; tie semantics untestable");
+        let (status, body) = http(addr, "POST", "/predict", &predict_body(&data, i));
+        assert_eq!(status, 200, "row {i}: {body}");
+        let j = Json::parse(&body).unwrap();
+        let score = j.get("score").unwrap().as_f64().unwrap();
+        assert_eq!(score.to_bits(), z.to_bits(), "row {i}: served {score}, leader {z}");
+        let label = j.get("label").unwrap().as_f64().unwrap();
+        assert_eq!(label, cocoa::loss::classify(z), "row {i}");
+        if label != data.y[i] {
+            served_wrong += 1;
+        }
+    }
+    // With no boundary rows, served decisions reproduce the leader-side
+    // training error exactly.
+    let leader_error = data.classification_error(&ck.w);
+    assert_eq!(served_wrong as f64 / data.n() as f64, leader_error);
+    handle.shutdown();
+}
+
+#[test]
+fn served_logistic_probabilities_match_sigmoid() {
+    let (data, ck, handle) = start(Loss::Logistic, "serve-logit");
+    let addr = handle.addr();
+    for i in (0..data.n()).step_by(4) {
+        let z = data.x.row_dot(i, &ck.w);
+        let (status, body) = http(addr, "POST", "/predict", &predict_body(&data, i));
+        assert_eq!(status, 200, "row {i}: {body}");
+        let j = Json::parse(&body).unwrap();
+        let p = j.get("prediction").unwrap().as_f64().unwrap();
+        let expected = cocoa::loss::logistic::sigmoid(z);
+        assert!(
+            (p - expected).abs() < 1e-12,
+            "row {i}: served p = {p}, leader σ(z) = {expected}"
+        );
+        assert!((0.0..=1.0).contains(&p), "row {i}: {p} is not a probability");
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn batch_predict_matches_singles() {
+    let (data, ck, handle) = start(Loss::Hinge, "serve-batch");
+    let addr = handle.addr();
+    let rows: Vec<String> = (0..8).map(|i| features_json(&row_pairs(&data, i))).collect();
+    let body = format!("{{\"rows\": [{}]}}", rows.join(", "));
+    let (status, resp) = http(addr, "POST", "/predict", &body);
+    assert_eq!(status, 200, "{resp}");
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("count").unwrap().as_f64(), Some(8.0));
+    let preds = j.get("predictions").unwrap().as_arr().unwrap();
+    for (i, p) in preds.iter().enumerate() {
+        let z = data.x.row_dot(i, &ck.w);
+        let score = p.get("score").unwrap().as_f64().unwrap();
+        assert_eq!(score.to_bits(), z.to_bits(), "row {i}");
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn sixty_four_concurrent_connections_zero_drops() {
+    let (data, _ck, handle) = start(Loss::Hinge, "serve-conc");
+    let addr = handle.addr();
+    const CLIENTS: usize = 64;
+    const PER_CLIENT: usize = 4;
+    let threads: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let body = predict_body(&data, c % data.n());
+            std::thread::spawn(move || {
+                for _ in 0..PER_CLIENT {
+                    let (status, resp) = http(addr, "POST", "/predict", &body);
+                    assert_eq!(status, 200, "client {c}: {resp}");
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().expect("no client may fail or hang");
+    }
+    let metrics = &handle.state().metrics;
+    assert!(
+        metrics.requests_total() >= (CLIENTS * PER_CLIENT) as u64,
+        "every connection must be counted"
+    );
+    // The last in-flight decrement races the final client's EOF by a few
+    // instructions; give it a moment, then require a quiesced gauge.
+    let deadline = Instant::now() + Duration::from_secs(2);
+    while metrics.in_flight() != 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(metrics.in_flight(), 0, "no request may leak in-flight");
+    handle.shutdown();
+}
+
+#[test]
+fn hostile_requests_get_4xx_and_server_survives() {
+    let (data, _ck, handle) = start(Loss::Hinge, "serve-hostile");
+    let addr = handle.addr();
+
+    let (status, _) = try_raw(addr, b"GARBAGE\r\n\r\n").unwrap();
+    assert_eq!(status, 400, "unparseable request line");
+    let (status, _) = try_raw(addr, b"GET /healthz HTTP/1.1\r\nno colon here\r\n\r\n").unwrap();
+    assert_eq!(status, 400, "malformed header");
+    let (status, _) = http(addr, "GET", "/no/such/endpoint", "");
+    assert_eq!(status, 404);
+    let (status, _) = http(addr, "GET", "/predict", "");
+    assert_eq!(status, 405, "wrong method on a real endpoint");
+    let (status, body) = http(addr, "POST", "/predict", "this is not json");
+    assert_eq!(status, 400, "{body}");
+
+    // Declared-oversize body: rejected from the Content-Length header
+    // alone, before any allocation.
+    let raw = b"POST /predict HTTP/1.1\r\nContent-Length: 999999999\r\n\r\n";
+    let (status, _) = try_raw(addr, raw).unwrap();
+    assert_eq!(status, 413);
+
+    // Oversized head: the server cuts the read off at the cap and
+    // answers 431; a client still pushing bytes may instead see a reset,
+    // which is an acceptable outcome for abuse — the server must not.
+    let mut big = Vec::from(&b"GET /healthz HTTP/1.1\r\nX-Pad: "[..]);
+    big.extend(vec![b'a'; 20 * 1024]);
+    if let Ok((status, _)) = try_raw(addr, &big) {
+        assert_eq!(status, 431);
+    }
+
+    // After all of that abuse the server still serves correct answers.
+    let (status, body) = http(addr, "POST", "/predict", &predict_body(&data, 0));
+    assert_eq!(status, 200, "{body}");
+    let (status, _) = http(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    handle.shutdown();
+}
+
+#[test]
+fn stalled_client_is_timed_out_without_hurting_the_server() {
+    let (_data, ck) = trained_with(Loss::Hinge, "serve-stall", 30);
+    let model = Model::from_checkpoint(ck, "stall").unwrap();
+    let mut cfg = ServeConfig::new("127.0.0.1:0");
+    cfg.read_timeout = Duration::from_millis(200);
+    let handle = serve(model, cfg).expect("bind");
+    let addr = handle.addr();
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    // half a request line, then silence: the server must cut us off
+    s.write_all(b"POST /predict HT").unwrap();
+    let mut buf = String::new();
+    let _ = s.read_to_string(&mut buf);
+    if !buf.is_empty() {
+        assert!(buf.starts_with("HTTP/1.1 408"), "got {buf:?}");
+    }
+    let (status, _) = http(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200, "server must survive a stalled client");
+    handle.shutdown();
+}
+
+#[test]
+fn reload_swaps_checkpoints_under_live_traffic() {
+    let (data, ck_old) = trained_with(Loss::Hinge, "serve-reload", 3);
+    let (_, ck_new) = trained_with(Loss::Hinge, "serve-reload", 30);
+    assert_ne!(ck_old.w, ck_new.w, "the two checkpoints must be distinguishable");
+    let ck_path = tmp_path("reload.json");
+    ck_new.save(&ck_path).unwrap();
+
+    let model = Model::from_checkpoint(ck_old, "old").unwrap();
+    let handle = serve(model, ServeConfig::new("127.0.0.1:0")).expect("bind");
+    let addr = handle.addr();
+
+    let hammers: Vec<_> = (0..8)
+        .map(|c| {
+            let body = predict_body(&data, c);
+            std::thread::spawn(move || {
+                for _ in 0..30 {
+                    let (status, resp) = http(addr, "POST", "/predict", &body);
+                    assert_eq!(status, 200, "in-flight request failed across reload: {resp}");
+                }
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(20));
+    let body = format!("{{\"checkpoint\": {:?}}}", ck_path.display().to_string());
+    let (status, resp) = http(addr, "POST", "/reload", &body);
+    assert_eq!(status, 200, "{resp}");
+    for t in hammers {
+        t.join().expect("no request may fail during a reload");
+    }
+
+    // Post-reload scores come from the new weights, bit-for-bit.
+    let z_new = data.x.row_dot(0, &ck_new.w);
+    let (status, resp) = http(addr, "POST", "/predict", &predict_body(&data, 0));
+    assert_eq!(status, 200, "{resp}");
+    let served = Json::parse(&resp).unwrap().get("score").unwrap().as_f64().unwrap();
+    assert_eq!(served.to_bits(), z_new.to_bits());
+    let m = handle.state().metrics.to_json();
+    assert_eq!(m.get("reloads_total").unwrap().as_f64(), Some(1.0));
+    handle.shutdown();
+    let _ = std::fs::remove_file(&ck_path);
+}
+
+#[test]
+fn retrain_warm_start_matches_local_run_bit_for_bit() {
+    let (data, ck) = trained_with(Loss::Hinge, "serve-retrain", 30);
+    // Drift: flip every 10th label, write as libsvm.
+    let mut drift = data.clone();
+    for i in (0..drift.n()).step_by(10) {
+        drift.y[i] = -drift.y[i];
+    }
+    let drift_path = tmp_path("drift.svm");
+    cocoa::data::libsvm::save(&drift, &drift_path).unwrap();
+
+    let model = Model::from_checkpoint(ck.clone(), "base").unwrap();
+    let handle = serve(model, ServeConfig::new("127.0.0.1:0")).expect("bind");
+    let addr = handle.addr();
+
+    // Wrong-sized drift data is a client error, not a crash.
+    let small = generate(&SynthConfig::new("serve-retrain-small", 50, D).seed(1));
+    let small_path = tmp_path("small.svm");
+    cocoa::data::libsvm::save(&small, &small_path).unwrap();
+    let body = format!("{{\"data\": {:?}}}", small_path.display().to_string());
+    let (status, resp) = http(addr, "POST", "/retrain", &body);
+    assert_eq!(status, 400, "{resp}");
+
+    let body = format!(
+        "{{\"data\": {:?}, \"rounds\": 20, \"seed\": 9}}",
+        drift_path.display().to_string()
+    );
+    let (status, resp) = http(addr, "POST", "/retrain", &body);
+    assert_eq!(status, 200, "{resp}");
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("status").unwrap().as_str(), Some("retrained"));
+    assert!(j.get("rounds_run").unwrap().as_f64().unwrap() >= 1.0);
+
+    // Mirror the retrain locally with the identical configuration; the
+    // served model must match it bit-for-bit (determinism invariant).
+    let reloaded = cocoa::data::libsvm::load(&drift_path, Some(ck.d)).unwrap();
+    let problem = Problem::new(reloaded.clone(), Loss::Hinge, ck.lambda);
+    let part = cocoa::data::partition::random_balanced(ck.n, ck.k, 9);
+    let cfg = CocoaConfig::cocoa_plus(
+        ck.k,
+        Loss::Hinge,
+        ck.lambda,
+        SolverSpec::SdcaEpochs { epochs: 1.0 },
+    )
+    .with_rounds(20)
+    .with_gap_tol(1e-4)
+    .with_seed(9);
+    let mut local = Trainer::new(problem, part, cfg);
+    local.warm_start_from_alpha(&ck.alpha).unwrap();
+    Driver::new(
+        StopPolicy::new(20)
+            .with_gap_tol(1e-4)
+            .with_divergence_gap(f64::INFINITY),
+    )
+    .run(&mut local);
+
+    let z_local = reloaded.x.row_dot(0, &local.w);
+    let pairs = row_pairs(&reloaded, 0);
+    let body = format!("{{\"features\": {}}}", features_json(&pairs));
+    let (status, resp) = http(addr, "POST", "/predict", &body);
+    assert_eq!(status, 200, "{resp}");
+    let served = Json::parse(&resp).unwrap().get("score").unwrap().as_f64().unwrap();
+    assert_eq!(
+        served.to_bits(),
+        z_local.to_bits(),
+        "served retrained model diverged from the local mirror"
+    );
+    handle.shutdown();
+    let _ = std::fs::remove_file(&drift_path);
+    let _ = std::fs::remove_file(&small_path);
+}
+
+#[test]
+fn quit_drains_and_stops_the_server() {
+    let (_data, _ck, handle) = start(Loss::Hinge, "serve-quit");
+    let addr = handle.addr();
+    let (status, _) = http(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    let (status, body) = http(addr, "POST", "/quit", "");
+    assert_eq!(status, 200, "{body}");
+    // wait() returning at all is the assertion: quit must not hang.
+    handle.wait();
+    // The listener is gone; fresh connections are refused (give the OS a
+    // beat to tear the socket down).
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(
+        TcpStream::connect(addr).is_err(),
+        "listener must be closed after /quit"
+    );
+}
