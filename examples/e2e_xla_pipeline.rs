@@ -25,7 +25,7 @@ use cocoa::runtime::pjrt::PjrtRuntime;
 use cocoa::runtime::{XlaGapEvaluator, XlaSdcaProgram, XlaSdcaSolver};
 use cocoa::solver::sdca::SdcaSolver;
 use cocoa::subproblem::LocalBlock;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() {
     let dir = default_artifacts_dir()
@@ -34,7 +34,7 @@ fn main() {
     let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
     println!("PJRT platform: {}", rt.platform());
 
-    let program = Rc::new(XlaSdcaProgram::load(&rt, &manifest).expect("load local_sdca"));
+    let program = Arc::new(XlaSdcaProgram::load(&rt, &manifest).expect("load local_sdca"));
     let gap_eval = XlaGapEvaluator::load(&rt, &manifest).expect("load duality_gap");
     let (m, d, h) = (program.m, program.d, program.h);
     let k = 4usize;
@@ -61,7 +61,7 @@ fn main() {
         .enumerate()
         .map(|(wk, block)| {
             let s = XlaSdcaSolver::new(
-                Rc::clone(&program),
+                Arc::clone(&program),
                 block,
                 lambda * n as f64,
                 k as f64, // safe σ' = γK with γ=1
@@ -123,7 +123,7 @@ fn main() {
         alpha_local: &a0,
     };
     let mut xla_solver =
-        XlaSdcaSolver::new(Rc::clone(&program), &block, lambda * n as f64, k as f64, 123)
+        XlaSdcaSolver::new(Arc::clone(&program), &block, lambda * n as f64, k as f64, 123)
             .expect("pack");
     let mut native = SdcaSolver::new(h, 123);
     use cocoa::solver::LocalSolver as _;

@@ -1,0 +1,348 @@
+//! Per-file analysis built on the raw token stream: brace depth,
+//! `#[cfg(test)]` masking, attribute spans, comment geometry (for
+//! `// SAFETY:` adjacency) and `lint:allow` waiver extraction.
+//!
+//! Rules never look at raw source text; everything they need is
+//! precomputed here so each rule is a small scan over `toks` with
+//! parallel `depth` / `in_test` / `in_attr` vectors.
+
+use crate::lexer::{lex, Tok, TokKind};
+use std::collections::BTreeSet;
+
+/// An inline waiver comment: `// lint:allow(rule_a, rule_b) -- reason`.
+/// A waiver suppresses matching diagnostics on its own line and on the
+/// line directly below it (so it can sit above the offending statement).
+#[derive(Clone, Debug)]
+pub struct Waiver {
+    pub line: u32,
+    pub rules: Vec<String>,
+    pub has_reason: bool,
+}
+
+/// Everything the rules need to know about one source file.
+pub struct FileAnalysis {
+    /// Path relative to the lint root, `/`-separated.
+    pub rel: String,
+    /// Significant tokens: comments stripped.
+    pub toks: Vec<Tok>,
+    /// Brace-nesting depth of each token in `toks`. A `{` carries the
+    /// depth *outside* its block; its matching `}` carries the same
+    /// value, and everything between them is deeper.
+    pub depth: Vec<u32>,
+    /// True for tokens inside `#[test]` / `#[cfg(test)]` items.
+    pub in_test: Vec<bool>,
+    /// True for tokens inside any `#[…]` / `#![…]` attribute.
+    pub in_attr: Vec<bool>,
+    pub waivers: Vec<Waiver>,
+    comment_lines: BTreeSet<u32>,
+    safety_lines: BTreeSet<u32>,
+}
+
+impl FileAnalysis {
+    pub fn build(rel: &str, src: &str) -> FileAnalysis {
+        let all = lex(src);
+        let mut comment_lines = BTreeSet::new();
+        let mut safety_lines = BTreeSet::new();
+        let mut waivers = Vec::new();
+        for t in &all {
+            if t.kind != TokKind::Comment {
+                continue;
+            }
+            let span = t.line..=t.line + t.extra_lines;
+            comment_lines.extend(span.clone());
+            if t.text.contains("SAFETY:") {
+                safety_lines.extend(span);
+            }
+            if let Some(w) = parse_waiver(&t.text, t.line) {
+                waivers.push(w);
+            }
+        }
+        let toks: Vec<Tok> = all.into_iter().filter(|t| t.kind != TokKind::Comment).collect();
+        let depth = compute_depth(&toks);
+        let in_attr = compute_attr_mask(&toks);
+        let in_test = compute_test_mask(&toks, &depth, &in_attr);
+        FileAnalysis {
+            rel: rel.to_string(),
+            toks,
+            depth,
+            in_test,
+            in_attr,
+            waivers,
+            comment_lines,
+            safety_lines,
+        }
+    }
+
+    /// Is a diagnostic of `rule` on `line` suppressed by a waiver?
+    pub fn waived(&self, rule: &str, line: u32) -> bool {
+        for w in &self.waivers {
+            if w.line != line && w.line + 1 != line {
+                continue;
+            }
+            if w.rules.iter().any(|r| r == rule) {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Is there a `SAFETY:` comment on this line, or ending directly
+    /// above it (walking up through a contiguous run of comment lines)?
+    pub fn safety_adjacent(&self, line: u32) -> bool {
+        if self.safety_lines.contains(&line) {
+            return true;
+        }
+        let mut l = line;
+        while l > 1 {
+            l -= 1;
+            if !self.comment_lines.contains(&l) {
+                return false;
+            }
+            if self.safety_lines.contains(&l) {
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn prev_tok(&self, i: usize) -> Option<&Tok> {
+        i.checked_sub(1).and_then(|j| self.toks.get(j))
+    }
+
+    pub fn next_tok(&self, i: usize) -> Option<&Tok> {
+        self.toks.get(i + 1)
+    }
+}
+
+fn parse_waiver(text: &str, line: u32) -> Option<Waiver> {
+    let at = text.find("lint:allow(")?;
+    let rest = &text[at + "lint:allow(".len()..];
+    let close = rest.find(')')?;
+    let rules: Vec<String> = rest[..close]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let has_reason = rest[close..].contains("--");
+    Some(Waiver {
+        line,
+        rules,
+        has_reason,
+    })
+}
+
+fn compute_depth(toks: &[Tok]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(toks.len());
+    let mut cur = 0u32;
+    for t in toks {
+        if t.is(TokKind::Punct, "{") {
+            out.push(cur);
+            cur += 1;
+        } else if t.is(TokKind::Punct, "}") {
+            cur = cur.saturating_sub(1);
+            out.push(cur);
+        } else {
+            out.push(cur);
+        }
+    }
+    out
+}
+
+/// Mark every token belonging to an attribute: `#` (optional `!`) `[` …
+/// matching `]`. Keeps rules like the indexing check from tripping on
+/// `#[derive(…)]` brackets.
+fn compute_attr_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !toks[i].is(TokKind::Punct, "#") {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        if toks.get(j).is_some_and(|t| t.is(TokKind::Punct, "!")) {
+            j += 1;
+        }
+        if !toks.get(j).is_some_and(|t| t.is(TokKind::Punct, "[")) {
+            i += 1;
+            continue;
+        }
+        // Walk to the matching `]`.
+        let mut brackets = 0i32;
+        let mut end = j;
+        while end < toks.len() {
+            if toks[end].is(TokKind::Punct, "[") {
+                brackets += 1;
+            } else if toks[end].is(TokKind::Punct, "]") {
+                brackets -= 1;
+                if brackets == 0 {
+                    break;
+                }
+            }
+            end += 1;
+        }
+        let stop = end.min(toks.len().saturating_sub(1));
+        for m in mask.iter_mut().take(stop + 1).skip(i) {
+            *m = true;
+        }
+        i = end + 1;
+    }
+    mask
+}
+
+/// Mark tokens of items annotated `#[test]` or `#[cfg(test)]` (and any
+/// attribute whose `cfg` predicate mentions `test`, e.g.
+/// `#[cfg(all(test, feature = "x"))]`). The span runs from the attribute
+/// through the item's closing `}` (or `;` for block-less items).
+fn compute_test_mask(toks: &[Tok], depth: &[u32], in_attr: &[bool]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !toks[i].is(TokKind::Punct, "#") || !in_attr[i] {
+            i += 1;
+            continue;
+        }
+        // Find this attribute's extent and collect its inner idents.
+        let mut end = i;
+        while end + 1 < toks.len() && in_attr[end + 1] {
+            // Stop at the `]` that closes *this* attribute: the next
+            // token after it is either non-attr or a fresh `#`.
+            if toks[end].is(TokKind::Punct, "]") && toks[end + 1].is(TokKind::Punct, "#") {
+                break;
+            }
+            end += 1;
+        }
+        let inner: Vec<&str> = toks[i..=end]
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        let is_test_attr = match inner.first() {
+            Some(&"test") => true,
+            Some(&"cfg") => inner.iter().any(|s| *s == "test"),
+            _ => false,
+        };
+        if !is_test_attr {
+            i = end + 1;
+            continue;
+        }
+        // Scan forward past further attributes to the item body.
+        let mut k = end + 1;
+        let mut body_start = None;
+        while k < toks.len() {
+            if in_attr[k] {
+                k += 1;
+                continue;
+            }
+            if toks[k].is(TokKind::Punct, ";") {
+                break; // block-less item, e.g. `#[cfg(test)] use …;`
+            }
+            if toks[k].is(TokKind::Punct, "{") {
+                body_start = Some(k);
+                break;
+            }
+            k += 1;
+        }
+        let span_end = match body_start {
+            Some(s) => find_matching_brace(toks, depth, s),
+            None => k,
+        };
+        let stop = span_end.min(toks.len().saturating_sub(1));
+        for m in mask.iter_mut().take(stop + 1).skip(i) {
+            *m = true;
+        }
+        i = stop + 1;
+    }
+    mask
+}
+
+/// Index of the `}` matching the `{` at `open` (same recorded depth).
+fn find_matching_brace(toks: &[Tok], depth: &[u32], open: usize) -> usize {
+    let d = depth[open];
+    let mut j = open + 1;
+    while j < toks.len() {
+        if toks[j].is(TokKind::Punct, "}") && depth[j] == d {
+            return j;
+        }
+        j += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_mask_covers_cfg_test_mod() {
+        let src = "fn live() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\nfn after() {}\n";
+        let fa = FileAnalysis::build("f.rs", src);
+        let mut unwraps = Vec::new();
+        for (t, masked) in fa.toks.iter().zip(fa.in_test.iter()) {
+            if t.text == "unwrap" {
+                unwraps.push(*masked);
+            }
+        }
+        assert_eq!(unwraps, vec![false, true]);
+        let after = fa.toks.iter().position(|t| t.text == "after").expect("after");
+        assert!(!fa.in_test[after]);
+    }
+
+    #[test]
+    fn test_mask_covers_test_fn_with_stacked_attrs() {
+        let src = "#[test]\n#[ignore]\nfn t() { z.unwrap(); }\nfn live() {}\n";
+        let fa = FileAnalysis::build("f.rs", src);
+        let z = fa.toks.iter().position(|t| t.text == "z").expect("z");
+        assert!(fa.in_test[z]);
+        let live = fa.toks.iter().position(|t| t.text == "live").expect("live");
+        assert!(!fa.in_test[live]);
+    }
+
+    #[test]
+    fn attr_mask_covers_derives() {
+        let src = "#[derive(Clone, Debug)]\nstruct S;\n";
+        let fa = FileAnalysis::build("f.rs", src);
+        let clone = fa.toks.iter().position(|t| t.text == "Clone").expect("Clone");
+        assert!(fa.in_attr[clone]);
+        let s = fa.toks.iter().position(|t| t.text == "S").expect("S");
+        assert!(!fa.in_attr[s]);
+    }
+
+    #[test]
+    fn waiver_parsing_and_application() {
+        let src = "// lint:allow(no_panic) -- startup config is load-bearing\nlet x = v.unwrap();\n// lint:allow(a, b)\n";
+        let fa = FileAnalysis::build("f.rs", src);
+        assert_eq!(fa.waivers.len(), 2);
+        assert!(fa.waivers[0].has_reason);
+        assert!(!fa.waivers[1].has_reason);
+        assert!(fa.waived("no_panic", 1));
+        assert!(fa.waived("no_panic", 2));
+        assert!(!fa.waived("no_panic", 3));
+        assert!(fa.waived("b", 3));
+    }
+
+    #[test]
+    fn safety_adjacency_through_comment_runs() {
+        let src = "// SAFETY: three lines of\n// justification for the\n// following block\nunsafe { a() }\n\nunsafe { b() }\n";
+        let fa = FileAnalysis::build("f.rs", src);
+        assert!(fa.safety_adjacent(4));
+        assert!(!fa.safety_adjacent(6));
+    }
+
+    #[test]
+    fn safety_adjacency_does_not_jump_blank_lines() {
+        let src = "// SAFETY: stale\n\nunsafe { a() }\n";
+        let fa = FileAnalysis::build("f.rs", src);
+        assert!(!fa.safety_adjacent(3));
+    }
+
+    #[test]
+    fn depth_matches_braces() {
+        let src = "fn f() { if x { y(); } }";
+        let fa = FileAnalysis::build("f.rs", src);
+        let y = fa.toks.iter().position(|t| t.text == "y").expect("y");
+        assert_eq!(fa.depth[y], 2);
+        let f = fa.toks.iter().position(|t| t.text == "f").expect("f");
+        assert_eq!(fa.depth[f], 0);
+    }
+}

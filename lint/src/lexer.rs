@@ -1,0 +1,418 @@
+//! A hand-rolled Rust lexer: just enough of the language to drive the
+//! token-pattern rules in [`crate::rules`], with zero dependencies.
+//!
+//! It is *not* a parser. It produces a flat token stream with line
+//! numbers, which is what the rules need: identifier context (`.unwrap(`
+//! vs `unwrap_or(`), comment adjacency (`// SAFETY:`), brace depth
+//! (lock-guard lifetimes), and attribute spans (`#[cfg(test)]` masking).
+//! The tricky part of lexing Rust at this level is not grammar but
+//! *strings*: raw strings, byte strings, char-vs-lifetime ambiguity, and
+//! nested block comments all have to be handled or every rule downstream
+//! reports phantom hits from inside literals.
+
+/// What kind of token this is. `Comment` tokens are kept in the stream so
+/// the analysis layer can extract waivers and `SAFETY:` adjacency before
+/// filtering them out of the significant-token view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Lifetime,
+    Number,
+    Str,
+    Char,
+    Punct,
+    Comment,
+}
+
+/// One token. `line` is 1-based and points at the token's first
+/// character; multi-line tokens (block comments, raw strings) record how
+/// many newlines they span in `extra_lines`.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    pub extra_lines: u32,
+}
+
+impl Tok {
+    fn new(kind: TokKind, text: String, line: u32) -> Tok {
+        let extra_lines = text.matches('\n').count() as u32;
+        Tok {
+            kind,
+            text,
+            line,
+            extra_lines,
+        }
+    }
+
+    pub fn is(&self, kind: TokKind, text: &str) -> bool {
+        self.kind == kind && self.text == text
+    }
+}
+
+/// Lex a whole source file into a flat token stream.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let lexer = Lexer {
+        chars: src.chars().collect(),
+        i: 0,
+        line: 1,
+        out: Vec::new(),
+    };
+    lexer.run()
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+    out: Vec<Tok>,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    fn run(mut self) -> Vec<Tok> {
+        while let Some(c) = self.peek(0) {
+            match c {
+                '\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                _ if c.is_whitespace() => self.i += 1,
+                '/' if self.peek(1) == Some('/') => self.line_comment(),
+                '/' if self.peek(1) == Some('*') => self.block_comment(),
+                'r' | 'b' => {
+                    // Raw/byte string prefixes share their first letter
+                    // with plain identifiers; try the string form first.
+                    if !self.rawish_string() {
+                        self.ident();
+                    }
+                }
+                '"' => self.string(),
+                '\'' => self.char_or_lifetime(),
+                _ if c == '_' || c.is_alphabetic() => self.ident(),
+                _ if c.is_ascii_digit() => self.number(),
+                _ => {
+                    self.out.push(Tok::new(TokKind::Punct, c.to_string(), self.line));
+                    self.i += 1;
+                }
+            }
+        }
+        self.out
+    }
+
+    fn slice(&self, start: usize) -> String {
+        self.chars[start..self.i.min(self.chars.len())].iter().collect()
+    }
+
+    fn line_comment(&mut self) {
+        let start = self.i;
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            self.i += 1;
+        }
+        let text = self.slice(start);
+        self.out.push(Tok::new(TokKind::Comment, text, self.line));
+    }
+
+    fn block_comment(&mut self) {
+        let start = self.i;
+        let start_line = self.line;
+        let mut depth = 0usize;
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                self.line += 1;
+                self.i += 1;
+            } else if c == '/' && self.peek(1) == Some('*') {
+                depth += 1;
+                self.i += 2;
+            } else if c == '*' && self.peek(1) == Some('/') {
+                depth = depth.saturating_sub(1);
+                self.i += 2;
+                if depth == 0 {
+                    break;
+                }
+            } else {
+                self.i += 1;
+            }
+        }
+        let text = self.slice(start);
+        self.out.push(Tok::new(TokKind::Comment, text, start_line));
+    }
+
+    /// Raw and byte string forms: `r"…"`, `r#"…"#` (any hash count),
+    /// `b"…"`, `br"…"`, `br#"…"#`. Returns false (consuming nothing) if
+    /// the `r`/`b` at the cursor is actually the start of an identifier,
+    /// a raw identifier (`r#match`), or a byte char (`b'x'` — handled by
+    /// the ident + char paths).
+    fn rawish_string(&mut self) -> bool {
+        let mut j = self.i;
+        let mut raw = false;
+        if self.chars.get(j) == Some(&'b') {
+            j += 1;
+        }
+        if self.chars.get(j) == Some(&'r') {
+            j += 1;
+            raw = true;
+        }
+        if !raw {
+            // b"…" — plain byte string; reuse the escaped-string scanner.
+            if self.chars.get(j) != Some(&'"') {
+                return false;
+            }
+            self.i = j;
+            self.string();
+            return true;
+        }
+        let mut hashes = 0usize;
+        while self.chars.get(j) == Some(&'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if self.chars.get(j) != Some(&'"') {
+            return false;
+        }
+        let start = self.i;
+        let start_line = self.line;
+        self.i = j + 1;
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                self.line += 1;
+                self.i += 1;
+            } else if c == '"' {
+                let mut k = self.i + 1;
+                let mut h = 0usize;
+                while h < hashes && self.chars.get(k) == Some(&'#') {
+                    h += 1;
+                    k += 1;
+                }
+                self.i = k;
+                if h == hashes {
+                    break;
+                }
+            } else {
+                self.i += 1;
+            }
+        }
+        let text = self.slice(start);
+        self.out.push(Tok::new(TokKind::Str, text, start_line));
+        true
+    }
+
+    fn string(&mut self) {
+        let start = self.i;
+        let start_line = self.line;
+        self.i += 1; // opening quote
+        while let Some(c) = self.peek(0) {
+            match c {
+                '\\' => self.i += 2,
+                '"' => {
+                    self.i += 1;
+                    break;
+                }
+                '\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                _ => self.i += 1,
+            }
+        }
+        let text = self.slice(start);
+        self.out.push(Tok::new(TokKind::Str, text, start_line));
+    }
+
+    /// Disambiguate `'a'` / `'\n'` (char literals) from `'static` / `'a`
+    /// (lifetimes). A quote followed by an escape is always a char; a
+    /// quote followed by an ident run is a char only when the run is one
+    /// character long and a closing quote follows.
+    fn char_or_lifetime(&mut self) {
+        let start = self.i;
+        if self.peek(1) == Some('\\') {
+            self.i += 2; // quote + backslash
+            // Skip the escape body (covers \', \\, \n, \u{…}) up to the
+            // closing quote.
+            while let Some(c) = self.peek(0) {
+                self.i += 1;
+                if c == '\'' {
+                    break;
+                }
+            }
+            let text = self.slice(start);
+            self.out.push(Tok::new(TokKind::Char, text, self.line));
+            return;
+        }
+        let mut j = self.i + 1;
+        while self.chars.get(j).is_some_and(|c| *c == '_' || c.is_alphanumeric()) {
+            j += 1;
+        }
+        if j == self.i + 2 && self.chars.get(j) == Some(&'\'') {
+            // 'x' — single-character literal.
+            self.i = j + 1;
+            let text = self.slice(start);
+            self.out.push(Tok::new(TokKind::Char, text, self.line));
+        } else if j > self.i + 1 {
+            // 'ident — a lifetime.
+            self.i = j;
+            let text = self.slice(start);
+            self.out.push(Tok::new(TokKind::Lifetime, text, self.line));
+        } else if self.peek(1).is_some() && self.peek(2) == Some('\'') {
+            // Non-alphanumeric char literal, e.g. `' '` or `'.'`.
+            self.i += 3;
+            let text = self.slice(start);
+            self.out.push(Tok::new(TokKind::Char, text, self.line));
+        } else {
+            self.out.push(Tok::new(TokKind::Punct, "'".to_string(), self.line));
+            self.i += 1;
+        }
+    }
+
+    fn ident(&mut self) {
+        let start = self.i;
+        while self.peek(0).is_some_and(|c| c == '_' || c.is_alphanumeric()) {
+            self.i += 1;
+        }
+        let text = self.slice(start);
+        self.out.push(Tok::new(TokKind::Ident, text, self.line));
+    }
+
+    fn number_continues(&self, c: char, prev: char) -> bool {
+        if c.is_ascii_alphanumeric() || c == '_' {
+            return true;
+        }
+        if c == '.' && prev != '.' {
+            // Consume the dot only when a digit follows, so `0..n`
+            // ranges and `1.max(2)` method calls stay intact.
+            return self.peek(1).is_some_and(|d| d.is_ascii_digit());
+        }
+        (c == '+' || c == '-') && (prev == 'e' || prev == 'E')
+    }
+
+    /// Numbers: ints, floats, hex/oct/bin, `_` separators, type
+    /// suffixes, exponents with signs.
+    fn number(&mut self) {
+        let start = self.i;
+        self.i += 1;
+        while let Some(c) = self.peek(0) {
+            if !self.number_continues(c, self.chars[self.i - 1]) {
+                break;
+            }
+            self.i += 1;
+        }
+        let text = self.slice(start);
+        self.out.push(Tok::new(TokKind::Number, text, self.line));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_and_puncts() {
+        let toks = kinds("let x = y.unwrap();");
+        let texts: Vec<&str> = toks.iter().map(|(_, t)| t.as_str()).collect();
+        assert_eq!(texts, vec!["let", "x", "=", "y", ".", "unwrap", "(", ")", ";"]);
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let toks = kinds(r#"let s = "x.unwrap()"; s"#);
+        assert!(toks.iter().all(|(k, t)| *k != TokKind::Ident || t != "unwrap"));
+        assert_eq!(toks.iter().filter(|(k, _)| *k == TokKind::Str).count(), 1);
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let src = "let s = r#\"a \" b.unwrap()\"# ; done";
+        let toks = kinds(src);
+        assert!(toks.iter().any(|(_, t)| t == "done"));
+        assert!(toks.iter().all(|(_, t)| t != "unwrap"));
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let toks = kinds(r#"let a = b"\r\n\r\n"; let c = b'x';"#);
+        assert_eq!(toks.iter().filter(|(k, _)| *k == TokKind::Str).count(), 1);
+        assert!(toks.iter().any(|(k, _)| *k == TokKind::Char));
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let toks = kinds("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert_eq!(toks.iter().filter(|(k, _)| *k == TokKind::Lifetime).count(), 2);
+        assert_eq!(toks.iter().filter(|(k, _)| *k == TokKind::Char).count(), 1);
+    }
+
+    #[test]
+    fn escaped_char_literals() {
+        let toks = kinds(r"let nl = '\n'; let q = '\''; let u = '\u{1F600}'; x");
+        assert_eq!(toks.iter().filter(|(k, _)| *k == TokKind::Char).count(), 3);
+        assert!(toks.iter().any(|(_, t)| t == "x"));
+    }
+
+    #[test]
+    fn punctuation_char_literals() {
+        let toks = kinds("line.split(' ').find(|c| c == '.')");
+        assert_eq!(toks.iter().filter(|(k, _)| *k == TokKind::Char).count(), 2);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = kinds("a /* outer /* inner */ still comment */ b");
+        let idents: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Ident)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(idents, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn line_numbers_track_multiline_tokens() {
+        let src = "a\n/* one\ntwo */\nb";
+        let toks = lex(src);
+        let b = toks.iter().find(|t| t.text == "b").expect("b lexed");
+        assert_eq!(b.line, 4);
+        let c = toks.iter().find(|t| t.kind == TokKind::Comment).expect("comment lexed");
+        assert_eq!(c.line, 2);
+        assert_eq!(c.extra_lines, 1);
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges_or_methods() {
+        let texts: Vec<String> = kinds("for i in 0..n { 1.max(2); 3.5e-2; }")
+            .into_iter()
+            .map(|(_, t)| t)
+            .collect();
+        assert!(texts.contains(&"0".to_string()));
+        assert!(texts.contains(&"n".to_string()));
+        assert!(texts.contains(&"max".to_string()));
+        assert!(texts.contains(&"3.5e-2".to_string()));
+    }
+
+    #[test]
+    fn underscored_numbers_and_suffixes() {
+        let texts: Vec<String> = kinds("1_000_000u64 + 0xFF_EC + 0b1010")
+            .into_iter()
+            .map(|(_, t)| t)
+            .collect();
+        assert_eq!(texts[0], "1_000_000u64");
+        assert!(texts.contains(&"0xFF_EC".to_string()));
+    }
+
+    #[test]
+    fn tok_is_helper() {
+        let toks = lex("fn main() {}");
+        assert!(toks[0].is(TokKind::Ident, "fn"));
+        assert!(!toks[0].is(TokKind::Punct, "fn"));
+    }
+}

@@ -1,0 +1,211 @@
+//! cocoa-lint: a repo-native static invariant checker for the cocoa
+//! workspace.
+//!
+//! The main crate documents three contracts that ordinary tests catch
+//! only probabilistically: the no-panic discipline on serving/parsing
+//! surfaces, the three-executor determinism invariant (no wall clock or
+//! hash-ordered iteration inside rounds), and unsafe/lock hygiene. This
+//! crate enforces them *statically*, with `file:line` diagnostics and a
+//! JSON report for CI. Rules, scope, and the waiver syntax are
+//! catalogued in `ANALYSIS.md` at the repository root.
+//!
+//! The checker is dependency-free by design — a hand-rolled lexer
+//! ([`lexer`]), a per-file analysis pass ([`analysis`]), token-pattern
+//! rules ([`rules`]) and renderers ([`report`]). It parses nothing it
+//! does not need: rules operate on token adjacency, brace depth, and
+//! comment geometry, which keeps the whole tool small enough to audit
+//! in one sitting.
+
+pub mod analysis;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use report::Report;
+use rules::Diagnostic;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Lint every `.rs` file under `root`. `enabled_rules` empty = all
+/// rules. Files are visited in sorted path order so output (and the
+/// JSON artifact) is stable across runs and machines.
+pub fn lint_root(root: &Path, enabled_rules: &[String]) -> Result<Report, String> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut diagnostics: Vec<Diagnostic> = Vec::new();
+    for path in &files {
+        let src = match fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => return Err(format!("read {}: {e}", path.display())),
+        };
+        let rel = rel_path(root, path);
+        let fa = analysis::FileAnalysis::build(&rel, &src);
+        for d in rules::check_file(&fa) {
+            if enabled_rules.is_empty() || enabled_rules.iter().any(|r| r == d.rule) {
+                diagnostics.push(d);
+            }
+        }
+    }
+    diagnostics.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    Ok(Report {
+        root: root.display().to_string(),
+        files_scanned: files.len(),
+        diagnostics,
+    })
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) => return Err(format!("read_dir {}: {e}", dir.display())),
+    };
+    for entry in entries {
+        let entry = match entry {
+            Ok(e) => e,
+            Err(e) => return Err(format!("read_dir {}: {e}", dir.display())),
+        };
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let parts: Vec<String> = rel
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().to_string())
+        .collect();
+    parts.join("/")
+}
+
+fn usage() -> String {
+    let mut s = String::new();
+    s.push_str("cocoa-lint: invariant checker for the cocoa workspace\n");
+    s.push_str("usage: cocoa-lint [--root DIR] [--format text|json] [--out FILE]\n");
+    s.push_str("                  [--rules a,b,...] [--list-rules]\n");
+    s.push_str("exit codes: 0 clean, 1 violations found, 2 usage or io error\n");
+    s
+}
+
+/// The whole CLI as a library function returning the process exit code,
+/// so integration tests (and the fixture self-checks) can drive it
+/// in-process instead of spawning binaries.
+pub fn cli_run(args: &[String]) -> i32 {
+    let mut root = PathBuf::from("rust/src");
+    let mut json = false;
+    let mut out_path: Option<PathBuf> = None;
+    let mut rules_filter: Vec<String> = Vec::new();
+    let mut i = 0usize;
+    while i < args.len() {
+        let arg = args[i].as_str();
+        let value = args.get(i + 1).cloned();
+        match arg {
+            "--help" | "-h" => {
+                print!("{}", usage());
+                return 0;
+            }
+            "--list-rules" => {
+                for (name, desc) in rules::ALL_RULES {
+                    println!("{name}: {desc}");
+                }
+                return 0;
+            }
+            "--root" => {
+                let Some(v) = value else {
+                    eprintln!("--root needs a value");
+                    return 2;
+                };
+                root = PathBuf::from(v);
+                i += 1;
+            }
+            "--format" => {
+                let Some(v) = value else {
+                    eprintln!("--format needs a value");
+                    return 2;
+                };
+                match v.as_str() {
+                    "text" => json = false,
+                    "json" => json = true,
+                    other => {
+                        eprintln!("unknown format {other:?} (expected text or json)");
+                        return 2;
+                    }
+                }
+                i += 1;
+            }
+            "--out" => {
+                let Some(v) = value else {
+                    eprintln!("--out needs a value");
+                    return 2;
+                };
+                out_path = Some(PathBuf::from(v));
+                i += 1;
+            }
+            "--rules" => {
+                let Some(v) = value else {
+                    eprintln!("--rules needs a value");
+                    return 2;
+                };
+                rules_filter = v.split(',').map(|s| s.trim().to_string()).collect();
+                i += 1;
+            }
+            other => {
+                eprintln!("unknown argument {other:?}\n{}", usage());
+                return 2;
+            }
+        }
+        i += 1;
+    }
+    let report = match lint_root(&root, &rules_filter) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("cocoa-lint: {e}");
+            return 2;
+        }
+    };
+    let rendered = if json {
+        report.to_json()
+    } else {
+        report.to_text()
+    };
+    if let Some(p) = &out_path {
+        if let Err(e) = fs::write(p, &rendered) {
+            eprintln!("cocoa-lint: write {}: {e}", p.display());
+            return 2;
+        }
+    }
+    print!("{rendered}");
+    // Clean tree exits 0; any violation exits 1 (2 is usage/io).
+    i32::from(!report.clean())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_path_is_slash_separated() {
+        let root = Path::new("/a/b");
+        let p = Path::new("/a/b/serve/http.rs");
+        assert_eq!(rel_path(root, p), "serve/http.rs");
+    }
+
+    #[test]
+    fn cli_rejects_bad_flags() {
+        assert_eq!(cli_run(&["--format".to_string()]), 2);
+        assert_eq!(cli_run(&["--format".to_string(), "xml".to_string()]), 2);
+        assert_eq!(cli_run(&["--bogus".to_string()]), 2);
+    }
+
+    #[test]
+    fn cli_errors_on_missing_root() {
+        let args = vec!["--root".to_string(), "/nonexistent/cocoa".to_string()];
+        assert_eq!(cli_run(&args), 2);
+    }
+}

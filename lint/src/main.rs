@@ -1,0 +1,9 @@
+//! Thin binary wrapper: all logic lives in the library so integration
+//! tests can drive the CLI in-process and assert exit codes.
+
+use std::process::exit;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    exit(cocoa_lint::cli_run(&args));
+}

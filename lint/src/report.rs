@@ -1,0 +1,134 @@
+//! Rendering: human-readable text with `file:line:` prefixes (clickable
+//! in most editors and CI logs) and a hand-rolled machine-readable JSON
+//! document (mirroring the main crate's dependency-free `util::json`
+//! school — no serde).
+
+use crate::rules::Diagnostic;
+
+pub struct Report {
+    /// The scanned root as given on the command line.
+    pub root: String,
+    pub files_scanned: usize,
+    /// Sorted by (path, line, rule).
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            let row = format!("{}/{}:{}: [{}] {}\n", self.root, d.path, d.line, d.rule, d.msg);
+            out.push_str(&row);
+        }
+        let tail = format!(
+            "cocoa-lint: {} files scanned, {} violations\n",
+            self.files_scanned,
+            self.diagnostics.len()
+        );
+        out.push_str(&tail);
+        out
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str("  \"tool\": \"cocoa-lint\",\n");
+        out.push_str(&format!("  \"root\": \"{}\",\n", json_escape(&self.root)));
+        out.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
+        out.push_str(&format!("  \"violations\": {},\n", self.diagnostics.len()));
+        out.push_str("  \"diagnostics\": [\n");
+        for (i, d) in self.diagnostics.iter().enumerate() {
+            let last = i + 1 == self.diagnostics.len();
+            let sep = if last { "" } else { "," };
+            let row = format!(
+                "    {{\"rule\": \"{}\", \"path\": \"{}\", \"line\": {}, \"msg\": \"{}\"}}{sep}\n",
+                d.rule,
+                json_escape(&d.path),
+                d.line,
+                json_escape(&d.msg)
+            );
+            out.push_str(&row);
+        }
+        out.push_str("  ]\n");
+        out.push_str("}\n");
+        out
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let code = format!("\\u{:04x}", c as u32);
+                out.push_str(&code);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::RULE_NO_PANIC;
+
+    fn sample() -> Report {
+        Report {
+            root: "rust/src".to_string(),
+            files_scanned: 2,
+            diagnostics: vec![Diagnostic {
+                rule: RULE_NO_PANIC,
+                path: "serve/http.rs".to_string(),
+                line: 7,
+                msg: "`.unwrap()` is forbidden on a no-panic surface".to_string(),
+            }],
+        }
+    }
+
+    #[test]
+    fn text_has_clickable_locations() {
+        let txt = sample().to_text();
+        assert!(txt.contains("rust/src/serve/http.rs:7: [no_panic]"), "{txt}");
+        assert!(txt.contains("1 violations"));
+    }
+
+    #[test]
+    fn json_is_balanced_and_escaped() {
+        let mut r = sample();
+        r.diagnostics[0].msg = "quote \" backslash \\ newline \n done".to_string();
+        let js = r.to_json();
+        assert!(js.contains("\\\" backslash \\\\ newline \\n done"));
+        assert_eq!(js.matches('{').count(), js.matches('}').count());
+        assert!(js.contains("\"violations\": 1,"));
+        assert!(js.contains("\"files_scanned\": 2,"));
+    }
+
+    #[test]
+    fn empty_report_is_clean_valid_json() {
+        let r = Report {
+            root: "rust/src".to_string(),
+            files_scanned: 0,
+            diagnostics: Vec::new(),
+        };
+        assert!(r.clean());
+        let js = r.to_json();
+        assert!(js.contains("\"violations\": 0,"));
+        assert!(js.contains("\"diagnostics\": [\n  ]"), "{js}");
+    }
+
+    #[test]
+    fn control_chars_become_unicode_escapes() {
+        assert_eq!(json_escape("a\u{01}b"), "a\\u0001b");
+    }
+}

@@ -1,0 +1,446 @@
+//! The four rule families, each a linear scan over a
+//! [`FileAnalysis`]. Scope and rationale for every rule live in
+//! `ANALYSIS.md` at the repo root; diagnostics carry `file:line` and are
+//! suppressible with `// lint:allow(<rule>) -- <reason>`.
+
+use crate::analysis::FileAnalysis;
+use crate::lexer::TokKind;
+
+/// One finding. `path` is relative to the lint root.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+pub const RULE_NO_PANIC: &str = "no_panic";
+pub const RULE_DETERMINISM: &str = "determinism";
+pub const RULE_UNSAFE_SAFETY: &str = "unsafe_safety";
+pub const RULE_LOCK_ORDER: &str = "lock_order";
+pub const RULE_WAIVER: &str = "waiver";
+
+pub const ALL_RULES: &[(&str, &str)] = &[
+    (RULE_NO_PANIC, "no unwrap/expect/panic!/indexing on serving or parsing surfaces"),
+    (RULE_DETERMINISM, "no wall clock, hash iteration, or arrival-order gathers in round code"),
+    (RULE_UNSAFE_SAFETY, "every unsafe block or impl carries an adjacent // SAFETY: comment"),
+    (RULE_LOCK_ORDER, "nested lock acquisitions follow admin < model < w_shared"),
+    (RULE_WAIVER, "lint:allow waivers must carry a `-- reason`"),
+];
+
+/// Files where a panic is an availability bug: request handling and
+/// input parsing. Matched as suffixes of the root-relative path.
+pub const NO_PANIC_SURFACES: &[&str] = &[
+    "coordinator/wire.rs",
+    "serve/http.rs",
+    "serve/router.rs",
+    "serve/predict.rs",
+    "data/libsvm.rs",
+];
+
+/// Directories whose code runs inside optimization rounds, where the
+/// three-executor bit-identity invariant holds. Wall clock and
+/// hash-ordered iteration are banned here; timing goes through
+/// `util::timer` (`Stopwatch` / `Deadline`), keyed aggregation through
+/// `BTreeMap`, and gathers through per-worker-index `recv()`.
+pub const DETERMINISM_DIRS: &[&str] = &["driver/", "solver/", "coordinator/"];
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+const HASH_COLLECTIONS: &[&str] = &["HashMap", "HashSet"];
+const WALL_CLOCK: &[&str] = &["Instant", "SystemTime"];
+
+/// Keywords that may legitimately precede `[` without it being an index
+/// expression (slice patterns, `for x in arr[..]` is still caught via
+/// the ident before `[`, but `let [a, b] = …` is not an index).
+const KEYWORDS: &str = "as break const continue crate dyn else enum extern fn for if impl in let loop match mod move mut pub ref return static struct super trait type unsafe use where while yield";
+
+/// The declared lock hierarchy: a lock may only be acquired while
+/// holding locks of strictly lower rank.
+pub const LOCK_RANKS: &[(&str, u32)] = &[("admin", 0), ("model", 1), ("w_shared", 2)];
+
+const LOCK_METHODS: &[&str] = &["lock", "read", "write", "try_lock", "try_read", "try_write"];
+
+/// Functions that acquire a ranked lock on the caller's behalf:
+/// (function name, lock it takes, does the guard escape to the caller).
+/// A non-escaping acquirer releases before returning, so it only has to
+/// be *consistent* with what the caller already holds; an escaping one
+/// joins the caller's held set.
+const ACQUIRER_FNS: &[(&str, &str, bool)] = &[
+    ("admin_guard", "admin", true),
+    ("swap_model", "model", false),
+    ("model", "model", false),
+];
+
+fn is_keyword(s: &str) -> bool {
+    KEYWORDS.split_whitespace().any(|k| k == s)
+}
+
+/// Run every rule family over one analyzed file.
+pub fn check_file(fa: &FileAnalysis) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if NO_PANIC_SURFACES.iter().any(|s| fa.rel.ends_with(s)) {
+        check_no_panic(fa, &mut out);
+    }
+    if DETERMINISM_DIRS.iter().any(|d| fa.rel.starts_with(d)) {
+        check_determinism(fa, &mut out);
+    }
+    check_unsafe_safety(fa, &mut out);
+    check_lock_order(fa, &mut out);
+    check_waiver_format(fa, &mut out);
+    out
+}
+
+fn push(
+    out: &mut Vec<Diagnostic>,
+    fa: &FileAnalysis,
+    rule: &'static str,
+    line: u32,
+    message: String,
+) {
+    if !fa.waived(rule, line) {
+        out.push(Diagnostic {
+            rule,
+            path: fa.rel.clone(),
+            line,
+            msg: message,
+        });
+    }
+}
+
+fn check_no_panic(fa: &FileAnalysis, out: &mut Vec<Diagnostic>) {
+    for (i, t) in fa.toks.iter().enumerate() {
+        if fa.in_test[i] || fa.in_attr[i] {
+            continue;
+        }
+        if is_panicky_call(fa, i, "unwrap") || is_panicky_call(fa, i, "expect") {
+            let msg = format!("`.{}()` is forbidden on a no-panic surface", t.text);
+            push(out, fa, RULE_NO_PANIC, t.line, msg);
+            continue;
+        }
+        if is_panic_macro(fa, i) {
+            let msg = format!("`{}!` is forbidden on a no-panic surface", t.text);
+            push(out, fa, RULE_NO_PANIC, t.line, msg);
+            continue;
+        }
+        if t.is(TokKind::Punct, "[") && is_index_bracket(fa, i) {
+            let target = fa.prev_tok(i).map(|p| p.text.clone()).unwrap_or_default();
+            let msg = format!("direct `{target}[..]` indexing; use .get()/checked splits");
+            push(out, fa, RULE_NO_PANIC, t.line, msg);
+        }
+    }
+}
+
+fn is_panicky_call(fa: &FileAnalysis, i: usize, name: &str) -> bool {
+    if !fa.toks[i].is(TokKind::Ident, name) {
+        return false;
+    }
+    let after_dot = fa.prev_tok(i).is_some_and(|p| p.is(TokKind::Punct, "."));
+    let called = fa.next_tok(i).is_some_and(|n| n.is(TokKind::Punct, "("));
+    after_dot && called
+}
+
+fn is_panic_macro(fa: &FileAnalysis, i: usize) -> bool {
+    let t = &fa.toks[i];
+    if t.kind != TokKind::Ident || !PANIC_MACROS.contains(&t.text.as_str()) {
+        return false;
+    }
+    fa.next_tok(i).is_some_and(|n| n.is(TokKind::Punct, "!"))
+}
+
+fn is_index_bracket(fa: &FileAnalysis, i: usize) -> bool {
+    match fa.prev_tok(i) {
+        Some(p) if p.kind == TokKind::Ident => !is_keyword(&p.text),
+        Some(p) => p.is(TokKind::Punct, ")") || p.is(TokKind::Punct, "]"),
+        None => false,
+    }
+}
+
+fn check_determinism(fa: &FileAnalysis, out: &mut Vec<Diagnostic>) {
+    for (i, t) in fa.toks.iter().enumerate() {
+        if fa.in_test[i] || fa.in_attr[i] || t.kind != TokKind::Ident {
+            continue;
+        }
+        let name = t.text.as_str();
+        if HASH_COLLECTIONS.contains(&name) {
+            let msg = format!("{name} iteration order varies; use BTreeMap/BTreeSet");
+            push(out, fa, RULE_DETERMINISM, t.line, msg);
+        } else if WALL_CLOCK.contains(&name) {
+            let msg = format!("{name} is wall clock; route through util::timer");
+            push(out, fa, RULE_DETERMINISM, t.line, msg);
+        } else if name == "try_iter" {
+            let msg = "try_iter drains in arrival order; recv() per worker".to_string();
+            push(out, fa, RULE_DETERMINISM, t.line, msg);
+        } else if is_rx_name(name) && is_arrival_order_gather(fa, i) {
+            let msg = format!("receiver `{name}` gathered in arrival order");
+            push(out, fa, RULE_DETERMINISM, t.line, msg);
+        }
+    }
+}
+
+fn is_rx_name(name: &str) -> bool {
+    name == "rx" || name.ends_with("_rx")
+}
+
+/// `for upd in rx { … }`, `rx.iter()`, `rx.into_iter()` — gathers whose
+/// order depends on which worker finished first.
+fn is_arrival_order_gather(fa: &FileAnalysis, i: usize) -> bool {
+    if fa.prev_tok(i).is_some_and(|p| p.is(TokKind::Ident, "in")) {
+        return true;
+    }
+    if !fa.next_tok(i).is_some_and(|n| n.is(TokKind::Punct, ".")) {
+        return false;
+    }
+    let m = match fa.toks.get(i + 2) {
+        Some(m) => m,
+        None => return false,
+    };
+    m.is(TokKind::Ident, "iter") || m.is(TokKind::Ident, "into_iter")
+}
+
+fn check_unsafe_safety(fa: &FileAnalysis, out: &mut Vec<Diagnostic>) {
+    for (i, t) in fa.toks.iter().enumerate() {
+        if fa.in_test[i] || fa.in_attr[i] || !t.is(TokKind::Ident, "unsafe") {
+            continue;
+        }
+        if !fa.safety_adjacent(t.line) {
+            let msg = "unsafe without an adjacent // SAFETY: comment".to_string();
+            push(out, fa, RULE_UNSAFE_SAFETY, t.line, msg);
+        }
+    }
+}
+
+struct HeldLock {
+    name: String,
+    rank: u32,
+    depth: u32,
+    line: u32,
+}
+
+fn rank_of(name: &str) -> Option<u32> {
+    LOCK_RANKS.iter().find(|(n, _)| *n == name).map(|(_, r)| *r)
+}
+
+/// `<name>.lock()` / `.read()` / `.write()` / `try_*` on a ranked lock.
+fn is_lock_call(fa: &FileAnalysis, i: usize) -> bool {
+    if !fa.next_tok(i).is_some_and(|n| n.is(TokKind::Punct, ".")) {
+        return false;
+    }
+    let method = match fa.toks.get(i + 2) {
+        Some(m) if m.kind == TokKind::Ident => m.text.as_str(),
+        _ => return false,
+    };
+    if !LOCK_METHODS.contains(&method) {
+        return false;
+    }
+    fa.toks.get(i + 3).is_some_and(|c| c.is(TokKind::Punct, "("))
+}
+
+fn check_lock_order(fa: &FileAnalysis, out: &mut Vec<Diagnostic>) {
+    let mut held: Vec<HeldLock> = Vec::new();
+    for (i, t) in fa.toks.iter().enumerate() {
+        if t.is(TokKind::Punct, "}") {
+            // A guard lives until its enclosing block closes.
+            held.retain(|h| h.depth <= fa.depth[i]);
+            continue;
+        }
+        if fa.in_test[i] || fa.in_attr[i] || t.kind != TokKind::Ident {
+            continue;
+        }
+        if let Some(rank) = rank_of(&t.text) {
+            if is_lock_call(fa, i) {
+                lock_event(fa, out, &mut held, &t.text, rank, fa.depth[i], t.line, true);
+                continue;
+            }
+        }
+        let acq = ACQUIRER_FNS.iter().find(|(f, _, _)| *f == t.text.as_str());
+        if let Some(&(_, lock, escaping)) = acq {
+            let called = fa.next_tok(i).is_some_and(|n| n.is(TokKind::Punct, "("));
+            let is_def = fa.prev_tok(i).is_some_and(|p| p.is(TokKind::Ident, "fn"));
+            if called && !is_def {
+                let rank = rank_of(lock).unwrap_or(u32::MAX);
+                lock_event(fa, out, &mut held, lock, rank, fa.depth[i], t.line, escaping);
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn lock_event(
+    fa: &FileAnalysis,
+    out: &mut Vec<Diagnostic>,
+    held: &mut Vec<HeldLock>,
+    name: &str,
+    rank: u32,
+    depth: u32,
+    line: u32,
+    holds: bool,
+) {
+    for h in held.iter() {
+        if h.name == name {
+            let msg = format!("`{name}` re-acquired while held since line {}", h.line);
+            push(out, fa, RULE_LOCK_ORDER, line, msg);
+        } else if h.rank > rank {
+            let msg = format!(
+                "`{name}` (rank {rank}) acquired while `{}` (rank {}, line {}) is held",
+                h.name, h.rank, h.line
+            );
+            push(out, fa, RULE_LOCK_ORDER, line, msg);
+        }
+    }
+    if holds {
+        held.push(HeldLock {
+            name: name.to_string(),
+            rank,
+            depth,
+            line,
+        });
+    }
+}
+
+fn check_waiver_format(fa: &FileAnalysis, out: &mut Vec<Diagnostic>) {
+    for w in &fa.waivers {
+        if !w.has_reason {
+            out.push(Diagnostic {
+                rule: RULE_WAIVER,
+                path: fa.rel.clone(),
+                line: w.line,
+                msg: "lint:allow waiver missing a `-- reason`".to_string(),
+            });
+        }
+        for r in &w.rules {
+            if !ALL_RULES.iter().any(|(n, _)| n == r) {
+                out.push(Diagnostic {
+                    rule: RULE_WAIVER,
+                    path: fa.rel.clone(),
+                    line: w.line,
+                    msg: format!("waiver names unknown rule `{r}`"),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diags(rel: &str, src: &str) -> Vec<Diagnostic> {
+        check_file(&FileAnalysis::build(rel, src))
+    }
+
+    #[test]
+    fn unwrap_flagged_only_on_surfaces() {
+        let src = "fn f() { x.unwrap(); }\n";
+        assert_eq!(diags("serve/http.rs", src).len(), 1);
+        assert_eq!(diags("solver/sdca.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn unwrap_or_family_is_allowed() {
+        let src = "fn f() { x.unwrap_or(0); y.unwrap_or_else(id); z.unwrap_or_default(); }\n";
+        assert!(diags("serve/http.rs", src).is_empty());
+    }
+
+    #[test]
+    fn indexing_heuristics() {
+        let flagged = "fn f() { let a = buf[0]; }\n";
+        assert_eq!(diags("serve/http.rs", flagged).len(), 1);
+        let ok = "fn f(x: [u8; 4]) { let [a, b] = pair; let v = vec![1]; let s: &[u8] = q; }\n";
+        let d = diags("serve/http.rs", ok);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn panic_macros_flagged() {
+        let src = "fn f() { if bad { panic!(\"no\"); } else { unreachable!() } }\n";
+        assert_eq!(diags("coordinator/wire.rs", src).len(), 2);
+    }
+
+    #[test]
+    fn test_code_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); buf[0]; }\n}\n";
+        assert!(diags("serve/http.rs", src).is_empty());
+    }
+
+    #[test]
+    fn waiver_suppresses_with_reason() {
+        let src = "fn f() {\n    // lint:allow(no_panic) -- checked two lines up\n    x.unwrap();\n}\n";
+        assert!(diags("serve/http.rs", src).is_empty());
+    }
+
+    #[test]
+    fn reasonless_waiver_is_itself_flagged() {
+        let src = "fn f() {\n    // lint:allow(no_panic)\n    x.unwrap();\n}\n";
+        let d = diags("serve/http.rs", src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, RULE_WAIVER);
+    }
+
+    #[test]
+    fn determinism_bans_hash_and_clock() {
+        let src = "use std::collections::HashMap;\nfn f() { let t = Instant::now(); }\n";
+        let d = diags("driver/train.rs", src);
+        assert_eq!(d.len(), 2);
+        assert!(d.iter().all(|x| x.rule == RULE_DETERMINISM));
+        assert!(diags("serve/http.rs", src).is_empty());
+    }
+
+    #[test]
+    fn gather_order_patterns() {
+        let src = "fn g() { for upd in rx { push(upd); } reply_rx.iter().count(); q.try_iter(); }\n";
+        let d = diags("coordinator/pool.rs", src);
+        assert_eq!(d.len(), 3, "{d:?}");
+        let ok = "fn g() { let r = reply_rx.recv(); for (li, &gi) in parts.iter() {} }\n";
+        assert!(diags("coordinator/pool.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn unsafe_requires_safety_comment() {
+        let bad = "fn f() { unsafe { q() } }\n";
+        assert_eq!(diags("linalg/sparse.rs", bad).len(), 1);
+        let good = "fn f() {\n    // SAFETY: q upholds its contract here.\n    unsafe { q() }\n}\n";
+        assert!(diags("linalg/sparse.rs", good).is_empty());
+    }
+
+    #[test]
+    fn lock_inversion_detected_and_order_allowed() {
+        let bad = "fn f(s: &S) { let g = s.model.write(); let a = s.admin.lock(); }\n";
+        let d = diags("serve/router.rs", bad);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, RULE_LOCK_ORDER);
+        let good = "fn f(s: &S) { let a = s.admin.lock(); let g = s.model.write(); }\n";
+        assert!(diags("serve/router.rs", good).is_empty());
+    }
+
+    #[test]
+    fn guards_die_with_their_block() {
+        let src = "fn f(s: &S) { { let g = s.model.write(); } let a = s.admin.lock(); }\n";
+        assert!(diags("serve/router.rs", src).is_empty());
+    }
+
+    #[test]
+    fn acquirer_fns_participate() {
+        let bad = "fn h(s: &S) { let g = s.model.write(); let a = admin_guard(s); }\n";
+        assert_eq!(diags("serve/router.rs", bad).len(), 1);
+        let good = "fn h(s: &S) { let a = admin_guard(s); s.swap_model(m); }\n";
+        assert!(diags("serve/router.rs", good).is_empty());
+        let reentrant = "fn h(s: &S) { let g = s.model.write(); s.swap_model(m); }\n";
+        assert_eq!(diags("serve/router.rs", reentrant).len(), 1);
+    }
+
+    #[test]
+    fn dotted_model_accessor_participates() {
+        let bad = "fn h(s: &S) { let g = s.model.write(); let m = s.model(); }\n";
+        assert_eq!(diags("serve/router.rs", bad).len(), 1);
+        let ok = "fn h(s: &S) { let m = s.model(); let a = admin_guard(s); }\n";
+        assert!(diags("serve/router.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn acquirer_definition_site_is_not_an_event() {
+        let src = "fn admin_guard(s: &S) -> G { s.admin.try_lock() }\n";
+        assert!(diags("serve/router.rs", src).is_empty());
+    }
+}

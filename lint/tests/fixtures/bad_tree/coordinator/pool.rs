@@ -1,0 +1,16 @@
+//! Fixture: determinism violations inside a round loop — hash-ordered
+//! collections, wall clock, and an arrival-order channel gather.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn gather(rx: std::sync::mpsc::Receiver<f64>) -> Vec<f64> {
+    let t0 = Instant::now();
+    let seen: HashMap<usize, f64> = HashMap::new();
+    let mut out = Vec::new();
+    for r in rx {
+        out.push(r);
+    }
+    let _ = (t0, seen.len());
+    out
+}

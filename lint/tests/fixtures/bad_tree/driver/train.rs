@@ -1,0 +1,10 @@
+//! Fixture: completion-order gather in a driver round loop — the order
+//! of `out` depends on which worker finished first.
+
+pub fn collect_updates(rx: Receiver<Update>) -> Vec<Update> {
+    let mut out = Vec::new();
+    for r in rx {
+        out.push(r);
+    }
+    out
+}

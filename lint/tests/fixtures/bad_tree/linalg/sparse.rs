@@ -1,0 +1,10 @@
+//! Fixture: an unsafe block with no justification comment.
+
+pub fn row_dot(idx: &[u32], vals: &[f64], w: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for (j, &c) in idx.iter().enumerate() {
+        // missing justification comment: this is what the rule catches
+        acc += unsafe { vals.get_unchecked(j) * w.get_unchecked(c as usize) };
+    }
+    acc
+}

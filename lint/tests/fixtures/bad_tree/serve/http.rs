@@ -1,0 +1,13 @@
+//! Fixture: a panicking request handler. Every construct below is a
+//! distinct `no_panic` target (unwrap, expect, direct indexing,
+//! panic!). This file is test data — it is never compiled.
+
+pub fn handle(buf: &[u8]) -> String {
+    let head = std::str::from_utf8(buf).unwrap();
+    let first = head.lines().next().expect("request line");
+    let b = buf[0];
+    if b == 0 {
+        panic!("empty request");
+    }
+    first.to_string()
+}

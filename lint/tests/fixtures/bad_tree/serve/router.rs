@@ -1,0 +1,9 @@
+//! Fixture: inverted nested lock acquisition — `model` taken first,
+//! then `admin`, against the declared admin < model < w_shared order.
+
+pub fn reload(state: &AppState) -> Result<(), String> {
+    let guard = state.model.write();
+    let _admin = state.admin.lock();
+    drop(guard);
+    Ok(())
+}

@@ -1,0 +1,7 @@
+//! Fixture: a violation suppressed by a waiver carrying a reason — the
+//! tree must lint clean.
+
+pub fn score(w: &[f64]) -> f64 {
+    // lint:allow(no_panic) -- fixture: caller guarantees a first weight
+    w.first().copied().unwrap()
+}

@@ -1,0 +1,110 @@
+//! End-to-end tests over the fixture corpus and the real tree.
+//!
+//! Three guarantees live here:
+//! 1. every rule family fires on its known-bad fixture (exact counts,
+//!    so a silently weakened rule is a test failure);
+//! 2. a waiver with a reason suppresses its diagnostic;
+//! 3. the clean-tree self-check — the real `rust/src` lints green, so
+//!    the CI lint gate stays green by construction, and the CLI's
+//!    non-zero failure mode is proven against the bad fixture tree
+//!    rather than by breaking main.
+
+use cocoa_lint::report::Report;
+use cocoa_lint::{cli_run, lint_root};
+use std::path::{Path, PathBuf};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+fn real_src() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../rust/src")
+}
+
+fn count(report: &Report, path: &str, rule: &str) -> usize {
+    let mut n = 0;
+    for d in &report.diagnostics {
+        if d.path == path && d.rule == rule {
+            n += 1;
+        }
+    }
+    n
+}
+
+#[test]
+fn bad_tree_triggers_every_rule_family() {
+    let report = lint_root(&fixture("bad_tree"), &[]).expect("lint bad_tree");
+    assert_eq!(report.files_scanned, 5);
+    let diags = &report.diagnostics;
+    assert_eq!(count(&report, "serve/http.rs", "no_panic"), 4, "{diags:?}");
+    assert_eq!(count(&report, "coordinator/pool.rs", "determinism"), 6, "{diags:?}");
+    assert_eq!(count(&report, "driver/train.rs", "determinism"), 1, "{diags:?}");
+    assert_eq!(count(&report, "linalg/sparse.rs", "unsafe_safety"), 1, "{diags:?}");
+    assert_eq!(count(&report, "serve/router.rs", "lock_order"), 1, "{diags:?}");
+    assert_eq!(report.diagnostics.len(), 13, "{diags:?}");
+}
+
+#[test]
+fn diagnostics_are_sorted_and_located() {
+    let report = lint_root(&fixture("bad_tree"), &[]).expect("lint bad_tree");
+    let mut keys: Vec<(String, u32)> = Vec::new();
+    for d in &report.diagnostics {
+        assert!(d.line > 0, "diagnostic without a line: {d:?}");
+        keys.push((d.path.clone(), d.line));
+    }
+    let mut sorted = keys.clone();
+    sorted.sort();
+    assert_eq!(keys, sorted, "output must be stable and sorted");
+}
+
+#[test]
+fn waiver_fixture_is_suppressed() {
+    let report = lint_root(&fixture("waived_tree"), &[]).expect("lint waived_tree");
+    assert!(report.clean(), "{:?}", report.diagnostics);
+}
+
+#[test]
+fn rules_filter_narrows_output() {
+    let only = vec!["lock_order".to_string()];
+    let report = lint_root(&fixture("bad_tree"), &only).expect("lint bad_tree");
+    assert_eq!(report.diagnostics.len(), 1, "{:?}", report.diagnostics);
+    assert_eq!(report.diagnostics[0].rule, "lock_order");
+}
+
+/// The clean-tree guarantee: the real sources must produce zero
+/// diagnostics (with at most documented inline waivers). This is the
+/// test that keeps the CI `lint` job green by construction.
+#[test]
+fn clean_tree_self_check_real_sources_lint_green() {
+    let report = lint_root(&real_src(), &[]).expect("lint rust/src");
+    assert!(report.files_scanned > 50, "walk found the real tree");
+    assert!(report.clean(), "rust/src must lint clean: {:#?}", report.diagnostics);
+}
+
+/// Negative CI proof: the bad fixture tree makes the CLI exit 1 and
+/// still emit the JSON artifact, without having to break main.
+#[test]
+fn cli_exit_codes_and_json_artifact() {
+    let out = std::env::temp_dir().join("cocoa_lint_fixture_report.json");
+    let args = vec![
+        "--root".to_string(),
+        fixture("bad_tree").display().to_string(),
+        "--format".to_string(),
+        "json".to_string(),
+        "--out".to_string(),
+        out.display().to_string(),
+    ];
+    assert_eq!(cli_run(&args), 1, "violations must exit 1");
+    let js = std::fs::read_to_string(&out).expect("json artifact written");
+    assert!(js.contains("\"tool\": \"cocoa-lint\""), "{js}");
+    assert!(js.contains("\"rule\": \"lock_order\""), "{js}");
+    assert!(js.contains("\"violations\": 13"), "{js}");
+    assert_eq!(js.matches('{').count(), js.matches('}').count());
+    std::fs::remove_file(&out).ok();
+}
+
+#[test]
+fn cli_clean_tree_exits_zero() {
+    let args = vec!["--root".to_string(), real_src().display().to_string()];
+    assert_eq!(cli_run(&args), 0, "clean tree must exit 0");
+}

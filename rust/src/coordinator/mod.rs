@@ -85,8 +85,8 @@ use crate::solver::{
 };
 use crate::subproblem::{LocalBlock, SubproblemSpec};
 use comm::CommStats;
+use crate::util::timer::Stopwatch;
 use std::sync::Arc;
-use std::time::Instant;
 use worker::Worker;
 
 /// Build a solver instance from a [`SolverSpec`] for a worker with n_k
@@ -283,7 +283,7 @@ impl Trainer {
         };
 
         // --- reduce (Eq. 14), in worker-id order for determinism -------
-        let t0 = Instant::now();
+        let reduce_clock = Stopwatch::started();
         for k in 0..self.cfg.k {
             let res = self.executor.result(k);
             // scatter to the global dual vector (workers already applied
@@ -293,7 +293,7 @@ impl Trainer {
             }
             dense::axpy(gamma, &res.update.delta_w, &mut self.w);
         }
-        let reduce_s = t0.elapsed().as_secs_f64();
+        let reduce_s = reduce_clock.elapsed_secs();
 
         self.comm_stats
             .record_round(&self.cfg.comm, self.problem.d(), self.cfg.k);

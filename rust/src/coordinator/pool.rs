@@ -63,12 +63,12 @@
 use crate::coordinator::worker::{Worker, WorkerResult};
 use crate::objective::CertPartial;
 use crate::subproblem::SubproblemSpec;
+use crate::util::timer::Stopwatch;
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{sync_channel, Receiver, SendError, SyncSender};
 use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
-use std::time::Instant;
 
 /// One or more workers failed a round (panicked solver, dead thread).
 #[derive(Clone, Debug)]
@@ -197,7 +197,7 @@ impl Executor for SequentialExecutor {
     }
 
     fn run_round(&mut self, w: &[f64], gamma: f64) -> Result<RoundTiming, PoolError> {
-        let t0 = Instant::now();
+        let round_clock = Stopwatch::started();
         let spec = self.spec;
         let mut failed: Vec<(usize, String)> = Vec::new();
         let mut max_compute = 0.0f64;
@@ -223,7 +223,7 @@ impl Executor for SequentialExecutor {
         }
         // Workers ran serially, so the runtime's own overhead is the wall
         // time beyond the *sum* of the local solves.
-        let barrier_s = (t0.elapsed().as_secs_f64() - total_compute).max(0.0);
+        let barrier_s = (round_clock.elapsed_secs() - total_compute).max(0.0);
         Ok(RoundTiming {
             max_compute_s: max_compute,
             barrier_s,
@@ -423,7 +423,7 @@ impl Executor for PooledExecutor {
     }
 
     fn run_round(&mut self, w: &[f64], gamma: f64) -> Result<RoundTiming, PoolError> {
-        let t0 = Instant::now();
+        let round_clock = Stopwatch::started();
         // Broadcast: publish the w snapshot. Workers are all idle between
         // rounds, so this write never contends.
         {
@@ -483,7 +483,7 @@ impl Executor for PooledExecutor {
             failed.sort_by(|a, b| a.0.cmp(&b.0));
             return Err(PoolError { failed });
         }
-        let barrier_s = (t0.elapsed().as_secs_f64() - max_compute).max(0.0);
+        let barrier_s = (round_clock.elapsed_secs() - max_compute).max(0.0);
         Ok(RoundTiming {
             max_compute_s: max_compute,
             barrier_s,

@@ -41,7 +41,7 @@ use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use super::config::{CocoaConfig, SolverSpec};
 use super::make_solver;
@@ -55,6 +55,7 @@ use crate::objective::CertPartial;
 use crate::subproblem::{LocalBlock, SubproblemSpec};
 use crate::util::cli::Args;
 use crate::util::json::{jnum, jstr, Json};
+use crate::util::timer::{Deadline, Stopwatch};
 
 static SOCKET_COUNTER: AtomicUsize = AtomicUsize::new(0);
 
@@ -419,7 +420,7 @@ impl SocketExecutor {
         listener
             .set_nonblocking(true)
             .map_err(|e| spawn_err(0, &format!("listener setup failed: {e}")))?;
-        let deadline = Instant::now() + cfg.socket.handshake_timeout;
+        let deadline = Deadline::after(cfg.socket.handshake_timeout);
         let mut connected = 0usize;
         while connected < k {
             for id in 0..k {
@@ -433,7 +434,7 @@ impl SocketExecutor {
                     ));
                 }
             }
-            if Instant::now() > deadline {
+            if deadline.expired() {
                 let failed = (0..k)
                     .filter(|&id| self.conns[id].is_none())
                     .map(|id| {
@@ -614,7 +615,7 @@ impl Executor for SocketExecutor {
     }
 
     fn run_round(&mut self, w: &[f64], gamma: f64) -> Result<RoundTiming, PoolError> {
-        let t0 = Instant::now();
+        let round_clock = Stopwatch::started();
         let mut failed: Vec<(usize, String)> = Vec::new();
         let frame = Frame::new("round")
             .with_f64s("g", vec![gamma])
@@ -664,7 +665,7 @@ impl Executor for SocketExecutor {
             failed.sort_by_key(|f| f.0);
             return Err(PoolError { failed });
         }
-        let barrier_s = (t0.elapsed().as_secs_f64() - max_compute).max(0.0);
+        let barrier_s = (round_clock.elapsed_secs() - max_compute).max(0.0);
         Ok(RoundTiming {
             max_compute_s: max_compute,
             barrier_s,
@@ -765,12 +766,12 @@ impl Drop for SocketExecutor {
         for conn in self.conns.iter_mut() {
             *conn = None; // close the sockets
         }
-        let deadline = Instant::now() + Duration::from_secs(2);
+        let deadline = Deadline::after(Duration::from_secs(2));
         for child in self.children.iter_mut().flatten() {
             loop {
                 match child.try_wait() {
                     Ok(Some(_)) => break,
-                    Ok(None) if Instant::now() < deadline => {
+                    Ok(None) if !deadline.expired() => {
                         std::thread::sleep(Duration::from_millis(10));
                     }
                     _ => {

@@ -280,7 +280,11 @@ fn read_exact_prefix<R: Read>(
 ) -> Result<(), WireError> {
     let mut got = 0;
     while got < buf.len() {
-        match r.read(&mut buf[got..]) {
+        // `got < buf.len()`, so the tail is never empty; the empty-slice
+        // default keeps the bounds proof out of the panic domain (a read
+        // into it would return Ok(0) → Truncated).
+        let tail = buf.get_mut(got..).unwrap_or_default();
+        match r.read(tail) {
             Ok(0) => {
                 return if got == 0 && at_frame_start {
                     Err(WireError::Closed)
@@ -299,6 +303,18 @@ fn read_exact_prefix<R: Read>(
     Ok(())
 }
 
+/// Decode one little-endian 8-byte word. `chunks_exact(8)` guarantees the
+/// length, but `u64::from_le_bytes(c.try_into().unwrap())` would put an
+/// `unwrap` on the hostile-input path; the fold is branch- and panic-free.
+#[inline]
+fn le_word(chunk: &[u8]) -> u64 {
+    chunk
+        .iter()
+        .take(8)
+        .enumerate()
+        .fold(0u64, |acc, (i, &b)| acc | (u64::from(b) << (8 * i)))
+}
+
 /// Read and decode one frame from `r`.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
     let mut len_buf = [0u8; 4];
@@ -315,15 +331,23 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
     let mut body = vec![0u8; total_len];
     read_exact_prefix(r, &mut body, false)?;
 
-    let header_len = u32::from_be_bytes([body[0], body[1], body[2], body[3]]) as usize;
-    let payload = &body[4..];
-    if header_len > payload.len() {
-        return Err(WireError::Header(format!(
+    // `total_len >= 4` was checked above, so the split cannot fail; the
+    // typed fallback keeps even the impossible case out of the panic
+    // domain (this module forbids direct indexing — see `cocoa-lint`).
+    let (len_bytes, payload) = body
+        .split_at_checked(4)
+        .ok_or_else(|| WireError::Header("frame body shorter than its length prefix".to_string()))?;
+    let header_len = match <[u8; 4]>::try_from(len_bytes) {
+        Ok(b) => u32::from_be_bytes(b) as usize,
+        Err(_) => return Err(WireError::Header("length prefix missing".to_string())),
+    };
+    let header_bytes = payload.get(..header_len).ok_or_else(|| {
+        WireError::Header(format!(
             "header length {header_len} exceeds frame payload {}",
             payload.len()
-        )));
-    }
-    let header_str = std::str::from_utf8(&payload[..header_len])
+        ))
+    })?;
+    let header_str = std::str::from_utf8(header_bytes)
         .map_err(|e| WireError::Header(format!("header is not UTF-8: {e}")))?;
     let header = Json::parse(header_str).map_err(WireError::Header)?;
 
@@ -337,19 +361,22 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
         let fields = entry
             .as_arr()
             .ok_or_else(|| WireError::Section("manifest entry is not an array".to_string()))?;
-        if fields.len() != 3 {
-            return Err(WireError::Section(format!(
-                "manifest entry has {} fields, expected 3",
-                fields.len()
-            )));
-        }
-        let name = fields[0]
+        let (name_j, kind_j, len_j) = match fields {
+            [a, b, c] => (a, b, c),
+            _ => {
+                return Err(WireError::Section(format!(
+                    "manifest entry has {} fields, expected 3",
+                    fields.len()
+                )))
+            }
+        };
+        let name = name_j
             .as_str()
             .ok_or_else(|| WireError::Section("section name is not a string".to_string()))?;
-        let kind = fields[1]
+        let kind = kind_j
             .as_str()
             .ok_or_else(|| WireError::Section("section kind is not a string".to_string()))?;
-        let len_f = fields[2]
+        let len_f = len_j
             .as_f64()
             .ok_or_else(|| WireError::Section("section length is not a number".to_string()))?;
         if !len_f.is_finite() || len_f < 0.0 || len_f.fract() != 0.0 {
@@ -364,23 +391,18 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
         let end = off
             .checked_add(bytes)
             .ok_or_else(|| WireError::Section(format!("section {name:?} offset overflows")))?;
-        if end > payload.len() {
-            return Err(WireError::Section(format!(
+        let raw = payload.get(off..end).ok_or_else(|| {
+            WireError::Section(format!(
                 "section {name:?} ({bytes} bytes) overruns frame payload"
-            )));
-        }
-        let raw = &payload[off..end];
+            ))
+        })?;
         let section = match kind {
             "f" => Section::F64(
                 raw.chunks_exact(8)
-                    .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+                    .map(|c| f64::from_bits(le_word(c)))
                     .collect(),
             ),
-            "u" => Section::U64(
-                raw.chunks_exact(8)
-                    .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-                    .collect(),
-            ),
+            "u" => Section::U64(raw.chunks_exact(8).map(le_word).collect()),
             other => {
                 return Err(WireError::Section(format!(
                     "section {name:?} has unknown kind {other:?}"
@@ -407,6 +429,32 @@ mod tests {
         let mut buf = Vec::new();
         write_frame(&mut buf, frame).expect("encode");
         read_frame(&mut buf.as_slice()).expect("decode")
+    }
+
+    #[test]
+    fn word_decode_is_bit_exact_for_raw_patterns() {
+        // Regression for the panic-free little-endian word decode
+        // (`le_word`): every byte position must land in its lane for both
+        // section kinds, including sign-bit-only and all-ones words.
+        let bits: Vec<u64> = vec![
+            0x0123_4567_89AB_CDEF,
+            u64::MAX,
+            1,
+            0x8000_0000_0000_0000,
+            0x00FF_0000_0000_0000,
+        ];
+        let frame = Frame::new("t")
+            .with_f64s("f", bits.iter().map(|&b| f64::from_bits(b)).collect())
+            .with_u64s("u", bits.clone());
+        let back = roundtrip(&frame);
+        let fb: Vec<u64> = back
+            .f64s("f")
+            .unwrap()
+            .iter()
+            .map(|v| v.to_bits())
+            .collect();
+        assert_eq!(fb, bits);
+        assert_eq!(back.u64s("u").unwrap(), &bits[..]);
     }
 
     #[test]

@@ -14,7 +14,7 @@ use crate::objective::{cert_partial, CertPartial};
 use crate::solver::{LocalSolveCtx, LocalSolver, LocalUpdate};
 use crate::subproblem::{LocalBlock, SubproblemSpec};
 use crate::util::rng::SplitMix64;
-use std::time::Instant;
+use crate::util::timer::Stopwatch;
 
 pub struct Worker {
     pub id: usize,
@@ -60,7 +60,7 @@ impl Worker {
     /// Run one outer round's local solve against the shared w, writing
     /// Δα/Δw into the reusable `out` scratch.
     pub fn round_into(&mut self, w: &[f64], spec: &SubproblemSpec, out: &mut WorkerResult) {
-        let t0 = Instant::now();
+        let clock = Stopwatch::started();
         out.id = self.id;
         let ctx = LocalSolveCtx {
             block: &self.block,
@@ -69,7 +69,7 @@ impl Worker {
             alpha_local: &self.alpha_local,
         };
         self.solver.solve_into(&ctx, &mut out.update);
-        out.compute_s = t0.elapsed().as_secs_f64();
+        out.compute_s = clock.elapsed_secs();
     }
 
     /// Allocating convenience wrapper around [`Worker::round_into`].

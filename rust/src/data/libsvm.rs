@@ -121,11 +121,15 @@ pub fn parse_str(text: &str, expected_dim: Option<usize>) -> Result<Dataset, Lib
         // reject them here with the offending line attached.
         let mut cols: Vec<usize> = row.iter().map(|&(c, _)| c).collect();
         cols.sort_unstable();
-        if let Some(w) = cols.windows(2).find(|w| w[0] == w[1]) {
-            return Err(LibsvmError::Parse {
-                line: lineno + 1,
-                msg: format!("duplicate feature index {}", w[0] + 1),
-            });
+        let mut prev = None;
+        for &c in &cols {
+            if prev == Some(c) {
+                return Err(LibsvmError::Parse {
+                    line: lineno + 1,
+                    msg: format!("duplicate feature index {}", c + 1),
+                });
+            }
+            prev = Some(c);
         }
         rows.push(row);
         labels.push(label);
@@ -153,23 +157,23 @@ pub fn load(path: &Path, expected_dim: Option<usize>) -> Result<Dataset, LibsvmE
 /// or worse, silently misparse — on the next reader.
 pub fn save(ds: &Dataset, path: &Path) -> Result<(), LibsvmError> {
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    for i in 0..ds.n() {
-        if !ds.y[i].is_finite() {
+    for (i, &label) in ds.y.iter().enumerate() {
+        if !label.is_finite() {
             return Err(LibsvmError::NonFinite {
                 line: i + 1,
-                msg: format!("label {}", ds.y[i]),
+                msg: format!("label {label}"),
             });
         }
-        write!(f, "{}", format_num(ds.y[i]))?;
+        write!(f, "{}", format_num(label))?;
         let (idx, vals) = ds.x.row(i);
-        for (j, &c) in idx.iter().enumerate() {
-            if !vals[j].is_finite() {
+        for (&c, &v) in idx.iter().zip(vals.iter()) {
+            if !v.is_finite() {
                 return Err(LibsvmError::NonFinite {
                     line: i + 1,
-                    msg: format!("value {} at index {}", vals[j], c as usize + 1),
+                    msg: format!("value {v} at index {}", c as usize + 1),
                 });
             }
-            write!(f, " {}:{}", c as usize + 1, format_num(vals[j]))?;
+            write!(f, " {}:{}", c as usize + 1, format_num(v))?;
         }
         writeln!(f)?;
     }
@@ -238,6 +242,21 @@ mod tests {
             LibsvmError::Parse { line, msg } => {
                 assert_eq!(line, 2);
                 assert!(msg.contains("duplicate feature index 2"), "{msg}");
+            }
+            other => panic!("expected Parse, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn triple_duplicate_reports_first_collision() {
+        // Regression for the windows→scan rewrite of duplicate detection:
+        // three occurrences of one column still report the 1-based index
+        // once, with the right line number.
+        let err = parse_str("1 7:1 7:2 7:3\n", None).unwrap_err();
+        match err {
+            LibsvmError::Parse { line, msg } => {
+                assert_eq!(line, 1);
+                assert!(msg.contains("duplicate feature index 7"), "{msg}");
             }
             other => panic!("expected Parse, got {other:?}"),
         }

@@ -140,6 +140,19 @@
 //! from the served α on drifted data without dropping traffic. The HTTP
 //! layer is hand-rolled on `std::net` with the same hostile-input
 //! discipline as the socket executor's wire format.
+//!
+//! ## Static invariants (`cocoa-lint`)
+//!
+//! The contracts this crate-level doc keeps promising — panic-free
+//! request/wire surfaces, bit-identical trajectories across executors,
+//! justified `unsafe`, deadlock-free lock nesting in the serve layer —
+//! are machine-checked, not aspirational. The workspace member `lint/`
+//! (`cargo run -p cocoa-lint`) walks `rust/src` with a dependency-free
+//! lexer and enforces four rule families (`no_panic`, `determinism`,
+//! `unsafe_safety`, `lock_order`) as a required CI gate, with Miri and
+//! nightly ThreadSanitizer lanes behind it. The rule catalog, the
+//! declared lock-order ranking, and the reasoned inline waiver syntax
+//! (`lint:allow`) are documented in `ANALYSIS.md` at the repo root.
 
 pub mod baselines;
 pub mod coordinator;

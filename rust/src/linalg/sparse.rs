@@ -184,6 +184,10 @@ impl CsrMatrix {
         }
         if idx.len() % 2 == 1 {
             let j = idx.len() - 1;
+            // SAFETY: j = idx.len() - 1 is in bounds for both CSR arrays
+            // (idx and vals share one length by construction), and
+            // idx[j] < self.cols = v.len() — columns are validated against
+            // `cols` when the matrix is built.
             unsafe {
                 s0 += vals[j] * *v.get_unchecked(idx[j] as usize);
             }

@@ -116,7 +116,7 @@ pub fn smoke_test(manifest: &Manifest) -> Result<String> {
     use crate::data::Dataset;
     use crate::linalg::CsrMatrix;
     use crate::subproblem::LocalBlock;
-    let program = std::rc::Rc::new(XlaSdcaProgram::load(&rt, manifest)?);
+    let program = std::sync::Arc::new(XlaSdcaProgram::load(&rt, manifest)?);
     let data = Dataset::new("smoke", CsrMatrix::from_dense(rows, cols, &x), y.clone());
     let rows_idx: Vec<usize> = (0..rows).collect();
     let block = LocalBlock::from_partition(&data, &rows_idx);

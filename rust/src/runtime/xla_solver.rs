@@ -19,7 +19,7 @@ use crate::solver::{LocalSolveCtx, LocalSolver, LocalUpdate};
 use crate::subproblem::LocalBlock;
 use crate::util::rng::Pcg32;
 use anyhow::{ensure, Context, Result};
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Shared runtime + compiled executable, reused across workers.
 pub struct XlaSdcaProgram {
@@ -53,7 +53,7 @@ impl XlaSdcaProgram {
 /// Per-worker XLA solver instance. Holds the padded dense copies of the
 /// block (packed once) and the PCG stream for index generation.
 pub struct XlaSdcaSolver {
-    program: Rc<XlaSdcaProgram>,
+    program: Arc<XlaSdcaProgram>,
     /// Rounds of H steps per outer round (the artifact's h is the unit).
     pub repeats: usize,
     rng: Pcg32,
@@ -72,7 +72,7 @@ impl XlaSdcaSolver {
     /// SubproblemSpec (they are baked into the executed scalars each call,
     /// not into the artifact).
     pub fn new(
-        program: Rc<XlaSdcaProgram>,
+        program: Arc<XlaSdcaProgram>,
         block: &LocalBlock,
         lambda_n: f64,
         sigma_prime: f64,
@@ -201,9 +201,18 @@ impl LocalSolver for XlaSdcaSolver {
     }
 }
 
-// SAFETY: PjRtLoadedExecutable wraps a thread-safe PJRT CPU executable
-// (TfrtCpuClient supports concurrent Execute calls); the Rc is never
-// shared across threads because the coordinator moves whole workers. We
-// still default all XLA runs to `parallel=false`; this impl exists so the
-// type satisfies the `LocalSolver: Send` bound.
+// SAFETY: every field is either plainly `Send` (PCG state, padded f64
+// buffers, scalars) or justified here:
+// * `program: Arc<XlaSdcaProgram>` — the shared compiled program is held
+//   behind an `Arc` (atomic refcount) precisely so clones of one program
+//   may be *moved* to different worker threads; `PjRtLoadedExecutable`
+//   wraps a thread-safe PJRT CPU executable (TfrtCpuClient supports
+//   concurrent Execute calls). An `Rc` here would be unsound: solvers
+//   built from one program and moved onto pool threads would race the
+//   non-atomic refcount on drop.
+// * `x_lit: xla::Literal` — an owned host buffer; it is only read, and
+//   only by whichever thread owns the solver (the coordinator moves whole
+//   workers, never shares one).
+// We still default all XLA runs to `parallel=false`; this impl exists so
+// the type satisfies the `LocalSolver: Send` bound.
 unsafe impl Send for XlaSdcaSolver {}

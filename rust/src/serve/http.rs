@@ -123,7 +123,9 @@ fn read_byte<R: Read>(r: &mut R) -> Result<Option<u8>, HttpError> {
     loop {
         match r.read(&mut b) {
             Ok(0) => return Ok(None),
-            Ok(_) => return Ok(Some(b[0])),
+            // A one-byte array always has a first element; `first` keeps
+            // the no-panic surface free of direct indexing.
+            Ok(_) => return Ok(b.first().copied()),
             Err(e) if e.kind() == ErrorKind::Interrupted => continue,
             Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
                 return Err(HttpError::Timeout)
@@ -160,7 +162,13 @@ pub fn read_request<R: Read>(r: &mut R, limits: &Limits) -> Result<Request, Http
             break;
         }
     }
-    let text = std::str::from_utf8(&head[..head.len() - 4])
+    // The loop above only exits on a trailing CRLFCRLF, so the strip
+    // cannot fail; the typed fallback replaces a `head[..len - 4]` slice
+    // that would be a panic site on a hostile surface.
+    let head_text = head
+        .strip_suffix(b"\r\n\r\n")
+        .ok_or_else(|| HttpError::Malformed("missing header terminator".into()))?;
+    let text = std::str::from_utf8(head_text)
         .map_err(|_| HttpError::Malformed("header bytes are not UTF-8".into()))?;
     let mut lines = text.split("\r\n");
     let request_line = lines.next().unwrap_or("");
@@ -218,7 +226,11 @@ pub fn read_request<R: Read>(r: &mut R, limits: &Limits) -> Result<Request, Http
             if t0.elapsed() > limits.parse_budget {
                 return Err(HttpError::Timeout);
             }
-            match r.read(&mut body[filled..]) {
+            // `filled < len == body.len()`, so the tail is never empty;
+            // the empty-slice default keeps the bounds proof out of the
+            // panic domain (reading into it would just yield Truncated).
+            let tail = body.get_mut(filled..).unwrap_or_default();
+            match r.read(tail) {
                 Ok(0) => return Err(HttpError::Truncated),
                 Ok(k) => filled += k,
                 Err(e) if e.kind() == ErrorKind::Interrupted => {}
@@ -328,6 +340,14 @@ mod tests {
                 other => panic!("{bad:?} → {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn bare_crlf_head_is_malformed_not_a_panic() {
+        // Regression for the strip_suffix rewrite: a head that is *only*
+        // the terminator leaves an empty request line → 400, never a
+        // slice panic on `head[..len - 4]`.
+        assert!(matches!(parse(b"\r\n\r\n"), Err(HttpError::Malformed(_))));
     }
 
     #[test]

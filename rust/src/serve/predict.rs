@@ -130,17 +130,19 @@ pub fn parse_features(j: &Json) -> Result<Vec<(usize, f64)>, String> {
         .ok_or("features must be an array of [index, value] pairs")?;
     let mut pairs = Vec::with_capacity(arr.len());
     for (i, entry) in arr.iter().enumerate() {
-        let pair = entry
-            .as_arr()
-            .filter(|p| p.len() == 2)
-            .ok_or_else(|| format!("feature {i} is not an [index, value] pair"))?;
-        let idx = pair[0]
+        // The slice pattern both checks the pair shape and binds its
+        // halves — no `pair[0]`/`pair[1]` indexing on client input.
+        let (idx_j, val_j) = match entry.as_arr() {
+            Some([idx_j, val_j]) => (idx_j, val_j),
+            _ => return Err(format!("feature {i} is not an [index, value] pair")),
+        };
+        let idx = idx_j
             .as_f64()
             .ok_or_else(|| format!("feature {i} index is not a number"))?;
         if !idx.is_finite() || idx < 0.0 || idx.fract() != 0.0 || idx > (1u64 << 53) as f64 {
             return Err(format!("feature {i} index {idx} is not a valid column"));
         }
-        let val = pair[1]
+        let val = val_j
             .as_f64()
             .ok_or_else(|| format!("feature {i} value is not a number"))?;
         pairs.push((idx as usize, val));
@@ -254,5 +256,15 @@ mod tests {
             parse_features(&Json::parse("[]").unwrap()).unwrap(),
             Vec::<(usize, f64)>::new()
         );
+    }
+
+    #[test]
+    fn pair_shape_errors_name_the_offending_feature() {
+        // Regression for the slice-pattern rewrite: a malformed pair in
+        // the middle of a valid list is rejected by position, not by a
+        // `pair[0]` panic.
+        let j = Json::parse("[[0, 1], [2]]").unwrap();
+        let err = parse_features(&j).unwrap_err();
+        assert!(err.contains("feature 1"), "{err}");
     }
 }

@@ -1,4 +1,11 @@
 //! Simple wall-clock timing helpers used by the coordinator and experiments.
+//!
+//! This module is the **only** place the round paths (`driver/`,
+//! `solver/`, `coordinator/`) may read the wall clock: the `determinism`
+//! rule of `cocoa-lint` forbids `Instant`/`SystemTime` there, so every
+//! measurement or timeout funnels through [`Stopwatch`], [`timed`], or
+//! [`Deadline`]. Timing is observational — it feeds `CommStats` and
+//! failure reporting, never the optimization trajectory.
 
 use std::time::{Duration, Instant};
 
@@ -23,6 +30,14 @@ impl Stopwatch {
             accumulated: Duration::ZERO,
             started: None,
         }
+    }
+
+    /// A stopwatch that is already running — the common "time this scope"
+    /// shape (`let clock = Stopwatch::started(); …; clock.elapsed_secs()`).
+    pub fn started() -> Self {
+        let mut sw = Self::new();
+        sw.start();
+        sw
     }
 
     pub fn start(&mut self) {
@@ -61,6 +76,28 @@ pub fn timed<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
     (out, t0.elapsed().as_secs_f64())
 }
 
+/// A wall-clock cutoff: handshake windows, round-gather timeouts, child
+/// reaping grace periods. Copyable so it can be captured once and checked
+/// from several places in a polling loop.
+#[derive(Clone, Copy, Debug)]
+pub struct Deadline {
+    at: Instant,
+}
+
+impl Deadline {
+    /// The point `d` from now.
+    pub fn after(d: Duration) -> Deadline {
+        Deadline {
+            at: Instant::now() + d,
+        }
+    }
+
+    /// True once the deadline has passed.
+    pub fn expired(&self) -> bool {
+        Instant::now() > self.at
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,6 +124,22 @@ mod tests {
         let (v, secs) = timed(|| 21 * 2);
         assert_eq!(v, 42);
         assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn started_stopwatch_is_running() {
+        let sw = Stopwatch::started();
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(sw.elapsed() >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn deadline_expires_and_not_before() {
+        let d = Deadline::after(Duration::from_secs(3600));
+        assert!(!d.expired());
+        let past = Deadline::after(Duration::ZERO);
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(past.expired());
     }
 
     #[test]

@@ -17,7 +17,7 @@ use cocoa::runtime::{XlaGapEvaluator, XlaSdcaProgram, XlaSdcaSolver};
 use cocoa::solver::sdca::SdcaSolver;
 use cocoa::solver::{LocalSolveCtx, LocalSolver};
 use cocoa::subproblem::{LocalBlock, SubproblemSpec};
-use std::rc::Rc;
+use std::sync::Arc;
 
 struct Env {
     manifest: Manifest,
@@ -92,7 +92,7 @@ fn gap_graph_matches_native_objective() {
 #[test]
 fn xla_solver_trajectory_identical_to_native() {
     let e = require_env!();
-    let program = Rc::new(XlaSdcaProgram::load(&e.rt, &e.manifest).unwrap());
+    let program = Arc::new(XlaSdcaProgram::load(&e.rt, &e.manifest).unwrap());
     let (m, d, h) = (program.m, program.d, program.h);
     // deliberately smaller than the artifact to exercise padding
     let n_local = m - 37;
@@ -122,7 +122,7 @@ fn xla_solver_trajectory_identical_to_native() {
 
     let seed = Worker::round_seed(9, 0, 0);
     let mut xla = XlaSdcaSolver::new(
-        Rc::clone(&program),
+        Arc::clone(&program),
         &block,
         lambda * n_local as f64,
         4.0,
@@ -151,7 +151,7 @@ fn xla_solver_trajectory_identical_to_native() {
 #[test]
 fn xla_backed_training_converges() {
     let e = require_env!();
-    let program = Rc::new(XlaSdcaProgram::load(&e.rt, &e.manifest).unwrap());
+    let program = Arc::new(XlaSdcaProgram::load(&e.rt, &e.manifest).unwrap());
     let (m, d, h) = (program.m, program.d, program.h);
     let k = 2usize;
     let n = k * (m / 2); // half-filled blocks: padding in play
@@ -168,7 +168,7 @@ fn xla_backed_training_converges() {
         .map(|(wk, b)| {
             Box::new(
                 XlaSdcaSolver::new(
-                    Rc::clone(&program),
+                    Arc::clone(&program),
                     b,
                     lambda * n as f64,
                     k as f64,
@@ -195,7 +195,7 @@ fn xla_backed_training_converges() {
 #[test]
 fn oversized_block_is_rejected() {
     let e = require_env!();
-    let program = Rc::new(XlaSdcaProgram::load(&e.rt, &e.manifest).unwrap());
+    let program = Arc::new(XlaSdcaProgram::load(&e.rt, &e.manifest).unwrap());
     let m = program.m;
     let data = cocoa::data::synth::generate(
         &cocoa::data::synth::SynthConfig::new("t", m + 1, 8).seed(1),
