@@ -37,6 +37,8 @@ pub const NO_PANIC_SURFACES: &[&str] = &[
     "serve/router.rs",
     "serve/predict.rs",
     "data/libsvm.rs",
+    "telemetry/writer.rs",
+    "telemetry/checker.rs",
 ];
 
 /// Directories whose code runs inside optimization rounds, where the
@@ -44,7 +46,7 @@ pub const NO_PANIC_SURFACES: &[&str] = &[
 /// hash-ordered iteration are banned here; timing goes through
 /// `util::timer` (`Stopwatch` / `Deadline`), keyed aggregation through
 /// `BTreeMap`, and gathers through per-worker-index `recv()`.
-pub const DETERMINISM_DIRS: &[&str] = &["driver/", "solver/", "coordinator/"];
+pub const DETERMINISM_DIRS: &[&str] = &["driver/", "solver/", "coordinator/", "telemetry/"];
 
 const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
 

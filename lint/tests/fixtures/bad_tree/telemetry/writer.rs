@@ -1,0 +1,9 @@
+//! Fixture: a telemetry export surface that reads the wall clock (the
+//! recorder must go through `util::timer::trace_now_us`) and panics on
+//! a malformed event instead of returning `Err`.
+
+pub fn export_event(buf: &Vec<u8>) -> u64 {
+    let started = Instant::now();
+    let first = buf.first().unwrap();
+    stamp(started, first)
+}

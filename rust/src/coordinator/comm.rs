@@ -69,6 +69,17 @@ impl CommModel {
     }
 }
 
+/// One round's communication, simulated next to measured. `wire_s` is
+/// zero for the in-process executors — only the socket runtime moves
+/// real bytes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundComm {
+    /// Simulated cluster comm seconds (the star-topology model).
+    pub sim_s: f64,
+    /// Measured leader-side wire seconds (frame sends + reply body reads).
+    pub wire_s: f64,
+}
+
 /// Running totals the coordinator keeps. The simulated quantities
 /// (`sim_comm_s`) model the cluster network; `barrier_s`/`reduce_s` are
 /// *measured* runtime overheads of the in-process execution engine, kept
@@ -76,8 +87,11 @@ impl CommModel {
 /// synchronization of the worker pool lands in `barrier_s` (under the old
 /// spawn-per-round runtime, thread-spawn cost silently inflated measured
 /// compute instead) and the leader's Eq.-14 scatter/axpy lands in
-/// `reduce_s`.
-#[derive(Clone, Copy, Debug, Default)]
+/// `reduce_s`. On the socket runtime the leader's measured per-round wire
+/// time additionally lands in `wire_s` and the per-round `samples`, so
+/// the simulated model can be validated against a real transport
+/// ([`CommStats::validation_report`]).
+#[derive(Clone, Debug, Default)]
 pub struct CommStats {
     pub rounds: usize,
     pub vectors: usize,
@@ -87,6 +101,10 @@ pub struct CommStats {
     pub barrier_s: f64,
     /// Measured leader-side reduce seconds (α scatter + w axpy).
     pub reduce_s: f64,
+    /// Total measured wire seconds (socket executor only; else 0).
+    pub wire_s: f64,
+    /// Per-round simulated-vs-measured comm samples, in round order.
+    pub samples: Vec<RoundComm>,
 }
 
 impl CommStats {
@@ -94,13 +112,70 @@ impl CommStats {
         self.rounds += 1;
         self.vectors += model.round_vectors(k);
         self.bytes += k * d * 8;
-        self.sim_comm_s += model.round_time(d);
+        let sim_s = model.round_time(d);
+        self.sim_comm_s += sim_s;
+        self.samples.push(RoundComm { sim_s, wire_s: 0.0 });
     }
 
-    /// Accumulate the measured runtime overheads of one round.
-    pub fn record_runtime(&mut self, barrier_s: f64, reduce_s: f64) {
+    /// Accumulate the measured runtime overheads of one round. Pairs with
+    /// the `record_round` of the same round: the measured wire share is
+    /// filed into that round's sample.
+    pub fn record_runtime(&mut self, barrier_s: f64, reduce_s: f64, wire_s: f64) {
         self.barrier_s += barrier_s;
         self.reduce_s += reduce_s;
+        self.wire_s += wire_s;
+        if let Some(sample) = self.samples.last_mut() {
+            sample.wire_s += wire_s;
+        }
+    }
+
+    /// Measured-vs-simulated communication report: per-round measured
+    /// wire seconds next to the model's prediction, with totals and the
+    /// mean measured/simulated ratio. `None` when nothing was measured
+    /// (in-process executors move no bytes). The per-round table is
+    /// capped; totals always cover every round.
+    pub fn validation_report(&self) -> Option<String> {
+        if !(self.wire_s > 0.0) {
+            return None;
+        }
+        const MAX_ROWS: usize = 20;
+        let mut out = String::from(
+            "measured vs simulated communication (leader wire time per round):\n",
+        );
+        out.push_str("  round   measured(µs)  simulated(µs)   ratio\n");
+        for (i, s) in self.samples.iter().take(MAX_ROWS).enumerate() {
+            let ratio = if s.sim_s > 0.0 {
+                format!("{:7.3}", s.wire_s / s.sim_s)
+            } else {
+                "      -".to_string()
+            };
+            out.push_str(&format!(
+                "  {:5}  {:12.1}  {:13.1}  {}\n",
+                i,
+                s.wire_s * 1e6,
+                s.sim_s * 1e6,
+                ratio
+            ));
+        }
+        if self.samples.len() > MAX_ROWS {
+            out.push_str(&format!(
+                "  ... {} more round(s) elided\n",
+                self.samples.len() - MAX_ROWS
+            ));
+        }
+        let ratio_total = if self.sim_comm_s > 0.0 {
+            format!("{:.3}", self.wire_s / self.sim_comm_s)
+        } else {
+            "-".to_string()
+        };
+        out.push_str(&format!(
+            "  total  {:12.1}  {:13.1}  ratio {} over {} round(s)",
+            self.wire_s * 1e6,
+            self.sim_comm_s * 1e6,
+            ratio_total,
+            self.rounds
+        ));
+        Some(out)
     }
 
     /// Mean per-round runtime overhead (barrier + reduce), seconds.
@@ -161,9 +236,9 @@ mod tests {
         let m = CommModel::ec2_like();
         let mut s = CommStats::default();
         s.record_round(&m, 100, 4);
-        s.record_runtime(2e-4, 1e-4);
+        s.record_runtime(2e-4, 1e-4, 0.0);
         s.record_round(&m, 100, 4);
-        s.record_runtime(2e-4, 1e-4);
+        s.record_runtime(2e-4, 1e-4, 0.0);
         assert!((s.barrier_s - 4e-4).abs() < 1e-12);
         assert!((s.reduce_s - 2e-4).abs() < 1e-12);
         assert!((s.runtime_overhead_per_round_s() - 3e-4).abs() < 1e-12);
@@ -174,5 +249,25 @@ mod tests {
     #[test]
     fn slow_network_slower() {
         assert!(CommModel::slow_network().round_time(10_000) > CommModel::ec2_like().round_time(10_000));
+    }
+
+    #[test]
+    fn validation_report_needs_measured_wire() {
+        let m = CommModel::ec2_like();
+        let mut s = CommStats::default();
+        s.record_round(&m, 100, 4);
+        s.record_runtime(2e-4, 1e-4, 0.0);
+        // No wire time measured (in-process run): nothing to validate.
+        assert!(s.validation_report().is_none());
+
+        s.record_round(&m, 100, 4);
+        s.record_runtime(2e-4, 1e-4, 3e-3);
+        let report = s.validation_report().expect("wire time was measured");
+        assert!(report.contains("measured vs simulated"), "{report}");
+        assert!(report.contains("total"), "{report}");
+        assert_eq!(s.samples.len(), 2);
+        assert_eq!(s.samples[0].wire_s, 0.0);
+        assert!((s.samples[1].wire_s - 3e-3).abs() < 1e-12);
+        assert!((s.wire_s - 3e-3).abs() < 1e-12);
     }
 }

@@ -4,6 +4,7 @@
 use crate::coordinator::comm::CommModel;
 use crate::loss::Loss;
 use crate::subproblem::sigma::safe_sigma_prime;
+use crate::telemetry::Recorder;
 use std::path::PathBuf;
 use std::time::Duration;
 
@@ -139,6 +140,8 @@ pub struct CocoaConfig {
     pub executor: ExecutorChoice,
     /// Socket-executor knobs; only consulted when `executor == Socket`.
     pub socket: SocketOpts,
+    /// Flight recorder for the run; disabled by default (zero cost).
+    pub trace: Recorder,
 }
 
 impl CocoaConfig {
@@ -160,6 +163,7 @@ impl CocoaConfig {
             comm: CommModel::ec2_like(),
             executor: ExecutorChoice::Auto,
             socket: SocketOpts::default(),
+            trace: Recorder::disabled(),
         }
     }
 
@@ -227,6 +231,13 @@ impl CocoaConfig {
     /// this at `env!("CARGO_BIN_EXE_cocoa")`).
     pub fn with_socket_worker_bin<P: Into<PathBuf>>(mut self, bin: P) -> Self {
         self.socket.worker_bin = Some(bin.into());
+        self
+    }
+
+    /// Attach a flight recorder; the Trainer and its executor trace
+    /// their round phases into it.
+    pub fn with_recorder(mut self, recorder: Recorder) -> Self {
+        self.trace = recorder;
         self
     }
 

@@ -245,6 +245,46 @@ impl History {
         ])
     }
 
+    /// Stream the JSON serialization to `out` without materializing the
+    /// document: byte-identical to `to_json().to_string_compact()`
+    /// (locked by test), but O(1) memory in the number of records — a
+    /// long run's history no longer gets duplicated into a `Json` tree
+    /// plus a `String` just to hit the disk.
+    pub fn write_json<W: std::io::Write>(&self, out: W) -> std::io::Result<()> {
+        use crate::telemetry::writer::JsonWriter;
+        // Keys in alphabetical order mirror the BTreeMap-backed Json
+        // serializer — that ordering is the byte-parity contract.
+        let mut j = JsonWriter::new(out);
+        j.begin_obj()?;
+        j.key("label")?;
+        j.str_val(&self.label)?;
+        j.key("records")?;
+        j.begin_arr()?;
+        for r in &self.records {
+            j.begin_obj()?;
+            j.key("comm_vectors")?;
+            j.num(r.comm_vectors as f64)?;
+            j.key("compute_s")?;
+            j.num(r.compute_s)?;
+            j.key("dual")?;
+            j.num(r.dual)?;
+            j.key("gap")?;
+            j.num(r.gap)?;
+            j.key("primal")?;
+            j.num(r.primal)?;
+            j.key("round")?;
+            j.num(r.round as f64)?;
+            j.key("sim_time_s")?;
+            j.num(r.sim_time_s)?;
+            j.end()?;
+        }
+        j.end()?;
+        j.key("stop")?;
+        j.str_val(self.stop.as_str())?;
+        j.end()?;
+        Ok(())
+    }
+
     /// Parse [`History::to_json`] output. JSON cannot represent
     /// non-finite numbers (the writer emits `null`), so a null dual maps
     /// back to `f64::NEG_INFINITY` (primal-only methods) and a null
@@ -392,6 +432,25 @@ mod tests {
         assert_eq!(
             StopReason::parse(StopReason::DualTargetReached.as_str()),
             Some(StopReason::DualTargetReached)
+        );
+    }
+
+    #[test]
+    fn streamed_json_is_byte_identical_to_materialized() {
+        let mut h = History::new("parity \"series\"\n");
+        h.push(rec(0, 0.25));
+        h.push(rec(7, 1e-9));
+        // exercise the null path (non-finite certificates) too
+        let mut r = rec(9, 0.5);
+        r.dual = f64::NEG_INFINITY;
+        r.gap = f64::NAN;
+        h.push(r);
+        h.stop = StopReason::GapReached;
+        let mut streamed = Vec::new();
+        h.write_json(&mut streamed).unwrap();
+        assert_eq!(
+            String::from_utf8(streamed).unwrap(),
+            h.to_json().to_string_compact()
         );
     }
 

@@ -85,6 +85,7 @@ use crate::solver::{
 };
 use crate::subproblem::{LocalBlock, SubproblemSpec};
 use comm::CommStats;
+use crate::telemetry::Ring;
 use crate::util::timer::Stopwatch;
 use std::sync::Arc;
 use worker::Worker;
@@ -128,6 +129,8 @@ pub struct Trainer {
     executor: Box<dyn Executor>,
     spec: SubproblemSpec,
     comm_stats: CommStats,
+    /// Leader-lane (tid 0) flight-recorder ring for the Eq.-14 reduce.
+    ring: Ring,
 }
 
 impl Trainer {
@@ -215,15 +218,22 @@ impl Trainer {
                     .map(|(k, (block, solver))| Worker::new(k, block, solver))
                     .collect();
                 match choice {
-                    ExecutorChoice::Auto => pool::make_executor(workers, spec, cfg.parallel),
-                    ExecutorChoice::Sequential => {
-                        Box::new(pool::SequentialExecutor::new(workers, spec))
+                    ExecutorChoice::Auto => {
+                        pool::make_executor(workers, spec, cfg.parallel, cfg.trace.clone())
                     }
-                    ExecutorChoice::Pooled => pool::make_executor(workers, spec, true),
+                    ExecutorChoice::Sequential => Box::new(pool::SequentialExecutor::new(
+                        workers,
+                        spec,
+                        cfg.trace.clone(),
+                    )),
+                    ExecutorChoice::Pooled => {
+                        pool::make_executor(workers, spec, true, cfg.trace.clone())
+                    }
                     ExecutorChoice::Socket => unreachable!("handled above"),
                 }
             }
         };
+        let ring = cfg.trace.ring(0);
         Trainer {
             cfg,
             problem,
@@ -234,6 +244,7 @@ impl Trainer {
             executor,
             spec,
             comm_stats: CommStats::default(),
+            ring,
         }
     }
 
@@ -283,6 +294,7 @@ impl Trainer {
         };
 
         // --- reduce (Eq. 14), in worker-id order for determinism -------
+        let t_reduce = self.ring.now();
         let reduce_clock = Stopwatch::started();
         for k in 0..self.cfg.k {
             let res = self.executor.result(k);
@@ -294,10 +306,12 @@ impl Trainer {
             dense::axpy(gamma, &res.update.delta_w, &mut self.w);
         }
         let reduce_s = reduce_clock.elapsed_secs();
+        self.ring.complete("reduce", "executor", t_reduce, None);
 
         self.comm_stats
             .record_round(&self.cfg.comm, self.problem.d(), self.cfg.k);
-        self.comm_stats.record_runtime(timing.barrier_s, reduce_s);
+        self.comm_stats
+            .record_runtime(timing.barrier_s, reduce_s, timing.wire_s);
         Ok(timing.max_compute_s)
     }
 
@@ -417,6 +431,12 @@ impl Method for Trainer {
             self.executor_kind(),
             self.comm_stats().runtime_summary()
         ))
+    }
+
+    /// Measured-vs-simulated communication validation (socket runtime
+    /// only — the in-process executors move no real bytes).
+    fn comm_report(&self) -> Option<String> {
+        self.comm_stats().validation_report()
     }
 
     fn train_error(&self) -> Option<f64> {

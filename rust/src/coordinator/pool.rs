@@ -63,6 +63,7 @@
 use crate::coordinator::worker::{Worker, WorkerResult};
 use crate::objective::CertPartial;
 use crate::subproblem::SubproblemSpec;
+use crate::telemetry::{Recorder, Ring};
 use crate::util::timer::Stopwatch;
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -102,6 +103,10 @@ pub struct RoundTiming {
     /// cost would land here, and since spawning happens once at startup,
     /// it no longer distorts any per-round measurement).
     pub barrier_s: f64,
+    /// Measured leader-side wire seconds (frame sends + reply body
+    /// reads) for the round. Zero for the in-process executors — only
+    /// the socket runtime moves bytes.
+    pub wire_s: f64,
 }
 
 /// Executes the fan-out/local-solve/gather of one outer round over K
@@ -139,11 +144,12 @@ pub fn make_executor(
     workers: Vec<Worker>,
     spec: SubproblemSpec,
     parallel: bool,
+    recorder: Recorder,
 ) -> Box<dyn Executor> {
     if parallel && workers.len() > 1 {
-        Box::new(PooledExecutor::spawn(workers, spec))
+        Box::new(PooledExecutor::spawn(workers, spec, recorder))
     } else {
-        Box::new(SequentialExecutor::new(workers, spec))
+        Box::new(SequentialExecutor::new(workers, spec, recorder))
     }
 }
 
@@ -168,18 +174,28 @@ pub struct SequentialExecutor {
     workers: Vec<Worker>,
     results: Vec<WorkerResult>,
     spec: SubproblemSpec,
+    /// One trace lane per worker (tid 1+k); the leader thread records
+    /// each serial solve on the lane of the worker it stands in for.
+    rings: Vec<Ring>,
+    round: u64,
 }
 
 impl SequentialExecutor {
-    pub fn new(workers: Vec<Worker>, spec: SubproblemSpec) -> SequentialExecutor {
+    pub fn new(workers: Vec<Worker>, spec: SubproblemSpec, recorder: Recorder) -> SequentialExecutor {
         let results = workers
             .iter()
             .map(|wk| WorkerResult::with_dims(wk.id, wk.block.n_local(), wk.block.d()))
+            .collect();
+        let rings = workers
+            .iter()
+            .map(|wk| recorder.ring(1 + wk.id as u32))
             .collect();
         SequentialExecutor {
             workers,
             results,
             spec,
+            rings,
+            round: 0,
         }
     }
 }
@@ -202,13 +218,17 @@ impl Executor for SequentialExecutor {
         let mut failed: Vec<(usize, String)> = Vec::new();
         let mut max_compute = 0.0f64;
         let mut total_compute = 0.0f64;
+        let round = self.round;
+        self.round += 1;
         for k in 0..self.workers.len() {
             let wk = &mut self.workers[k];
             let slot = &mut self.results[k];
+            let t0 = self.rings[k].now();
             let outcome = catch_unwind(AssertUnwindSafe(|| {
                 wk.round_into(w, &spec, slot);
                 wk.apply(gamma, &slot.update.delta_alpha);
             }));
+            self.rings[k].complete("compute", "worker", t0, Some(("round", round as f64)));
             match outcome {
                 Ok(()) => {
                     let c = self.results[k].compute_s;
@@ -227,6 +247,7 @@ impl Executor for SequentialExecutor {
         Ok(RoundTiming {
             max_compute_s: max_compute,
             barrier_s,
+            wire_s: 0.0,
         })
     }
 
@@ -240,7 +261,10 @@ impl Executor for SequentialExecutor {
         let mut failed: Vec<(usize, String)> = Vec::new();
         let mut partials = vec![CertPartial::default(); self.workers.len()];
         for (k, wk) in self.workers.iter().enumerate() {
-            match catch_unwind(AssertUnwindSafe(|| wk.eval_partial(&spec, w))) {
+            let t0 = self.rings[k].now();
+            let outcome = catch_unwind(AssertUnwindSafe(|| wk.eval_partial(&spec, w)));
+            self.rings[k].complete("cert", "worker", t0, None);
+            match outcome {
                 Ok(p) => partials[k] = p,
                 Err(payload) => failed.push((k, panic_message(payload.as_ref()))),
             }
@@ -304,10 +328,13 @@ fn worker_loop(
     spec: SubproblemSpec,
     jobs: Receiver<Job>,
     replies: SyncSender<Reply>,
+    mut ring: Ring,
 ) {
+    let mut round: u64 = 0;
     while let Ok(job) = jobs.recv() {
         match job {
             Job::Round { mut scratch, gamma } => {
+                let t0 = ring.now();
                 let outcome = catch_unwind(AssertUnwindSafe(|| {
                     {
                         let w = w_shared.read().expect("w broadcast lock poisoned");
@@ -316,16 +343,20 @@ fn worker_loop(
                     // Line 5 of Algorithm 1: the worker owns its α_[k].
                     wk.apply(gamma, &scratch.update.delta_alpha);
                 }));
+                ring.complete("compute", "worker", t0, Some(("round", round as f64)));
+                round += 1;
                 let panic = outcome.err().map(|p| panic_message(p.as_ref()));
                 if replies.send(Reply::Round { scratch, panic }).is_err() {
                     return; // leader gone — shut down
                 }
             }
             Job::Eval => {
+                let t0 = ring.now();
                 let outcome = catch_unwind(AssertUnwindSafe(|| {
                     let w = w_shared.read().expect("w broadcast lock poisoned");
                     wk.eval_partial(&spec, &w)
                 }));
+                ring.complete("cert", "worker", t0, None);
                 let (partial, panic) = match outcome {
                     Ok(p) => (p, None),
                     Err(p) => (CertPartial::default(), Some(panic_message(p.as_ref()))),
@@ -362,12 +393,14 @@ pub struct PooledExecutor {
     parts: Vec<Vec<usize>>,
     solver_name: String,
     handles: Vec<JoinHandle<()>>,
+    /// Leader-side trace lane (tid 0): broadcast and barrier spans.
+    ring: Ring,
 }
 
 impl PooledExecutor {
     /// Spawn one long-lived thread per worker. This is the only place the
     /// runtime creates threads — `run_round` never does.
-    pub fn spawn(workers: Vec<Worker>, spec: SubproblemSpec) -> PooledExecutor {
+    pub fn spawn(workers: Vec<Worker>, spec: SubproblemSpec, recorder: Recorder) -> PooledExecutor {
         let k = workers.len();
         assert!(k > 0, "cannot build an empty pool");
         let d = workers[0].block.d();
@@ -392,9 +425,10 @@ impl PooledExecutor {
             let (job_tx, job_rx) = sync_channel::<Job>(1);
             let w = Arc::clone(&w_shared);
             let replies = reply_tx.clone();
+            let ring = recorder.ring(1 + id as u32);
             let handle = std::thread::Builder::new()
                 .name(format!("cocoa-worker-{id}"))
-                .spawn(move || worker_loop(wk, w, spec, job_rx, replies))
+                .spawn(move || worker_loop(wk, w, spec, job_rx, replies, ring))
                 .expect("failed to spawn pool worker thread");
             job_txs.push(job_tx);
             handles.push(handle);
@@ -409,6 +443,7 @@ impl PooledExecutor {
             parts,
             solver_name,
             handles,
+            ring: recorder.ring(0),
         }
     }
 }
@@ -424,6 +459,7 @@ impl Executor for PooledExecutor {
 
     fn run_round(&mut self, w: &[f64], gamma: f64) -> Result<RoundTiming, PoolError> {
         let round_clock = Stopwatch::started();
+        let t_bcast = self.ring.now();
         // Broadcast: publish the w snapshot. Workers are all idle between
         // rounds, so this write never contends.
         {
@@ -449,7 +485,9 @@ impl Executor for PooledExecutor {
                 }
             }
         }
+        self.ring.complete("broadcast", "executor", t_bcast, None);
         // Gather.
+        let t_barrier = self.ring.now();
         let mut max_compute = 0.0f64;
         for _ in 0..sent {
             match self.reply_rx.recv() {
@@ -479,6 +517,7 @@ impl Executor for PooledExecutor {
                 }
             }
         }
+        self.ring.complete("barrier", "executor", t_barrier, None);
         if !failed.is_empty() {
             failed.sort_by(|a, b| a.0.cmp(&b.0));
             return Err(PoolError { failed });
@@ -487,6 +526,7 @@ impl Executor for PooledExecutor {
         Ok(RoundTiming {
             max_compute_s: max_compute,
             barrier_s,
+            wire_s: 0.0,
         })
     }
 
@@ -514,6 +554,7 @@ impl Executor for PooledExecutor {
         }
         // Gather the K partials; `partials` is indexed by worker id, so
         // arrival order cannot perturb the leader's id-ordered reduce.
+        let t_gather = self.ring.now();
         for _ in 0..sent {
             match self.reply_rx.recv() {
                 Ok(Reply::Eval { id, partial, panic }) => {
@@ -541,6 +582,7 @@ impl Executor for PooledExecutor {
                 }
             }
         }
+        self.ring.complete("cert_gather", "executor", t_gather, None);
         if !failed.is_empty() {
             failed.sort_by(|a, b| a.0.cmp(&b.0));
             return Err(PoolError { failed });
@@ -616,8 +658,8 @@ mod tests {
     fn pooled_and_sequential_rounds_agree_bitwise() {
         let (wk_a, spec) = workers_and_spec(3);
         let (wk_b, _) = workers_and_spec(3);
-        let mut seq = SequentialExecutor::new(wk_a, spec);
-        let mut pool = PooledExecutor::spawn(wk_b, spec);
+        let mut seq = SequentialExecutor::new(wk_a, spec, Recorder::disabled());
+        let mut pool = PooledExecutor::spawn(wk_b, spec, Recorder::disabled());
         let w = vec![0.0; 6];
         for _ in 0..3 {
             seq.run_round(&w, 1.0).unwrap();
@@ -637,8 +679,8 @@ mod tests {
     fn pooled_and_sequential_eval_partials_agree_bitwise() {
         let (wk_a, spec) = workers_and_spec(3);
         let (wk_b, _) = workers_and_spec(3);
-        let mut seq = SequentialExecutor::new(wk_a, spec);
-        let mut pool = PooledExecutor::spawn(wk_b, spec);
+        let mut seq = SequentialExecutor::new(wk_a, spec, Recorder::disabled());
+        let mut pool = PooledExecutor::spawn(wk_b, spec, Recorder::disabled());
         let w: Vec<f64> = (0..6).map(|j| 0.05 * (j as f64 + 1.0)).collect();
         // interleave rounds and evals: partials must track the evolving
         // worker-owned α_[k] identically on both runtimes
@@ -668,7 +710,7 @@ mod tests {
         let (workers, spec) = workers_and_spec(4);
         let n_total: usize = workers.iter().map(|wk| wk.block.n_local()).sum();
         assert_eq!(n_total, 48);
-        let mut seq = SequentialExecutor::new(workers, spec);
+        let mut seq = SequentialExecutor::new(workers, spec, Recorder::disabled());
         // At α = 0, w = 0: hinge loss is 1 per row and ℓ*(0) = 0, so the
         // reduced partials must sum to exactly n — a row dropped or
         // double-counted by the shard views would show up immediately.
@@ -683,20 +725,20 @@ mod tests {
     #[test]
     fn make_executor_degenerates_k1_to_sequential() {
         let (workers, spec) = workers_and_spec(1);
-        let exec = make_executor(workers, spec, true);
+        let exec = make_executor(workers, spec, true, Recorder::disabled());
         assert_eq!(exec.kind(), "sequential");
         let (workers, spec) = workers_and_spec(2);
-        let exec = make_executor(workers, spec, true);
+        let exec = make_executor(workers, spec, true, Recorder::disabled());
         assert_eq!(exec.kind(), "pooled");
         let (workers, spec) = workers_and_spec(2);
-        let exec = make_executor(workers, spec, false);
+        let exec = make_executor(workers, spec, false, Recorder::disabled());
         assert_eq!(exec.kind(), "sequential");
     }
 
     #[test]
     fn pool_drop_joins_threads() {
         let (workers, spec) = workers_and_spec(4);
-        let mut pool = PooledExecutor::spawn(workers, spec);
+        let mut pool = PooledExecutor::spawn(workers, spec, Recorder::disabled());
         let w = vec![0.0; 6];
         pool.run_round(&w, 1.0).unwrap();
         drop(pool); // must not hang or leak — join happens here
@@ -705,7 +747,7 @@ mod tests {
     #[test]
     fn load_alpha_reaches_workers_before_next_round() {
         let (workers, spec) = workers_and_spec(2);
-        let mut pool = PooledExecutor::spawn(workers, spec);
+        let mut pool = PooledExecutor::spawn(workers, spec, Recorder::disabled());
         let w = vec![0.0; 6];
         pool.run_round(&w, 1.0).unwrap();
         // Zero the dual state again; the next round must then reproduce

@@ -53,6 +53,7 @@ use crate::linalg::sparse::CsrMatrix;
 use crate::loss::Loss;
 use crate::objective::CertPartial;
 use crate::subproblem::{LocalBlock, SubproblemSpec};
+use crate::telemetry::Ring;
 use crate::util::cli::Args;
 use crate::util::json::{jnum, jstr, Json};
 use crate::util::timer::{Deadline, Stopwatch};
@@ -166,13 +167,26 @@ impl Conn {
     }
 
     fn send(&mut self, frame: &Frame) -> Result<(), WireError> {
+        self.send_timed(frame).map(|_| ())
+    }
+
+    /// Send one frame, returning the seconds spent serializing and
+    /// flushing it — the leader's measured outbound wire time.
+    fn send_timed(&mut self, frame: &Frame) -> Result<f64, WireError> {
+        let clock = Stopwatch::started();
         wire::write_frame(&mut self.writer, frame)?;
         self.writer.flush()?;
-        Ok(())
+        Ok(clock.elapsed_secs())
     }
 
     fn recv(&mut self) -> Result<Frame, WireError> {
         wire::read_frame(&mut self.reader)
+    }
+
+    /// Receive one frame along with where its wall time went (blocked on
+    /// the length prefix vs. moving the body).
+    fn recv_timed(&mut self) -> Result<(Frame, wire::RecvTiming), WireError> {
+        wire::read_frame_timed(&mut self.reader)
     }
 
     fn set_read_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
@@ -316,6 +330,13 @@ pub struct SocketExecutor {
     round_timeout: Option<Duration>,
     /// Unix socket path to unlink on drop.
     sock_path: Option<PathBuf>,
+    /// Leader trace lane (tid 0): per-frame send/recv wire spans.
+    ring: Ring,
+    /// One lane per worker process: the leader synthesizes each worker's
+    /// `compute` span from its reported compute seconds (the process's
+    /// own clock never crosses the wire, so lanes stay on one epoch).
+    worker_rings: Vec<Ring>,
+    round: u64,
 }
 
 impl SocketExecutor {
@@ -345,6 +366,9 @@ impl SocketExecutor {
             solver_name: String::new(),
             round_timeout: cfg.socket.round_timeout,
             sock_path: None,
+            ring: cfg.trace.ring(0),
+            worker_rings: (0..k).map(|i| cfg.trace.ring(1 + i as u32)).collect(),
+            round: 0,
         };
         // On error the partially-built executor is dropped here, which
         // reaps any children already spawned and unlinks the socket.
@@ -578,16 +602,28 @@ impl SocketExecutor {
 
     /// Fan a frame out to every live connection; send failures drop the
     /// connection and are reported against the worker. Returns the ids
-    /// whose send succeeded.
-    fn fan_out(&mut self, frame: &Frame, failed: &mut Vec<(usize, String)>) -> Vec<usize> {
+    /// whose send succeeded, plus the summed measured send seconds.
+    fn fan_out(&mut self, frame: &Frame, failed: &mut Vec<(usize, String)>) -> (Vec<usize>, f64) {
         let mut pending = Vec::with_capacity(self.k);
+        let mut send_s = 0.0f64;
         for id in 0..self.k {
+            let t0 = self.ring.now();
             let send_err = match self.conns[id].as_mut() {
                 None => Some("no connection (worker previously failed)".to_string()),
-                Some(conn) => conn.send(frame).err().map(|e| format!("send failed: {e}")),
+                Some(conn) => match conn.send_timed(frame) {
+                    Ok(s) => {
+                        send_s += s;
+                        None
+                    }
+                    Err(e) => Some(format!("send failed: {e}")),
+                },
             };
             match send_err {
-                None => pending.push(id),
+                None => {
+                    self.ring
+                        .complete("send", "wire", t0, Some(("worker", id as f64)));
+                    pending.push(id);
+                }
                 Some(base) => {
                     self.conns[id] = None;
                     let msg = self.describe_failure(id, base);
@@ -595,7 +631,7 @@ impl SocketExecutor {
                 }
             }
         }
-        pending
+        (pending, send_s)
     }
 }
 
@@ -616,14 +652,24 @@ impl Executor for SocketExecutor {
 
     fn run_round(&mut self, w: &[f64], gamma: f64) -> Result<RoundTiming, PoolError> {
         let round_clock = Stopwatch::started();
+        let round = self.round;
+        self.round += 1;
+        let t_round = self.ring.now();
         let mut failed: Vec<(usize, String)> = Vec::new();
         let frame = Frame::new("round")
             .with_f64s("g", vec![gamma])
             .with_f64s("w", w.to_vec());
-        let pending = self.fan_out(&frame, &mut failed);
+        let (pending, send_s) = self.fan_out(&frame, &mut failed);
+        let mut wire_s = send_s;
         let mut max_compute = 0.0f64;
         for id in pending {
-            let recv = self.conns[id].as_mut().expect("pending ids are live").recv();
+            let t_recv = self.ring.now();
+            let recv = self.conns[id]
+                .as_mut()
+                .expect("pending ids are live")
+                .recv_timed();
+            self.ring
+                .complete("recv", "wire", t_recv, Some(("worker", id as f64)));
             match recv {
                 Err(e) => {
                     let base = if e.is_timeout() {
@@ -635,7 +681,10 @@ impl Executor for SocketExecutor {
                     let msg = self.describe_failure(id, base);
                     failed.push((id, msg));
                 }
-                Ok(reply) => {
+                Ok((reply, timing)) => {
+                    // Only the body transfer is wire time — the prefix
+                    // wait is the barrier (the worker still computing).
+                    wire_s += timing.body_s;
                     if reply.msg_type() != "result" {
                         self.conns[id] = None;
                         failed.push((
@@ -651,7 +700,23 @@ impl Executor for SocketExecutor {
                         failed.push((id, p.to_string()));
                     } else {
                         match self.copy_result(id, &reply) {
-                            Ok(cs) => max_compute = max_compute.max(cs),
+                            Ok(cs) => {
+                                max_compute = max_compute.max(cs);
+                                // Render the worker's reported compute on
+                                // its own lane, ending where its reply
+                                // arrived; clamp into the round so lanes
+                                // stay well-nested.
+                                let end = self.worker_rings[id].now();
+                                let dur_us = (cs * 1e6) as u64;
+                                let start = end.saturating_sub(dur_us).max(t_round);
+                                self.worker_rings[id].span_at(
+                                    "compute",
+                                    "worker",
+                                    start,
+                                    end,
+                                    Some(("round", round as f64)),
+                                );
+                            }
                             Err(msg) => {
                                 self.conns[id] = None;
                                 failed.push((id, msg));
@@ -669,16 +734,20 @@ impl Executor for SocketExecutor {
         Ok(RoundTiming {
             max_compute_s: max_compute,
             barrier_s,
+            wire_s,
         })
     }
 
     fn eval_partials(&mut self, w: &[f64]) -> Result<Vec<CertPartial>, PoolError> {
         let mut failed: Vec<(usize, String)> = Vec::new();
         let frame = Frame::new("eval").with_f64s("w", w.to_vec());
-        let pending = self.fan_out(&frame, &mut failed);
+        let (pending, _send_s) = self.fan_out(&frame, &mut failed);
         let mut partials = vec![CertPartial::default(); self.k];
         for id in pending {
+            let t_recv = self.ring.now();
             let recv = self.conns[id].as_mut().expect("pending ids are live").recv();
+            self.ring
+                .complete("recv", "wire", t_recv, Some(("worker", id as f64)));
             match recv {
                 Err(e) => {
                     let base = if e.is_timeout() {

@@ -23,6 +23,7 @@
 use std::io::{ErrorKind, Read, Write};
 
 use crate::util::json::{jarr, jnum, jstr, Json};
+use crate::util::timer::Stopwatch;
 
 /// Hard ceiling on a single frame (1 GiB). A corrupt or malicious length
 /// prefix must not make the leader try to allocate 4 GiB.
@@ -315,10 +316,30 @@ fn le_word(chunk: &[u8]) -> u64 {
         .fold(0u64, |acc, (i, &b)| acc | (u64::from(b) << (8 * i)))
 }
 
+/// Where one frame receive spent its wall time, split where the protocol
+/// splits: `wait_s` is time blocked on the 4-byte length prefix (the
+/// peer is still computing or the message is in flight), `body_s` is
+/// time actually moving the frame body once bytes are flowing — the
+/// share that is genuinely wire transfer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RecvTiming {
+    pub wait_s: f64,
+    pub body_s: f64,
+}
+
 /// Read and decode one frame from `r`.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+    read_frame_timed(r).map(|(frame, _)| frame)
+}
+
+/// [`read_frame`], also reporting where the receive's wall time went.
+/// The telemetry layer and `CommStats` use this to separate measured
+/// wire transfer from the barrier wait.
+pub fn read_frame_timed<R: Read>(r: &mut R) -> Result<(Frame, RecvTiming), WireError> {
     let mut len_buf = [0u8; 4];
+    let wait_clock = Stopwatch::started();
     read_exact_prefix(r, &mut len_buf, true)?;
+    let wait_s = wait_clock.elapsed_secs();
     let total_len = u32::from_be_bytes(len_buf) as usize;
     if total_len > MAX_FRAME_BYTES {
         return Err(WireError::TooLarge { len: total_len });
@@ -329,7 +350,12 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
         )));
     }
     let mut body = vec![0u8; total_len];
+    let body_clock = Stopwatch::started();
     read_exact_prefix(r, &mut body, false)?;
+    let timing = RecvTiming {
+        wait_s,
+        body_s: body_clock.elapsed_secs(),
+    };
 
     // `total_len >= 4` was checked above, so the split cannot fail; the
     // typed fallback keeps even the impossible case out of the panic
@@ -418,7 +444,7 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
             payload.len() - off
         )));
     }
-    Ok(Frame { header, sections })
+    Ok((Frame { header, sections }, timing))
 }
 
 #[cfg(test)]
@@ -630,6 +656,17 @@ mod tests {
         assert!(f.usize_field("frac").is_err());
         assert!(f.usize_field("missing").is_err());
         assert_eq!(f.usize_field("ok").unwrap(), 42);
+    }
+
+    #[test]
+    fn timed_read_matches_untimed_and_reports_phases() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::new("round").with_f64s("w", vec![1.0; 8])).unwrap();
+        let (frame, timing) = read_frame_timed(&mut buf.as_slice()).unwrap();
+        assert_eq!(frame.msg_type(), "round");
+        assert_eq!(frame.f64s("w").unwrap().len(), 8);
+        assert!(timing.wait_s >= 0.0);
+        assert!(timing.body_s >= 0.0);
     }
 
     #[test]

@@ -32,6 +32,7 @@ use crate::coordinator::comm::CommModel;
 use crate::coordinator::config::CocoaConfig;
 use crate::coordinator::history::{History, RoundRecord, StopReason};
 use crate::objective::Certificates;
+use crate::telemetry::{Recorder, Ring};
 
 /// What one outer round of a [`Method`] reports back to the [`Driver`].
 #[derive(Clone, Copy, Debug, Default)]
@@ -100,6 +101,13 @@ pub trait Method {
     /// state — `cocoa train --checkpoint-out` reports those as such
     /// instead of writing a half-checkpoint.
     fn checkpoint(&self) -> Option<crate::coordinator::checkpoint::Checkpoint> {
+        None
+    }
+
+    /// Optional measured-vs-simulated communication validation report,
+    /// printed by the CLI after a run. `Some` only for methods that
+    /// measured real wire time (the Trainer on the socket executor).
+    fn comm_report(&self) -> Option<String> {
         None
     }
 }
@@ -197,6 +205,9 @@ pub struct Driver {
     /// pass over the data). The final round is always evaluated.
     pub gap_every: usize,
     observers: Vec<Box<dyn Observer>>,
+    /// Driver-lane (tid 0) flight-recorder ring: one "round" span per
+    /// outer round and one "eval" span per certificate evaluation.
+    ring: Ring,
 }
 
 impl Driver {
@@ -205,11 +216,14 @@ impl Driver {
             stop,
             gap_every: 1,
             observers: Vec::new(),
+            ring: Ring::disabled(),
         }
     }
 
     /// The policy a [`CocoaConfig`] encodes (gap tolerance, round budget,
     /// divergence abort, certificate cadence) — what `Trainer::run` uses.
+    /// The config's flight recorder is attached, so `--trace-out` runs
+    /// get driver-level round/eval spans above the executor's phases.
     pub fn from_cocoa_config(cfg: &CocoaConfig) -> Driver {
         Driver::new(
             StopPolicy::new(cfg.max_rounds)
@@ -217,10 +231,18 @@ impl Driver {
                 .with_divergence_gap(cfg.divergence_gap),
         )
         .with_gap_every(cfg.gap_every)
+        .with_recorder(&cfg.trace)
     }
 
     pub fn with_gap_every(mut self, every: usize) -> Driver {
         self.gap_every = every.max(1);
+        self
+    }
+
+    /// Attach a flight recorder; the driver records its outer-loop
+    /// round/eval spans on the leader lane (tid 0).
+    pub fn with_recorder(mut self, recorder: &Recorder) -> Driver {
+        self.ring = recorder.ring(0);
         self
     }
 
@@ -242,7 +264,10 @@ impl Driver {
         let mut stop = StopReason::MaxRounds;
 
         'rounds: for t in 0..self.stop.max_rounds {
+            let t_round = self.ring.now();
             let stats = method.step();
+            self.ring
+                .complete("round", "driver", t_round, Some(("round", t as f64)));
             cum_compute += stats.compute_s;
             cum_sim += stats.compute_s;
             if stats.comm_vectors > 0 {
@@ -253,7 +278,10 @@ impl Driver {
             vectors += stats.comm_vectors;
 
             if t % self.gap_every == 0 || t + 1 == self.stop.max_rounds {
+                let t_eval = self.ring.now();
                 let certs = method.eval();
+                self.ring
+                    .complete("eval", "driver", t_eval, Some(("round", t as f64)));
                 let rec = RoundRecord {
                     round: t,
                     comm_vectors: vectors,

@@ -4,7 +4,7 @@
 //! w) and the final [`History`].
 
 use crate::coordinator::history::{History, RoundRecord};
-use crate::util::json::{jarr, jnum, jobj};
+use crate::telemetry::writer::JsonWriter;
 use std::cell::RefCell;
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -116,9 +116,12 @@ impl Observer for ProgressLog {
     }
 }
 
-/// Writes a JSON snapshot `{round, w}` of the shared model every
+/// Writes a JSON snapshot `{gap, round, w}` of the shared model every
 /// `every`-th evaluated round (overwriting — the file always holds the
 /// latest snapshot), so a long run can be warm-restarted or inspected.
+/// The snapshot is *streamed* straight to the file: w can be large
+/// (d entries), and the old materialize-then-write path briefly held
+/// the whole document in memory next to the model itself.
 pub struct CheckpointEvery {
     every: usize,
     seen: usize,
@@ -133,17 +136,35 @@ impl CheckpointEvery {
             path: path.into(),
         }
     }
+
+    /// Stream the snapshot (keys in alphabetical order — byte-identical
+    /// to what the BTreeMap-backed `Json` serializer produced).
+    fn write_snapshot(&self, record: &RoundRecord, w: &[f64]) -> std::io::Result<()> {
+        if let Some(parent) = self.path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let out = std::io::BufWriter::new(std::fs::File::create(&self.path)?);
+        let mut j = JsonWriter::new(out);
+        j.begin_obj()?;
+        j.key("gap")?;
+        j.num(record.gap)?;
+        j.key("round")?;
+        j.num(record.round as f64)?;
+        j.key("w")?;
+        j.begin_arr()?;
+        for &v in w {
+            j.num(v)?;
+        }
+        j.end()?;
+        j.end()?;
+        j.into_inner().flush()
+    }
 }
 
 impl Observer for CheckpointEvery {
     fn on_record(&mut self, record: &RoundRecord, w: &[f64]) {
         if self.seen % self.every == 0 {
-            let snap = jobj(vec![
-                ("round", jnum(record.round as f64)),
-                ("gap", jnum(record.gap)),
-                ("w", jarr(w.iter().map(|&v| jnum(v)).collect())),
-            ]);
-            if let Err(e) = crate::report::write_to(&self.path, &snap.to_string_compact()) {
+            if let Err(e) = self.write_snapshot(record, w) {
                 crate::log_warn!("checkpoint to {} failed: {e}", self.path.display());
             }
         }
@@ -248,11 +269,20 @@ mod tests {
         c.on_record(&rec(0, 0.5), &[1.0, 2.0]); // seen 0 → write
         c.on_record(&rec(1, 0.4), &[3.0, 4.0]); // skipped
         c.on_record(&rec(2, 0.3), &[5.0, 6.0]); // seen 2 → overwrite
-        let j = crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(&text).unwrap();
         assert_eq!(j.get("round").unwrap().as_f64(), Some(2.0));
         let w = j.get("w").unwrap().as_arr().unwrap();
         assert_eq!(w.len(), 2);
         assert_eq!(w[0].as_f64(), Some(5.0));
+        // streaming writer parity with the materializing serializer
+        use crate::util::json::{jarr, jnum, jobj};
+        let expect = jobj(vec![
+            ("round", jnum(2.0)),
+            ("gap", jnum(0.3)),
+            ("w", jarr(vec![jnum(5.0), jnum(6.0)])),
+        ]);
+        assert_eq!(text, expect.to_string_compact());
         std::fs::remove_file(&path).ok();
     }
 }

@@ -12,6 +12,7 @@ use crate::coordinator::{CocoaConfig, ExecutorChoice, SolverSpec, Trainer};
 use crate::data::Partition;
 use crate::driver::Method;
 use crate::objective::Problem;
+use crate::telemetry::Recorder;
 
 /// Every optimizer reachable from the CLI and the conformance suite.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -106,6 +107,9 @@ pub struct BuildOpts {
     pub rho: f64,
     /// Inexact local subgradient steps per round (ADMM).
     pub local_iters: usize,
+    /// Flight recorder the built method traces into (CoCoA variants
+    /// only); disabled by default.
+    pub recorder: Recorder,
 }
 
 impl BuildOpts {
@@ -121,6 +125,7 @@ impl BuildOpts {
             beta: 1.0,
             rho: 1.0,
             local_iters: 50,
+            recorder: Recorder::disabled(),
         }
     }
 }
@@ -148,7 +153,8 @@ pub fn build_method(
             }
             .with_seed(opts.seed)
             .with_parallel(opts.parallel)
-            .with_executor(opts.executor);
+            .with_executor(opts.executor)
+            .with_recorder(opts.recorder.clone());
             if let Some(sp) = opts.sigma_prime {
                 cfg = cfg.with_sigma_prime(sp);
             }

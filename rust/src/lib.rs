@@ -141,6 +141,24 @@
 //! layer is hand-rolled on `std::net` with the same hostile-input
 //! discipline as the socket executor's wire format.
 //!
+//! ## Observability
+//!
+//! Every runtime carries a [`telemetry::Recorder`] — a dependency-free
+//! flight recorder whose per-actor [`telemetry::Ring`] buffers stream
+//! Chrome trace-event JSON (Perfetto / `chrome://tracing`) without ever
+//! materializing the document. `cocoa train --trace-out trace.json`
+//! captures the Driver's rounds, each executor's
+//! broadcast/compute/barrier/reduce phases per worker, and the socket
+//! executor's per-frame wire time; `cocoa serve --trace-out` captures
+//! the request path; `cocoa trace-check` validates the result. Measured
+//! socket wire time flows into [`coordinator::comm::CommStats`] next to
+//! the simulated communication model, and `cocoa train` prints a
+//! measured-vs-simulated validation report from it. Tracing is strictly
+//! observe-only: the three-way determinism suite stays bit-identical
+//! with the recorder on. The serve layer's counters and histograms are
+//! generalized into [`telemetry::metrics`], one registry behind both
+//! `GET /metrics` and the training CLI summary.
+//!
 //! ## Static invariants (`cocoa-lint`)
 //!
 //! The contracts this crate-level doc keeps promising — panic-free
@@ -168,6 +186,7 @@ pub mod runtime;
 pub mod serve;
 pub mod solver;
 pub mod subproblem;
+pub mod telemetry;
 pub mod testing;
 pub mod util;
 

@@ -8,6 +8,7 @@
 //!   experiment   regenerate a paper table/figure: table1|table2|fig1|fig2|fig3|rates|all
 //!   artifacts-check   load + smoke-run the AOT artifacts via PJRT
 //!   serve        HTTP prediction service from a training checkpoint
+//!   trace-check  validate a --trace-out flight-recorder file
 //!   worker       internal: socket-executor worker process (spawned by the leader)
 //!
 //! Run `cocoa help` for flags.
@@ -15,6 +16,7 @@
 use cocoa::driver::{build_method, CsvStream, ProgressLog};
 use cocoa::prelude::*;
 use cocoa::serve::{serve, Model, ServeConfig};
+use cocoa::telemetry::Recorder;
 use cocoa::util::cli::Args;
 use cocoa::util::logging;
 
@@ -32,6 +34,7 @@ fn main() {
         "experiment" => cocoa::experiments::run_from_cli(&args),
         "artifacts-check" => cmd_artifacts_check(&args),
         "serve" => cmd_serve(&args),
+        "trace-check" => cmd_trace_check(&args),
         "worker" => cocoa::coordinator::socket::worker_main(&args),
         "help" | "--help" => {
             print_help();
@@ -65,15 +68,20 @@ SUBCOMMANDS
                    admm:           --rho <penalty> --local-iters <inner steps>
                    --checkpoint-out <path>   write the full primal-dual state (w, α) after
                                              the run (cocoa-plus|cocoa only) for `serve`
+                   --trace-out <path>        record a Chrome trace-event file of the run
+                                             (open in Perfetto / chrome://tracing); with
+                                             --executor socket also prints the measured-vs-
+                                             simulated communication report
                    History streams to results/train/<method>_<dataset>.csv while running.
   gen-data         --dataset <name> --scale <s> --seed <s> --out <path.svm>
   sigma            --dataset <name> --scale <s> --ks 16,32,64 --seed <s>
   experiment       table1|table2|fig1|fig2|fig3|rates|ablation|all  [--quick] [--scale s]
   artifacts-check  --artifacts <dir>
   serve            --checkpoint <path> [--addr 127.0.0.1:8080] [--threads <n>]
-                   [--read-timeout-ms <ms>]
+                   [--read-timeout-ms <ms>] [--trace-out <path>]
                    HTTP prediction service: GET /healthz /metrics, POST /predict
                    /reload /retrain /quit (see rustdoc for body shapes)
+  trace-check      <trace.json>  validate a --trace-out file (fields + span nesting)
   worker           internal: spawned by the socket executor (--connect <addr> --worker <id>)
 
 GLOBAL FLAGS
@@ -153,6 +161,18 @@ fn cmd_train(args: &Args) -> i32 {
     if let Some(sp) = args.get_opt("sigma-prime") {
         opts.sigma_prime = Some(sp.parse().expect("--sigma-prime must be a float"));
     }
+    let trace_out = args.get_opt("trace-out");
+    let recorder = match trace_out {
+        Some(path) => match Recorder::to_file(std::path::Path::new(path)) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("cannot open trace file {path}: {e}");
+                return 1;
+            }
+        },
+        None => Recorder::disabled(),
+    };
+    opts.recorder = recorder.clone();
 
     let part = cocoa::data::partition::random_balanced(n, k, seed);
     let dataset_label = data.name.clone();
@@ -202,6 +222,7 @@ fn cmd_train(args: &Args) -> i32 {
         .with_divergence_gap(args.get_f64("divergence-gap", divergence_default));
     let mut driver = Driver::new(stop)
         .with_gap_every(args.get_usize("gap-every", 1))
+        .with_recorder(&recorder)
         .with_observer(Box::new(ProgressLog::new(10)));
 
     // Outputs are named by method + dataset so comparison runs coexist.
@@ -238,6 +259,32 @@ fn cmd_train(args: &Args) -> i32 {
     if let Some(notes) = method.runtime_notes() {
         println!("runtime: {notes}");
     }
+    if let Some(report) = method.comm_report() {
+        println!("{report}");
+    }
+    // The run summary renders through the same telemetry::metrics
+    // registry `GET /metrics` uses — one implementation for both
+    // reporting surfaces.
+    let registry = cocoa::telemetry::metrics::Registry::new();
+    registry
+        .counter("train.rounds_total")
+        .add(hist.rounds_run() as u64);
+    registry
+        .counter("train.comm_vectors_total")
+        .add(hist.records.last().map_or(0, |r| r.comm_vectors as u64));
+    // compute_s is cumulative per record; the deltas are the measured
+    // compute between certificate evaluations (= per round at the
+    // default --gap-every 1).
+    let compute = registry.histogram("train.compute_per_eval_us");
+    let mut prev_compute = 0.0f64;
+    for r in &hist.records {
+        let delta = (r.compute_s - prev_compute).max(0.0);
+        compute.observe_us((delta * 1e6) as u64);
+        prev_compute = r.compute_s;
+    }
+    for line in registry.summary_lines() {
+        println!("metric {line}");
+    }
     if streamed {
         println!("history written to {}", out_path.display());
     }
@@ -260,7 +307,45 @@ fn cmd_train(args: &Args) -> i32 {
             }
         }
     }
+    if let Some(path) = trace_out {
+        // The method and driver own the last un-flushed rings; drop them
+        // so every buffered event reaches the file before the trailer.
+        drop(method);
+        drop(driver);
+        match recorder.finish() {
+            Ok(sum) => println!(
+                "trace written to {path}: {} event(s), {} dropped",
+                sum.events, sum.dropped
+            ),
+            Err(e) => {
+                eprintln!("cannot finalize trace {path}: {e}");
+                return 1;
+            }
+        }
+    }
     0
+}
+
+/// `cocoa trace-check`: validate a `--trace-out` file (required fields,
+/// per-lane span nesting) and print its summary.
+fn cmd_trace_check(args: &Args) -> i32 {
+    let Some(path) = args.positional.get(1) else {
+        eprintln!("usage: cocoa trace-check <trace.json>");
+        return 2;
+    };
+    match cocoa::telemetry::checker::check_file(std::path::Path::new(path)) {
+        Ok(check) => {
+            println!(
+                "{path}: OK — {} event(s) on {} lane(s), max nesting depth {}, {} dropped",
+                check.events, check.lanes, check.max_depth, check.dropped
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("{path}: INVALID — {e}");
+            1
+        }
+    }
 }
 
 /// `cocoa serve`: load a checkpoint, rebuild the model, and serve
@@ -298,6 +383,18 @@ fn cmd_serve(args: &Args) -> i32 {
     cfg.threads = args.get_usize("threads", cfg.threads).max(1);
     let timeout_ms = args.get_u64("read-timeout-ms", cfg.read_timeout.as_millis() as u64);
     cfg.read_timeout = std::time::Duration::from_millis(timeout_ms.max(1));
+    let trace_out = args.get_opt("trace-out");
+    let recorder = match trace_out {
+        Some(path) => match Recorder::to_file(std::path::Path::new(path)) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("cannot open trace file {path}: {e}");
+                return 1;
+            }
+        },
+        None => Recorder::disabled(),
+    };
+    cfg.trace = recorder.clone();
     let handle = match serve(model, cfg) {
         Ok(h) => h,
         Err(e) => {
@@ -313,6 +410,20 @@ fn cmd_serve(args: &Args) -> i32 {
     );
     handle.wait();
     println!("server stopped");
+    if let Some(path) = trace_out {
+        // wait() already sealed the file (ServerHandle finishes its
+        // recorder after joining the workers); this reads the totals.
+        match recorder.finish() {
+            Ok(sum) => println!(
+                "trace written to {path}: {} event(s), {} dropped",
+                sum.events, sum.dropped
+            ),
+            Err(e) => {
+                eprintln!("cannot finalize trace {path}: {e}");
+                return 1;
+            }
+        }
+    }
     0
 }
 

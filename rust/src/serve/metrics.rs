@@ -1,34 +1,40 @@
-//! Lock-free serving metrics: request counters, status classes, an
-//! in-flight gauge (RAII guard so a panicking handler still decrements),
-//! and a fixed log-spaced latency histogram. Everything is relaxed
-//! atomics — recording must cost the predict hot path nanoseconds — and
-//! `GET /metrics` renders a consistent-enough JSON snapshot.
+//! Serving metrics for `cocoa serve`, built on the shared
+//! [`crate::telemetry::metrics`] primitives (relaxed-atomic counters,
+//! gauges, and the fixed log-spaced latency histogram) registered in a
+//! [`Registry`] — the same implementation the training CLI summary
+//! reads through. Recording costs the predict hot path one relaxed
+//! atomic op; `GET /metrics` renders a consistent-enough JSON snapshot
+//! in the exact shape this endpoint has always served, plus a `queue`
+//! section exposing accept-queue depth/saturation.
 
-use crate::util::json::{jarr, jnum, jobj, jstr, Json};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::{Duration, Instant};
+pub use crate::telemetry::metrics::BUCKET_US;
+use crate::telemetry::metrics::{Counter, Gauge, Histogram, Registry};
+use crate::util::json::{jnum, jobj, Json};
+use crate::util::timer::trace_now_us;
+use std::sync::Arc;
+use std::time::Duration;
 
-/// Histogram bucket upper bounds in microseconds (log-spaced); a final
-/// implicit +∞ bucket catches the rest. Fixed buckets keep recording a
-/// single atomic increment.
-pub const BUCKET_US: [u64; 10] = [
-    50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 100_000, 1_000_000,
-];
-
+/// The serve layer's metric handles. All counters live in a shared
+/// [`Registry`] (name-indexed, inspectable via [`Metrics::registry`]);
+/// the struct caches the `Arc` handles so the hot path never touches
+/// the registry lock.
 #[derive(Debug)]
 pub struct Metrics {
-    started: Instant,
-    in_flight: AtomicU64,
-    requests_total: AtomicU64,
-    responses_2xx: AtomicU64,
-    responses_4xx: AtomicU64,
-    responses_5xx: AtomicU64,
-    predictions_total: AtomicU64,
-    reloads_total: AtomicU64,
-    retrains_total: AtomicU64,
-    latency_buckets: [AtomicU64; BUCKET_US.len() + 1],
-    latency_sum_us: AtomicU64,
-    latency_count: AtomicU64,
+    registry: Arc<Registry>,
+    /// Trace-epoch microseconds at construction (the uptime origin).
+    started_us: u64,
+    in_flight: Arc<Gauge>,
+    requests_total: Arc<Counter>,
+    responses_2xx: Arc<Counter>,
+    responses_4xx: Arc<Counter>,
+    responses_5xx: Arc<Counter>,
+    predictions_total: Arc<Counter>,
+    reloads_total: Arc<Counter>,
+    retrains_total: Arc<Counter>,
+    latency: Arc<Histogram>,
+    queue_depth: Arc<Gauge>,
+    queue_capacity: Arc<Gauge>,
+    queue_saturated_total: Arc<Counter>,
 }
 
 impl Default for Metrics {
@@ -39,27 +45,36 @@ impl Default for Metrics {
 
 impl Metrics {
     pub fn new() -> Metrics {
+        let registry = Arc::new(Registry::new());
         Metrics {
-            started: Instant::now(),
-            in_flight: AtomicU64::new(0),
-            requests_total: AtomicU64::new(0),
-            responses_2xx: AtomicU64::new(0),
-            responses_4xx: AtomicU64::new(0),
-            responses_5xx: AtomicU64::new(0),
-            predictions_total: AtomicU64::new(0),
-            reloads_total: AtomicU64::new(0),
-            retrains_total: AtomicU64::new(0),
-            latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
-            latency_sum_us: AtomicU64::new(0),
-            latency_count: AtomicU64::new(0),
+            started_us: trace_now_us(),
+            in_flight: registry.gauge("http.in_flight"),
+            requests_total: registry.counter("http.requests_total"),
+            responses_2xx: registry.counter("http.responses_2xx"),
+            responses_4xx: registry.counter("http.responses_4xx"),
+            responses_5xx: registry.counter("http.responses_5xx"),
+            predictions_total: registry.counter("predictions_total"),
+            reloads_total: registry.counter("reloads_total"),
+            retrains_total: registry.counter("retrains_total"),
+            latency: registry.histogram("http.latency_us"),
+            queue_depth: registry.gauge("queue.depth"),
+            queue_capacity: registry.gauge("queue.capacity"),
+            queue_saturated_total: registry.counter("queue.saturated_total"),
+            registry,
         }
+    }
+
+    /// The backing registry (name-indexed view of every handle above,
+    /// for summaries and embedders that add their own metrics).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
     }
 
     /// Mark one request in flight; the returned guard decrements the
     /// gauge on drop, so an unwinding handler cannot leak an in-flight.
     pub fn begin(&self) -> InFlight<'_> {
-        self.requests_total.fetch_add(1, Ordering::Relaxed);
-        self.in_flight.fetch_add(1, Ordering::Relaxed);
+        self.requests_total.inc();
+        self.in_flight.inc();
         InFlight { metrics: self }
     }
 
@@ -70,73 +85,94 @@ impl Metrics {
             400..=499 => &self.responses_4xx,
             _ => &self.responses_5xx,
         };
-        class.fetch_add(1, Ordering::Relaxed);
+        class.inc();
         let us = elapsed.as_micros().min(u128::from(u64::MAX)) as u64;
-        let idx = BUCKET_US.partition_point(|&le| us > le);
-        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
-        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
-        self.latency_count.fetch_add(1, Ordering::Relaxed);
+        self.latency.observe_us(us);
     }
 
     pub fn record_predictions(&self, count: u64) {
-        self.predictions_total.fetch_add(count, Ordering::Relaxed);
+        self.predictions_total.add(count);
     }
 
     pub fn record_reload(&self) {
-        self.reloads_total.fetch_add(1, Ordering::Relaxed);
+        self.reloads_total.inc();
     }
 
     pub fn record_retrain(&self) {
-        self.retrains_total.fetch_add(1, Ordering::Relaxed);
+        self.retrains_total.inc();
+    }
+
+    /// Record the accept queue's configured capacity (once, at startup).
+    pub fn set_queue_capacity(&self, capacity: u64) {
+        self.queue_capacity.set(capacity);
+    }
+
+    /// One connection entered the accept queue.
+    pub fn queue_enqueued(&self) {
+        self.queue_depth.inc();
+    }
+
+    /// One connection left the accept queue for a worker.
+    pub fn queue_dequeued(&self) {
+        self.queue_depth.dec();
+    }
+
+    /// The accept queue was full when a connection arrived (the accept
+    /// thread is now applying backpressure).
+    pub fn record_queue_saturated(&self) {
+        self.queue_saturated_total.inc();
+    }
+
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.get()
+    }
+
+    pub fn queue_saturated_total(&self) -> u64 {
+        self.queue_saturated_total.get()
     }
 
     pub fn in_flight(&self) -> u64 {
-        self.in_flight.load(Ordering::Relaxed)
+        self.in_flight.get()
     }
 
     pub fn requests_total(&self) -> u64 {
-        self.requests_total.load(Ordering::Relaxed)
+        self.requests_total.get()
     }
 
     /// The `GET /metrics` snapshot. Counters are read relaxed and
     /// independently — momentarily inconsistent under load, monotone
-    /// per-counter, which is all a scraper needs.
+    /// per-counter, which is all a scraper needs. The shape is the
+    /// endpoint's long-standing contract; `queue` is the one addition.
     pub fn to_json(&self) -> Json {
-        let load = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
-        let buckets: Vec<Json> = self
-            .latency_buckets
-            .iter()
-            .enumerate()
-            .map(|(i, count)| {
-                let le = if i < BUCKET_US.len() {
-                    jnum(BUCKET_US[i] as f64)
-                } else {
-                    jstr("inf")
-                };
-                jobj(vec![("le_us", le), ("count", jnum(load(count)))])
-            })
-            .collect();
+        let uptime_us = trace_now_us().saturating_sub(self.started_us);
         jobj(vec![
-            ("uptime_s", jnum(self.started.elapsed().as_secs_f64())),
-            ("in_flight", jnum(load(&self.in_flight))),
-            ("requests_total", jnum(load(&self.requests_total))),
+            ("uptime_s", jnum(uptime_us as f64 / 1e6)),
+            ("in_flight", jnum(self.in_flight.get() as f64)),
+            ("requests_total", jnum(self.requests_total.get() as f64)),
             (
                 "responses",
                 jobj(vec![
-                    ("2xx", jnum(load(&self.responses_2xx))),
-                    ("4xx", jnum(load(&self.responses_4xx))),
-                    ("5xx", jnum(load(&self.responses_5xx))),
+                    ("2xx", jnum(self.responses_2xx.get() as f64)),
+                    ("4xx", jnum(self.responses_4xx.get() as f64)),
+                    ("5xx", jnum(self.responses_5xx.get() as f64)),
                 ]),
             ),
-            ("predictions_total", jnum(load(&self.predictions_total))),
-            ("reloads_total", jnum(load(&self.reloads_total))),
-            ("retrains_total", jnum(load(&self.retrains_total))),
             (
-                "latency",
+                "predictions_total",
+                jnum(self.predictions_total.get() as f64),
+            ),
+            ("reloads_total", jnum(self.reloads_total.get() as f64)),
+            ("retrains_total", jnum(self.retrains_total.get() as f64)),
+            ("latency", self.latency.to_json()),
+            (
+                "queue",
                 jobj(vec![
-                    ("buckets", jarr(buckets)),
-                    ("sum_us", jnum(load(&self.latency_sum_us))),
-                    ("count", jnum(load(&self.latency_count))),
+                    ("depth", jnum(self.queue_depth.get() as f64)),
+                    ("capacity", jnum(self.queue_capacity.get() as f64)),
+                    (
+                        "saturated_total",
+                        jnum(self.queue_saturated_total.get() as f64),
+                    ),
                 ]),
             ),
         ])
@@ -150,7 +186,7 @@ pub struct InFlight<'a> {
 
 impl Drop for InFlight<'_> {
     fn drop(&mut self) {
-        self.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
+        self.metrics.in_flight.dec();
     }
 }
 
@@ -220,5 +256,28 @@ mod tests {
         assert_eq!(j.get("reloads_total").unwrap().as_f64(), Some(1.0));
         assert_eq!(j.get("retrains_total").unwrap().as_f64(), Some(1.0));
         assert!(j.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn queue_section_reports_depth_capacity_and_saturation() {
+        let m = Metrics::new();
+        m.set_queue_capacity(256);
+        m.queue_enqueued();
+        m.queue_enqueued();
+        m.queue_dequeued();
+        m.record_queue_saturated();
+        assert_eq!(m.queue_depth(), 1);
+        assert_eq!(m.queue_saturated_total(), 1);
+        let q = m.to_json();
+        let q = q.get("queue").unwrap();
+        assert_eq!(q.get("depth").unwrap().as_f64(), Some(1.0));
+        assert_eq!(q.get("capacity").unwrap().as_f64(), Some(256.0));
+        assert_eq!(q.get("saturated_total").unwrap().as_f64(), Some(1.0));
+        // the same handles are visible through the shared registry
+        let lines = m.registry().summary_lines();
+        assert!(
+            lines.iter().any(|l| l == "queue.depth=1"),
+            "registry view missing queue.depth: {lines:?}"
+        );
     }
 }

@@ -18,6 +18,7 @@ use crate::serve::http::{
 };
 use crate::serve::predict::Model;
 use crate::serve::router::{route, AppState};
+use crate::telemetry::Recorder;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -43,6 +44,9 @@ pub struct ServeConfig {
     pub read_timeout: Duration,
     /// Largest request body a client may declare.
     pub max_body_bytes: usize,
+    /// Flight recorder for the serve path (`--trace-out`); disabled by
+    /// default. Each worker records one "request" span per connection.
+    pub trace: Recorder,
 }
 
 impl ServeConfig {
@@ -57,7 +61,14 @@ impl ServeConfig {
             queue_depth: 256,
             read_timeout: Duration::from_secs(5),
             max_body_bytes: DEFAULT_MAX_BODY_BYTES,
+            trace: Recorder::disabled(),
         }
+    }
+
+    /// Attach a flight recorder to the serve path.
+    pub fn with_recorder(mut self, recorder: Recorder) -> ServeConfig {
+        self.trace = recorder;
+        self
     }
 }
 
@@ -68,6 +79,7 @@ pub fn serve(model: Model, cfg: ServeConfig) -> std::io::Result<ServerHandle> {
     let addr = listener.local_addr()?;
     listener.set_nonblocking(true)?;
     let state = Arc::new(AppState::new(model));
+    state.metrics.set_queue_capacity(cfg.queue_depth as u64);
     let (tx, rx) = mpsc::sync_channel::<TcpStream>(cfg.queue_depth);
     let rx = Arc::new(Mutex::new(rx));
 
@@ -77,6 +89,9 @@ pub fn serve(model: Model, cfg: ServeConfig) -> std::io::Result<ServerHandle> {
         let state = Arc::clone(&state);
         let read_timeout = cfg.read_timeout;
         let max_body = cfg.max_body_bytes;
+        // Serve workers use the same lane convention as the training
+        // executors: tid 1+id, one ring per thread, flushed on exit.
+        let mut ring = cfg.trace.ring(1 + id as u32);
         let handle = thread::Builder::new()
             .name(format!("serve-worker-{id}"))
             .spawn(move || loop {
@@ -84,7 +99,12 @@ pub fn serve(model: Model, cfg: ServeConfig) -> std::io::Result<ServerHandle> {
                 // while handling: the scoped block drops the guard.
                 let conn = { rx.lock().unwrap_or_else(|e| e.into_inner()).recv() };
                 match conn {
-                    Ok(stream) => handle_connection(stream, &state, read_timeout, max_body),
+                    Ok(stream) => {
+                        state.metrics.queue_dequeued();
+                        let t0 = ring.now();
+                        handle_connection(stream, &state, read_timeout, max_body);
+                        ring.complete("request", "serve", t0, None);
+                    }
                     // sender gone: accept loop exited, we are draining out
                     Err(_) => break,
                 }
@@ -100,11 +120,21 @@ pub fn serve(model: Model, cfg: ServeConfig) -> std::io::Result<ServerHandle> {
             while !accept_state.quit_requested() {
                 match listener.accept() {
                     Ok((stream, _peer)) => {
-                        // SyncSender blocks when the queue is full —
-                        // exactly the backpressure we want. Err means
-                        // every worker is gone; nothing left to do.
-                        if tx.send(stream).is_err() {
-                            break;
+                        // Try the queue first so saturation is visible in
+                        // /metrics; a full queue falls back to the blocking
+                        // send — exactly the backpressure we want. A
+                        // disconnect means every worker is gone; nothing
+                        // left to do.
+                        match tx.try_send(stream) {
+                            Ok(()) => accept_state.metrics.queue_enqueued(),
+                            Err(mpsc::TrySendError::Full(stream)) => {
+                                accept_state.metrics.record_queue_saturated();
+                                if tx.send(stream).is_err() {
+                                    break;
+                                }
+                                accept_state.metrics.queue_enqueued();
+                            }
+                            Err(mpsc::TrySendError::Disconnected(_)) => break,
                         }
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -128,6 +158,7 @@ pub fn serve(model: Model, cfg: ServeConfig) -> std::io::Result<ServerHandle> {
         state,
         accept: Some(accept),
         workers,
+        trace: cfg.trace,
     })
 }
 
@@ -187,6 +218,7 @@ pub struct ServerHandle {
     state: Arc<AppState>,
     accept: Option<thread::JoinHandle<()>>,
     workers: Vec<thread::JoinHandle<()>>,
+    trace: Recorder,
 }
 
 impl ServerHandle {
@@ -218,6 +250,12 @@ impl ServerHandle {
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        // Workers flushed their rings on exit; seal the trace file.
+        // Idempotent, so wait → drop (or embedders calling finish on
+        // their own clone afterwards) stays safe.
+        if let Err(e) = self.trace.finish() {
+            crate::log_warn!("serve: closing trace file failed: {e}");
         }
     }
 }

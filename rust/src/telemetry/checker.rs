@@ -1,0 +1,203 @@
+//! Trace-file validation: parses a Chrome trace-event JSON document and
+//! checks the structural contract the recorder promises — required
+//! fields on every event, and **well-formed span nesting** per logical
+//! thread (complete events on one `(pid, tid)` lane either nest or are
+//! disjoint; partial overlap means a broken recorder). Backs the
+//! `cocoa trace-check` subcommand, the CI trace smoke step, and the
+//! telemetry test suite. This is a parse surface (`no_panic` lint):
+//! hostile or truncated input must come back as `Err`, never a crash.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Summary of a validated trace.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceCheck {
+    /// Total events in `traceEvents`.
+    pub events: usize,
+    /// Distinct `(pid, tid)` lanes carrying complete events.
+    pub lanes: usize,
+    /// Deepest span nesting observed on any lane.
+    pub max_depth: usize,
+    /// `otherData.dropped_events` if present.
+    pub dropped: u64,
+}
+
+fn req_str<'a>(ev: &'a Json, key: &str, i: usize) -> Result<&'a str, String> {
+    ev.get(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| format!("event {i}: missing or non-string {key:?}"))
+}
+
+fn req_uint(ev: &Json, key: &str, i: usize) -> Result<u64, String> {
+    let x = ev
+        .get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| format!("event {i}: missing or non-numeric {key:?}"))?;
+    if !(x.is_finite() && x >= 0.0 && x == x.trunc()) {
+        return Err(format!("event {i}: {key:?} must be a non-negative integer, got {x}"));
+    }
+    Ok(x as u64)
+}
+
+/// Validate a trace document already parsed to [`Json`].
+pub fn check_value(doc: &Json) -> Result<TraceCheck, String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .ok_or("missing \"traceEvents\" array")?;
+
+    // Collect complete ("X") spans per (pid, tid) lane.
+    let mut lanes: BTreeMap<(u64, u64), Vec<(u64, u64)>> = BTreeMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        let name = req_str(ev, "name", i)?;
+        if name.is_empty() {
+            return Err(format!("event {i}: empty name"));
+        }
+        let ph = req_str(ev, "ph", i)?;
+        if ph != "X" {
+            // Metadata/instant phases carry no duration; nothing to nest.
+            continue;
+        }
+        let ts = req_uint(ev, "ts", i)?;
+        let dur = req_uint(ev, "dur", i)?;
+        let pid = req_uint(ev, "pid", i)?;
+        let tid = req_uint(ev, "tid", i)?;
+        ts.checked_add(dur)
+            .ok_or_else(|| format!("event {i}: ts+dur overflows"))?;
+        lanes.entry((pid, tid)).or_default().push((ts, dur));
+    }
+
+    // Nesting check per lane: sort by (start, longest-first) and sweep
+    // with a stack of enclosing end times. A span must fit entirely
+    // inside the innermost still-open span (or be disjoint from all).
+    let mut max_depth = 0usize;
+    for ((pid, tid), spans) in lanes.iter_mut() {
+        spans.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+        let mut stack: Vec<u64> = Vec::new();
+        for &(ts, dur) in spans.iter() {
+            let end = ts.saturating_add(dur);
+            while stack.last().is_some_and(|&open_end| open_end <= ts) {
+                stack.pop();
+            }
+            if let Some(&open_end) = stack.last() {
+                if end > open_end {
+                    return Err(format!(
+                        "lane (pid={pid}, tid={tid}): span [{ts}, {end}] partially \
+                         overlaps an enclosing span ending at {open_end}"
+                    ));
+                }
+            }
+            stack.push(end);
+            max_depth = max_depth.max(stack.len());
+        }
+    }
+
+    let dropped = doc
+        .get("otherData")
+        .and_then(|o| o.get("dropped_events"))
+        .and_then(|v| v.as_f64())
+        .map(|x| x.max(0.0) as u64)
+        .unwrap_or(0);
+
+    Ok(TraceCheck {
+        events: events.len(),
+        lanes: lanes.len(),
+        max_depth,
+        dropped,
+    })
+}
+
+/// Parse and validate a trace document from its JSON text.
+pub fn check_str(text: &str) -> Result<TraceCheck, String> {
+    let doc = Json::parse(text).map_err(|e| format!("not valid JSON: {e}"))?;
+    check_value(&doc)
+}
+
+/// Read, parse, and validate a trace file.
+pub fn check_file(path: &std::path::Path) -> Result<TraceCheck, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    check_str(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(events: &str) -> String {
+        format!("{{\"traceEvents\":[{events}]}}")
+    }
+
+    fn ev(name: &str, ts: u64, dur: u64, tid: u64) -> String {
+        format!(
+            "{{\"name\":\"{name}\",\"cat\":\"t\",\"ph\":\"X\",\"ts\":{ts},\"dur\":{dur},\
+             \"pid\":0,\"tid\":{tid}}}"
+        )
+    }
+
+    #[test]
+    fn accepts_properly_nested_spans() {
+        let text = trace(&[
+            ev("round", 0, 100, 0),
+            ev("broadcast", 5, 10, 0),
+            ev("barrier", 20, 70, 0),
+            ev("recv", 25, 30, 0),
+            ev("compute", 10, 50, 1),
+        ]
+        .join(","));
+        let c = check_str(&text).unwrap();
+        assert_eq!(c.events, 5);
+        assert_eq!(c.lanes, 2);
+        assert_eq!(c.max_depth, 3); // round ⊃ barrier ⊃ recv
+    }
+
+    #[test]
+    fn rejects_partial_overlap() {
+        let text = trace(&[ev("a", 0, 50, 0), ev("b", 30, 40, 0)].join(","));
+        let err = check_str(&text).unwrap_err();
+        assert!(err.contains("partially"), "{err}");
+    }
+
+    #[test]
+    fn sibling_spans_may_touch() {
+        // b starts exactly where a ends: disjoint, not overlapping.
+        let text = trace(&[ev("a", 0, 30, 0), ev("b", 30, 30, 0)].join(","));
+        assert!(check_str(&text).is_ok());
+    }
+
+    #[test]
+    fn rejects_malformed_events() {
+        assert!(check_str("{}").is_err(), "no traceEvents");
+        assert!(check_str("not json").is_err());
+        let no_name = trace("{\"ph\":\"X\",\"ts\":0,\"dur\":1,\"pid\":0,\"tid\":0}");
+        assert!(check_str(&no_name).is_err());
+        let neg_ts = trace(
+            "{\"name\":\"a\",\"cat\":\"t\",\"ph\":\"X\",\"ts\":-5,\"dur\":1,\"pid\":0,\"tid\":0}",
+        );
+        assert!(check_str(&neg_ts).is_err());
+        let frac = trace(
+            "{\"name\":\"a\",\"cat\":\"t\",\"ph\":\"X\",\"ts\":1.5,\"dur\":1,\"pid\":0,\"tid\":0}",
+        );
+        assert!(check_str(&frac).is_err());
+    }
+
+    #[test]
+    fn non_x_phases_are_structural_only() {
+        let text = trace(
+            "{\"name\":\"meta\",\"ph\":\"M\"},\
+             {\"name\":\"a\",\"cat\":\"t\",\"ph\":\"X\",\"ts\":0,\"dur\":1,\"pid\":0,\"tid\":0}",
+        );
+        let c = check_str(&text).unwrap();
+        assert_eq!(c.events, 2);
+        assert_eq!(c.lanes, 1);
+    }
+
+    #[test]
+    fn reads_dropped_from_trailer() {
+        let text = "{\"traceEvents\":[],\"otherData\":{\"dropped_events\":7}}";
+        let c = check_str(text).unwrap();
+        assert_eq!(c.dropped, 7);
+        assert_eq!(c.events, 0);
+    }
+}

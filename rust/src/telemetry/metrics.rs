@@ -1,0 +1,374 @@
+//! Shared metrics primitives: relaxed-atomic counters, gauges, and
+//! fixed log-spaced histograms, plus a name-indexed [`Registry`] that
+//! renders a stable JSON snapshot. This generalizes what
+//! `serve/metrics.rs` hand-rolled for the HTTP layer so the training
+//! CLI summary and `GET /metrics` read through one implementation.
+//!
+//! Recording is always a single relaxed atomic op — metrics must cost
+//! the predict and round hot paths nanoseconds — and snapshots are
+//! read relaxed and independently: momentarily inconsistent under
+//! load, monotone per metric, which is all a scraper needs.
+
+use crate::util::json::{jarr, jnum, jobj, jstr, Json};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Histogram bucket upper bounds in microseconds (log-spaced); a final
+/// implicit +∞ bucket catches the rest. Fixed buckets keep recording a
+/// single atomic increment.
+pub const BUCKET_US: [u64; 10] = [
+    50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 100_000, 1_000_000,
+];
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Current-level gauge (queue depth, in-flight requests). Decrements
+/// saturate at zero so a spurious extra `dec` cannot wrap to 2⁶⁴−1.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self) {
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(1))
+            });
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed log-spaced latency histogram over [`BUCKET_US`] plus an
+/// overflow bucket, with a running sum and count.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKET_US.len() + 1],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation in microseconds. Bucket bounds are
+    /// inclusive upper edges (an exact 50µs lands in `le=50`).
+    pub fn observe_us(&self, us: u64) {
+        let idx = BUCKET_US.partition_point(|&le| us > le);
+        if let Some(b) = self.buckets.get(idx) {
+            b.fetch_add(1, Ordering::Relaxed);
+        }
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Per-bucket counts, overflow bucket last.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// `{buckets: [{le_us, count}...], sum_us, count}` — the exact
+    /// shape `GET /metrics` has always rendered for `latency`.
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .map(|(i, count)| {
+                let le = match BUCKET_US.get(i) {
+                    Some(&b) => jnum(b as f64),
+                    None => jstr("inf"),
+                };
+                jobj(vec![
+                    ("le_us", le),
+                    ("count", jnum(count.load(Ordering::Relaxed) as f64)),
+                ])
+            })
+            .collect();
+        jobj(vec![
+            ("buckets", jarr(buckets)),
+            ("sum_us", jnum(self.sum_us() as f64)),
+            ("count", jnum(self.count() as f64)),
+        ])
+    }
+}
+
+/// One registered metric: a shared handle plus its kind.
+#[derive(Clone, Debug)]
+pub enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// A name-indexed collection of metrics. Handles are `Arc`s handed out
+/// once (get-or-create) and then recorded through lock-free; the inner
+/// lock is only taken on registration and snapshot. Names sort
+/// lexicographically in the snapshot so output is stable.
+#[derive(Debug, Default)]
+pub struct Registry {
+    entries: Mutex<Vec<(String, Metric)>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn lookup(&self, name: &str) -> Option<Metric> {
+        let entries = match self.entries.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, m)| m.clone())
+    }
+
+    fn register(&self, name: &str, metric: Metric) {
+        let mut entries = match self.entries.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if !entries.iter().any(|(n, _)| n == name) {
+            entries.push((name.to_string(), metric));
+        }
+    }
+
+    /// Get or create the counter registered under `name`. A name
+    /// already registered with a different kind yields a fresh
+    /// unregistered handle (first registration wins) rather than a
+    /// panic — metric names are code, not input.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        if let Some(Metric::Counter(c)) = self.lookup(name) {
+            return c;
+        }
+        let c = Arc::new(Counter::new());
+        self.register(name, Metric::Counter(c.clone()));
+        c
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        if let Some(Metric::Gauge(g)) = self.lookup(name) {
+            return g;
+        }
+        let g = Arc::new(Gauge::new());
+        self.register(name, Metric::Gauge(g.clone()));
+        g
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        if let Some(Metric::Histogram(h)) = self.lookup(name) {
+            return h;
+        }
+        let h = Arc::new(Histogram::new());
+        self.register(name, Metric::Histogram(h.clone()));
+        h
+    }
+
+    /// Snapshot every registered metric as one JSON object, names
+    /// sorted. Counters/gauges render as numbers, histograms as the
+    /// `{buckets, sum_us, count}` object.
+    pub fn to_json(&self) -> Json {
+        let mut entries: Vec<(String, Metric)> = {
+            let g = match self.entries.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            g.clone()
+        };
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut out = Json::obj();
+        for (name, metric) in &entries {
+            let val = match metric {
+                Metric::Counter(c) => jnum(c.get() as f64),
+                Metric::Gauge(g) => jnum(g.get() as f64),
+                Metric::Histogram(h) => h.to_json(),
+            };
+            out.set(name, val);
+        }
+        out
+    }
+
+    /// One `name=value` line per metric (histograms summarized as
+    /// `count/mean_us`), names sorted — the training CLI summary.
+    pub fn summary_lines(&self) -> Vec<String> {
+        let mut entries: Vec<(String, Metric)> = {
+            let g = match self.entries.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            g.clone()
+        };
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        entries
+            .iter()
+            .map(|(name, metric)| match metric {
+                Metric::Counter(c) => format!("{name}={}", c.get()),
+                Metric::Gauge(g) => format!("{name}={}", g.get()),
+                Metric::Histogram(h) => {
+                    let count = h.count();
+                    let mean = if count > 0 {
+                        h.sum_us() as f64 / count as f64
+                    } else {
+                        0.0
+                    };
+                    format!("{name}: count={count} mean_us={mean:.1}")
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_histogram_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+
+        let g = Gauge::new();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.dec();
+        g.dec(); // saturates, no wrap
+        assert_eq!(g.get(), 0);
+
+        let h = Histogram::new();
+        h.observe_us(80);
+        h.observe_us(3);
+        h.observe_us(50); // inclusive upper edge
+        h.observe_us(2_000_000); // overflow bucket
+        let counts = h.bucket_counts();
+        assert_eq!(counts.len(), BUCKET_US.len() + 1);
+        assert_eq!(counts[0], 2, "le=50 bucket: {counts:?}");
+        assert_eq!(counts[1], 1, "le=100 bucket: {counts:?}");
+        assert_eq!(counts[BUCKET_US.len()], 1, "+∞ bucket: {counts:?}");
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum_us(), 80 + 3 + 50 + 2_000_000);
+    }
+
+    #[test]
+    fn registry_get_or_create_shares_handles() {
+        let r = Registry::new();
+        let a = r.counter("wire.frames_sent");
+        let b = r.counter("wire.frames_sent");
+        a.add(3);
+        b.add(2);
+        assert_eq!(a.get(), 5, "same name must share one counter");
+        let j = r.to_json();
+        assert_eq!(j.get("wire.frames_sent").unwrap().as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn registry_snapshot_is_sorted_and_typed() {
+        let r = Registry::new();
+        r.gauge("z.depth").set(7);
+        r.counter("a.total").add(1);
+        r.histogram("m.latency").observe_us(10);
+        let lines = r.summary_lines();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("a.total="), "{lines:?}");
+        assert!(lines[1].starts_with("m.latency:"), "{lines:?}");
+        assert!(lines[2].starts_with("z.depth="), "{lines:?}");
+        let j = r.to_json();
+        assert!(j.get("m.latency").unwrap().get("buckets").is_some());
+    }
+
+    #[test]
+    fn registry_concurrent_recording_loses_nothing() {
+        // The metrics-registry concurrency contract: N threads hammer
+        // shared handles; every increment must land.
+        let r = std::sync::Arc::new(Registry::new());
+        let threads: u64 = 8;
+        let per_thread: u64 = 5_000;
+        let mut joins = Vec::new();
+        for t in 0..threads {
+            let r = r.clone();
+            joins.push(std::thread::spawn(move || {
+                let c = r.counter("hammer.total");
+                let g = r.gauge("hammer.flight");
+                let h = r.histogram("hammer.lat");
+                for i in 0..per_thread {
+                    c.inc();
+                    g.inc();
+                    h.observe_us((t * 37 + i) % 2_000);
+                    g.dec();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(r.counter("hammer.total").get(), threads * per_thread);
+        assert_eq!(r.gauge("hammer.flight").get(), 0);
+        let h = r.histogram("hammer.lat");
+        assert_eq!(h.count(), threads * per_thread);
+        let bucket_sum: u64 = h.bucket_counts().iter().sum();
+        assert_eq!(bucket_sum, threads * per_thread, "every observation bucketed");
+    }
+}

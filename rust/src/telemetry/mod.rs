@@ -1,0 +1,237 @@
+//! Flight recorder: dependency-free span/event tracing and shared
+//! metrics for every runtime in the crate.
+//!
+//! The design is observe-only by construction:
+//!
+//! * Each traced actor (the Driver's leader loop, every pool worker
+//!   thread, the socket leader, every serve worker) owns a private
+//!   [`Ring`] — a bounded event buffer flushed by the owning thread, so
+//!   recording a span is a clock read plus a `Vec` push with **no
+//!   cross-thread synchronization** on the hot path. Rings only take
+//!   the shared sink lock when full (or on drop), never per event.
+//! * Timestamps come exclusively from
+//!   [`crate::util::timer::trace_now_us`] — the one sanctioned
+//!   wall-clock read — so the `determinism` lint invariant (no ad-hoc
+//!   clock reads on the training path) holds for this module too, and
+//!   recorded time can never feed back into control flow.
+//! * Export is a **streaming** Chrome trace-event JSON file
+//!   ([`writer::TraceWriter`], loadable in Perfetto or
+//!   `chrome://tracing`): events are written incrementally as rings
+//!   flush; nothing is materialized. `cocoa train --trace-out
+//!   trace.json` and `cocoa serve --trace-out trace.json` enable it,
+//!   and `cocoa trace-check` ([`checker`]) validates the result.
+//!
+//! Logical thread ids are stable across executors: tid 0 is the
+//! driver/leader, tid 1+k is worker k (thread, process, or serve
+//! worker). The `rust/tests/determinism.rs` suite re-runs the
+//! three-executor bit-identity invariant with tracing enabled, locking
+//! in that the recorder perturbs nothing.
+//!
+//! [`metrics`] generalizes the serve layer's relaxed-atomic counters
+//! and log-spaced histograms into a [`metrics::Registry`] shared by
+//! `GET /metrics` and the training CLI summary.
+
+pub mod checker;
+pub mod metrics;
+pub mod ring;
+pub mod writer;
+
+pub use ring::{Ring, TraceEvent};
+
+use std::fs::File;
+use std::io::BufWriter;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use writer::TraceWriter;
+
+/// What a finished recorder reports: how many events reached the file
+/// and how many were dropped (sink closed early or I/O error).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceSummary {
+    pub events: u64,
+    pub dropped: u64,
+}
+
+/// The sink every [`Ring`] flushes into. Private: rings and the
+/// recorder are the only doors.
+pub(crate) struct Shared {
+    sink: Mutex<Option<TraceWriter<BufWriter<File>>>>,
+    events: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl Shared {
+    /// Drain `buf` into the sink. Called by the owning thread of a ring
+    /// (flush-on-full, or on ring drop); the only lock in the subsystem.
+    pub(crate) fn flush(&self, buf: &mut Vec<TraceEvent>) {
+        if buf.is_empty() {
+            return;
+        }
+        let mut guard = match self.sink.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if let Some(w) = guard.as_mut() {
+            let mut written = 0u64;
+            let mut failed = false;
+            for ev in buf.drain(..) {
+                if failed {
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                match w.write_event(&ev) {
+                    Ok(()) => written += 1,
+                    Err(_) => {
+                        failed = true;
+                        self.dropped.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            self.events.fetch_add(written, Ordering::Relaxed);
+            if failed {
+                // An I/O error on the sink disables tracing for the rest
+                // of the run; the run itself must never be affected.
+                *guard = None;
+                crate::log_warn!("telemetry: trace sink I/O error; tracing disabled");
+            }
+        } else {
+            self.dropped.fetch_add(buf.len() as u64, Ordering::Relaxed);
+            buf.clear();
+        }
+    }
+}
+
+/// Handle to a trace session. Cheap to clone (all clones share one
+/// sink); [`Recorder::disabled`] is a zero-cost no-op recorder so
+/// untraced runs pay nothing — every config embeds one by default.
+#[derive(Clone, Default)]
+pub struct Recorder {
+    shared: Option<Arc<Shared>>,
+}
+
+impl std::fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.shared.is_some() {
+            f.write_str("Recorder(enabled)")
+        } else {
+            f.write_str("Recorder(disabled)")
+        }
+    }
+}
+
+impl Recorder {
+    /// A recorder that records nothing: `ring()` hands out no-op rings
+    /// whose every method returns immediately.
+    pub fn disabled() -> Recorder {
+        Recorder { shared: None }
+    }
+
+    /// Open `path` (truncating) and stream a Chrome trace-event file
+    /// into it. The file is completed by [`Recorder::finish`].
+    pub fn to_file(path: &Path) -> std::io::Result<Recorder> {
+        let out = BufWriter::new(File::create(path)?);
+        let writer = TraceWriter::new(out)?;
+        Ok(Recorder {
+            shared: Some(Arc::new(Shared {
+                sink: Mutex::new(Some(writer)),
+                events: AtomicU64::new(0),
+                dropped: AtomicU64::new(0),
+            })),
+        })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.shared.is_some()
+    }
+
+    /// A per-actor event buffer writing under logical thread id `tid`
+    /// (0 = driver/leader, 1+k = worker k). Hand each thread its own.
+    pub fn ring(&self, tid: u32) -> Ring {
+        Ring::new(tid, self.shared.clone())
+    }
+
+    /// Close the JSON file (writes the trailer) and report totals.
+    /// Idempotent: later calls (and late ring flushes) are counted as
+    /// dropped instead of corrupting the file. All rings should be
+    /// dropped (flushed) before calling this.
+    pub fn finish(&self) -> std::io::Result<TraceSummary> {
+        let Some(shared) = self.shared.as_ref() else {
+            return Ok(TraceSummary::default());
+        };
+        let mut guard = match shared.sink.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if let Some(w) = guard.take() {
+            let dropped = shared.dropped.load(Ordering::Relaxed);
+            w.finish(dropped)?;
+        }
+        Ok(TraceSummary {
+            events: shared.events.load(Ordering::Relaxed),
+            dropped: shared.dropped.load(Ordering::Relaxed),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let rec = Recorder::disabled();
+        assert!(!rec.enabled());
+        let mut ring = rec.ring(3);
+        assert!(!ring.enabled());
+        assert_eq!(ring.now(), 0);
+        let t = ring.now();
+        ring.complete("x", "test", t, None);
+        ring.flush();
+        let sum = rec.finish().unwrap();
+        assert_eq!(sum, TraceSummary::default());
+    }
+
+    #[test]
+    fn file_recorder_round_trips_through_checker() {
+        let path = std::env::temp_dir().join("cocoa_telemetry_mod_test.json");
+        let rec = Recorder::to_file(&path).unwrap();
+        assert!(rec.enabled());
+        {
+            let mut ring = rec.ring(0);
+            let t0 = ring.now();
+            let mut inner = rec.ring(1);
+            let t1 = inner.now();
+            inner.complete("compute", "worker", t1, Some(("round", 0.0)));
+            drop(inner);
+            ring.complete("round", "driver", t0, Some(("round", 0.0)));
+            ring.instant("marker", "test", None);
+        } // rings flush on drop
+        let sum = rec.finish().unwrap();
+        assert_eq!(sum.events, 3);
+        assert_eq!(sum.dropped, 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let check = crate::telemetry::checker::check_str(&text).unwrap();
+        assert_eq!(check.events, 3);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn flush_after_finish_counts_dropped() {
+        let path = std::env::temp_dir().join("cocoa_telemetry_drop_test.json");
+        let rec = Recorder::to_file(&path).unwrap();
+        let mut ring = rec.ring(0);
+        ring.instant("early", "test", None);
+        ring.flush();
+        rec.finish().unwrap();
+        ring.instant("late", "test", None);
+        ring.flush();
+        let sum = rec.finish().unwrap();
+        assert_eq!(sum.events, 1);
+        assert_eq!(sum.dropped, 1);
+        // the file stayed valid despite the late event
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::telemetry::checker::check_str(&text).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,214 @@
+//! Per-actor event buffers. A [`Ring`] is owned by exactly one thread;
+//! recording is a clock read plus a `Vec` push, and the shared sink is
+//! only touched when the buffer fills or the ring is dropped — the
+//! recording hot path never contends with other actors.
+
+use super::Shared;
+use crate::util::timer::trace_now_us;
+use std::sync::Arc;
+
+/// Flush threshold: a full ring is drained into the sink by its owner.
+/// 4096 events × 56 bytes keeps the buffer comfortably in cache while
+/// making flushes (the only locking) rare.
+pub(crate) const RING_CAPACITY: usize = 4096;
+
+/// One Chrome trace-event "complete" record (`ph: "X"`): a named span
+/// on a logical thread, microsecond timestamps relative to the process
+/// trace epoch. `dur_us == 0` records an instant. Names and categories
+/// are `&'static str` so recording never allocates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub cat: &'static str,
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub tid: u32,
+    /// Optional single numeric argument rendered under `args`.
+    pub arg: Option<(&'static str, f64)>,
+}
+
+/// A bounded, single-owner event buffer bound to one logical thread id.
+/// All methods are no-ops when the ring came from a disabled
+/// [`Recorder`](super::Recorder).
+pub struct Ring {
+    tid: u32,
+    buf: Vec<TraceEvent>,
+    shared: Option<Arc<Shared>>,
+}
+
+impl std::fmt::Debug for Ring {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Ring(tid={}, buffered={}, {})",
+            self.tid,
+            self.buf.len(),
+            if self.shared.is_some() { "enabled" } else { "disabled" }
+        )
+    }
+}
+
+impl Default for Ring {
+    fn default() -> Ring {
+        Ring::disabled()
+    }
+}
+
+impl Ring {
+    pub(crate) fn new(tid: u32, shared: Option<Arc<Shared>>) -> Ring {
+        let cap = if shared.is_some() { RING_CAPACITY } else { 0 };
+        Ring {
+            tid,
+            buf: Vec::with_capacity(cap),
+            shared,
+        }
+    }
+
+    /// A ring that records nothing (what untraced runs carry around).
+    pub fn disabled() -> Ring {
+        Ring::new(0, None)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.shared.is_some()
+    }
+
+    pub fn tid(&self) -> u32 {
+        self.tid
+    }
+
+    /// Microseconds since the trace epoch — the span-start timestamp to
+    /// pass back into [`Ring::complete`]. Returns 0 (and reads no
+    /// clock) when disabled.
+    pub fn now(&self) -> u64 {
+        if self.shared.is_some() {
+            trace_now_us()
+        } else {
+            0
+        }
+    }
+
+    /// Record a span that started at `start_us` (from [`Ring::now`])
+    /// and ends now.
+    pub fn complete(
+        &mut self,
+        name: &'static str,
+        cat: &'static str,
+        start_us: u64,
+        arg: Option<(&'static str, f64)>,
+    ) {
+        if self.shared.is_none() {
+            return;
+        }
+        let end = trace_now_us();
+        self.span_at(name, cat, start_us, end, arg);
+    }
+
+    /// Record a span over an explicit `[start_us, end_us]` interval —
+    /// used where the duration was measured elsewhere (a worker
+    /// process's reported compute time rendered on its lane).
+    pub fn span_at(
+        &mut self,
+        name: &'static str,
+        cat: &'static str,
+        start_us: u64,
+        end_us: u64,
+        arg: Option<(&'static str, f64)>,
+    ) {
+        if self.shared.is_none() {
+            return;
+        }
+        self.push(TraceEvent {
+            name,
+            cat,
+            ts_us: start_us,
+            dur_us: end_us.saturating_sub(start_us),
+            tid: self.tid,
+            arg,
+        });
+    }
+
+    /// Record a zero-duration marker at the current time.
+    pub fn instant(&mut self, name: &'static str, cat: &'static str, arg: Option<(&'static str, f64)>) {
+        if self.shared.is_none() {
+            return;
+        }
+        let now = trace_now_us();
+        self.push(TraceEvent {
+            name,
+            cat,
+            ts_us: now,
+            dur_us: 0,
+            tid: self.tid,
+            arg,
+        });
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        self.buf.push(ev);
+        if self.buf.len() >= RING_CAPACITY {
+            self.flush();
+        }
+    }
+
+    /// Drain buffered events into the shared sink (the owning thread is
+    /// the only caller, so this is the lone synchronization point).
+    pub fn flush(&mut self) {
+        match self.shared.as_ref() {
+            Some(shared) => shared.flush(&mut self.buf),
+            None => self.buf.clear(),
+        }
+    }
+}
+
+impl Drop for Ring {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Recorder;
+
+    #[test]
+    fn ring_flushes_when_full() {
+        let path = std::env::temp_dir().join("cocoa_ring_full_test.json");
+        let rec = Recorder::to_file(&path).unwrap();
+        let mut ring = rec.ring(2);
+        for i in 0..(RING_CAPACITY + 10) {
+            ring.instant("tick", "test", Some(("i", i as f64)));
+        }
+        // one flush-on-full already happened; the remainder is buffered
+        drop(ring);
+        let sum = rec.finish().unwrap();
+        assert_eq!(sum.events, (RING_CAPACITY + 10) as u64);
+        assert_eq!(sum.dropped, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn span_at_clamps_reversed_intervals() {
+        let path = std::env::temp_dir().join("cocoa_ring_clamp_test.json");
+        let rec = Recorder::to_file(&path).unwrap();
+        let mut ring = rec.ring(1);
+        ring.span_at("weird", "test", 100, 40, None); // end < start → dur 0
+        drop(ring);
+        rec.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let check = crate::telemetry::checker::check_str(&text).unwrap();
+        assert_eq!(check.events, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn timestamps_are_monotonic_per_ring() {
+        let rec = Recorder::disabled();
+        let ring = rec.ring(0);
+        assert_eq!(ring.now(), 0);
+        let a = trace_now_us();
+        let b = trace_now_us();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,369 @@
+//! Streaming JSON output: a push-style [`JsonWriter`] (begin/end
+//! containers, keys, scalars — nothing materialized) and the Chrome
+//! trace-event [`TraceWriter`] built on it.
+//!
+//! The scalar encoding is **byte-identical** to
+//! [`crate::util::json::Json`]'s compact serializer (same integer
+//! short-circuit, same float formatting, same string escapes, `null`
+//! for non-finite numbers), so callers can migrate materialize-then-
+//! write paths to streaming without changing a single output byte —
+//! `History::write_json` locks this in with a parity test. This is an
+//! export surface (`no_panic` lint): every failure is an `io::Error`,
+//! never a crash.
+
+use std::io::{self, Write};
+
+#[derive(Clone, Copy, Debug)]
+enum Frame {
+    Obj { first: bool },
+    Arr { first: bool },
+}
+
+/// Incremental JSON writer. The caller drives the grammar (a key in an
+/// object, then its value; values in arrays); the writer inserts
+/// separators. Misuse (a value with no key inside an object, ending a
+/// container that was never opened) yields `InvalidInput` errors.
+#[derive(Debug)]
+pub struct JsonWriter<W: Write> {
+    out: W,
+    stack: Vec<Frame>,
+    /// Inside an object, set by `key()` and consumed by the next value.
+    keyed: bool,
+}
+
+fn misuse(what: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidInput, format!("JsonWriter misuse: {what}"))
+}
+
+impl<W: Write> JsonWriter<W> {
+    pub fn new(out: W) -> JsonWriter<W> {
+        JsonWriter {
+            out,
+            stack: Vec::new(),
+            keyed: false,
+        }
+    }
+
+    /// Comma/position bookkeeping before any value (scalar or container
+    /// open). In an object a preceding `key()` is required.
+    fn pre_value(&mut self) -> io::Result<()> {
+        match self.stack.last_mut() {
+            Some(Frame::Arr { first }) => {
+                if !*first {
+                    self.out.write_all(b",")?;
+                }
+                *first = false;
+                Ok(())
+            }
+            Some(Frame::Obj { .. }) => {
+                if !self.keyed {
+                    return Err(misuse("value inside object without key()"));
+                }
+                self.keyed = false;
+                Ok(())
+            }
+            None => Ok(()),
+        }
+    }
+
+    /// Write an object key (with its separator and colon). Valid only
+    /// directly inside an object.
+    pub fn key(&mut self, k: &str) -> io::Result<()> {
+        match self.stack.last_mut() {
+            Some(Frame::Obj { first }) => {
+                if self.keyed {
+                    return Err(misuse("key() twice without a value"));
+                }
+                if !*first {
+                    self.out.write_all(b",")?;
+                }
+                *first = false;
+            }
+            _ => return Err(misuse("key() outside object")),
+        }
+        write_escaped(&mut self.out, k)?;
+        self.out.write_all(b":")?;
+        self.keyed = true;
+        Ok(())
+    }
+
+    pub fn begin_obj(&mut self) -> io::Result<()> {
+        self.pre_value()?;
+        self.stack.push(Frame::Obj { first: true });
+        self.out.write_all(b"{")
+    }
+
+    pub fn begin_arr(&mut self) -> io::Result<()> {
+        self.pre_value()?;
+        self.stack.push(Frame::Arr { first: true });
+        self.out.write_all(b"[")
+    }
+
+    /// Close the innermost open container.
+    pub fn end(&mut self) -> io::Result<()> {
+        if self.keyed {
+            return Err(misuse("end() with dangling key"));
+        }
+        match self.stack.pop() {
+            Some(Frame::Obj { .. }) => self.out.write_all(b"}"),
+            Some(Frame::Arr { .. }) => self.out.write_all(b"]"),
+            None => Err(misuse("end() with nothing open")),
+        }
+    }
+
+    /// A number, encoded exactly like `Json::Num`: integral finite
+    /// values below 1e15 print as integers, other finite values via
+    /// Rust's shortest-roundtrip float formatting, non-finite as null.
+    pub fn num(&mut self, x: f64) -> io::Result<()> {
+        self.pre_value()?;
+        if x.is_finite() {
+            if x == x.trunc() && x.abs() < 1e15 {
+                write!(self.out, "{}", x as i64)
+            } else {
+                write!(self.out, "{}", x)
+            }
+        } else {
+            self.out.write_all(b"null")
+        }
+    }
+
+    /// An exact unsigned integer (no f64 round-trip — used for
+    /// microsecond timestamps).
+    pub fn uint(&mut self, x: u64) -> io::Result<()> {
+        self.pre_value()?;
+        write!(self.out, "{x}")
+    }
+
+    pub fn str_val(&mut self, s: &str) -> io::Result<()> {
+        self.pre_value()?;
+        write_escaped(&mut self.out, s)
+    }
+
+    pub fn bool_val(&mut self, b: bool) -> io::Result<()> {
+        self.pre_value()?;
+        self.out.write_all(if b { b"true" } else { b"false" })
+    }
+
+    pub fn null(&mut self) -> io::Result<()> {
+        self.pre_value()?;
+        self.out.write_all(b"null")
+    }
+
+    /// True when every opened container has been closed.
+    pub fn is_complete(&self) -> bool {
+        self.stack.is_empty() && !self.keyed
+    }
+
+    pub fn into_inner(self) -> W {
+        self.out
+    }
+}
+
+/// String escaping identical to `util::json::write_escaped`.
+fn write_escaped<W: Write>(out: &mut W, s: &str) -> io::Result<()> {
+    out.write_all(b"\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => out.write_all(b"\\\"")?,
+            '\\' => out.write_all(b"\\\\")?,
+            '\n' => out.write_all(b"\\n")?,
+            '\r' => out.write_all(b"\\r")?,
+            '\t' => out.write_all(b"\\t")?,
+            c if (c as u32) < 0x20 => write!(out, "\\u{:04x}", c as u32)?,
+            c => {
+                let mut buf = [0u8; 4];
+                out.write_all(c.encode_utf8(&mut buf).as_bytes())?;
+            }
+        }
+    }
+    out.write_all(b"\"")
+}
+
+use super::TraceEvent;
+
+/// Streams a Chrome trace-event JSON file: `{"traceEvents":[...]}`
+/// plus a small metadata object in the trailer. Events are written as
+/// they arrive; the file is valid once [`TraceWriter::finish`] runs.
+#[derive(Debug)]
+pub struct TraceWriter<W: Write> {
+    w: JsonWriter<W>,
+    events: u64,
+}
+
+impl<W: Write> TraceWriter<W> {
+    /// Write the header (`{"traceEvents":[`) and hand back the writer.
+    pub fn new(out: W) -> io::Result<TraceWriter<W>> {
+        let mut w = JsonWriter::new(out);
+        w.begin_obj()?;
+        w.key("traceEvents")?;
+        w.begin_arr()?;
+        Ok(TraceWriter { w, events: 0 })
+    }
+
+    /// Append one complete (`ph: "X"`) event.
+    pub fn write_event(&mut self, ev: &TraceEvent) -> io::Result<()> {
+        self.w.begin_obj()?;
+        self.w.key("name")?;
+        self.w.str_val(ev.name)?;
+        self.w.key("cat")?;
+        self.w.str_val(ev.cat)?;
+        self.w.key("ph")?;
+        self.w.str_val("X")?;
+        self.w.key("ts")?;
+        self.w.uint(ev.ts_us)?;
+        self.w.key("dur")?;
+        self.w.uint(ev.dur_us)?;
+        self.w.key("pid")?;
+        self.w.uint(0)?;
+        self.w.key("tid")?;
+        self.w.uint(u64::from(ev.tid))?;
+        if let Some((k, v)) = ev.arg {
+            self.w.key("args")?;
+            self.w.begin_obj()?;
+            self.w.key(k)?;
+            self.w.num(v)?;
+            self.w.end()?;
+        }
+        self.w.end()?;
+        self.events += 1;
+        Ok(())
+    }
+
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// Close the event array, write trailer metadata, and flush.
+    pub fn finish(mut self, dropped: u64) -> io::Result<W> {
+        self.w.end()?; // traceEvents
+        self.w.key("displayTimeUnit")?;
+        self.w.str_val("ms")?;
+        self.w.key("otherData")?;
+        self.w.begin_obj()?;
+        self.w.key("dropped_events")?;
+        self.w.uint(dropped)?;
+        self.w.key("tool")?;
+        self.w.str_val("cocoa-telemetry")?;
+        self.w.end()?;
+        self.w.end()?; // root
+        let mut out = self.w.into_inner();
+        out.flush()?;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{jarr, jnum, jobj, jstr, Json};
+
+    /// Stream the same document `Json::write` would produce and compare
+    /// bytes — the parity contract streaming callers rely on.
+    #[test]
+    fn scalar_encoding_matches_json_compact_bytes() {
+        let values = [
+            0.0,
+            -0.0,
+            3.0,
+            -3.0,
+            3.5,
+            1e-9,
+            -2.5e3,
+            1e15,           // at the integer-format cutoff
+            999999999999999.0, // just below it
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+        ];
+        for &x in &values {
+            let mut buf = Vec::new();
+            let mut w = JsonWriter::new(&mut buf);
+            w.num(x).unwrap();
+            assert_eq!(
+                String::from_utf8(buf).unwrap(),
+                jnum(x).to_string_compact(),
+                "mismatch for {x}"
+            );
+        }
+    }
+
+    #[test]
+    fn structured_document_matches_json_compact_bytes() {
+        // Keys in alphabetical order mirror the BTreeMap-backed writer.
+        let tree = jobj(vec![
+            ("alpha", jarr(vec![jnum(1.0), jnum(2.5), Json::Null])),
+            ("beta", jobj(vec![("nested", jstr("va\"l\n"))])),
+            ("gamma", Json::Bool(true)),
+            ("delta", jarr(vec![])),
+        ]);
+        let mut buf = Vec::new();
+        let mut w = JsonWriter::new(&mut buf);
+        w.begin_obj().unwrap();
+        w.key("alpha").unwrap();
+        w.begin_arr().unwrap();
+        w.num(1.0).unwrap();
+        w.num(2.5).unwrap();
+        w.null().unwrap();
+        w.end().unwrap();
+        w.key("beta").unwrap();
+        w.begin_obj().unwrap();
+        w.key("nested").unwrap();
+        w.str_val("va\"l\n").unwrap();
+        w.end().unwrap();
+        w.key("delta").unwrap();
+        w.begin_arr().unwrap();
+        w.end().unwrap();
+        w.key("gamma").unwrap();
+        w.bool_val(true).unwrap();
+        w.end().unwrap();
+        assert!(w.is_complete());
+        assert_eq!(String::from_utf8(buf).unwrap(), tree.to_string_compact());
+    }
+
+    #[test]
+    fn misuse_is_an_error_not_a_panic() {
+        let mut w = JsonWriter::new(Vec::new());
+        assert!(w.end().is_err(), "end with nothing open");
+        let mut w = JsonWriter::new(Vec::new());
+        w.begin_obj().unwrap();
+        assert!(w.num(1.0).is_err(), "object value without key");
+        w.key("k").unwrap();
+        assert!(w.end().is_err(), "end with dangling key");
+    }
+
+    #[test]
+    fn trace_writer_emits_parseable_chrome_trace() {
+        let tw = TraceWriter::new(Vec::new()).unwrap();
+        let mut tw = tw;
+        tw.write_event(&TraceEvent {
+            name: "round",
+            cat: "driver",
+            ts_us: 10,
+            dur_us: 90,
+            tid: 0,
+            arg: Some(("round", 0.0)),
+        })
+        .unwrap();
+        tw.write_event(&TraceEvent {
+            name: "compute",
+            cat: "worker",
+            ts_us: 20,
+            dur_us: 50,
+            tid: 1,
+            arg: None,
+        })
+        .unwrap();
+        assert_eq!(tw.events(), 2);
+        let bytes = tw.finish(0).unwrap();
+        let j = Json::parse(std::str::from_utf8(&bytes).unwrap()).unwrap();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(evs[0].get("dur").unwrap().as_f64(), Some(90.0));
+        assert_eq!(evs[1].get("tid").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            j.get("otherData").unwrap().get("tool").unwrap().as_str(),
+            Some("cocoa-telemetry")
+        );
+    }
+}

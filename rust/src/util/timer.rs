@@ -76,6 +76,21 @@ pub fn timed<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
     (out, t0.elapsed().as_secs_f64())
 }
 
+/// The process-wide trace epoch: fixed on first use so every
+/// [`trace_now_us`] timestamp shares one origin across threads.
+static TRACE_EPOCH: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+/// Microseconds since the first trace-clock read in this process — the
+/// **only** wall-clock source the `telemetry` flight recorder may use.
+/// Keeping the raw clock type confined to this module preserves the
+/// `determinism` lint invariant (`telemetry/` is scanned like the round
+/// paths), and a shared epoch keeps timestamps comparable across every
+/// ring in the process. Monotone by construction.
+pub fn trace_now_us() -> u64 {
+    let epoch = TRACE_EPOCH.get_or_init(Instant::now);
+    epoch.elapsed().as_micros().min(u128::from(u64::MAX)) as u64
+}
+
 /// A wall-clock cutoff: handshake windows, round-gather timeouts, child
 /// reaping grace periods. Copyable so it can be captured once and checked
 /// from several places in a polling loop.

@@ -44,7 +44,10 @@ fn help_lists_subcommands() {
     let bin = require_bin!();
     let (code, stdout, _) = run(&bin, &["help"]);
     assert_eq!(code, 0);
-    for sub in ["train", "gen-data", "sigma", "experiment", "artifacts-check", "serve", "worker"] {
+    for sub in [
+        "train", "gen-data", "sigma", "experiment", "artifacts-check", "serve", "worker",
+        "trace-check",
+    ] {
         assert!(stdout.contains(sub), "help missing {sub}");
     }
 }
@@ -63,6 +66,60 @@ fn train_socket_executor_runs() {
     );
     assert_eq!(code, 0, "stderr: {stderr}");
     assert!(stdout.contains("stopped"), "{stdout}");
+}
+
+#[test]
+fn train_socket_trace_out_emits_valid_trace_and_comm_report() {
+    // The PR-9 acceptance path end to end: a socket-executor run with
+    // --trace-out must (a) print the measured-vs-simulated communication
+    // report (real bytes moved, so wire time was measured), (b) announce
+    // the trace file, and (c) emit a file that the binary's own
+    // `trace-check` validator accepts, with per-worker lanes and driver
+    // round spans.
+    let bin = require_bin!();
+    let trace = std::env::temp_dir().join("cocoa_cli_trace.json");
+    let trace_s = trace.to_str().unwrap();
+    let (code, stdout, stderr) = run(
+        &bin,
+        &[
+            "train", "--dataset", "covtype", "--scale", "4000", "--k", "2", "--lambda", "1e-2",
+            "--rounds", "3", "--gap-tol", "0", "--executor", "socket", "--trace-out", trace_s,
+        ],
+    );
+    assert_eq!(code, 0, "stderr: {stderr}");
+    assert!(
+        stdout.contains("measured vs simulated communication"),
+        "comm validation report missing:\n{stdout}"
+    );
+    assert!(stdout.contains("trace written to"), "{stdout}");
+
+    let (code2, stdout2, stderr2) = run(&bin, &["trace-check", trace_s]);
+    assert_eq!(code2, 0, "trace-check failed: {stderr2}");
+    assert!(stdout2.contains("OK"), "{stdout2}");
+
+    let text = std::fs::read_to_string(&trace).unwrap();
+    assert!(text.contains("\"name\":\"round\""), "driver round spans missing");
+    for tid in 1..=2 {
+        assert!(
+            text.contains(&format!("\"tid\":{tid}")),
+            "worker lane {tid} missing from trace"
+        );
+    }
+    std::fs::remove_file(&trace).ok();
+}
+
+#[test]
+fn trace_check_rejects_invalid_input() {
+    let bin = require_bin!();
+    let bad = std::env::temp_dir().join("cocoa_cli_trace_bad.json");
+    std::fs::write(&bad, "not json").unwrap();
+    let (code, _, stderr) = run(&bin, &["trace-check", bad.to_str().unwrap()]);
+    assert_eq!(code, 1);
+    assert!(stderr.contains("INVALID"), "{stderr}");
+    std::fs::remove_file(&bad).ok();
+    let (code, _, stderr) = run(&bin, &["trace-check"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("usage"), "{stderr}");
 }
 
 #[test]

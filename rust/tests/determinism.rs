@@ -180,6 +180,42 @@ fn pooled_matches_sequential_under_permuted_contiguous_layout() {
 }
 
 #[test]
+fn tracing_enabled_is_bit_identical_to_untraced() {
+    // The flight recorder is observe-only by contract: attaching it to a
+    // run must not perturb a single bit of the trajectory. The traced run
+    // uses the pooled executor, where a recorder that synchronized or
+    // reordered anything would show up immediately.
+    use cocoa::telemetry::Recorder;
+    let path = std::env::temp_dir().join("cocoa_det_traced.json");
+    let rec = Recorder::to_file(&path).expect("open trace file");
+    let n = 96;
+    let data = generate(&SynthConfig::new("det", n, 12).seed(7));
+    let part = random_balanced(n, 4, 3);
+    let problem = Problem::new(data, Loss::Hinge, 0.01);
+    let cfg = CocoaConfig::cocoa_plus(
+        4,
+        Loss::Hinge,
+        0.01,
+        SolverSpec::SdcaEpochs { epochs: 1.0 },
+    )
+    .with_rounds(ROUNDS)
+    .with_gap_tol(1e-14)
+    .with_seed(42)
+    .with_parallel(true)
+    .with_recorder(rec.clone());
+    let traced = Trainer::new(problem, part, cfg);
+    let (gaps_t, alpha_t, w_t) = trajectory(traced);
+    let sum = rec.finish().expect("finish trace");
+    assert!(sum.events > 0, "the traced run must actually record");
+
+    let (gaps, alpha, w) = trajectory(build(4, true, true, 42));
+    assert_eq!(gaps_t, gaps, "tracing perturbed the gap trajectory");
+    assert_eq!(alpha_t, alpha, "tracing perturbed α");
+    assert_eq!(w_t, w, "tracing perturbed w");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn pooled_runs_are_repeatable() {
     // Two independent pooled trainers with the same seed: thread
     // scheduling must not be able to perturb anything.

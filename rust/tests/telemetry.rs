@@ -1,0 +1,136 @@
+//! Telemetry integration tests: the flight recorder attached to a real
+//! training run must produce a valid Chrome trace-event file with
+//! well-formed span nesting, the spans the instrumentation promises
+//! (driver rounds on the leader lane, per-worker compute spans), and
+//! zero drops at this scale. Determinism under tracing is locked in by
+//! `tests/determinism.rs`; this file covers the trace artifact itself.
+
+use cocoa::data::partition::random_balanced;
+use cocoa::data::synth::{generate, SynthConfig};
+use cocoa::prelude::*;
+use cocoa::telemetry::{checker, Recorder};
+use cocoa::util::json::Json;
+
+const ROUNDS: usize = 6;
+const K: usize = 3;
+
+fn traced_trainer(recorder: Recorder, parallel: bool) -> Trainer {
+    let n = 96;
+    let data = generate(&SynthConfig::new("telemetry", n, 12).seed(7));
+    let part = random_balanced(n, K, 3);
+    let problem = Problem::new(data, Loss::Hinge, 0.01);
+    let cfg = CocoaConfig::cocoa_plus(
+        K,
+        Loss::Hinge,
+        0.01,
+        SolverSpec::SdcaEpochs { epochs: 1.0 },
+    )
+    .with_rounds(ROUNDS)
+    .with_gap_tol(1e-14)
+    .with_seed(42)
+    .with_parallel(parallel)
+    .with_recorder(recorder);
+    Trainer::new(problem, part, cfg)
+}
+
+/// Collect `(name, tid)` for every complete event in the trace text.
+fn span_names(text: &str) -> Vec<(String, u64)> {
+    let doc = Json::parse(text).expect("trace parses as JSON");
+    doc.get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .expect("traceEvents array")
+        .iter()
+        .filter(|ev| ev.get("ph").and_then(|p| p.as_str()) == Some("X"))
+        .map(|ev| {
+            (
+                ev.get("name").and_then(|n| n.as_str()).unwrap_or("").to_string(),
+                ev.get("tid").and_then(|t| t.as_f64()).unwrap_or(-1.0) as u64,
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn pooled_run_emits_valid_nested_trace_with_expected_spans() {
+    let path = std::env::temp_dir().join("cocoa_telemetry_pooled_trace.json");
+    let rec = Recorder::to_file(&path).expect("open trace file");
+    let mut trainer = traced_trainer(rec.clone(), true);
+    let hist = trainer.run();
+    assert_eq!(hist.rounds_run(), ROUNDS);
+    // Dropping the trainer joins the pool workers, whose exiting threads
+    // flush their rings; only then may the trailer be written.
+    drop(trainer);
+    let sum = rec.finish().expect("finish trace");
+    assert!(sum.events > 0, "an instrumented run must record events");
+    assert_eq!(sum.dropped, 0, "nothing may be dropped at this scale");
+
+    // The file passes the structural validator (the same code behind
+    // `cocoa trace-check`): every lane's spans nest or are disjoint.
+    let check = checker::check_file(&path).expect("trace must validate");
+    assert_eq!(check.events as u64, sum.events);
+    assert_eq!(check.dropped, 0);
+    assert_eq!(
+        check.lanes,
+        1 + K,
+        "leader lane plus one lane per worker"
+    );
+    assert!(
+        check.max_depth >= 2,
+        "executor phases must nest inside driver rounds, got depth {}",
+        check.max_depth
+    );
+
+    let text = std::fs::read_to_string(&path).expect("read trace");
+    let spans = span_names(&text);
+    let has = |name: &str, tid: u64| spans.iter().any(|(n, t)| n == name && *t == tid);
+    // Driver outer loop on the leader lane (tid 0).
+    assert!(has("round", 0), "driver round spans missing: {spans:?}");
+    assert!(has("eval", 0), "driver eval spans missing: {spans:?}");
+    // Pooled-executor leader phases share the leader lane.
+    assert!(has("broadcast", 0), "broadcast spans missing: {spans:?}");
+    assert!(has("barrier", 0), "barrier spans missing: {spans:?}");
+    assert!(has("reduce", 0), "trainer reduce spans missing: {spans:?}");
+    // One compute lane per worker.
+    for k in 0..K {
+        let tid = 1 + k as u64;
+        assert!(has("compute", tid), "worker {k} compute missing: {spans:?}");
+    }
+    // Exactly one driver round span per executed round.
+    let rounds = spans.iter().filter(|(n, t)| n == "round" && *t == 0).count();
+    assert_eq!(rounds, ROUNDS, "{spans:?}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn sequential_run_traces_worker_lanes_without_pool_threads() {
+    // The sequential executor runs shards on the leader thread but still
+    // files compute spans under per-worker tids, so traces are
+    // executor-independent for the phases both runtimes share.
+    let path = std::env::temp_dir().join("cocoa_telemetry_seq_trace.json");
+    let rec = Recorder::to_file(&path).expect("open trace file");
+    let mut trainer = traced_trainer(rec.clone(), false);
+    trainer.run();
+    drop(trainer);
+    let sum = rec.finish().expect("finish trace");
+    assert_eq!(sum.dropped, 0);
+    let check = checker::check_file(&path).expect("trace must validate");
+    assert_eq!(check.lanes, 1 + K);
+    let text = std::fs::read_to_string(&path).expect("read trace");
+    let spans = span_names(&text);
+    assert!(spans.iter().any(|(n, t)| n == "round" && *t == 0), "{spans:?}");
+    assert!(spans.iter().any(|(n, t)| n == "compute" && *t == 1), "{spans:?}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn disabled_recorder_run_is_zero_artifact() {
+    // Every config embeds a disabled recorder; a normal run must neither
+    // write a file nor count events.
+    let rec = Recorder::disabled();
+    let mut trainer = traced_trainer(rec.clone(), true);
+    trainer.run();
+    drop(trainer);
+    let sum = rec.finish().expect("finish on disabled is Ok");
+    assert_eq!(sum.events, 0);
+    assert_eq!(sum.dropped, 0);
+}
