@@ -1,0 +1,94 @@
+//! Snapshot comparator: diff two `util::bench` JSON reports and fail on
+//! regressions past a threshold.
+//!
+//! ```text
+//! cargo bench --bench bench_compare -- BENCH_9.json BENCH_10.json [--threshold 3.0]
+//! ```
+//!
+//! The first path is the committed baseline (`BENCH_<previous pr>.json`
+//! at the repo root), the second the fresh run (CI's `BENCH_JSON`
+//! artifact). Relative paths that don't resolve against the current
+//! directory are retried against the repo root, so the invocation above
+//! works no matter where cargo puts the bench's working directory.
+//! Exit codes: 0 = no regression, 1 = regression(s), 2 = usage error.
+
+use cocoa::util::bench::{compare, load_baseline};
+use std::path::{Path, PathBuf};
+
+fn resolve(arg: &str) -> PathBuf {
+    let direct = PathBuf::from(arg);
+    if direct.exists() || direct.is_absolute() {
+        return direct;
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(arg)
+}
+
+fn main() {
+    let mut paths: Vec<String> = Vec::new();
+    let mut threshold = 1.5f64;
+    let mut argv = std::env::args().skip(1);
+    while let Some(a) = argv.next() {
+        match a.as_str() {
+            // `cargo bench` appends --bench for libtest compatibility.
+            "--bench" | "--" => {}
+            "--threshold" => {
+                threshold = match argv.next().and_then(|v| v.parse().ok()) {
+                    Some(t) if t > 0.0 => t,
+                    _ => {
+                        eprintln!("--threshold needs a positive float");
+                        std::process::exit(2);
+                    }
+                };
+            }
+            _ => paths.push(a),
+        }
+    }
+    if paths.is_empty() {
+        // A bare `cargo bench` runs every target with no args: nothing
+        // to compare is a skip, not a failure.
+        println!(
+            "bench_compare: no snapshots given, skipping\n\
+             usage: cargo bench --bench bench_compare -- <baseline.json> <current.json> \
+             [--threshold 1.5]"
+        );
+        return;
+    }
+    if paths.len() != 2 {
+        eprintln!(
+            "usage: cargo bench --bench bench_compare -- <baseline.json> <current.json> \
+             [--threshold 1.5]"
+        );
+        std::process::exit(2);
+    }
+    let (base_path, cur_path) = (resolve(&paths[0]), resolve(&paths[1]));
+    let base = match load_baseline(&base_path) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("baseline {}: {e}", base_path.display());
+            std::process::exit(2);
+        }
+    };
+    let cur = match load_baseline(&cur_path) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("current {}: {e}", cur_path.display());
+            std::process::exit(2);
+        }
+    };
+    println!(
+        "== bench compare: {} ({} cases) vs {} ({} cases), threshold {threshold}x ==",
+        base_path.display(),
+        base.cases.len(),
+        cur_path.display(),
+        cur.cases.len()
+    );
+    let cmp = compare(&base, &cur);
+    print!("{}", cmp.render(threshold));
+    let regs = cmp.regressions(threshold);
+    if regs.is_empty() {
+        println!("OK: no case slower than {threshold}x baseline");
+    } else {
+        eprintln!("FAIL: {} case(s) regressed past {threshold}x baseline", regs.len());
+        std::process::exit(1);
+    }
+}

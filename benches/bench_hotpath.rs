@@ -4,7 +4,7 @@
 
 use cocoa::data::partition::random_balanced;
 use cocoa::data::synth::{generate, SynthConfig};
-use cocoa::linalg::{dense, power_iter, CsrMatrix};
+use cocoa::linalg::{dense, power_iter, simd, CsrMatrix};
 use cocoa::objective::Problem;
 use cocoa::prelude::*;
 use cocoa::serve::Model;
@@ -24,6 +24,39 @@ fn main() {
     b.run("dense_axpy_4096", || {
         dense::axpy(0.5, &x, &mut acc);
         black_box(acc[0])
+    });
+
+    // ---- CSR row kernels: SIMD dispatch vs forced scalar ----------------
+    // The same fully-dense CSR row through both dispatch states — the
+    // speedup column of the snapshot comparison is the AVX2 payoff on
+    // the gather-free dense-row fast path. `COCOA_NO_SIMD=1` pins a
+    // production run to the scalar side of this pair.
+    let dense_row = CsrMatrix::from_dense(1, 4096, &x);
+    let mut row_acc = vec![0.0; 4096];
+    simd::force_scalar(true);
+    b.run("csr_row_dot_dense_d4096_scalar", || {
+        black_box(dense_row.row_dot(0, &y))
+    });
+    b.run("csr_row_axpy_dense_d4096_scalar", || {
+        dense_row.row_axpy(0, 0.5, &mut row_acc);
+        black_box(row_acc[0])
+    });
+    simd::force_scalar(false);
+    b.run("csr_row_dot_dense_d4096_simd", || {
+        black_box(dense_row.row_dot(0, &y))
+    });
+    b.run("csr_row_axpy_dense_d4096_simd", || {
+        dense_row.row_axpy(0, 0.5, &mut row_acc);
+        black_box(row_acc[0])
+    });
+
+    // ---- cache-blocked margin sweep (certificate inner loop) ------------
+    let sweep = generate(&SynthConfig::new("b", 4096, 512).density(0.05).seed(9));
+    let wv: Vec<f64> = (0..512).map(|i| (i as f64 * 0.19).sin()).collect();
+    let mut margins = vec![0.0; 4096];
+    b.run("csr_rows_dot_n4096_d512", || {
+        sweep.x.rows_dot(0, &wv, &mut margins);
+        black_box(margins[0])
     });
 
     // ---- sparse SDCA epoch (the paper's inner loop) ----------------------

@@ -1,4 +1,4 @@
-//! The four rule families, each a linear scan over a
+//! The rule families, each a linear scan over a
 //! [`FileAnalysis`]. Scope and rationale for every rule live in
 //! `ANALYSIS.md` at the repo root; diagnostics carry `file:line` and are
 //! suppressible with `// lint:allow(<rule>) -- <reason>`.
@@ -19,6 +19,7 @@ pub const RULE_NO_PANIC: &str = "no_panic";
 pub const RULE_DETERMINISM: &str = "determinism";
 pub const RULE_UNSAFE_SAFETY: &str = "unsafe_safety";
 pub const RULE_LOCK_ORDER: &str = "lock_order";
+pub const RULE_ARITH_OVERFLOW: &str = "arith_overflow";
 pub const RULE_WAIVER: &str = "waiver";
 
 pub const ALL_RULES: &[(&str, &str)] = &[
@@ -26,6 +27,7 @@ pub const ALL_RULES: &[(&str, &str)] = &[
     (RULE_DETERMINISM, "no wall clock, hash iteration, or arrival-order gathers in round code"),
     (RULE_UNSAFE_SAFETY, "every unsafe block or impl carries an adjacent // SAFETY: comment"),
     (RULE_LOCK_ORDER, "nested lock acquisitions follow admin < model < w_shared"),
+    (RULE_ARITH_OVERFLOW, "size/length math on the wire codec uses checked_add/checked_mul"),
     (RULE_WAIVER, "lint:allow waivers must carry a `-- reason`"),
 ];
 
@@ -39,6 +41,7 @@ pub const NO_PANIC_SURFACES: &[&str] = &[
     "data/libsvm.rs",
     "telemetry/writer.rs",
     "telemetry/checker.rs",
+    "telemetry/summary.rs",
 ];
 
 /// Directories whose code runs inside optimization rounds, where the
@@ -49,6 +52,15 @@ pub const NO_PANIC_SURFACES: &[&str] = &[
 pub const DETERMINISM_DIRS: &[&str] = &["driver/", "solver/", "coordinator/", "telemetry/"];
 
 const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Files whose `+`/`*` operate on message-derived lengths: a silent wrap
+/// in a size computation emits an under-sized frame prefix and desyncs
+/// the stream for every later frame. Matched as suffixes of the
+/// root-relative path.
+pub const ARITH_OVERFLOW_SURFACES: &[&str] = &["coordinator/wire.rs"];
+
+/// Identifier fragments that mark an operand as a size/length quantity.
+const SIZE_WORDS: &[&str] = &["len", "size", "byte", "word", "total", "nnz"];
 
 const HASH_COLLECTIONS: &[&str] = &["HashMap", "HashSet"];
 const WALL_CLOCK: &[&str] = &["Instant", "SystemTime"];
@@ -87,6 +99,9 @@ pub fn check_file(fa: &FileAnalysis) -> Vec<Diagnostic> {
     }
     if DETERMINISM_DIRS.iter().any(|d| fa.rel.starts_with(d)) {
         check_determinism(fa, &mut out);
+    }
+    if ARITH_OVERFLOW_SURFACES.iter().any(|s| fa.rel.ends_with(s)) {
+        check_arith_overflow(fa, &mut out);
     }
     check_unsafe_safety(fa, &mut out);
     check_lock_order(fa, &mut out);
@@ -156,6 +171,77 @@ fn is_index_bracket(fa: &FileAnalysis, i: usize) -> bool {
         Some(p) if p.kind == TokKind::Ident => !is_keyword(&p.text),
         Some(p) => p.is(TokKind::Punct, ")") || p.is(TokKind::Punct, "]"),
         None => false,
+    }
+}
+
+fn is_size_word(name: &str) -> bool {
+    let lower = name.to_ascii_lowercase();
+    SIZE_WORDS.iter().any(|w| lower.contains(w))
+}
+
+/// Any identifier within 3 non-comment tokens on either side of `i` that
+/// names a size/length quantity.
+fn window_mentions_size(fa: &FileAnalysis, i: usize) -> bool {
+    let mut seen = 0;
+    for t in fa.toks[i + 1..].iter() {
+        if t.kind == TokKind::Comment {
+            continue;
+        }
+        if t.kind == TokKind::Ident && is_size_word(&t.text) {
+            return true;
+        }
+        seen += 1;
+        if seen == 3 {
+            break;
+        }
+    }
+    seen = 0;
+    for t in fa.toks[..i].iter().rev() {
+        if t.kind == TokKind::Comment {
+            continue;
+        }
+        if t.kind == TokKind::Ident && is_size_word(&t.text) {
+            return true;
+        }
+        seen += 1;
+        if seen == 3 {
+            break;
+        }
+    }
+    false
+}
+
+/// Binary `+`/`*` whose neighborhood mentions a size/length identifier
+/// must be `checked_add`/`checked_mul` (or carry a waiver). Compound
+/// assignments (`+=`) are out of scope: they accumulate against an
+/// already-validated bound, not into a length prefix.
+fn check_arith_overflow(fa: &FileAnalysis, out: &mut Vec<Diagnostic>) {
+    for (i, t) in fa.toks.iter().enumerate() {
+        if fa.in_test[i] || fa.in_attr[i] || t.kind != TokKind::Punct {
+            continue;
+        }
+        let checked = match t.text.as_str() {
+            "+" => "checked_add",
+            "*" => "checked_mul",
+            _ => continue,
+        };
+        // Binary use only: an operand must sit on the left (rules out
+        // deref `*x`, `use …::*`, and `&*`).
+        let binary = fa.prev_tok(i).is_some_and(|p| {
+            (matches!(p.kind, TokKind::Ident | TokKind::Number) && !is_keyword(&p.text))
+                || p.is(TokKind::Punct, ")")
+                || p.is(TokKind::Punct, "]")
+        });
+        if !binary || fa.next_tok(i).is_some_and(|n| n.is(TokKind::Punct, "=")) {
+            continue;
+        }
+        if window_mentions_size(fa, i) {
+            let msg = format!(
+                "unchecked `{}` on size/length math; use {checked} (or waive with a reason)",
+                t.text
+            );
+            push(out, fa, RULE_ARITH_OVERFLOW, t.line, msg);
+        }
     }
 }
 
@@ -396,6 +482,29 @@ mod tests {
         assert_eq!(d.len(), 3, "{d:?}");
         let ok = "fn g() { let r = reply_rx.recv(); for (li, &gi) in parts.iter() {} }\n";
         assert!(diags("coordinator/pool.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn arith_overflow_scoped_to_wire_size_math() {
+        let bad = "fn f() { let total = 4 + header_bytes.len() + 8 * words; }\n";
+        let d = diags("coordinator/wire.rs", bad);
+        assert_eq!(d.len(), 3, "{d:?}");
+        assert!(d.iter().all(|x| x.rule == RULE_ARITH_OVERFLOW));
+        // identical code off-surface is not the wire codec's problem
+        assert!(diags("solver/sdca.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn arith_overflow_ignores_non_size_math_and_compound_assign() {
+        let ok = "fn f() { got += n; let y = a * b + c; let s = acc | (u64::from(b) << (8 * i)); }\n";
+        let d = diags("coordinator/wire.rs", ok);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn arith_overflow_waivable_with_reason() {
+        let src = "fn f() {\n    // lint:allow(arith_overflow) -- bounded by MAX_SECTIONS above\n    let total = 4 + header_bytes.len();\n}\n";
+        assert!(diags("coordinator/wire.rs", src).is_empty());
     }
 
     #[test]

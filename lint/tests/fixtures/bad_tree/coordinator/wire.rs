@@ -1,0 +1,6 @@
+// Known-bad fixture for `arith_overflow`: frame-size arithmetic that
+// wraps silently instead of going through checked_add/checked_mul.
+fn frame_len(header_bytes: &[u8], words: usize) -> usize {
+    let body = 8 * words;
+    body + header_bytes.len()
+}

@@ -34,16 +34,17 @@ fn count(report: &Report, path: &str, rule: &str) -> usize {
 #[test]
 fn bad_tree_triggers_every_rule_family() {
     let report = lint_root(&fixture("bad_tree"), &[]).expect("lint bad_tree");
-    assert_eq!(report.files_scanned, 6);
+    assert_eq!(report.files_scanned, 7);
     let diags = &report.diagnostics;
     assert_eq!(count(&report, "serve/http.rs", "no_panic"), 4, "{diags:?}");
     assert_eq!(count(&report, "coordinator/pool.rs", "determinism"), 6, "{diags:?}");
+    assert_eq!(count(&report, "coordinator/wire.rs", "arith_overflow"), 2, "{diags:?}");
     assert_eq!(count(&report, "driver/train.rs", "determinism"), 1, "{diags:?}");
     assert_eq!(count(&report, "linalg/sparse.rs", "unsafe_safety"), 1, "{diags:?}");
     assert_eq!(count(&report, "serve/router.rs", "lock_order"), 1, "{diags:?}");
     assert_eq!(count(&report, "telemetry/writer.rs", "no_panic"), 1, "{diags:?}");
     assert_eq!(count(&report, "telemetry/writer.rs", "determinism"), 1, "{diags:?}");
-    assert_eq!(report.diagnostics.len(), 15, "{diags:?}");
+    assert_eq!(report.diagnostics.len(), 17, "{diags:?}");
 }
 
 #[test]
@@ -100,7 +101,7 @@ fn cli_exit_codes_and_json_artifact() {
     let js = std::fs::read_to_string(&out).expect("json artifact written");
     assert!(js.contains("\"tool\": \"cocoa-lint\""), "{js}");
     assert!(js.contains("\"rule\": \"lock_order\""), "{js}");
-    assert!(js.contains("\"violations\": 15"), "{js}");
+    assert!(js.contains("\"violations\": 17"), "{js}");
     assert_eq!(js.matches('{').count(), js.matches('}').count());
     std::fs::remove_file(&out).ok();
 }

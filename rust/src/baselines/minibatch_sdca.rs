@@ -52,6 +52,10 @@ pub struct MiniBatchSdca {
     pub cfg: MiniBatchSdcaConfig,
     pub problem: Problem,
     blocks: Vec<LocalBlock>,
+    /// Caller-order row index lists per worker: block k's local row `i`
+    /// holds `parts[k][i]` of `problem.data` (α and w stay in the
+    /// caller's row order here, unlike the trainer's layout order).
+    parts: Vec<Vec<usize>>,
     pub alpha: Vec<f64>,
     pub w: Vec<f64>,
     rngs: Vec<Pcg32>,
@@ -70,6 +74,7 @@ impl MiniBatchSdca {
             cfg,
             problem,
             blocks,
+            parts: partition.parts,
             alpha: vec![0.0; n],
             w: vec![0.0; d],
             rngs,
@@ -102,7 +107,7 @@ impl MiniBatchSdca {
                 if q == 0.0 {
                     continue;
                 }
-                let gi = block.global_idx[i];
+                let gi = self.parts[k][i];
                 let xv = x.row_dot(i, &self.w);
                 // Plain serial-SDCA curvature (σ'=1): coef = q/(λn).
                 let coef = q / (lambda * n);

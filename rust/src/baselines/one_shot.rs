@@ -57,8 +57,9 @@ fn solve_and_average(
     let d = problem.d();
     let lambda = problem.lambda;
     // Shard views over one shared (permuted) dataset — no per-worker
-    // matrix clones; `global_idx` still scatters back to the caller's
-    // row order.
+    // matrix clones; `partition.parts[k]` still scatters back to the
+    // caller's row order (block k's local row i holds caller row
+    // `partition.parts[k][i]`).
     let blocks = LocalBlock::split(&problem.data, partition);
 
     let mut w_avg = vec![0.0; d];
@@ -102,7 +103,7 @@ fn solve_and_average(
         // Scatter duals scaled so that w(α_global) = w_avg on the global
         // problem: α_global_i = α_local_i · n/(n_k·K).
         let scale = n as f64 / (nk as f64 * cfg.k as f64);
-        for (li, &gi) in block.global_idx.iter().enumerate() {
+        for (li, &gi) in partition.parts[k].iter().enumerate() {
             alpha_global[gi] = alpha_local[li] * scale;
         }
         max_compute = max_compute.max(t0.elapsed().as_secs_f64());

@@ -39,14 +39,15 @@
 //! The trainer canonicalizes its partition into the permuted-contiguous
 //! [`ShardLayout`](crate::data::ShardLayout) at construction: the dataset
 //! is reordered **once** so worker k's rows are the contiguous range
-//! `parts[k]`, and the leader's [`Problem`] plus all K worker
-//! [`LocalBlock`]s view the same `Arc<Dataset>` — total resident data is
-//! 1× the dataset instead of the old leader copy + K cloned shards.
-//! Consequently `alpha`, `partition`, and `problem.data` all live in
-//! *layout* row order; [`Trainer::rows`] maps back to the caller's
-//! original order ([`Trainer::alpha_original`]), and per-shard contents
-//! are unchanged, so trajectories are what the index-list semantics
-//! produced.
+//! `shards[k] = (start, len)`, and the leader's [`Problem`] plus all K
+//! worker [`LocalBlock`]s view the same `Arc<Dataset>` — total resident
+//! data is 1× the dataset instead of the old leader copy + K cloned
+//! shards, and shard addressing is K `(start, len)` pairs instead of K
+//! index vectors totalling n entries. Consequently `alpha`, `shards`,
+//! and `problem.data` all live in *layout* row order; [`Trainer::rows`]
+//! maps back to the caller's original order
+//! ([`Trainer::alpha_original`]), and per-shard contents are unchanged,
+//! so trajectories are what the index-list semantics produced.
 //!
 //! ### Time accounting
 //!
@@ -108,7 +109,7 @@ pub fn make_solver(spec: &SolverSpec, n_local: usize, seed: u64) -> Box<dyn Loca
 /// The distributed trainer (leader + K workers behind an [`Executor`]).
 ///
 /// The trainer works in the permuted-contiguous shard layout: `problem`,
-/// `partition`, and `alpha` all use *layout* row order (worker k owns a
+/// `shards`, and `alpha` all use *layout* row order (worker k owns a
 /// contiguous row range of the one shared dataset), and [`Trainer::rows`]
 /// maps layout rows back to the row order the trainer was constructed
 /// with.
@@ -116,8 +117,9 @@ pub struct Trainer {
     pub cfg: CocoaConfig,
     /// The problem over the shared (layout-ordered) dataset.
     pub problem: Problem,
-    /// The contiguous partition over `problem.data` (part k is a range).
-    pub partition: Partition,
+    /// Worker k's `(start, len)` row range of `problem.data` — the whole
+    /// shard addressing in a contiguous layout.
+    pub shards: Vec<(usize, usize)>,
     /// Layout ↔ caller row order maps (identity for partitions that were
     /// already contiguous).
     pub rows: RowPermutation,
@@ -165,13 +167,17 @@ impl Trainer {
             "partition must exactly cover [n]"
         );
         // Shared data plane: realize the partition as the permuted-
-        // contiguous layout. At most one dataset copy is made (none if the
-        // partition is already contiguous); the leader's problem and every
-        // worker's view share that single Arc from here on.
-        let layout = partition.apply_permutation(Arc::clone(&problem.data));
-        let problem = Problem::shared(Arc::clone(&layout.data), problem.loss, problem.lambda);
+        // contiguous layout. The problem's Arc is released *before* the
+        // reorder, so when the trainer holds the only reference (the
+        // normal ingest path) the dataset is permuted by consuming its
+        // storage array-by-array — never two resident datasets; the
+        // leader's problem and every worker's view share the resulting
+        // single Arc from here on.
+        let Problem { data, loss, lambda } = problem;
+        let layout = partition.apply_permutation(data);
+        let problem = Problem::shared(Arc::clone(&layout.data), loss, lambda);
         let blocks = LocalBlock::from_layout(&layout);
-        let partition = layout.partition;
+        let shards = layout.shards;
         let rows = layout.rows;
         debug_assert!(blocks
             .iter()
@@ -237,7 +243,7 @@ impl Trainer {
         Trainer {
             cfg,
             problem,
-            partition,
+            shards,
             rows,
             alpha: vec![0.0; n],
             w: vec![0.0; d],
@@ -299,9 +305,14 @@ impl Trainer {
         for k in 0..self.cfg.k {
             let res = self.executor.result(k);
             // scatter to the global dual vector (workers already applied
-            // γΔα to their local views during the round)
-            for (li, &gi) in self.partition.parts[k].iter().enumerate() {
-                self.alpha[gi] += gamma * res.update.delta_alpha[li];
+            // γΔα to their local views during the round); shard k is the
+            // contiguous layout range (start, len), so this is a slice zip
+            let (start, len) = self.shards[k];
+            for (a, &da) in self.alpha[start..start + len]
+                .iter_mut()
+                .zip(&res.update.delta_alpha)
+            {
+                *a += gamma * da;
             }
             dense::axpy(gamma, &res.update.delta_w, &mut self.w);
         }
@@ -581,7 +592,12 @@ mod tests {
         .with_parallel(false);
         let mut t = Trainer::new(original.clone(), part, cfg);
         // the trainer's partition was canonicalized to contiguous ranges
-        assert!(t.partition.is_contiguous_layout());
+        let mut next = 0usize;
+        for &(start, len) in &t.shards {
+            assert_eq!(start, next, "shards must tile 0..n in worker order");
+            next += len;
+        }
+        assert_eq!(next, 80);
         assert!(!t.rows.is_identity(), "random partition must permute");
         for _ in 0..5 {
             t.round();

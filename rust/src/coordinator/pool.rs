@@ -281,9 +281,9 @@ impl Executor for SequentialExecutor {
 
     fn load_alpha(&mut self, alpha: &[f64]) {
         for wk in self.workers.iter_mut() {
-            for (li, &gi) in wk.block.global_idx.iter().enumerate() {
-                wk.alpha_local[li] = alpha[gi];
-            }
+            let start = wk.block.start();
+            let len = wk.block.n_local();
+            wk.alpha_local.copy_from_slice(&alpha[start..start + len]);
         }
     }
 }
@@ -389,8 +389,9 @@ pub struct PooledExecutor {
     results: Vec<Option<WorkerResult>>,
     /// (n_k, d) per worker — to rebuild a scratch lost to a dead thread.
     dims: Vec<(usize, usize)>,
-    /// Global row indices per worker (for `load_alpha`).
-    parts: Vec<Vec<usize>>,
+    /// `(start, len)` row range per worker in the shared layout (for
+    /// `load_alpha` slice copies).
+    parts: Vec<(usize, usize)>,
     solver_name: String,
     handles: Vec<JoinHandle<()>>,
     /// Leader-side trace lane (tid 0): broadcast and barrier spans.
@@ -409,9 +410,9 @@ impl PooledExecutor {
             .iter()
             .map(|wk| (wk.block.n_local(), wk.block.d()))
             .collect();
-        let parts: Vec<Vec<usize>> = workers
+        let parts: Vec<(usize, usize)> = workers
             .iter()
-            .map(|wk| wk.block.global_idx.clone())
+            .map(|wk| (wk.block.start(), wk.block.n_local()))
             .collect();
         let w_shared = Arc::new(RwLock::new(vec![0.0; d]));
         let (reply_tx, reply_rx) = sync_channel::<Reply>(k);
@@ -597,8 +598,8 @@ impl Executor for PooledExecutor {
     }
 
     fn load_alpha(&mut self, alpha: &[f64]) {
-        for (k, part) in self.parts.iter().enumerate() {
-            let local: Vec<f64> = part.iter().map(|&gi| alpha[gi]).collect();
+        for (k, &(start, len)) in self.parts.iter().enumerate() {
+            let local = alpha[start..start + len].to_vec();
             // FIFO per worker: applied before any later Round job. A dead
             // thread is surfaced by the next run_round, not here.
             let _ = self.job_txs[k].send(Job::LoadAlpha(local));

@@ -17,8 +17,10 @@
 //!    child that dies before connecting, presents a bad magic/version, or
 //!    claims an out-of-range id fails the spawn with a [`PoolError`]
 //!    naming it — never a hang.
-//! 2. Each round is a fan-out of `round` frames followed by an id-ordered
-//!    gather. Dead connections, malformed replies, and read timeouts
+//! 2. Each round broadcasts the `round` frame to all K workers at once —
+//!    one scoped sender thread per connection, so the K serializations
+//!    overlap on the wire — followed by an id-ordered gather. Dead
+//!    connections, malformed replies, and read timeouts
 //!    (`cfg.socket.round_timeout`) surface as `PoolError` entries; a
 //!    worker-side solver panic is reported in-band and leaves the
 //!    connection alive, mirroring the thread pool's semantics.
@@ -56,7 +58,7 @@ use crate::subproblem::{LocalBlock, SubproblemSpec};
 use crate::telemetry::Ring;
 use crate::util::cli::Args;
 use crate::util::json::{jnum, jstr, Json};
-use crate::util::timer::{Deadline, Stopwatch};
+use crate::util::timer::{trace_now_us, Deadline, Stopwatch};
 
 static SOCKET_COUNTER: AtomicUsize = AtomicUsize::new(0);
 
@@ -324,8 +326,9 @@ pub struct SocketExecutor {
     conns: Vec<Option<Conn>>,
     children: Vec<Option<Child>>,
     results: Vec<WorkerResult>,
-    /// Global row indices per worker (for `load_alpha` scatter).
-    parts: Vec<Vec<usize>>,
+    /// `(start, len)` row range per worker in the shared layout (for
+    /// `load_alpha` slice copies).
+    parts: Vec<(usize, usize)>,
     solver_name: String,
     round_timeout: Option<Duration>,
     /// Unix socket path to unlink on drop.
@@ -356,7 +359,7 @@ impl SocketExecutor {
             .enumerate()
             .map(|(i, b)| WorkerResult::with_dims(i, b.n_local(), b.d()))
             .collect();
-        let parts = blocks.iter().map(|b| b.global_idx.clone()).collect();
+        let parts = blocks.iter().map(|b| (b.start(), b.n_local())).collect();
         let mut exec = SocketExecutor {
             k,
             conns: (0..k).map(|_| None).collect(),
@@ -600,39 +603,88 @@ impl SocketExecutor {
         }
     }
 
-    /// Fan a frame out to every live connection; send failures drop the
-    /// connection and are reported against the worker. Returns the ids
-    /// whose send succeeded, plus the summed measured send seconds.
-    fn fan_out(&mut self, frame: &Frame, failed: &mut Vec<(usize, String)>) -> (Vec<usize>, f64) {
+    /// Fan a frame out to every live connection **concurrently**: one
+    /// scoped sender thread per worker, so the K frame writes overlap on
+    /// the wire instead of stacking serially (for a round frame carrying
+    /// `w`, the last worker used to wait K−1 full serializations before
+    /// its copy even started). Send failures drop the connection and are
+    /// reported against the worker.
+    ///
+    /// Tracing: each worker's `send` span is recorded on *its own* lane
+    /// (the spans genuinely overlap in time, which a single lane cannot
+    /// represent), and the leader's lane gets one `broadcast` span
+    /// covering the whole fan-out.
+    fn fan_out(&mut self, frame: &Frame, failed: &mut Vec<(usize, String)>) -> FanOut {
+        let t_bcast = self.ring.now();
+        // Each sender thread owns exactly one `&mut Conn`; timestamps are
+        // read from the shared trace epoch inside the thread so the spans
+        // bound the actual serialize+flush work.
+        let outcomes: Vec<(usize, u64, u64, Result<f64, String>)> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(self.k);
+            for (id, slot) in self.conns.iter_mut().enumerate() {
+                if let Some(conn) = slot.as_mut() {
+                    handles.push(scope.spawn(move || {
+                        let t_send = trace_now_us();
+                        let res = conn
+                            .send_timed(frame)
+                            .map_err(|e| format!("send failed: {e}"));
+                        (id, t_send, trace_now_us(), res)
+                    }));
+                }
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("sender thread panicked"))
+                .collect()
+        });
+        self.ring.complete("broadcast", "wire", t_bcast, None);
+        for (id, slot) in self.conns.iter().enumerate() {
+            if slot.is_none() {
+                failed.push((id, "no connection (worker previously failed)".to_string()));
+            }
+        }
         let mut pending = Vec::with_capacity(self.k);
         let mut send_s = 0.0f64;
-        for id in 0..self.k {
-            let t0 = self.ring.now();
-            let send_err = match self.conns[id].as_mut() {
-                None => Some("no connection (worker previously failed)".to_string()),
-                Some(conn) => match conn.send_timed(frame) {
-                    Ok(s) => {
-                        send_s += s;
-                        None
-                    }
-                    Err(e) => Some(format!("send failed: {e}")),
-                },
-            };
-            match send_err {
-                None => {
-                    self.ring
-                        .complete("send", "wire", t0, Some(("worker", id as f64)));
+        let mut send_end_us = vec![0u64; self.k];
+        for (id, t_send, t_done, res) in outcomes {
+            match res {
+                Ok(s) => {
+                    send_s += s;
+                    self.worker_rings[id].span_at(
+                        "send",
+                        "wire",
+                        t_send,
+                        t_done,
+                        Some(("worker", id as f64)),
+                    );
+                    send_end_us[id] = t_done;
                     pending.push(id);
                 }
-                Some(base) => {
+                Err(base) => {
                     self.conns[id] = None;
                     let msg = self.describe_failure(id, base);
                     failed.push((id, msg));
                 }
             }
         }
-        (pending, send_s)
+        FanOut {
+            pending,
+            send_s,
+            send_end_us,
+        }
     }
+}
+
+/// Outcome of one concurrent broadcast: which workers took the frame,
+/// the summed per-connection send seconds (measured serialize+flush
+/// time, which can exceed wall clock now that sends overlap), and each
+/// worker's send-span end timestamp on the trace epoch (0 where no send
+/// happened) — used to clamp synthesized compute spans past the
+/// broadcast on that worker's lane.
+struct FanOut {
+    pending: Vec<usize>,
+    send_s: f64,
+    send_end_us: Vec<u64>,
 }
 
 fn spawn_err(id: usize, msg: &str) -> PoolError {
@@ -659,10 +711,10 @@ impl Executor for SocketExecutor {
         let frame = Frame::new("round")
             .with_f64s("g", vec![gamma])
             .with_f64s("w", w.to_vec());
-        let (pending, send_s) = self.fan_out(&frame, &mut failed);
-        let mut wire_s = send_s;
+        let fan = self.fan_out(&frame, &mut failed);
+        let mut wire_s = fan.send_s;
         let mut max_compute = 0.0f64;
-        for id in pending {
+        for id in fan.pending {
             let t_recv = self.ring.now();
             let recv = self.conns[id]
                 .as_mut()
@@ -704,11 +756,15 @@ impl Executor for SocketExecutor {
                                 max_compute = max_compute.max(cs);
                                 // Render the worker's reported compute on
                                 // its own lane, ending where its reply
-                                // arrived; clamp into the round so lanes
-                                // stay well-nested.
+                                // arrived; clamp past the round start AND
+                                // this worker's broadcast send span so the
+                                // lane stays well-nested.
                                 let end = self.worker_rings[id].now();
                                 let dur_us = (cs * 1e6) as u64;
-                                let start = end.saturating_sub(dur_us).max(t_round);
+                                let start = end
+                                    .saturating_sub(dur_us)
+                                    .max(t_round)
+                                    .max(fan.send_end_us[id]);
                                 self.worker_rings[id].span_at(
                                     "compute",
                                     "worker",
@@ -741,9 +797,9 @@ impl Executor for SocketExecutor {
     fn eval_partials(&mut self, w: &[f64]) -> Result<Vec<CertPartial>, PoolError> {
         let mut failed: Vec<(usize, String)> = Vec::new();
         let frame = Frame::new("eval").with_f64s("w", w.to_vec());
-        let (pending, _send_s) = self.fan_out(&frame, &mut failed);
+        let fan = self.fan_out(&frame, &mut failed);
         let mut partials = vec![CertPartial::default(); self.k];
-        for id in pending {
+        for id in fan.pending {
             let t_recv = self.ring.now();
             let recv = self.conns[id].as_mut().expect("pending ids are live").recv();
             self.ring
@@ -811,8 +867,8 @@ impl Executor for SocketExecutor {
 
     fn load_alpha(&mut self, alpha: &[f64]) {
         for id in 0..self.k {
-            let local: Vec<f64> = self.parts[id].iter().map(|&gi| alpha[gi]).collect();
-            let frame = Frame::new("alpha").with_f64s("a", local);
+            let (start, len) = self.parts[id];
+            let frame = Frame::new("alpha").with_f64s("a", alpha[start..start + len].to_vec());
             let dead = match self.conns[id].as_mut() {
                 None => false,
                 Some(conn) => conn.send(&frame).is_err(),
@@ -1031,7 +1087,7 @@ fn build_worker(
         row_norms_sq: nr.to_vec(),
         name: format!("wire-shard-{id}"),
     };
-    let block = LocalBlock::view(Arc::new(ds), 0, n_local, (0..n_local).collect());
+    let block = LocalBlock::view(Arc::new(ds), 0, n_local);
     let solver = make_solver(&spec_solver, n_local, seed);
     let spec = SubproblemSpec {
         loss,

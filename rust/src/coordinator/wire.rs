@@ -246,8 +246,18 @@ pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<(), WireError> 
     header.set("sec", jarr(manifest));
     let header_bytes = header.to_string_compact().into_bytes();
 
-    let words: usize = frame.sections.iter().map(|(_, s)| s.len()).sum();
-    let total_len = 4 + header_bytes.len() + 8 * words;
+    // Checked end to end: a silent wrap here would emit an under-sized
+    // length prefix and desynchronize the stream for every later frame
+    // (cocoa-lint `arith_overflow` rejects unchecked `+`/`*` on these
+    // size computations).
+    let total_len = frame
+        .sections
+        .iter()
+        .try_fold(0usize, |acc, (_, s)| acc.checked_add(s.len()))
+        .and_then(|words| words.checked_mul(8))
+        .and_then(|body| body.checked_add(header_bytes.len()))
+        .and_then(|len| len.checked_add(4))
+        .ok_or(WireError::TooLarge { len: usize::MAX })?;
     if total_len > MAX_FRAME_BYTES {
         return Err(WireError::TooLarge { len: total_len });
     }

@@ -65,6 +65,24 @@ impl Dataset {
         self.gather_rows(rows)
     }
 
+    /// Consuming variant of [`Dataset::gather_rows`] for full row
+    /// permutations: bit-identical output (cached norms are gathered, not
+    /// recomputed), but storage is replaced array by array so peak memory
+    /// stays near one dataset instead of two. Used by
+    /// [`crate::data::Partition::apply_permutation`] when it holds the
+    /// only reference to the dataset (the ingest path).
+    pub fn permute_rows(self, new_to_old: &[usize]) -> Dataset {
+        assert_eq!(new_to_old.len(), self.n(), "permutation must cover all rows");
+        let y = new_to_old.iter().map(|&r| self.y[r]).collect();
+        let row_norms_sq = new_to_old.iter().map(|&r| self.row_norms_sq[r]).collect();
+        Dataset {
+            x: self.x.permute_rows(new_to_old),
+            y,
+            row_norms_sq,
+            name: self.name,
+        }
+    }
+
     /// Max ‖x_i‖² over the dataset (the paper's r_max).
     pub fn r_max(&self) -> f64 {
         self.row_norms_sq.iter().fold(0.0f64, |m, &v| m.max(v))
@@ -137,6 +155,23 @@ mod tests {
     fn mismatched_labels_panic() {
         let x = CsrMatrix::from_dense(2, 1, &[1.0, 2.0]);
         Dataset::new("bad", x, vec![1.0]);
+    }
+
+    #[test]
+    fn permute_rows_matches_gather_rows_bitwise() {
+        let d = tiny();
+        let perm = [2usize, 0, 3, 1];
+        let gathered = d.gather_rows(&perm);
+        let permuted = d.clone().permute_rows(&perm);
+        assert_eq!(permuted.y, gathered.y);
+        assert_eq!(permuted.name, gathered.name);
+        for i in 0..4 {
+            assert_eq!(
+                permuted.row_norms_sq[i].to_bits(),
+                gathered.row_norms_sq[i].to_bits()
+            );
+            assert_eq!(permuted.x.row(i), gathered.x.row(i));
+        }
     }
 
     #[test]

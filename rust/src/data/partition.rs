@@ -18,9 +18,12 @@
 //! cloned sub-matrix. [`Partition::apply_permutation`] bridges the two:
 //! it reorders the dataset **once** (concatenating the parts in worker
 //! order) and returns a [`ShardLayout`] — the shared `Arc<Dataset>`, the
-//! equivalent contiguous partition over it, and the global↔local
-//! [`RowPermutation`] for scattering Δα back to the caller's row order.
-//! A partition that is already contiguous permutes nothing and keeps the
+//! `(start, len)` row range each worker occupies in it, and the
+//! global↔local [`RowPermutation`] for scattering Δα back to the
+//! caller's row order. In a contiguous layout a shard's index list is
+//! fully derivable from its range, so the layout carries K `(start,
+//! len)` pairs instead of K index vectors totalling n entries. A
+//! partition that is already contiguous permutes nothing and keeps the
 //! caller's `Arc`.
 
 use crate::data::Dataset;
@@ -104,17 +107,36 @@ impl Partition {
         next == self.n
     }
 
+    /// The `(start, len)` row range each part occupies once the parts are
+    /// laid out consecutively in worker order — the shard addressing of a
+    /// permuted-contiguous layout. K pairs instead of K index lists
+    /// totalling n entries.
+    pub fn shard_ranges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.k());
+        let mut pos = 0usize;
+        for part in &self.parts {
+            out.push((pos, part.len()));
+            pos += part.len();
+        }
+        out
+    }
+
     /// Reorder `data` **once** so that every part becomes a contiguous row
     /// range, and return the resulting [`ShardLayout`]: the shared
-    /// (possibly permuted) dataset, the equivalent contiguous partition
-    /// over it, and the row maps back to the caller's original order.
+    /// (possibly permuted) dataset, the per-worker `(start, len)` shard
+    /// ranges over it, and the row maps back to the caller's original
+    /// order.
     ///
     /// Permuted row `p` holds original row `layout.rows.new_to_old[p]`;
     /// within each part the original order of its index list is preserved,
     /// so per-shard contents — and therefore local-solver trajectories —
     /// are identical to the index-list semantics. A partition that is
     /// already contiguous returns the caller's `Arc` untouched (true
-    /// zero-copy).
+    /// zero-copy). When the caller passes in the **only** reference to the
+    /// dataset, the reorder consumes it through
+    /// [`Dataset::permute_rows`] — storage is replaced array by array, so
+    /// ingest never holds two full datasets; a shared dataset falls back
+    /// to [`Dataset::gather_rows`], leaving the caller's copy intact.
     pub fn apply_permutation(&self, data: Arc<Dataset>) -> ShardLayout {
         assert_eq!(self.n, data.n(), "partition n != dataset n");
         assert!(
@@ -124,7 +146,7 @@ impl Partition {
         if self.is_contiguous_layout() {
             return ShardLayout {
                 data,
-                partition: self.clone(),
+                shards: self.shard_ranges(),
                 rows: RowPermutation::identity(self.n),
             };
         }
@@ -136,16 +158,14 @@ impl Partition {
         for (new, &old) in new_to_old.iter().enumerate() {
             old_to_new[old] = new;
         }
-        let permuted = Arc::new(data.gather_rows(&new_to_old));
-        let mut parts = Vec::with_capacity(self.k());
-        let mut pos = 0usize;
-        for part in &self.parts {
-            parts.push((pos..pos + part.len()).collect());
-            pos += part.len();
-        }
+        // Both branches are bit-identical; they differ only in peak memory.
+        let permuted = match Arc::try_unwrap(data) {
+            Ok(owned) => Arc::new(owned.permute_rows(&new_to_old)),
+            Err(shared) => Arc::new(shared.gather_rows(&new_to_old)),
+        };
         ShardLayout {
             data: permuted,
-            partition: Partition { parts, n: self.n },
+            shards: self.shard_ranges(),
             rows: RowPermutation {
                 new_to_old,
                 old_to_new,
@@ -200,10 +220,19 @@ impl RowPermutation {
 pub struct ShardLayout {
     /// The shared — possibly permuted — dataset every shard views into.
     pub data: Arc<Dataset>,
-    /// The contiguous partition over `data` (part k is a row range).
-    pub partition: Partition,
+    /// Worker k's rows of `data` as a `(start, len)` range — the whole
+    /// addressing of a contiguous layout; index lists are derivable as
+    /// `start..start + len`.
+    pub shards: Vec<(usize, usize)>,
     /// Maps between layout order and the caller's original row order.
     pub rows: RowPermutation,
+}
+
+impl ShardLayout {
+    /// Number of shards K.
+    pub fn k(&self) -> usize {
+        self.shards.len()
+    }
 }
 
 /// Shuffled equal split (sizes differ by at most 1).
@@ -359,7 +388,9 @@ mod tests {
         let layout = part.apply_permutation(Arc::clone(&data));
         assert!(Arc::ptr_eq(&layout.data, &data), "identity must not copy");
         assert!(layout.rows.is_identity());
-        assert_eq!(layout.partition.parts, part.parts);
+        assert_eq!(layout.shards, part.shard_ranges());
+        assert_eq!(layout.shards, vec![(0, 4), (4, 4), (8, 4)]);
+        assert_eq!(layout.k(), 3);
     }
 
     #[test]
@@ -368,21 +399,26 @@ mod tests {
         let data = Arc::new(generate(&SynthConfig::new("ap", 30, 5).seed(2)));
         let part = random_balanced(30, 4, 9);
         let layout = part.apply_permutation(Arc::clone(&data));
-        assert!(layout.partition.is_contiguous_layout());
-        assert!(layout.partition.is_exact_cover());
-        assert_eq!(layout.partition.sizes(), part.sizes());
+        // shards tile 0..n in worker order with the original part sizes
+        let sizes: Vec<usize> = layout.shards.iter().map(|&(_, len)| len).collect();
+        assert_eq!(sizes, part.sizes());
+        let mut next = 0usize;
+        for &(start, len) in &layout.shards {
+            assert_eq!(start, next);
+            next += len;
+        }
+        assert_eq!(next, 30);
         // permuted row p holds original row new_to_old[p], part order kept
-        let mut pos = 0usize;
         for (k, rows) in part.parts.iter().enumerate() {
+            let (start, len) = layout.shards[k];
+            assert_eq!(len, rows.len());
             for (li, &old) in rows.iter().enumerate() {
-                let new = pos + li;
+                let new = start + li;
                 assert_eq!(layout.rows.new_to_old[new], old);
                 assert_eq!(layout.rows.old_to_new[old], new);
                 assert_eq!(layout.data.y[new], data.y[old]);
                 assert_eq!(layout.data.x.row(new), data.x.row(old));
-                assert_eq!(layout.partition.parts[k][li], new);
             }
-            pos += rows.len();
         }
         // round-trip a vector through the maps
         let v: Vec<f64> = (0..30).map(|i| i as f64).collect();

@@ -28,11 +28,16 @@
 //! ([`linalg::CsrShard`]) into it — no per-worker matrix clones and no
 //! separate leader copy (resident data is 1× the dataset, down from ≈2×).
 //! An arbitrary partition is realized by reordering the dataset **once**
-//! into the permuted-contiguous [`data::ShardLayout`] (every part becomes
-//! a contiguous row range; [`data::RowPermutation`] maps back to the
-//! caller's row order); a partition that is already contiguous permutes
-//! nothing. Per-shard contents are unchanged by the layout, so solver
-//! trajectories match the index-list semantics exactly.
+//! into the permuted-contiguous [`data::ShardLayout`]: every part becomes
+//! a `(start, len)` row range — the whole shard addressing is K such
+//! pairs, with no per-row index lists on the round path — and
+//! [`data::RowPermutation`] maps back to the caller's row order. A
+//! partition that is already contiguous permutes nothing, and the ingest
+//! path that does permute consumes the caller's dataset in place
+//! ([`data::Dataset::permute_rows`] via `Arc::try_unwrap`) so peak
+//! memory stays near one dataset even while reordering. Per-shard
+//! contents are unchanged by the layout, so solver trajectories match
+//! the index-list semantics exactly.
 //!
 //! ## Execution model
 //!
@@ -59,9 +64,31 @@
 //!   and round timeouts surface as [`coordinator::PoolError`]s naming
 //!   the workers — a failed round is an error, never a hang.
 //!
+//! The socket leader broadcasts each round's frame to all K workers from
+//! concurrent sender threads (one per connection), so the last worker no
+//! longer waits behind K−1 serializations before its copy even starts;
+//! the per-worker `send` spans land on each worker's trace lane under a
+//! single leader-lane `broadcast` umbrella.
+//!
 //! All three produce bit-identical trajectories (seeded per-worker solver
 //! streams + worker-id-ordered reduce + bit-exact shard transport), which
 //! `rust/tests/determinism.rs` locks in as a three-way invariant.
+//!
+//! ## Kernels
+//!
+//! The hot inner products and AXPYs route through [`linalg::simd`]:
+//! runtime-dispatched AVX2 on x86-64 with a portable 4-lane scalar
+//! fallback, both sides computing in the **same fixed lane and
+//! reduction order** (multiply-then-add, never FMA) so results are
+//! bit-identical whichever path runs — determinism never depends on the
+//! CPU. `COCOA_NO_SIMD=1` pins a process to the scalar path;
+//! [`linalg::simd::force_scalar`] does the same in-process for tests.
+//! The CSR kernels add a gather-free dense-row fast path and a
+//! cache-blocked multi-row margin sweep
+//! ([`linalg::CsrMatrix::rows_dot`]) used by the certificate pass and
+//! batch prediction. `benches/bench_hotpath.rs` tracks the payoff
+//! against the committed `BENCH_<pr>.json` snapshot via
+//! `benches/bench_compare.rs`.
 //!
 //! ## Distributed duality-gap certificates
 //!
@@ -150,7 +177,9 @@
 //! captures the Driver's rounds, each executor's
 //! broadcast/compute/barrier/reduce phases per worker, and the socket
 //! executor's per-frame wire time; `cocoa serve --trace-out` captures
-//! the request path; `cocoa trace-check` validates the result. Measured
+//! the request path; `cocoa trace-check` validates the result, and
+//! `cocoa trace-summary` renders it as a per-phase wall-clock budget
+//! table. Measured
 //! socket wire time flows into [`coordinator::comm::CommStats`] next to
 //! the simulated communication model, and `cocoa train` prints a
 //! measured-vs-simulated validation report from it. Tracing is strictly
@@ -166,9 +195,9 @@
 //! justified `unsafe`, deadlock-free lock nesting in the serve layer —
 //! are machine-checked, not aspirational. The workspace member `lint/`
 //! (`cargo run -p cocoa-lint`) walks `rust/src` with a dependency-free
-//! lexer and enforces four rule families (`no_panic`, `determinism`,
-//! `unsafe_safety`, `lock_order`) as a required CI gate, with Miri and
-//! nightly ThreadSanitizer lanes behind it. The rule catalog, the
+//! lexer and enforces the rule families (`no_panic`, `determinism`,
+//! `unsafe_safety`, `lock_order`, `arith_overflow`) as a required CI
+//! gate, with Miri and nightly ThreadSanitizer lanes behind it. The rule catalog, the
 //! declared lock-order ranking, and the reasoned inline waiver syntax
 //! (`lint:allow`) are documented in `ANALYSIS.md` at the repo root.
 

@@ -5,36 +5,25 @@
 //! when the data matrix is sparse. Everything is written allocation-free
 //! over slices so callers control buffer reuse.
 
-/// Dot product.
+use crate::linalg::simd;
+
+/// Dot product. Dispatches to the explicit-SIMD kernel
+/// ([`crate::linalg::simd::dot`]); the 4-lane accumulator layout and the
+/// final `s0 + s1 + s2 + s3 + tail` reduction are fixed there, so the
+/// returned bits are identical whether AVX2 or the portable scalar
+/// fallback ran.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulation: gives the autovectorizer independent
-    // chains and keeps numerics stable enough for our use.
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut tail = 0.0;
-    for i in chunks * 4..n {
-        tail += a[i] * b[i];
-    }
-    s0 + s1 + s2 + s3 + tail
+    simd::dot(a, b)
 }
 
-/// `y += alpha * x`.
+/// `y += alpha * x` (SIMD-dispatched; per-element mul-then-add, so bits
+/// never depend on the selected kernel).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += alpha * *xi;
-    }
+    simd::axpy(alpha, x, y)
 }
 
 /// `x *= alpha`.

@@ -4,6 +4,7 @@
 
 pub mod dense;
 pub mod power_iter;
+pub mod simd;
 pub mod sparse;
 
 pub use power_iter::{sigma_k, spectral_norm_sq};

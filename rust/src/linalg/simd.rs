@@ -1,0 +1,518 @@
+//! Explicit-SIMD f64 kernels with a **fixed lane-reduction order**.
+//!
+//! Every executor (sequential, pooled, socket) and the serving path score
+//! through these four primitives, so they carry the repo's determinism
+//! contract: for a given input, the returned bits are identical no matter
+//! which implementation ran. That holds because the AVX2 paths and the
+//! portable 4-lane-unrolled scalar fallback share one accumulator layout:
+//!
+//! * lane `j ∈ {0,1,2,3}` accumulates elements `i ≡ j (mod 4)` over the
+//!   full 4-chunks, as `lane_j += a[i] * b[i]` (separate mul then add —
+//!   **never** a fused multiply-add, which rounds differently);
+//! * leftover elements accumulate left-to-right into a single `tail`;
+//! * the reduction is always `((((s0 + s1) + s2) + s3) + tail)`.
+//!
+//! AVX2 maps lane `j` onto lane `j` of one `__m256d` accumulator and
+//! reduces by extracting the four lanes in index order, so each partial
+//! sum sees exactly the same sequence of f64 additions as the scalar
+//! code. `axpy`/`scatter_axpy` touch every output element with a single
+//! `y[i] + c·x[i]`, so their bit-identity needs no ordering argument at
+//! all (again: no FMA).
+//!
+//! Dispatch is resolved once per process from runtime CPU detection;
+//! setting the `COCOA_NO_SIMD` environment variable (any value) forces
+//! the scalar fallback — the escape hatch for debugging a suspected
+//! kernel issue. [`force_scalar`] is the in-process equivalent used by
+//! the determinism suite to exercise both paths in one binary. Because
+//! both paths are bit-identical, flipping the mode mid-run is benign.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+const MODE_UNRESOLVED: u8 = 0;
+const MODE_SCALAR: u8 = 1;
+const MODE_AVX2: u8 = 2;
+
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNRESOLVED);
+
+fn detect() -> u8 {
+    if std::env::var_os("COCOA_NO_SIMD").is_some() {
+        return MODE_SCALAR;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return MODE_AVX2;
+        }
+    }
+    MODE_SCALAR
+}
+
+/// The resolved kernel mode (cached after the first call).
+#[inline]
+fn mode() -> u8 {
+    let m = MODE.load(Ordering::Relaxed);
+    if m != MODE_UNRESOLVED {
+        return m;
+    }
+    let detected = detect();
+    MODE.store(detected, Ordering::Relaxed);
+    detected
+}
+
+/// Force the portable scalar path (`true`) or return to runtime
+/// detection (`false`). Exists so the determinism and property suites
+/// can drive both implementations from one process; safe to flip at any
+/// time because the two paths are bit-identical by construction.
+pub fn force_scalar(on: bool) {
+    let m = if on { MODE_SCALAR } else { MODE_UNRESOLVED };
+    MODE.store(m, Ordering::Relaxed);
+}
+
+/// True when the AVX2 paths are selected (detection already resolved).
+pub fn avx2_active() -> bool {
+    mode() == MODE_AVX2
+}
+
+// ---------------------------------------------------------------------
+// Dense dot: aᵀb
+// ---------------------------------------------------------------------
+
+/// Portable reference: 4 independent scalar lanes + left-to-right tail,
+/// reduced in the fixed order. This is both the non-x86 fallback and the
+/// bit-for-bit oracle the AVX2 path is property-tested against.
+#[inline]
+pub fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut tail = 0.0;
+    for i in chunks * 4..n {
+        tail += a[i] * b[i];
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
+/// AVX2 dense dot with the shared lane layout.
+///
+/// # Safety
+/// Callers must ensure the CPU supports AVX2 (`is_x86_feature_detected!`)
+/// and that `a.len() == b.len()`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+// SAFETY: `unsafe fn` — the AVX2 intrinsics below require the caller to
+// have verified CPU support; all pointer arithmetic stays within the
+// equal-length input slices (loop bound `chunks * 4 <= n`).
+unsafe fn dot_avx2(a: &[f64], b: &[f64]) -> f64 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    // SAFETY: loads read a[i..i+4] and b[i..i+4] with i + 4 <= chunks*4
+    // <= n; unaligned loads are explicitly allowed by _mm256_loadu_pd.
+    let mut acc = _mm256_setzero_pd();
+    for c in 0..chunks {
+        let i = c * 4;
+        let va = _mm256_loadu_pd(a.as_ptr().add(i));
+        let vb = _mm256_loadu_pd(b.as_ptr().add(i));
+        // mul then add (NOT fmadd): each lane j performs the same
+        // `s_j += a[i+j] * b[i+j]` rounding steps as the scalar lanes.
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(va, vb));
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    let mut tail = 0.0;
+    for i in chunks * 4..n {
+        tail += a[i] * b[i];
+    }
+    ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3] + tail
+}
+
+/// Dense dot product, dispatching to AVX2 when available. Bit-identical
+/// to [`dot_scalar`] on every input.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if mode() == MODE_AVX2 {
+            // SAFETY: MODE_AVX2 is only ever stored after
+            // `is_x86_feature_detected!("avx2")` returned true.
+            return unsafe { dot_avx2(a, b) };
+        }
+    }
+    dot_scalar(a, b)
+}
+
+// ---------------------------------------------------------------------
+// Sparse gather dot: Σ vals[t] · v[idx[t]]
+// ---------------------------------------------------------------------
+
+/// Portable reference for the CSR row dot: same 4-lane layout as
+/// [`dot_scalar`], with the gather `v[idx[t]]` unchecked.
+///
+/// # Safety
+/// Every `idx[t]` must be `< v.len()` (the CSR constructors validate
+/// columns against `cols`, and callers pass `v.len() == cols`).
+#[inline]
+// SAFETY: `unsafe fn` — the gathers below index `v` by caller-validated
+// CSR column indices; see the Safety section above.
+pub unsafe fn gather_dot_scalar(idx: &[u32], vals: &[f64], v: &[f64]) -> f64 {
+    debug_assert_eq!(idx.len(), vals.len());
+    let n = idx.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        // SAFETY: i + 3 < chunks * 4 <= n bounds the CSR arrays, and all
+        // indices are < v.len() per the function contract.
+        unsafe {
+            s0 += vals[i] * *v.get_unchecked(idx[i] as usize);
+            s1 += vals[i + 1] * *v.get_unchecked(idx[i + 1] as usize);
+            s2 += vals[i + 2] * *v.get_unchecked(idx[i + 2] as usize);
+            s3 += vals[i + 3] * *v.get_unchecked(idx[i + 3] as usize);
+        }
+    }
+    let mut tail = 0.0;
+    for i in chunks * 4..n {
+        // SAFETY: i < n bounds the CSR arrays; idx[i] < v.len() per the
+        // function contract.
+        unsafe {
+            tail += vals[i] * *v.get_unchecked(idx[i] as usize);
+        }
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
+/// AVX2 gather dot with the shared lane layout, using `vgatherdpd` for
+/// the indexed loads.
+///
+/// # Safety
+/// CPU must support AVX2; every `idx[t]` must be `< v.len()`, and
+/// `v.len()` must fit in `i32` (the gather interprets indices as signed
+/// 32-bit — the dispatcher falls back to scalar above that).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+// SAFETY: `unsafe fn` — gathers read v[idx[t]] for caller-validated
+// indices; lane layout mirrors gather_dot_scalar exactly.
+unsafe fn gather_dot_avx2(idx: &[u32], vals: &[f64], v: &[f64]) -> f64 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(idx.len(), vals.len());
+    let n = idx.len();
+    let chunks = n / 4;
+    let mut acc = _mm256_setzero_pd();
+    // SAFETY: each iteration reads idx[i..i+4] / vals[i..i+4] in bounds,
+    // and the gather dereferences v + idx[i+j] with idx[i+j] < v.len()
+    // (caller contract) interpreted as a non-negative i32 (caller
+    // guarantees v.len() <= i32::MAX).
+    for c in 0..chunks {
+        let i = c * 4;
+        let vi = _mm_loadu_si128(idx.as_ptr().add(i) as *const __m128i);
+        let gathered = _mm256_i32gather_pd::<8>(v.as_ptr(), vi);
+        let vv = _mm256_loadu_pd(vals.as_ptr().add(i));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(vv, gathered));
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    let mut tail = 0.0;
+    for i in chunks * 4..n {
+        // SAFETY: i < n; idx[i] < v.len() per the caller contract.
+        tail += vals[i] * *v.get_unchecked(idx[i] as usize);
+    }
+    ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3] + tail
+}
+
+/// Sparse gather dot `Σ vals[t]·v[idx[t]]`, dispatching to the AVX2
+/// `vgatherdpd` path when available. Bit-identical to
+/// [`gather_dot_scalar`] on every input.
+///
+/// # Safety
+/// Every `idx[t]` must be `< v.len()`.
+#[inline]
+// SAFETY: `unsafe fn` — forwards the caller's index-validity contract to
+// the selected implementation.
+pub unsafe fn gather_dot(idx: &[u32], vals: &[f64], v: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        // The i32 gather sign-extends indices, so columns past i32::MAX
+        // must take the scalar path (no real dataset gets there, but the
+        // kernel must not be the thing that breaks first).
+        if mode() == MODE_AVX2 && v.len() <= i32::MAX as usize {
+            // SAFETY: AVX2 verified by detection; index bound and i32
+            // range checked above; remaining contract forwarded.
+            return unsafe { gather_dot_avx2(idx, vals, v) };
+        }
+    }
+    // SAFETY: identical caller contract.
+    unsafe { gather_dot_scalar(idx, vals, v) }
+}
+
+// ---------------------------------------------------------------------
+// Dense axpy: y += c·x
+// ---------------------------------------------------------------------
+
+/// Portable `y[i] += c * x[i]`. Each output element is touched by exactly
+/// one multiply-then-add, so ordering cannot affect bits.
+#[inline]
+pub fn axpy_scalar(c: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += c * *xi;
+    }
+}
+
+/// AVX2 `y += c·x` (mul then add per element — no FMA).
+///
+/// # Safety
+/// CPU must support AVX2; `x.len() == y.len()`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+// SAFETY: `unsafe fn` — vector loads/stores stay within the equal-length
+// slices; per-element arithmetic matches axpy_scalar.
+unsafe fn axpy_avx2(c: f64, x: &[f64], y: &mut [f64]) {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let vc = _mm256_set1_pd(c);
+    // SAFETY: loads/stores touch x[i..i+4] / y[i..i+4], i + 4 <= n.
+    for ch in 0..chunks {
+        let i = ch * 4;
+        let vx = _mm256_loadu_pd(x.as_ptr().add(i));
+        let vy = _mm256_loadu_pd(y.as_ptr().add(i));
+        _mm256_storeu_pd(
+            y.as_mut_ptr().add(i),
+            _mm256_add_pd(vy, _mm256_mul_pd(vc, vx)),
+        );
+    }
+    for i in chunks * 4..n {
+        y[i] += c * x[i];
+    }
+}
+
+/// `y += c·x`, dispatching to AVX2 when available. Bit-identical to
+/// [`axpy_scalar`].
+#[inline]
+pub fn axpy(c: f64, x: &[f64], y: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if mode() == MODE_AVX2 {
+            // SAFETY: MODE_AVX2 implies detection succeeded; lengths are
+            // asserted inside.
+            unsafe { axpy_avx2(c, x, y) };
+            return;
+        }
+    }
+    axpy_scalar(c, x, y)
+}
+
+// ---------------------------------------------------------------------
+// Sparse scatter axpy: v[idx[t]] += c·vals[t]
+// ---------------------------------------------------------------------
+
+/// 4-way unrolled scatter `v[idx[t]] += c·vals[t]`. AVX2 has no scatter
+/// store, so the unrolled scalar form (independent address chains for
+/// the prefetcher) is the fast portable answer; CSR rows never repeat a
+/// column, so each output element is touched once and bit-identity is
+/// order-free.
+///
+/// # Safety
+/// Every `idx[t]` must be `< v.len()`.
+#[inline]
+// SAFETY: `unsafe fn` — the scatter stores index `v` by caller-validated
+// CSR column indices.
+pub unsafe fn scatter_axpy(c: f64, idx: &[u32], vals: &[f64], v: &mut [f64]) {
+    debug_assert_eq!(idx.len(), vals.len());
+    let n = idx.len();
+    let chunks = n / 4;
+    for ch in 0..chunks {
+        let i = ch * 4;
+        // SAFETY: i + 3 < n bounds the CSR arrays; all indices < v.len()
+        // per the function contract. CSR rows hold strictly increasing
+        // columns, so the four targets are distinct elements.
+        unsafe {
+            *v.get_unchecked_mut(idx[i] as usize) += c * vals[i];
+            *v.get_unchecked_mut(idx[i + 1] as usize) += c * vals[i + 1];
+            *v.get_unchecked_mut(idx[i + 2] as usize) += c * vals[i + 2];
+            *v.get_unchecked_mut(idx[i + 3] as usize) += c * vals[i + 3];
+        }
+    }
+    for i in chunks * 4..n {
+        // SAFETY: i < n; idx[i] < v.len() per the function contract.
+        unsafe {
+            *v.get_unchecked_mut(idx[i] as usize) += c * vals[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Adversarial dense vector patterns: empty, single element, exact
+    /// multiples of the lane width, lane width ± 1, signed zeros,
+    /// subnormals, and magnitude spreads that make reassociation visible.
+    fn dense_cases() -> Vec<(Vec<f64>, Vec<f64>)> {
+        let mut cases: Vec<(Vec<f64>, Vec<f64>)> = vec![
+            (vec![], vec![]),
+            (vec![2.5], vec![-0.5]),
+            (vec![-0.0, 0.0, -0.0], vec![1.0, -1.0, 0.0]),
+        ];
+        for n in [3usize, 4, 5, 7, 8, 15, 16, 17, 64, 257] {
+            let a: Vec<f64> = (0..n)
+                .map(|i| {
+                    let base = ((i * 37 + 11) % 101) as f64 - 50.0;
+                    // mix in subnormals, signed zeros, and huge spreads
+                    match i % 7 {
+                        0 => base * 1e-310,            // subnormal territory
+                        1 => -0.0,
+                        2 => base * 1e12,
+                        _ => base * 0.25,
+                    }
+                })
+                .collect();
+            let b: Vec<f64> = (0..n)
+                .map(|i| (((i * 53 + 5) % 97) as f64 - 48.0) * 0.5)
+                .collect();
+            cases.push((a, b));
+        }
+        cases
+    }
+
+    #[test]
+    fn dot_dispatch_matches_scalar_bitwise() {
+        for (a, b) in dense_cases() {
+            let want = dot_scalar(&a, &b).to_bits();
+            assert_eq!(dot(&a, &b).to_bits(), want, "n = {}", a.len());
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn dot_avx2_matches_scalar_bitwise() {
+        if !is_x86_feature_detected!("avx2") {
+            return; // nothing to compare on this host (e.g. under Miri)
+        }
+        for (a, b) in dense_cases() {
+            let want = dot_scalar(&a, &b).to_bits();
+            // SAFETY: AVX2 support checked above; equal lengths by
+            // construction of the cases.
+            let got = unsafe { dot_avx2(&a, &b) }.to_bits();
+            assert_eq!(got, want, "n = {}", a.len());
+        }
+    }
+
+    /// Adversarial sparse patterns over a d-length target: empty row,
+    /// single nnz, fully dense row, strided gathers, repeated magnitude
+    /// extremes.
+    fn sparse_cases(d: usize) -> Vec<(Vec<u32>, Vec<f64>)> {
+        let dense: Vec<u32> = (0..d as u32).collect();
+        let dense_vals: Vec<f64> = (0..d).map(|i| ((i % 13) as f64 - 6.0) * 0.5).collect();
+        let mut cases = vec![
+            (vec![], vec![]),
+            (vec![(d - 1) as u32], vec![1e-308]),
+            (vec![0, 1, 2], vec![-0.0, 0.0, 5.0]),
+            (dense, dense_vals),
+        ];
+        for nnz in [4usize, 5, 9, 31, 32, 33] {
+            let idx: Vec<u32> = (0..nnz).map(|i| ((i * 17 + 3) % d) as u32).collect();
+            let mut idx = idx;
+            idx.sort_unstable();
+            idx.dedup();
+            let vals: Vec<f64> = idx
+                .iter()
+                .map(|&c| match c % 5 {
+                    0 => 1e-312,
+                    1 => -3.75e10,
+                    _ => (c as f64 - 8.0) * 0.125,
+                })
+                .collect();
+            cases.push((idx, vals));
+        }
+        cases
+    }
+
+    #[test]
+    fn gather_dot_dispatch_matches_scalar_bitwise() {
+        let d = 64;
+        let v: Vec<f64> = (0..d).map(|i| ((i * 29 + 7) % 31) as f64 - 15.0).collect();
+        for (idx, vals) in sparse_cases(d) {
+            // SAFETY: all test indices are built < d = v.len().
+            let (got, want) = unsafe {
+                (
+                    gather_dot(&idx, &vals, &v).to_bits(),
+                    gather_dot_scalar(&idx, &vals, &v).to_bits(),
+                )
+            };
+            assert_eq!(got, want, "nnz = {}", idx.len());
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn gather_dot_avx2_matches_scalar_bitwise() {
+        if !is_x86_feature_detected!("avx2") {
+            return;
+        }
+        let d = 96;
+        let v: Vec<f64> = (0..d).map(|i| ((i * 41 + 13) % 37) as f64 * 0.25).collect();
+        for (idx, vals) in sparse_cases(d) {
+            // SAFETY: AVX2 checked above; indices < d = v.len(); d fits
+            // in i32 trivially.
+            let (got, want) = unsafe {
+                (
+                    gather_dot_avx2(&idx, &vals, &v).to_bits(),
+                    gather_dot_scalar(&idx, &vals, &v).to_bits(),
+                )
+            };
+            assert_eq!(got, want, "nnz = {}", idx.len());
+        }
+    }
+
+    #[test]
+    fn axpy_dispatch_matches_scalar_bitwise() {
+        for (x, _) in dense_cases() {
+            let y0: Vec<f64> = (0..x.len()).map(|i| (i as f64 - 2.0) * 0.3).collect();
+            let mut y_scalar = y0.clone();
+            let mut y_dispatch = y0;
+            axpy_scalar(-1.75, &x, &mut y_scalar);
+            axpy(-1.75, &x, &mut y_dispatch);
+            let a: Vec<u64> = y_scalar.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u64> = y_dispatch.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "n = {}", x.len());
+        }
+    }
+
+    #[test]
+    fn scatter_axpy_applies_each_target_once() {
+        let d = 16;
+        let idx: Vec<u32> = vec![0, 3, 4, 7, 8, 11, 15];
+        let vals: Vec<f64> = idx.iter().map(|&c| c as f64 + 0.5).collect();
+        let mut v = vec![1.0; d];
+        // SAFETY: indices above are all < d = v.len().
+        unsafe { scatter_axpy(2.0, &idx, &vals, &mut v) };
+        for (t, &c) in idx.iter().enumerate() {
+            assert_eq!(v[c as usize], 1.0 + 2.0 * vals[t]);
+        }
+        assert_eq!(v[1], 1.0);
+        assert_eq!(v[14], 1.0);
+    }
+
+    #[test]
+    fn force_scalar_switches_and_restores() {
+        force_scalar(true);
+        assert!(!avx2_active());
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = vec![0.5; 5];
+        let scalar_bits = dot(&a, &b).to_bits();
+        force_scalar(false);
+        // whatever mode detection lands on, the bits must not move
+        assert_eq!(dot(&a, &b).to_bits(), scalar_bits);
+    }
+}

@@ -13,7 +13,7 @@
 //! shared dataset instead of a cloned sub-matrix — the storage layer of
 //! the shared data plane (see [`crate::subproblem::LocalBlock`]).
 
-use crate::linalg::dense;
+use crate::linalg::{dense, simd};
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct CsrMatrix {
@@ -115,6 +115,57 @@ impl CsrMatrix {
         })
     }
 
+    /// Build a multi-row matrix from *untrusted* per-row (column, value)
+    /// lists — the batch counterpart of [`CsrMatrix::row_from_pairs`],
+    /// sharing its exact merge semantics (stable sort, left-to-right
+    /// duplicate summing, exact zeros dropped). Because each row merges
+    /// bit-identically to `row_from_pairs`, a batched prediction scores
+    /// exactly like the same rows predicted one at a time. Hostile input
+    /// surfaces as `Err` naming the offending row.
+    pub fn rows_from_pairs(cols: usize, rows: &[Vec<(usize, f64)>]) -> Result<CsrMatrix, String> {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        let mut scratch: Vec<(usize, f64)> = Vec::new();
+        for (r, row) in rows.iter().enumerate() {
+            scratch.clear();
+            for &(c, v) in row {
+                if c >= cols {
+                    return Err(format!(
+                        "row {r}: feature index {c} out of range (d = {cols})"
+                    ));
+                }
+                if !v.is_finite() {
+                    return Err(format!("row {r}: feature {c} has non-finite value {v}"));
+                }
+                scratch.push((c, v));
+            }
+            scratch.sort_by_key(|&(c, _)| c);
+            let mut j = 0;
+            while j < scratch.len() {
+                let (c, mut v) = scratch[j];
+                j += 1;
+                while j < scratch.len() && scratch[j].0 == c {
+                    v += scratch[j].1;
+                    j += 1;
+                }
+                if v != 0.0 {
+                    indices.push(c as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Ok(CsrMatrix {
+            rows: rows.len(),
+            cols,
+            indptr,
+            indices,
+            values,
+        })
+    }
+
     /// Build from a dense row-major matrix (used in tests and the XLA path).
     pub fn from_dense(rows: usize, cols: usize, data: &[f64]) -> CsrMatrix {
         assert_eq!(data.len(), rows * cols);
@@ -160,42 +211,26 @@ impl CsrMatrix {
 
     /// x_iᵀ v for dense v.
     ///
-    /// Hot path of every SDCA step. The `zip` removes the bounds checks on
-    /// the CSR arrays; the gather `v[c]` is checked once against `v.len()`
-    /// via the debug assert + unsafe read (columns are validated against
-    /// `cols` at construction, so `c < cols == v.len()`).
+    /// Hot path of every SDCA step. Fully dense rows (indices are exactly
+    /// `0..cols` — sorted, deduped at construction) take the contiguous
+    /// dense kernel; everything else takes the gather kernel. Both
+    /// dispatch to AVX2 with a portable scalar fallback in
+    /// [`crate::linalg::simd`], and both have a fixed lane-reduction
+    /// order, so the returned bits do not depend on which path ran.
     #[inline]
     pub fn row_dot(&self, i: usize, v: &[f64]) -> f64 {
         debug_assert_eq!(v.len(), self.cols);
         let (idx, vals) = self.row(i);
-        // Fully dense row ⇒ indices are exactly 0..cols (sorted, deduped
-        // at construction): use the contiguous SIMD-friendly dot.
         if idx.len() == self.cols {
             return dense::dot(vals, v);
         }
-        let (mut s0, mut s1) = (0.0, 0.0);
-        let mut it = idx.chunks_exact(2).zip(vals.chunks_exact(2));
-        for (c2, v2) in &mut it {
-            // SAFETY: all indices < self.cols = v.len() (checked on build).
-            unsafe {
-                s0 += v2[0] * *v.get_unchecked(c2[0] as usize);
-                s1 += v2[1] * *v.get_unchecked(c2[1] as usize);
-            }
-        }
-        if idx.len() % 2 == 1 {
-            let j = idx.len() - 1;
-            // SAFETY: j = idx.len() - 1 is in bounds for both CSR arrays
-            // (idx and vals share one length by construction), and
-            // idx[j] < self.cols = v.len() — columns are validated against
-            // `cols` when the matrix is built.
-            unsafe {
-                s0 += vals[j] * *v.get_unchecked(idx[j] as usize);
-            }
-        }
-        s0 + s1
+        // SAFETY: all indices < self.cols = v.len() (checked on build).
+        unsafe { simd::gather_dot(idx, vals, v) }
     }
 
-    /// v += c * x_i for dense v (same safety argument as `row_dot`).
+    /// v += c * x_i for dense v (same safety argument as `row_dot`):
+    /// dense rows use the vectorized axpy, sparse rows the unrolled
+    /// scatter kernel.
     #[inline]
     pub fn row_axpy(&self, i: usize, c: f64, v: &mut [f64]) {
         debug_assert_eq!(v.len(), self.cols);
@@ -203,11 +238,46 @@ impl CsrMatrix {
         if idx.len() == self.cols {
             return dense::axpy(c, vals, v);
         }
-        for (&col, &val) in idx.iter().zip(vals.iter()) {
-            // SAFETY: all indices < self.cols = v.len() (checked on build).
-            unsafe {
-                *v.get_unchecked_mut(col as usize) += c * val;
+        // SAFETY: all indices < self.cols = v.len() (checked on build).
+        unsafe { simd::scatter_axpy(c, idx, vals, v) }
+    }
+
+    /// `out[b] = x_{start+b}ᵀ v` for every `b < out.len()` — the blocked
+    /// multi-row form of [`CsrMatrix::row_dot`] behind `matvec`, serve
+    /// batch prediction, and certificate margins.
+    ///
+    /// Rows are walked in fixed 64-row blocks: a block's indices/values
+    /// are contiguous in the CSR arrays, so each block streams through
+    /// the low cache levels while `v` stays resident across the whole
+    /// call. Every output element is bit-identical to the corresponding
+    /// single-row `row_dot`.
+    pub fn rows_dot(&self, start: usize, v: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(v.len(), self.cols);
+        assert!(
+            start + out.len() <= self.rows,
+            "rows_dot range [{start}, {}) out of bounds for {} rows",
+            start + out.len(),
+            self.rows
+        );
+        const BLOCK: usize = 64;
+        let mut base = 0;
+        while base < out.len() {
+            let hi = (base + BLOCK).min(out.len());
+            for (b, slot) in out[base..hi].iter_mut().enumerate() {
+                let i = start + base + b;
+                let lo = self.indptr[i];
+                let up = self.indptr[i + 1];
+                let idx = &self.indices[lo..up];
+                let vals = &self.values[lo..up];
+                *slot = if idx.len() == self.cols {
+                    dense::dot(vals, v)
+                } else {
+                    // SAFETY: all indices < self.cols = v.len() (checked
+                    // on build).
+                    unsafe { simd::gather_dot(idx, vals, v) }
+                };
             }
+            base = hi;
         }
     }
 
@@ -221,13 +291,12 @@ impl CsrMatrix {
             .collect()
     }
 
-    /// out = A v  (matvec over rows; out length = rows).
+    /// out = A v  (matvec over rows; out length = rows). Rides the
+    /// blocked [`CsrMatrix::rows_dot`] kernel.
     pub fn matvec(&self, v: &[f64], out: &mut [f64]) {
         assert_eq!(v.len(), self.cols);
         assert_eq!(out.len(), self.rows);
-        for i in 0..self.rows {
-            out[i] = self.row_dot(i, v);
-        }
+        self.rows_dot(0, v, out);
     }
 
     /// out = Aᵀ u  (transpose matvec; out length = cols).
@@ -256,6 +325,46 @@ impl CsrMatrix {
         CsrMatrix {
             rows: row_ids.len(),
             cols: self.cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Consuming variant of [`CsrMatrix::select_rows`] for full row
+    /// permutations: new row `p` holds old row `new_to_old[p]`,
+    /// bit-identical to `select_rows(new_to_old)`, but the old storage is
+    /// replaced one array at a time — the old index array is dropped
+    /// before the new value array is built, so peak memory is one matrix
+    /// plus one nnz-sized array instead of two matrices.
+    pub fn permute_rows(self, new_to_old: &[usize]) -> CsrMatrix {
+        assert_eq!(new_to_old.len(), self.rows, "permutation must cover all rows");
+        let CsrMatrix {
+            rows,
+            cols,
+            indptr: old_ip,
+            indices: old_ix,
+            values: old_v,
+        } = self;
+        let mut indptr = Vec::with_capacity(rows + 1);
+        indptr.push(0usize);
+        let mut nnz = 0usize;
+        for &r in new_to_old {
+            nnz += old_ip[r + 1] - old_ip[r];
+            indptr.push(nnz);
+        }
+        let mut indices = Vec::with_capacity(nnz);
+        for &r in new_to_old {
+            indices.extend_from_slice(&old_ix[old_ip[r]..old_ip[r + 1]]);
+        }
+        drop(old_ix);
+        let mut values = Vec::with_capacity(nnz);
+        for &r in new_to_old {
+            values.extend_from_slice(&old_v[old_ip[r]..old_ip[r + 1]]);
+        }
+        CsrMatrix {
+            rows,
+            cols,
             indptr,
             indices,
             values,
@@ -381,6 +490,18 @@ impl<'a> CsrShard<'a> {
         self.mat.row_axpy(self.start + i, c, v)
     }
 
+    /// `out[b] = x_{start+b}ᵀ v` over shard rows — the same blocked
+    /// kernel as [`CsrMatrix::rows_dot`], offset into the view.
+    pub fn rows_dot(&self, start: usize, v: &[f64], out: &mut [f64]) {
+        assert!(
+            start + out.len() <= self.len,
+            "rows_dot range [{start}, {}) out of bounds for shard of {} rows",
+            start + out.len(),
+            self.len
+        );
+        self.mat.rows_dot(self.start + start, v, out)
+    }
+
     /// ‖x_i‖² for every shard row. Prefer the dataset's cached
     /// `row_norms_sq` slice when one exists (e.g.
     /// [`crate::subproblem::LocalBlock::norms_sq`]) — this recomputes.
@@ -459,6 +580,70 @@ mod tests {
     }
 
     #[test]
+    fn rows_from_pairs_matches_row_from_pairs_bitwise() {
+        let rows = vec![
+            vec![(4usize, 0.5), (1, -2.0), (4, 0.25), (0, 1.5), (3, 0.0)],
+            vec![],
+            vec![(5, -0.0), (2, 1e-310), (2, 3.0)],
+        ];
+        let batch = CsrMatrix::rows_from_pairs(6, &rows).unwrap();
+        assert_eq!(batch.rows, 3);
+        let v = vec![0.5, 1.0, -1.0, 2.0, 4.0, 0.25];
+        for (r, row) in rows.iter().enumerate() {
+            let single = CsrMatrix::row_from_pairs(6, row).unwrap();
+            assert_eq!(batch.row(r), single.row(0), "row {r}");
+            assert_eq!(
+                batch.row_dot(r, &v).to_bits(),
+                single.row_dot(0, &v).to_bits(),
+                "row {r}"
+            );
+        }
+    }
+
+    #[test]
+    fn rows_from_pairs_errors_name_the_row() {
+        let err = CsrMatrix::rows_from_pairs(3, &[vec![(0, 1.0)], vec![(7, 1.0)]]).unwrap_err();
+        assert!(err.contains("row 1"), "{err}");
+        assert!(err.contains("out of range"), "{err}");
+        let err =
+            CsrMatrix::rows_from_pairs(3, &[vec![], vec![], vec![(1, f64::NAN)]]).unwrap_err();
+        assert!(err.contains("row 2"), "{err}");
+        assert!(err.contains("non-finite"), "{err}");
+    }
+
+    #[test]
+    fn rows_dot_matches_row_dot_bitwise() {
+        // > 64 rows so the blocked walk crosses a block boundary, with
+        // empty, single-nnz, and fully dense rows mixed in.
+        let d = 24;
+        let rows: Vec<Vec<(usize, f64)>> = (0..150)
+            .map(|r| match r % 4 {
+                0 => vec![],
+                1 => vec![(r % d, (r as f64 - 40.0) * 0.125)],
+                2 => (0..d).map(|c| (c, ((r + c) % 9) as f64 - 4.0)).collect(),
+                _ => (0..d)
+                    .filter(|c| (r + c) % 3 == 0)
+                    .map(|c| (c, (c as f64 - 7.0) * 0.5))
+                    .collect(),
+            })
+            .collect();
+        let m = CsrMatrix::from_rows(d, &rows);
+        let v: Vec<f64> = (0..d).map(|c| ((c * 31 + 7) % 17) as f64 - 8.0).collect();
+        let mut out = vec![0.0; m.rows];
+        m.rows_dot(0, &v, &mut out);
+        for i in 0..m.rows {
+            assert_eq!(out[i].to_bits(), m.row_dot(i, &v).to_bits(), "row {i}");
+        }
+        // offset sub-range through a shard view
+        let s = m.shard(5, 80);
+        let mut sub = vec![0.0; 70];
+        s.rows_dot(3, &v, &mut sub);
+        for (b, got) in sub.iter().enumerate() {
+            assert_eq!(got.to_bits(), m.row_dot(5 + 3 + b, &v).to_bits());
+        }
+    }
+
+    #[test]
     fn row_ops() {
         let m = sample();
         let v = vec![1.0, 2.0, 3.0];
@@ -510,6 +695,22 @@ mod tests {
         assert_eq!(sub.rows, 2);
         assert_eq!(sub.row(0).1, m.row(2).1);
         assert_eq!(sub.row(1).1, m.row(0).1);
+    }
+
+    #[test]
+    fn permute_rows_matches_select_rows_bitwise() {
+        let m = sample();
+        let perm: Vec<usize> = (0..m.rows).rev().collect();
+        let selected = m.select_rows(&perm);
+        let permuted = m.clone().permute_rows(&perm);
+        assert_eq!(permuted.rows, selected.rows);
+        assert_eq!(permuted.cols, selected.cols);
+        assert_eq!(permuted.indptr, selected.indptr);
+        assert_eq!(permuted.indices, selected.indices);
+        assert_eq!(
+            permuted.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            selected.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //!   artifacts-check   load + smoke-run the AOT artifacts via PJRT
 //!   serve        HTTP prediction service from a training checkpoint
 //!   trace-check  validate a --trace-out flight-recorder file
+//!   trace-summary  per-phase wall-clock budget table of a --trace-out file
 //!   worker       internal: socket-executor worker process (spawned by the leader)
 //!
 //! Run `cocoa help` for flags.
@@ -35,6 +36,7 @@ fn main() {
         "artifacts-check" => cmd_artifacts_check(&args),
         "serve" => cmd_serve(&args),
         "trace-check" => cmd_trace_check(&args),
+        "trace-summary" => cmd_trace_summary(&args),
         "worker" => cocoa::coordinator::socket::worker_main(&args),
         "help" | "--help" => {
             print_help();
@@ -82,6 +84,9 @@ SUBCOMMANDS
                    HTTP prediction service: GET /healthz /metrics, POST /predict
                    /reload /retrain /quit (see rustdoc for body shapes)
   trace-check      <trace.json>  validate a --trace-out file (fields + span nesting)
+  trace-summary    <trace.json>  aggregate a --trace-out file into a per-phase
+                   wall-clock budget table (round/broadcast/compute/barrier/
+                   reduce/send/recv), sorted by total time
   worker           internal: spawned by the socket executor (--connect <addr> --worker <id>)
 
 GLOBAL FLAGS
@@ -343,6 +348,25 @@ fn cmd_trace_check(args: &Args) -> i32 {
         }
         Err(e) => {
             eprintln!("{path}: INVALID — {e}");
+            1
+        }
+    }
+}
+
+/// `cocoa trace-summary`: aggregate a `--trace-out` file into a per-phase
+/// wall-clock budget table (where did the round's time actually go?).
+fn cmd_trace_summary(args: &Args) -> i32 {
+    let Some(path) = args.positional.get(1) else {
+        eprintln!("usage: cocoa trace-summary <trace.json>");
+        return 2;
+    };
+    match cocoa::telemetry::summary::summarize_file(std::path::Path::new(path)) {
+        Ok(budget) => {
+            print!("{}", budget.render());
+            0
+        }
+        Err(e) => {
+            eprintln!("{path}: cannot summarize — {e}");
             1
         }
     }

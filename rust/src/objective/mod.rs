@@ -189,10 +189,15 @@ pub fn cert_partial(
 ) -> CertPartial {
     assert_eq!(x.rows(), y.len());
     assert_eq!(x.rows(), alpha.len());
+    // Margins via the blocked multi-row kernel (bit-identical to per-row
+    // row_dot calls), then one pass accumulating the two sums in row
+    // order. One margins buffer per certificate evaluation — certificate
+    // cadence is per-round at most, never per-coordinate.
+    let mut margins = vec![0.0; x.rows()];
+    x.rows_dot(0, w, &mut margins);
     let mut loss_sum = 0.0;
     let mut conj_sum = 0.0;
-    for (i, (&yi, &ai)) in y.iter().zip(alpha).enumerate() {
-        let z = x.row_dot(i, w); // the shard's local margin
+    for ((&z, &yi), &ai) in margins.iter().zip(y).zip(alpha) {
         loss_sum += loss.value(z, yi);
         conj_sum += loss.conjugate_neg(ai, yi);
     }

@@ -2,10 +2,13 @@
 //! [`Model`] and score sparse client feature vectors with *exactly* the
 //! training-time computation — the same CSR construction
 //! ([`CsrMatrix::row_from_pairs`]: sort, merge duplicates, drop zeros)
-//! and the same two-lane [`CsrMatrix::row_dot`] kernel — so a served
+//! and the same SIMD-dispatched [`CsrMatrix::row_dot`] kernel (fixed
+//! lane-reduction order, see [`crate::linalg::simd`]) — so a served
 //! score is bit-identical to what the trainer's own evaluation would
-//! produce for that row. The link on top is [`Loss::predict`]: hard ±1
-//! for the hinge family, σ(z) for logistic, identity for regression.
+//! produce for that row. Batches ride the blocked
+//! [`CsrMatrix::rows_dot`] matvec, which is bit-identical per row to the
+//! single-row path. The link on top is [`Loss::predict`]: hard ±1 for
+//! the hinge family, σ(z) for logistic, identity for regression.
 
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::linalg::CsrMatrix;
@@ -83,6 +86,23 @@ impl Model {
     pub fn predict_pairs(&self, pairs: &[(usize, f64)]) -> Result<Prediction, String> {
         let row = CsrMatrix::row_from_pairs(self.d(), pairs)?;
         Ok(self.prediction_from_score(row.row_dot(0, &self.w)))
+    }
+
+    /// Score a whole batch through one CSR build
+    /// ([`CsrMatrix::rows_from_pairs`]) and one blocked matvec
+    /// ([`CsrMatrix::rows_dot`]) instead of a per-row construct-and-dot
+    /// loop. Scores are bit-identical to mapping
+    /// [`Model::predict_pairs`] over the rows; errors name the offending
+    /// row (`"row {r}: …"`) so the router can pass them straight to the
+    /// client as a 4xx.
+    pub fn predict_batch(&self, rows: &[Vec<(usize, f64)>]) -> Result<Vec<Prediction>, String> {
+        let batch = CsrMatrix::rows_from_pairs(self.d(), rows)?;
+        let mut scores = vec![0.0; batch.rows];
+        batch.matvec(&self.w, &mut scores);
+        Ok(scores
+            .iter()
+            .map(|&z| self.prediction_from_score(z))
+            .collect())
     }
 
     /// The served quantities for a raw score z = wᵀx.
@@ -207,6 +227,32 @@ mod tests {
         assert_eq!(p.label, Some(1.0));
         // out-of-range column is a client error, not a panic
         assert!(m.predict_pairs(&[(4, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn predict_batch_matches_single_predictions_bitwise() {
+        let m = model(Loss::Logistic);
+        let rows: Vec<Vec<(usize, f64)>> = vec![
+            vec![(3, 1.0), (0, 2.0), (3, 0.5)], // unsorted + duplicate
+            vec![],                             // all-zeros row
+            vec![(1, -0.25), (2, 7.0)],
+            vec![(0, 1e-310), (3, -0.0)], // subnormal + signed zero
+        ];
+        let batch = m.predict_batch(&rows).unwrap();
+        assert_eq!(batch.len(), rows.len());
+        for (r, row) in rows.iter().enumerate() {
+            let single = m.predict_pairs(row).unwrap();
+            assert_eq!(
+                batch[r].score.to_bits(),
+                single.score.to_bits(),
+                "row {r}"
+            );
+            assert_eq!(batch[r].value, single.value);
+            assert_eq!(batch[r].label, single.label);
+        }
+        // batch errors name the offending row
+        let err = m.predict_batch(&[vec![], vec![(9, 1.0)]]).unwrap_err();
+        assert!(err.contains("row 1"), "{err}");
     }
 
     #[test]

@@ -129,18 +129,26 @@ fn predict(state: &AppState, req: &Request) -> Response {
             Some(r) => r,
             None => return Response::error(400, "rows must be an array of feature vectors"),
         };
-        let mut preds = Vec::with_capacity(rows.len());
+        let mut parsed = Vec::with_capacity(rows.len());
         for (i, row) in rows.iter().enumerate() {
-            match parse_features(row).and_then(|p| model.predict_pairs(&p)) {
-                Ok(pred) => preds.push(pred.to_json()),
+            match parse_features(row) {
+                Ok(p) => parsed.push(p),
                 Err(e) => return Response::error(400, &format!("row {i}: {e}")),
             }
         }
-        state.metrics.record_predictions(preds.len() as u64);
-        Response::json(
-            200,
-            jobj(vec![("count", jnum(preds.len() as f64)), ("predictions", jarr(preds))]),
-        )
+        // One CSR build + one blocked matvec for the whole batch;
+        // `predict_batch` errors already carry the "row {r}: " prefix.
+        match model.predict_batch(&parsed) {
+            Ok(batch) => {
+                let preds: Vec<Json> = batch.iter().map(|p| p.to_json()).collect();
+                state.metrics.record_predictions(preds.len() as u64);
+                Response::json(
+                    200,
+                    jobj(vec![("count", jnum(preds.len() as f64)), ("predictions", jarr(preds))]),
+                )
+            }
+            Err(e) => Response::error(400, &e),
+        }
     } else if let Some(features) = body.get("features") {
         // single shape: {"features": [[idx, val], ...]}
         match parse_features(features).and_then(|p| model.predict_pairs(&p)) {

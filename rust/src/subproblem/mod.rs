@@ -33,9 +33,12 @@ use std::sync::Arc;
 /// memory of the dataset — the old per-worker `CsrMatrix` clones are
 /// gone. Blocks over an arbitrary (non-contiguous) partition are produced
 /// by permuting the dataset once into a
-/// [`ShardLayout`](crate::data::ShardLayout); `global_idx` always maps
-/// local rows back to the *caller's* row order, so scattering Δα is
-/// unchanged.
+/// [`ShardLayout`](crate::data::ShardLayout); a block is then fully
+/// addressed by its `(start, len)` range — local row `i` IS layout row
+/// `start + i`, so the per-block O(n_k) index vectors of the old design
+/// carry no information and are gone. Callers that scatter Δα back to a
+/// *pre-layout* row order keep their own `Partition.parts[k]` list for
+/// that (the layout preserves within-part order).
 #[derive(Clone, Debug)]
 pub struct LocalBlock {
     /// Shared (possibly permuted) dataset all sibling blocks view into.
@@ -44,28 +47,13 @@ pub struct LocalBlock {
     start: usize,
     /// Number of local rows n_k.
     len: usize,
-    /// Caller-order row index of each local row (for scattering Δα back).
-    pub global_idx: Vec<usize>,
 }
 
 impl LocalBlock {
     /// A view over rows `[start, start + len)` of a shared dataset.
-    /// `global_idx[i]` names the caller-order row that shared row
-    /// `start + i` holds.
-    pub fn view(
-        data: Arc<Dataset>,
-        start: usize,
-        len: usize,
-        global_idx: Vec<usize>,
-    ) -> LocalBlock {
+    pub fn view(data: Arc<Dataset>, start: usize, len: usize) -> LocalBlock {
         assert!(start + len <= data.n(), "block rows out of range");
-        assert_eq!(global_idx.len(), len, "global_idx must name every row");
-        LocalBlock {
-            data,
-            start,
-            len,
-            global_idx,
-        }
+        LocalBlock { data, start, len }
     }
 
     /// Gather arbitrary rows into a standalone single-block dataset (used
@@ -73,7 +61,7 @@ impl LocalBlock {
     /// K-way path is [`LocalBlock::split`], which shares storage).
     pub fn from_partition(data: &Dataset, part_rows: &[usize]) -> LocalBlock {
         let gathered = Arc::new(data.gather_rows(part_rows));
-        LocalBlock::view(gathered, 0, part_rows.len(), part_rows.to_vec())
+        LocalBlock::view(gathered, 0, part_rows.len())
     }
 
     /// Build all K blocks of a partition as views over shared storage.
@@ -81,42 +69,24 @@ impl LocalBlock {
     /// A contiguous partition yields views directly into `data` — zero
     /// copies. Any other partition is realized through
     /// [`Partition::apply_permutation`]: the dataset is reordered **once**
-    /// and all K blocks view the single permuted copy (`global_idx` still
-    /// carries the original row ids, so Δα scattering against the
-    /// caller's α is unchanged).
+    /// and all K blocks view the single permuted copy. Block k's local
+    /// row `i` holds the caller's row `partition.parts[k][i]` — keep that
+    /// list around when Δα must scatter back to the caller's row order.
     pub fn split(data: &Arc<Dataset>, partition: &Partition) -> Vec<LocalBlock> {
         let layout = partition.apply_permutation(Arc::clone(data));
-        LocalBlock::consecutive_views(&layout.data, &partition.parts)
+        LocalBlock::from_layout(&layout)
     }
 
-    /// The K view-blocks of an already-realized [`ShardLayout`],
-    /// addressed in the **layout's own row order**: block k's
-    /// `global_idx` is its contiguous row range of `layout.data`. This is
-    /// the trainer's path — its global α lives in layout order — and it
-    /// skips the re-canonicalization `split` would perform. Use `split`
-    /// when Δα must scatter back to a pre-layout row order instead.
+    /// The K view-blocks of an already-realized [`ShardLayout`]: block k
+    /// is the `(start, len)` range `layout.shards[k]` of `layout.data`.
+    /// This is the trainer's path — its global α lives in layout order,
+    /// so `start + i` addresses it directly.
     pub fn from_layout(layout: &ShardLayout) -> Vec<LocalBlock> {
-        LocalBlock::consecutive_views(&layout.data, &layout.partition.parts)
-    }
-
-    /// Shared constructor behind `split`/`from_layout`: consecutive views
-    /// over `data`, one per index list — block k spans the next
-    /// `idx_lists[k].len()` rows of `data` and keeps its list as
-    /// `global_idx` (the two callers differ only in which row order that
-    /// list speaks).
-    fn consecutive_views(data: &Arc<Dataset>, idx_lists: &[Vec<usize>]) -> Vec<LocalBlock> {
-        let mut blocks = Vec::with_capacity(idx_lists.len());
-        let mut start = 0usize;
-        for rows in idx_lists {
-            blocks.push(LocalBlock::view(
-                Arc::clone(data),
-                start,
-                rows.len(),
-                rows.clone(),
-            ));
-            start += rows.len();
-        }
-        blocks
+        layout
+            .shards
+            .iter()
+            .map(|&(start, len)| LocalBlock::view(Arc::clone(&layout.data), start, len))
+            .collect()
     }
 
     /// The matrix shard: same `row_dot`/`row_axpy` kernels, zero copy.
@@ -254,8 +224,9 @@ mod tests {
         assert!(part.is_exact_cover());
         let total: usize = blocks.iter().map(|b| b.n_local()).sum();
         assert_eq!(total, p.n());
-        for b in &blocks {
-            for (li, &gi) in b.global_idx.iter().enumerate() {
+        // local row li of block k holds the caller's row part.parts[k][li]
+        for (k, b) in blocks.iter().enumerate() {
+            for (li, &gi) in part.parts[k].iter().enumerate() {
                 assert_eq!(b.y()[li], p.data.y[gi]);
                 assert_eq!(b.x().row(li).1, p.data.x.row(gi).1);
                 assert_eq!(b.norms_sq()[li], p.data.row_norms_sq[gi]);
@@ -292,7 +263,8 @@ mod tests {
             );
             assert_eq!(b.start(), k * 10);
             assert_eq!(b.n_local(), 10);
-            assert_eq!(b.global_idx, part.parts[k]);
+            let range: Vec<usize> = (b.start()..b.start() + b.n_local()).collect();
+            assert_eq!(range, part.parts[k]);
         }
     }
 
@@ -358,7 +330,7 @@ mod tests {
                 })
                 .collect();
             gains.push(subproblem_value(b, &spec, &w, &alpha_local, &delta));
-            for (li, &gi) in b.global_idx.iter().enumerate() {
+            for (li, &gi) in part.parts[k].iter().enumerate() {
                 new_alpha[gi] += gamma * delta[li];
             }
         }

@@ -34,6 +34,7 @@
 pub mod checker;
 pub mod metrics;
 pub mod ring;
+pub mod summary;
 pub mod writer;
 
 pub use ring::{Ring, TraceEvent};

@@ -1,0 +1,229 @@
+//! Per-phase wall-clock aggregation of a recorded trace file — the
+//! engine behind `cocoa trace-summary`. Where [`super::checker`] asks
+//! "is this trace structurally valid?", this module asks "where did the
+//! round actually spend its time?": every complete (`ph: "X"`) span is
+//! bucketed by name (`round`, `broadcast`, `compute`, `barrier`,
+//! `reduce`, `send`, `recv`, …) and reported as a count / total / max /
+//! share-of-wall table. Like the checker, this is a parse surface:
+//! hostile or truncated input must come back as `Err`, never a crash.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Aggregate of all spans sharing one name.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PhaseStat {
+    pub name: String,
+    /// Number of spans with this name.
+    pub count: usize,
+    /// Summed duration in seconds (lanes overlap, so totals can exceed
+    /// the wall clock — that is the point of the table).
+    pub total_s: f64,
+    /// Longest single span in seconds.
+    pub max_s: f64,
+}
+
+/// The per-phase wall-clock budget of one trace.
+#[derive(Clone, Debug, Default)]
+pub struct TraceBudget {
+    /// Phases sorted by total time, largest first.
+    pub phases: Vec<PhaseStat>,
+    /// Total events in the file (all phases, including metadata).
+    pub events: usize,
+    /// Wall-clock extent in seconds: latest span end − earliest span
+    /// start across all lanes.
+    pub wall_s: f64,
+}
+
+fn span_fields(ev: &Json, i: usize) -> Result<Option<(&str, u64, u64)>, String> {
+    let name = ev
+        .get("name")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| format!("event {i}: missing or non-string \"name\""))?;
+    let ph = ev
+        .get("ph")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| format!("event {i}: missing or non-string \"ph\""))?;
+    if ph != "X" {
+        return Ok(None);
+    }
+    let uint = |key: &str| -> Result<u64, String> {
+        let x = ev
+            .get(key)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("event {i}: missing or non-numeric {key:?}"))?;
+        if !(x.is_finite() && x >= 0.0 && x == x.trunc()) {
+            return Err(format!(
+                "event {i}: {key:?} must be a non-negative integer, got {x}"
+            ));
+        }
+        Ok(x as u64)
+    };
+    Ok(Some((name, uint("ts")?, uint("dur")?)))
+}
+
+/// Aggregate a trace document already parsed to [`Json`].
+pub fn summarize_value(doc: &Json) -> Result<TraceBudget, String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .ok_or("missing \"traceEvents\" array")?;
+
+    let mut by_name: BTreeMap<String, PhaseStat> = BTreeMap::new();
+    let mut t_min = u64::MAX;
+    let mut t_max = 0u64;
+    for (i, ev) in events.iter().enumerate() {
+        let Some((name, ts, dur)) = span_fields(ev, i)? else {
+            continue;
+        };
+        let end = ts
+            .checked_add(dur)
+            .ok_or_else(|| format!("event {i}: ts+dur overflows"))?;
+        t_min = t_min.min(ts);
+        t_max = t_max.max(end);
+        let secs = dur as f64 * 1e-6;
+        let stat = by_name.entry(name.to_string()).or_default();
+        if stat.count == 0 {
+            stat.name = name.to_string();
+        }
+        stat.count += 1;
+        stat.total_s += secs;
+        stat.max_s = stat.max_s.max(secs);
+    }
+
+    let mut phases: Vec<PhaseStat> = by_name.into_values().collect();
+    // Largest total first; name breaks ties so the order is stable.
+    phases.sort_by(|a, b| {
+        b.total_s
+            .partial_cmp(&a.total_s)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.name.cmp(&b.name))
+    });
+    let wall_s = if t_max > t_min {
+        (t_max - t_min) as f64 * 1e-6
+    } else {
+        0.0
+    };
+    Ok(TraceBudget {
+        phases,
+        events: events.len(),
+        wall_s,
+    })
+}
+
+/// Parse and aggregate a trace document from its JSON text.
+pub fn summarize_str(text: &str) -> Result<TraceBudget, String> {
+    let doc = Json::parse(text).map_err(|e| format!("not valid JSON: {e}"))?;
+    summarize_value(&doc)
+}
+
+/// Read, parse, and aggregate a trace file.
+pub fn summarize_file(path: &std::path::Path) -> Result<TraceBudget, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    summarize_str(&text)
+}
+
+impl TraceBudget {
+    /// Render the budget as an aligned text table (what `cocoa
+    /// trace-summary` prints). Totals can sum past 100% of wall because
+    /// lanes run concurrently.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{} events, wall {:.6} s\n",
+            self.events, self.wall_s
+        ));
+        out.push_str(&format!(
+            "{:<12} {:>7} {:>12} {:>12} {:>8}\n",
+            "phase", "count", "total_s", "max_s", "% wall"
+        ));
+        for p in &self.phases {
+            let share = if self.wall_s > 0.0 {
+                100.0 * p.total_s / self.wall_s
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "{:<12} {:>7} {:>12.6} {:>12.6} {:>7.1}%\n",
+                p.name, p.count, p.total_s, p.max_s, share
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(events: &str) -> String {
+        format!("{{\"traceEvents\":[{events}]}}")
+    }
+
+    fn ev(name: &str, ts: u64, dur: u64, tid: u64) -> String {
+        format!(
+            "{{\"name\":\"{name}\",\"cat\":\"t\",\"ph\":\"X\",\"ts\":{ts},\"dur\":{dur},\
+             \"pid\":0,\"tid\":{tid}}}"
+        )
+    }
+
+    #[test]
+    fn aggregates_by_name_across_lanes() {
+        let text = trace(&[
+            ev("round", 0, 100, 0),
+            ev("send", 5, 10, 1),
+            ev("send", 5, 20, 2),
+            ev("compute", 30, 60, 1),
+        ]
+        .join(","));
+        let b = summarize_str(&text).unwrap();
+        assert_eq!(b.events, 4);
+        assert!((b.wall_s - 100e-6).abs() < 1e-12);
+        // sorted by total: round (100) > compute (60) > send (30)
+        let names: Vec<&str> = b.phases.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, vec!["round", "compute", "send"]);
+        let send = &b.phases[2];
+        assert_eq!(send.count, 2);
+        assert!((send.total_s - 30e-6).abs() < 1e-12);
+        assert!((send.max_s - 20e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn renders_every_phase_row() {
+        let text = trace(&[ev("reduce", 0, 50, 0), ev("barrier", 50, 25, 0)].join(","));
+        let table = summarize_str(&text).unwrap().render();
+        assert!(table.contains("reduce"), "{table}");
+        assert!(table.contains("barrier"), "{table}");
+        assert!(table.contains("% wall"), "{table}");
+    }
+
+    #[test]
+    fn non_span_phases_are_skipped_but_counted() {
+        let text = trace(
+            "{\"name\":\"meta\",\"ph\":\"M\"},\
+             {\"name\":\"a\",\"cat\":\"t\",\"ph\":\"X\",\"ts\":0,\"dur\":1,\"pid\":0,\"tid\":0}",
+        );
+        let b = summarize_str(&text).unwrap();
+        assert_eq!(b.events, 2);
+        assert_eq!(b.phases.len(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        assert!(summarize_str("not json").is_err());
+        assert!(summarize_str("{}").is_err());
+        let frac = trace(
+            "{\"name\":\"a\",\"cat\":\"t\",\"ph\":\"X\",\"ts\":1.5,\"dur\":1,\"pid\":0,\"tid\":0}",
+        );
+        assert!(summarize_str(&frac).is_err());
+    }
+
+    #[test]
+    fn empty_trace_is_a_zero_budget() {
+        let b = summarize_str("{\"traceEvents\":[]}").unwrap();
+        assert_eq!(b.events, 0);
+        assert_eq!(b.wall_s, 0.0);
+        assert!(b.phases.is_empty());
+    }
+}

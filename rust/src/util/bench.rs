@@ -162,6 +162,169 @@ impl Bench {
     }
 }
 
+// ---------------------------------------------------------------------
+// Snapshot comparison: committed BENCH_<pr>.json baselines vs a fresh run
+// ---------------------------------------------------------------------
+
+/// One case of a committed `BENCH_<pr>.json` snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BaselineCase {
+    pub name: String,
+    pub mean_s: f64,
+    pub min_s: f64,
+}
+
+/// A parsed bench snapshot (the schema [`Bench::to_json`] writes).
+#[derive(Clone, Debug)]
+pub struct Baseline {
+    pub suite: String,
+    pub cases: Vec<BaselineCase>,
+}
+
+/// Parse a snapshot from its JSON text. Tolerant of extra keys (p50/p95
+/// are carried but not compared: `min` is the noise-robust statistic).
+pub fn parse_baseline(text: &str) -> Result<Baseline, String> {
+    let doc = Json::parse(text).map_err(|e| format!("not valid JSON: {e}"))?;
+    let suite = doc
+        .get("suite")
+        .and_then(|v| v.as_str())
+        .ok_or("missing \"suite\"")?
+        .to_string();
+    let cases_json = doc
+        .get("cases")
+        .and_then(|v| v.as_arr())
+        .ok_or("missing \"cases\" array")?;
+    let mut cases = Vec::with_capacity(cases_json.len());
+    for (i, c) in cases_json.iter().enumerate() {
+        let name = c
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("case {i}: missing \"name\""))?;
+        let num = |key: &str| -> Result<f64, String> {
+            let x = c
+                .get(key)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("case {name:?}: missing {key:?}"))?;
+            if !(x.is_finite() && x >= 0.0) {
+                return Err(format!(
+                    "case {name:?}: {key:?} must be finite and non-negative, got {x}"
+                ));
+            }
+            Ok(x)
+        };
+        cases.push(BaselineCase {
+            name: name.to_string(),
+            mean_s: num("mean_s")?,
+            min_s: num("min_s")?,
+        });
+    }
+    Ok(Baseline { suite, cases })
+}
+
+/// Read and parse a committed snapshot file.
+pub fn load_baseline(path: &Path) -> Result<Baseline, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    parse_baseline(&text)
+}
+
+/// One case present in both snapshots.
+#[derive(Clone, Debug)]
+pub struct CaseDelta {
+    pub name: String,
+    pub base_min_s: f64,
+    pub cur_min_s: f64,
+}
+
+impl CaseDelta {
+    /// Baseline/current min-time ratio: > 1 is a speedup, < 1 a slowdown.
+    pub fn speedup(&self) -> f64 {
+        if self.cur_min_s > 0.0 {
+            self.base_min_s / self.cur_min_s
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// A case regresses when it got slower by more than `threshold`×
+    /// (1.5 tolerates 50% run-to-run noise before failing the gate).
+    pub fn is_regression(&self, threshold: f64) -> bool {
+        self.cur_min_s > self.base_min_s * threshold
+    }
+}
+
+/// Per-case deltas plus the cases only one side has (renames/new work
+/// are reported, never silently dropped).
+#[derive(Clone, Debug, Default)]
+pub struct Comparison {
+    pub deltas: Vec<CaseDelta>,
+    /// Cases only in the baseline (removed since the snapshot).
+    pub only_base: Vec<String>,
+    /// Cases only in the current run (new since the snapshot).
+    pub only_cur: Vec<String>,
+}
+
+/// Match cases by name (current-run order) and compute the deltas.
+pub fn compare(base: &Baseline, cur: &Baseline) -> Comparison {
+    let mut cmp = Comparison::default();
+    for c in &cur.cases {
+        match base.cases.iter().find(|b| b.name == c.name) {
+            Some(b) => cmp.deltas.push(CaseDelta {
+                name: c.name.clone(),
+                base_min_s: b.min_s,
+                cur_min_s: c.min_s,
+            }),
+            None => cmp.only_cur.push(c.name.clone()),
+        }
+    }
+    for b in &base.cases {
+        if !cur.cases.iter().any(|c| c.name == b.name) {
+            cmp.only_base.push(b.name.clone());
+        }
+    }
+    cmp
+}
+
+impl Comparison {
+    /// The deltas that fail the `threshold`× slowdown gate.
+    pub fn regressions(&self, threshold: f64) -> Vec<&CaseDelta> {
+        self.deltas
+            .iter()
+            .filter(|d| d.is_regression(threshold))
+            .collect()
+    }
+
+    /// Aligned per-case delta table (what `bench_compare` prints).
+    pub fn render(&self, threshold: f64) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<44} {:>12} {:>12} {:>9}\n",
+            "case", "baseline", "current", "speedup"
+        ));
+        for d in &self.deltas {
+            let flag = if d.is_regression(threshold) {
+                "  REGRESSION"
+            } else {
+                ""
+            };
+            out.push_str(&format!(
+                "{:<44} {:>12} {:>12} {:>8.2}x{flag}\n",
+                d.name,
+                fmt_dur(Duration::from_secs_f64(d.base_min_s)),
+                fmt_dur(Duration::from_secs_f64(d.cur_min_s)),
+                d.speedup(),
+            ));
+        }
+        for name in &self.only_cur {
+            out.push_str(&format!("{name:<44} (new: not in baseline)\n"));
+        }
+        for name in &self.only_base {
+            out.push_str(&format!("{name:<44} (removed: baseline only)\n"));
+        }
+        out
+    }
+}
+
 pub fn fmt_dur(d: Duration) -> String {
     let ns = d.as_nanos();
     if ns < 1_000 {
@@ -237,6 +400,61 @@ mod tests {
         let j = Json::parse(&text).unwrap();
         assert_eq!(j.get("suite").and_then(|v| v.as_str()), Some("disk"));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn baseline_round_trips_through_bench_json() {
+        let mut b = Bench::new("rt").with_samples(2);
+        b.warmup = 0;
+        b.run("k1", || black_box(1));
+        b.run("k2", || black_box(2));
+        let base = parse_baseline(&b.to_json().to_string_compact()).unwrap();
+        assert_eq!(base.suite, "rt");
+        assert_eq!(base.cases.len(), 2);
+        assert_eq!(base.cases[0].name, "k1");
+        assert!(base.cases.iter().all(|c| c.min_s >= 0.0 && c.mean_s >= c.min_s));
+    }
+
+    #[test]
+    fn parse_baseline_rejects_malformed() {
+        assert!(parse_baseline("not json").is_err());
+        assert!(parse_baseline("{\"suite\":\"s\"}").is_err());
+        let bad_num = "{\"suite\":\"s\",\"cases\":[{\"name\":\"a\",\"mean_s\":-1,\"min_s\":0}]}";
+        assert!(parse_baseline(bad_num).is_err());
+    }
+
+    fn snap(cases: &[(&str, f64)]) -> Baseline {
+        Baseline {
+            suite: "s".into(),
+            cases: cases
+                .iter()
+                .map(|&(name, min_s)| BaselineCase {
+                    name: name.into(),
+                    mean_s: min_s,
+                    min_s,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn compare_flags_regressions_and_set_differences() {
+        let base = snap(&[("same", 1e-3), ("faster", 2e-3), ("slower", 1e-3), ("gone", 1e-3)]);
+        let cur = snap(&[("same", 1e-3), ("faster", 1e-3), ("slower", 2e-3), ("new", 1e-3)]);
+        let cmp = compare(&base, &cur);
+        assert_eq!(cmp.deltas.len(), 3);
+        assert_eq!(cmp.only_base, vec!["gone".to_string()]);
+        assert_eq!(cmp.only_cur, vec!["new".to_string()]);
+        let regs = cmp.regressions(1.5);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].name, "slower");
+        assert!((regs[0].speedup() - 0.5).abs() < 1e-12);
+        // the 2× slowdown passes a laxer gate
+        assert!(cmp.regressions(2.5).is_empty());
+        let table = cmp.render(1.5);
+        assert!(table.contains("REGRESSION"), "{table}");
+        assert!(table.contains("(new: not in baseline)"), "{table}");
+        assert!(table.contains("(removed: baseline only)"), "{table}");
     }
 
     #[test]

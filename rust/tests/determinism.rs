@@ -216,6 +216,27 @@ fn tracing_enabled_is_bit_identical_to_untraced() {
 }
 
 #[test]
+fn simd_and_scalar_kernels_are_bit_identical_end_to_end() {
+    // The explicit-SIMD kernels (linalg::simd) promise bit-identical
+    // results to the portable scalar path: same 4-lane split, same
+    // fixed reduction order, mul-then-add on both sides. Re-run the
+    // trajectory with the dispatch pinned to each side — if AVX2 ever
+    // reassociated a sum, this diverges within a round. (Flipping the
+    // global dispatch mid-suite is safe for exactly this reason.)
+    use cocoa::linalg::simd;
+    simd::force_scalar(true);
+    let (gaps_sc, alpha_sc, w_sc) = trajectory(build(4, true, true, 42));
+    simd::force_scalar(false);
+    let (gaps_v, alpha_v, w_v) = trajectory(build(4, true, true, 42));
+    assert_eq!(gaps_sc, gaps_v, "SIMD dispatch changed the gap trajectory");
+    assert_eq!(alpha_sc, alpha_v, "SIMD dispatch changed α");
+    assert_eq!(w_sc, w_v, "SIMD dispatch changed w");
+    // and the three-executor invariant holds with detection re-enabled
+    // (socket workers resolve their own dispatch in fresh processes)
+    assert_three_way_identical(4, true, 42);
+}
+
+#[test]
 fn pooled_runs_are_repeatable() {
     // Two independent pooled trainers with the same seed: thread
     // scheduling must not be able to perturb anything.

@@ -173,7 +173,7 @@ fn prop_lemma3_inequality_on_solver_outputs() {
                 alpha_local: &alpha_local,
             });
             gains += subproblem_value(block, &spec, &w, &alpha_local, &out.delta_alpha);
-            for (li, &gi) in block.global_idx.iter().enumerate() {
+            for (li, &gi) in part.parts[kid].iter().enumerate() {
                 new_alpha[gi] += gamma * out.delta_alpha[li];
             }
         }
@@ -201,8 +201,8 @@ fn prop_partition_scatter_gather_roundtrip() {
         assert!(part.is_exact_cover());
         let blocks = LocalBlock::split(&data, &part);
         let mut seen = vec![false; n];
-        for b in &blocks {
-            for (li, &gi) in b.global_idx.iter().enumerate() {
+        for (k, b) in blocks.iter().enumerate() {
+            for (li, &gi) in part.parts[k].iter().enumerate() {
                 assert!(!seen[gi]);
                 seen[gi] = true;
                 assert_eq!(b.y()[li], data.y[gi]);

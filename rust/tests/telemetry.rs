@@ -123,6 +123,103 @@ fn sequential_run_traces_worker_lanes_without_pool_threads() {
 }
 
 #[test]
+fn socket_broadcast_sends_overlap_for_k4() {
+    // The socket leader broadcasts each round's frame to all K workers
+    // from concurrent sender threads; the per-worker `send` spans (tid
+    // 1+k, recorded after the join from in-thread timestamps) must
+    // actually overlap in time. The test statistic per broadcast is
+    //   wall  = max(span end) − min(span start)
+    //   total = Σ span durations
+    // Serialized sends give wall ≥ total; concurrency gives wall < total.
+    const KSOCK: usize = 4;
+    let path = std::env::temp_dir().join("cocoa_telemetry_socket_overlap.json");
+    let rec = Recorder::to_file(&path).expect("open trace file");
+    // A wide model (d = 1 << 17) makes each per-worker frame ≈ 1 MiB of
+    // f64 payload — far past the kernel socket buffer — so each send
+    // span is long enough that overlap cannot hide in timer noise.
+    let d = 1 << 17;
+    let n = 64;
+    let data = generate(&SynthConfig::new("overlap", n, d).density(0.02).seed(7));
+    let part = random_balanced(n, KSOCK, 3);
+    let problem = Problem::new(data, Loss::Hinge, 0.01);
+    let cfg = CocoaConfig::cocoa_plus(
+        KSOCK,
+        Loss::Hinge,
+        0.01,
+        SolverSpec::SdcaEpochs { epochs: 1.0 },
+    )
+    .with_rounds(3)
+    .with_gap_tol(1e-14)
+    .with_seed(42)
+    .with_executor(ExecutorChoice::Socket)
+    .with_socket_worker_bin(env!("CARGO_BIN_EXE_cocoa"))
+    .with_recorder(rec.clone());
+    let mut trainer = Trainer::new(problem, part, cfg);
+    trainer.run();
+    drop(trainer);
+    rec.finish().expect("finish trace");
+    checker::check_file(&path).expect("trace must validate");
+
+    let text = std::fs::read_to_string(&path).expect("read trace");
+    let doc = Json::parse(&text).expect("trace parses");
+    let mut broadcasts: Vec<(u64, u64)> = Vec::new();
+    let mut sends: Vec<(u64, u64)> = Vec::new();
+    for ev in doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .expect("traceEvents array")
+    {
+        if ev.get("ph").and_then(|p| p.as_str()) != Some("X") {
+            continue;
+        }
+        let name = ev.get("name").and_then(|nm| nm.as_str()).unwrap_or("");
+        let ts = ev.get("ts").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        let dur = ev.get("dur").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        match name {
+            "broadcast" => broadcasts.push((ts, ts + dur)),
+            "send" => sends.push((ts, ts + dur)),
+            _ => {}
+        }
+    }
+    assert!(
+        !broadcasts.is_empty(),
+        "leader must record broadcast umbrella spans"
+    );
+    // Group the per-worker send spans under their broadcast umbrella:
+    // the umbrella opens before the senders spawn and closes after the
+    // join, so each fan-out's K send spans fall inside exactly one.
+    let mut full_groups = 0usize;
+    let mut overlapped = 0usize;
+    for &(bs, be) in &broadcasts {
+        let group: Vec<(u64, u64)> = sends
+            .iter()
+            .copied()
+            .filter(|&(s, e)| s >= bs && e <= be)
+            .collect();
+        if group.len() != KSOCK {
+            continue;
+        }
+        full_groups += 1;
+        let start = group.iter().map(|&(s, _)| s).min().unwrap();
+        let end = group.iter().map(|&(_, e)| e).max().unwrap();
+        let total: u64 = group.iter().map(|&(s, e)| e - s).sum();
+        if end - start < total {
+            overlapped += 1;
+        }
+    }
+    assert!(
+        full_groups > 0,
+        "no broadcast umbrella carried all {KSOCK} send spans"
+    );
+    assert!(
+        overlapped > 0,
+        "K={KSOCK} sends never overlapped: wall >= sum of span durations \
+         in all {full_groups} full broadcasts"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn disabled_recorder_run_is_zero_artifact() {
     // Every config embeds a disabled recorder; a normal run must neither
     // write a file nor count events.
